@@ -1,0 +1,58 @@
+//! Hyper-parameter grid search (paper §6.1): sweep (λ, α) on a WebGraph
+//! variant and print the grid best-first — the procedure behind every
+//! Table 2 row ("hyperparameter tuning over both λ and α has been
+//! indispensable for good results").
+//!
+//! ```bash
+//! cargo run --release --example grid_search                 # coarse 3×3
+//! cargo run --release --example grid_search -- --full      # paper 6×7
+//! ```
+
+use alx::als::TrainConfig;
+use alx::config::AlxConfig;
+use alx::coordinator::{grid_search, GridSpec};
+use alx::webgraph::Variant;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let base = AlxConfig {
+        variant: Variant::InDense,
+        scale: 0.0015,
+        cores: 4,
+        train: TrainConfig {
+            dim: 32,
+            epochs: 6,
+            batch_rows: 64,
+            batch_width: 8,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    };
+    let spec = if full {
+        // The paper's exact §6.1 grids (42 cells — minutes at this scale).
+        GridSpec::default()
+    } else {
+        GridSpec::coarse()
+    };
+    println!(
+        "grid search on {} ({} λ × {} α = {} cells)",
+        base.variant.name(),
+        spec.lambdas.len(),
+        spec.alphas.len(),
+        spec.lambdas.len() * spec.alphas.len()
+    );
+    let points = grid_search(&base, &spec)?;
+    println!("\n{:>10} {:>10} {:>9} {:>9}", "lambda", "alpha", "R@20", "R@50");
+    for p in &points {
+        println!(
+            "{:>10.0e} {:>10.0e} {:>9.3} {:>9.3}",
+            p.lambda, p.alpha, p.recall_at_20, p.recall_at_50
+        );
+    }
+    let best = &points[0];
+    println!(
+        "\nbest cell: λ={:.0e} α={:.0e} → Recall@20={:.3} (a Table 2 row)",
+        best.lambda, best.alpha, best.recall_at_20
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Scaling analysis (paper §6.2 / Figure 6): epoch time vs TPU core count.
+//!
+//! Two parts:
+//!  1. The calibrated analytic model at **paper scale** for the four big
+//!     variants — reproduces Fig. 6's linear-then-flat curves and the
+//!     HBM floors (WebGraph-sparse needs ≥32 cores to start).
+//!  2. A **measured** sweep on the real (simulated-shard) runtime at small
+//!     scale, verifying the collective byte accounting grows the way the
+//!     model assumes.
+//!
+//! ```bash
+//! cargo run --release --example scaling_analysis
+//! ```
+
+use alx::als::{TrainConfig, Trainer};
+use alx::harness;
+use alx::sparse::split_strong_generalization;
+use alx::topo::Topology;
+use alx::util::stats::human_bytes;
+use alx::webgraph::{generate, Variant, VariantSpec};
+
+fn main() -> anyhow::Result<()> {
+    // --- Part 1: paper-scale model (Fig. 6 proper) ----------------------
+    let cores = [8, 16, 32, 64, 128, 256, 512, 1024, 2048];
+    let variants = [Variant::Sparse, Variant::Dense, Variant::DeSparse, Variant::DeDense];
+    let points = harness::run_fig6(&variants, &cores, 128);
+    harness::print_fig6(&points);
+
+    // Speedup table: where does each variant stop scaling linearly?
+    println!("\nparallel efficiency vs 2x cores (1.0 = perfectly linear):");
+    for v in variants {
+        print!("{:<22}", v.name());
+        for w in cores.windows(2) {
+            let a = points.iter().find(|p| p.variant == v && p.cores == w[0]);
+            let b = points.iter().find(|p| p.variant == v && p.cores == w[1]);
+            match (a, b) {
+                (Some(a), Some(b)) if a.feasible && b.feasible => {
+                    print!("{:>8.2}", a.epoch_seconds / b.epoch_seconds / 2.0);
+                }
+                _ => print!("{:>8}", "-"),
+            }
+        }
+        println!();
+    }
+
+    // --- Part 2: measured small-scale sweep -----------------------------
+    println!("\nmeasured epoch wall time + collective traffic (in-dense @ 0.002):");
+    let spec = VariantSpec::preset(Variant::InDense).scaled(0.002);
+    let graph = generate(&spec, 7);
+    let split = split_strong_generalization(&graph.adjacency, 0.9, 0.25, 9);
+    println!("{:>6} {:>10} {:>14} {:>14}", "cores", "wall(s)", "comm/epoch", "sim-TPU(s)");
+    for m in [1usize, 2, 4, 8, 16] {
+        let cfg = TrainConfig {
+            dim: 32,
+            epochs: 1,
+            batch_rows: 64,
+            batch_width: 8,
+            compute_objective: false,
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::new(&split.train, cfg, Topology::new(m))?;
+        let stats = tr.run_epoch()?;
+        println!(
+            "{:>6} {:>10.3} {:>14} {:>14.2}",
+            m,
+            stats.seconds,
+            human_bytes(stats.comm_bytes),
+            stats.simulated_seconds
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: per-dense-row sufficient statistics (the ALS hot-spot).
+
+One ALS solve step needs, per dense row of the batch (paper Algorithm 2
+lines 13-16):
+
+    G_dr = sum_l mask[l] * h[l] (x) h[l]     in R^{D x D}
+    b_dr = sum_l mask[l] * y[l] * h[l]       in R^{D}
+
+This is O(B*L*D^2) work — the dominant statistics cost O(|S| d^2) of the
+whole algorithm — and it is a pure contraction, so we express it as two
+matmuls per dense row. On a real TPU each (L x D)^T @ (L x D) product maps
+straight onto the MXU systolic array; `hm.T @ hm` is the exact analogue of
+the paper's bfloat16 MAC pipeline.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid = (B,): one program per dense row — embarrassingly parallel,
+    mirrors the paper's per-row `parfor`.
+  * BlockSpec keeps one (L, D) tile of gathered embeddings in VMEM at a
+    time: VMEM footprint = L*D + D*D + 2L floats (L=16, D=128 → ~73 KiB),
+    far under the ~16 MiB/core budget, leaving room for double-buffering.
+  * D should be a multiple of the 128-lane MXU width; L a multiple of 8
+    (sublane) — the paper's L ∈ {8, 16} and d = 128 satisfy both.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; lowering in interpret mode produces plain HLO with identical
+numerics (validated against `ref.py` by pytest).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stats_kernel(h_ref, y_ref, mask_ref, g_ref, b_ref):
+    """One dense row: h (1, L, D), y/mask (1, L) → G (1, D, D), b (1, D)."""
+    h = h_ref[0]  # (L, D)
+    y = y_ref[0]  # (L,)
+    mask = mask_ref[0]  # (L,)
+    hm = h * mask[:, None]
+    # MXU contraction: (D, L) @ (L, D). mask is 0/1 so masking once on one
+    # operand suffices for the Gramian (hm.T @ h == hm.T @ hm).
+    g_ref[0] = jnp.dot(hm.T, h, preferred_element_type=jnp.float32)
+    b_ref[0] = jnp.dot(y * mask, h, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def batch_stats(h, y, mask):
+    """Per-dense-row statistics via the Pallas kernel.
+
+    Args:
+      h:    (B, L, D) float32 — gathered item embeddings per slot.
+      y:    (B, L) float32 — labels.
+      mask: (B, L) float32 — 1.0 valid, 0.0 padding.
+
+    Returns:
+      (G, b): (B, D, D) and (B, D) float32.
+    """
+    b_rows, l, d = h.shape
+    assert y.shape == (b_rows, l) and mask.shape == (b_rows, l)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=(b_rows,),
+        in_specs=[
+            pl.BlockSpec((1, l, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_rows, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((b_rows, d), jnp.float32),
+        ],
+        interpret=True,
+    )(h, y, mask)
+
+
+def vmem_bytes(l: int, d: int) -> int:
+    """Estimated VMEM working set of one grid step (f32 words)."""
+    return 4 * (l * d + d * d + d + 2 * l)
+
+
+def mxu_utilization_estimate(l: int, d: int) -> float:
+    """Fraction of MXU lanes busy for the (D,L)@(L,D) contraction.
+
+    The 128x128 MXU multiplies (128, K) tiles; utilization is the product
+    of how well D fills the lane dimension and L the depth (K) dimension.
+    """
+    lane = min(d, 128) / 128.0
+    depth = min(l, 128) / 128.0 if l < 8 else min(max(l, 8), 128) / 128.0
+    return lane * min(1.0, depth * 16)  # 8-deep pipelining hides short K

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: tiled Gramian H^T H (paper Algorithm 2 line 5).
+
+Each core computes the Gramian of its local embedding shard; the global
+Gramian is the all-reduce-sum of the locals (line 6). The shard can be
+large (millions of rows), so the kernel streams row tiles through VMEM and
+accumulates into a (D, D) output tile that stays resident:
+
+  grid = (N / T,): program i loads tile (T, D), adds its (D, D) product.
+
+TPU mapping: each tile product is a (D, T) @ (T, D) MXU contraction;
+T = 256 rows of d = 128 floats is a 128 KiB tile — comfortably VMEM-sized
+with double buffering. The output accumulator (64 KiB at d = 128) never
+leaves VMEM until the last step — this is the revolving-accumulator
+pattern the paper's gramian stage uses.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gramian_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (T, D)
+    o_ref[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+
+def gramian(x, tile_rows: int = 256):
+    """Tiled X^T X for a (N, D) float32 matrix; N must divide by the tile."""
+    n, d = x.shape
+    if n % tile_rows != 0:
+        # Pad with zero rows — zeros contribute nothing to the Gramian.
+        pad = tile_rows - n % tile_rows
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], axis=0)
+        n = x.shape[0]
+    grid = (n // tile_rows,)
+    return pl.pallas_call(
+        _gramian_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def vmem_bytes(tile_rows: int, d: int) -> int:
+    """VMEM working set: input tile + resident accumulator (f32)."""
+    return 4 * (tile_rows * d + d * d)

@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels and L2 solvers.
+
+These are the reference semantics the pytest suite checks everything
+against. They may use any jax op (including LAPACK-backed jnp.linalg —
+fine under the jax runtime, though NOT loadable through the rust PJRT
+bridge, which is why the production solvers in model.py avoid
+custom-calls).
+"""
+
+import jax.numpy as jnp
+
+
+def batch_stats_ref(h, y, mask):
+    """Reference for kernels.als_stats.batch_stats.
+
+    G[b] = sum_l mask[b,l] h[b,l] (x) h[b,l];  b[b] = sum_l mask*y*h.
+    """
+    hm = h * mask[..., None]
+    g = jnp.einsum("bli,blj->bij", hm, h)
+    bvec = jnp.einsum("bl,bli->bi", y * mask, h)
+    return g, bvec
+
+
+def gramian_ref(x):
+    """Reference for kernels.gramian.gramian."""
+    return x.T @ x
+
+
+def segment_stats_ref(h, y, mask, onehot, gram, lam, alpha):
+    """Per-segment normal equations (paper Eq. 4, dense-batched).
+
+    A[s] = alpha*gram + lam*I + sum_{dr: seg(dr)=s} G[dr]
+    c[s] = sum_{dr: seg(dr)=s} b[dr]
+    """
+    g, bvec = batch_stats_ref(h, y, mask)
+    d = h.shape[-1]
+    a = jnp.einsum("bs,bij->sij", onehot, g)
+    a = a + alpha * gram[None] + lam * jnp.eye(d, dtype=h.dtype)[None]
+    c = jnp.einsum("bs,bi->si", onehot, bvec)
+    return a, c
+
+
+def solve_step_ref(h, y, mask, onehot, gram, lam, alpha):
+    """Reference ALS solve step: LAPACK-backed batched solve."""
+    a, c = segment_stats_ref(h, y, mask, onehot, gram, lam, alpha)
+    return jnp.linalg.solve(a, c[..., None])[..., 0]

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: batched scoring for Top-K retrieval (paper §4.6).
+
+Evaluation scores a batch of query (user) embeddings against the full item
+shard: `S = Q @ H^T`, a (Q, D) x (D, N) contraction. On TPU this is the
+one stage of Fig. 1 that is *throughput*-bound on the MXU rather than
+gather-bound, so the kernel tiles N and keeps the (Q, D) query block
+resident in VMEM across the whole sweep:
+
+  grid = (N / T,): program i computes the (Q, T) score tile against item
+  tile (T, D). VMEM/step = Q*D + T*D + Q*T floats (Q=64, T=512, D=128
+  → 416 KiB), leaving headroom for double-buffered item tiles.
+
+The exact/approximate Top-K selection itself stays on the host (rust
+`eval/`): the paper notes Top-K is slow on TPU (§4.6) and recommends MIPS
+for the largest variants — our rust MipsIndex implements that path.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(q_ref, h_ref, o_ref):
+    # (Q, D) @ (D, T) — one MXU contraction per item tile.
+    o_ref[...] = jnp.dot(
+        q_ref[...], h_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def scores(q, h, tile_items: int = 512):
+    """All-pairs inner-product scores via the tiled Pallas kernel.
+
+    Args:
+      q: (Q, D) float32 query embeddings.
+      h: (N, D) float32 item embeddings.
+    Returns:
+      (Q, N) float32 score matrix.
+    """
+    n, d = h.shape
+    pad = (-n) % tile_items
+    if pad:
+        h = jnp.concatenate([h, jnp.zeros((pad, d), h.dtype)], axis=0)
+    nq = q.shape[0]
+    npad = h.shape[0]
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=(npad // tile_items,),
+        in_specs=[
+            pl.BlockSpec((nq, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile_items, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((nq, tile_items), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nq, npad), jnp.float32),
+        interpret=True,
+    )(q, h)
+    return out[:, :n]
+
+
+def scores_ref(q, h):
+    """Pure-jnp oracle."""
+    return q @ h.T
+
+
+def vmem_bytes(nq: int, tile_items: int, d: int) -> int:
+    """VMEM working set per grid step (f32)."""
+    return 4 * (nq * d + tile_items * d + nq * tile_items)

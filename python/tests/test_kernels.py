@@ -1,0 +1,108 @@
+"""L1 Pallas kernels vs the pure-jnp reference — the core build-time
+correctness signal, including hypothesis sweeps over shapes and values."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import als_stats, gramian, ref
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=25)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+class TestBatchStats:
+    @pytest.mark.parametrize("b,l,d", [(1, 1, 1), (2, 4, 3), (8, 8, 16), (16, 16, 32)])
+    def test_matches_reference(self, b, l, d):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * 100 + l * 10 + d), 3)
+        h = rand(k1, (b, l, d))
+        y = rand(k2, (b, l))
+        mask = (jax.random.uniform(k3, (b, l)) > 0.3).astype(jnp.float32)
+        g, bv = als_stats.batch_stats(h, y, mask)
+        g_ref, bv_ref = ref.batch_stats_ref(h, y, mask)
+        np.testing.assert_allclose(g, g_ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(bv, bv_ref, rtol=1e-5, atol=1e-5)
+
+    def test_full_mask_equals_unmasked_einsum(self):
+        k = jax.random.PRNGKey(0)
+        h = rand(k, (4, 8, 8))
+        y = jnp.ones((4, 8), jnp.float32)
+        mask = jnp.ones((4, 8), jnp.float32)
+        g, bv = als_stats.batch_stats(h, y, mask)
+        np.testing.assert_allclose(g, jnp.einsum("bli,blj->bij", h, h), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(bv, h.sum(axis=1), rtol=1e-5, atol=1e-5)
+
+    def test_zero_mask_zeroes_stats(self):
+        k = jax.random.PRNGKey(1)
+        h = rand(k, (3, 4, 5))
+        y = rand(k, (3, 4))
+        g, bv = als_stats.batch_stats(h, y, jnp.zeros((3, 4), jnp.float32))
+        assert float(jnp.abs(g).max()) == 0.0
+        assert float(jnp.abs(bv).max()) == 0.0
+
+    def test_gramians_are_symmetric_psd(self):
+        k = jax.random.PRNGKey(2)
+        h = rand(k, (4, 8, 6))
+        mask = jnp.ones((4, 8), jnp.float32)
+        g, _ = als_stats.batch_stats(h, jnp.ones((4, 8), jnp.float32), mask)
+        np.testing.assert_allclose(g, jnp.swapaxes(g, 1, 2), rtol=1e-6, atol=1e-6)
+        eigs = jnp.linalg.eigvalsh(g)
+        assert float(eigs.min()) > -1e-4
+
+    @given(
+        b=st.integers(1, 8),
+        l=st.integers(1, 16),
+        d=st.integers(1, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_random_shapes(self, b, l, d, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        h = rand(k1, (b, l, d), 2.0)
+        y = rand(k2, (b, l), 3.0)
+        mask = (jax.random.uniform(k3, (b, l)) > 0.5).astype(jnp.float32)
+        g, bv = als_stats.batch_stats(h, y, mask)
+        g_ref, bv_ref = ref.batch_stats_ref(h, y, mask)
+        np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(bv, bv_ref, rtol=1e-4, atol=1e-4)
+
+
+class TestGramianKernel:
+    @pytest.mark.parametrize("n,d,t", [(256, 8, 256), (512, 16, 256), (100, 4, 32)])
+    def test_matches_reference(self, n, d, t):
+        x = rand(jax.random.PRNGKey(n + d), (n, d))
+        got = gramian.gramian(x, tile_rows=t)
+        np.testing.assert_allclose(got, ref.gramian_ref(x), rtol=1e-4, atol=1e-4)
+
+    def test_padding_path_exact(self):
+        # 100 rows with tile 32 → pads 28 zero rows; result must be exact.
+        x = rand(jax.random.PRNGKey(9), (100, 4))
+        got = gramian.gramian(x, tile_rows=32)
+        np.testing.assert_allclose(got, x.T @ x, rtol=1e-5, atol=1e-5)
+
+    @given(n=st.integers(1, 300), d=st.integers(1, 16), seed=st.integers(0, 10**6))
+    def test_property_random_shapes(self, n, d, seed):
+        x = rand(jax.random.PRNGKey(seed), (n, d))
+        got = gramian.gramian(x, tile_rows=64)
+        np.testing.assert_allclose(got, ref.gramian_ref(x), rtol=1e-3, atol=1e-3)
+
+
+class TestVmemEstimates:
+    def test_stats_kernel_fits_vmem(self):
+        # Paper shapes: L = 16, d = 128 must fit far under 16 MiB.
+        assert als_stats.vmem_bytes(16, 128) < 1 << 20
+        assert als_stats.vmem_bytes(16, 512) < 16 << 20
+
+    def test_gramian_tile_fits_vmem(self):
+        assert gramian.vmem_bytes(256, 128) < 1 << 20
+
+    def test_mxu_estimate_monotone_in_d(self):
+        assert als_stats.mxu_utilization_estimate(16, 128) >= als_stats.mxu_utilization_estimate(16, 64)
+        assert 0.0 < als_stats.mxu_utilization_estimate(16, 128) <= 1.0

@@ -1,0 +1,106 @@
+"""L2 solvers and solve_step vs the LAPACK-backed reference."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import ref
+
+
+def random_problem(key, b, l, d, s=None):
+    s = s or b
+    k = jax.random.split(key, 5)
+    h = jax.random.normal(k[0], (b, l, d), jnp.float32)
+    y = jax.random.normal(k[1], (b, l), jnp.float32)
+    mask = (jax.random.uniform(k[2], (b, l)) > 0.25).astype(jnp.float32)
+    # Random segment assignment: dense row i -> segment (i % s).
+    seg = jnp.arange(b) % s
+    onehot = jax.nn.one_hot(seg, s, dtype=jnp.float32)
+    hh = jax.random.normal(k[3], (4 * d, d), jnp.float32)
+    gram = hh.T @ hh / (4 * d)
+    return h, y, mask, onehot, gram
+
+
+class TestSolvers:
+    @pytest.mark.parametrize("solver", model.SOLVERS)
+    @pytest.mark.parametrize("d", [1, 2, 8, 24])
+    def test_matches_lapack_reference(self, solver, d):
+        args = random_problem(jax.random.PRNGKey(d), b=8, l=4, d=d)
+        lam, alpha = jnp.float32(0.5), jnp.float32(0.1)
+        got = model.solve_step(solver, *args, lam, alpha)
+        want = ref.solve_step_ref(*args, lam, alpha)
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-3)
+
+    @pytest.mark.parametrize("solver", model.SOLVERS)
+    def test_residual_small(self, solver):
+        d = 16
+        args = random_problem(jax.random.PRNGKey(7), b=8, l=8, d=d)
+        lam, alpha = jnp.float32(0.3), jnp.float32(0.05)
+        a, c = model.segment_stats(*args, lam, alpha)
+        x = model.solve_step(solver, *args, lam, alpha)
+        resid = jnp.einsum("sij,sj->si", a, x) - c
+        rel = jnp.linalg.norm(resid) / jnp.linalg.norm(c)
+        assert float(rel) < 2e-3, f"{solver}: rel residual {rel}"
+
+    def test_pure_regularizer_segments(self):
+        # A segment with no valid slots must solve (alpha*G + lam*I) w = 0 → 0.
+        b, l, d = 4, 2, 3
+        h = jnp.ones((b, l, d), jnp.float32)
+        y = jnp.ones((b, l), jnp.float32)
+        mask = jnp.zeros((b, l), jnp.float32)
+        onehot = jnp.eye(b, dtype=jnp.float32)
+        gram = jnp.eye(d, dtype=jnp.float32)
+        w = model.solve_step("cholesky", h, y, mask, onehot, gram, jnp.float32(1.0), jnp.float32(1.0))
+        np.testing.assert_allclose(w, jnp.zeros((b, d)), atol=1e-6)
+
+    def test_known_tiny_system(self):
+        # Single segment, identity-ish design: (I + 0.5 I) w = [1, 1] → 2/3.
+        h = jnp.array([[[1.0, 0.0], [0.0, 1.0]]], jnp.float32)  # (1, 2, 2)
+        y = jnp.ones((1, 2), jnp.float32)
+        mask = jnp.ones((1, 2), jnp.float32)
+        onehot = jnp.ones((1, 1), jnp.float32)
+        gram = jnp.zeros((2, 2), jnp.float32)
+        for solver in model.SOLVERS:
+            w = model.solve_step(solver, h, y, mask, onehot, gram, jnp.float32(0.5), jnp.float32(0.0))
+            np.testing.assert_allclose(w, jnp.full((1, 2), 2.0 / 3.0), rtol=1e-4)
+
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(0, 10**6), d=st.integers(2, 12))
+    def test_property_cg_equals_cholesky(self, seed, d):
+        args = random_problem(jax.random.PRNGKey(seed), b=4, l=4, d=d)
+        lam, alpha = jnp.float32(1.0), jnp.float32(0.2)
+        cg = model.solve_step("cg", *args, lam, alpha)
+        ch = model.solve_step("cholesky", *args, lam, alpha)
+        np.testing.assert_allclose(cg, ch, rtol=5e-2, atol=5e-3)
+
+
+class TestSegmentReduction:
+    def test_multi_dense_row_segments_sum(self):
+        # Two dense rows for one segment must equal one concatenated row.
+        d = 4
+        k = jax.random.PRNGKey(3)
+        h = jax.random.normal(k, (2, 3, d), jnp.float32)
+        y = jnp.ones((2, 3), jnp.float32)
+        mask = jnp.ones((2, 3), jnp.float32)
+        onehot = jnp.array([[1.0], [1.0]], jnp.float32)  # both rows → seg 0
+        gram = jnp.zeros((d, d), jnp.float32)
+        a2, c2 = model.segment_stats(h, y, mask, onehot, gram, jnp.float32(0.1), jnp.float32(0.0))
+
+        h1 = h.reshape(1, 6, d)
+        a1, c1 = model.segment_stats(
+            h1, y.reshape(1, 6), mask.reshape(1, 6),
+            jnp.ones((1, 1), jnp.float32), gram, jnp.float32(0.1), jnp.float32(0.0)
+        )
+        np.testing.assert_allclose(a2, a1, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c2, c1, rtol=1e-5, atol=1e-5)
+
+
+class TestCgBudget:
+    def test_budget_bounds(self):
+        assert model.cg_iterations(2) == 8
+        assert model.cg_iterations(16) == 32
+        assert model.cg_iterations(128) == 40  # clamped (perf: see §Perf)

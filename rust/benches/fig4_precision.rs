@@ -1,0 +1,52 @@
+//! Bench target for **Figure 4**: eval metric by epoch for f32, mixed and
+//! naive-bf16 precision — in the low-λ collapse regime (Fig. 4a) and the
+//! high-λ stable regime (Fig. 4b).
+//!
+//! Note on calibration: the collapse threshold sits at the λ that bf16's
+//! 8-bit mantissa can still represent against the normal-matrix diagonal
+//! (∝ row-degree/d). Our scaled dataset uses a smaller d than the paper,
+//! so the regime boundary sits at a larger λ — the *mechanism* and the
+//! qualitative split are identical (see EXPERIMENTS.md).
+//!
+//! ```bash
+//! cargo bench --bench fig4_precision
+//! ALX_F4_LAMBDA=1e-2 cargo bench --bench fig4_precision  # single custom run
+//! ```
+
+use alx::harness;
+use alx::webgraph::Variant;
+
+fn run(lambda: f32, label: &str) {
+    println!("\n=== {label} (λ={lambda:.0e}) ===");
+    let series = harness::run_fig4(Variant::InDense, 0.002, 10, 32, lambda, 4, 7)
+        .expect("fig4 run");
+    harness::print_fig4(&series);
+
+    let last = |name: &str| {
+        series
+            .iter()
+            .find(|s| s.precision.name() == name)
+            .and_then(|s| s.recall_by_epoch.last().copied())
+            .unwrap_or(0.0)
+    };
+    println!(
+        "final R@20: f32={:.3} mixed={:.3} naive-bf16={:.3}",
+        last("f32"),
+        last("mixed"),
+        last("naive-bf16"),
+    );
+}
+
+fn main() {
+    if let Some(lambda) = std::env::var("ALX_F4_LAMBDA").ok().and_then(|s| s.parse().ok()) {
+        run(lambda, "custom λ");
+        return;
+    }
+    run(1e-4, "Fig. 4a — low regularization: naive bf16 collapses");
+    run(5e-1, "Fig. 4b — high regularization: naive bf16 tracks f32");
+    println!(
+        "\nconclusion (paper §4.4): store tables in bf16, cast solver inputs\n\
+         to f32, cast solutions back — 'mixed' matches f32 at half the\n\
+         memory and collective traffic in BOTH regimes."
+    );
+}

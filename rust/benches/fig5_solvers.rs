@@ -1,0 +1,39 @@
+//! Bench target for **Figure 5**: training time per epoch by linear solver
+//! (LU, QR, Cholesky, CG) as the embedding dimension grows — on the
+//! native engine and, when artifacts exist, on the XLA/PJRT engine.
+//!
+//! Paper context: on TPU the MXU makes CG the fastest at large d. On this
+//! CPU substrate the native engine favours Cholesky (lowest flop count);
+//! the XLA engine shows CG's batched-matvec advantage. EXPERIMENTS.md
+//! discusses the mapping.
+//!
+//! ```bash
+//! cargo bench --bench fig5_solvers
+//! ```
+
+use alx::harness;
+use alx::linalg::SolverKind;
+use alx::runtime::XlaEngine;
+use alx::webgraph::Variant;
+
+fn main() {
+    let dims = [16usize, 32, 64, 128];
+    println!("== native engine ==");
+    let points = harness::run_fig5(Variant::InDense, 0.002, &dims, 4, 7, None).expect("fig5");
+    harness::print_fig5(&points);
+
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        println!("\n== xla engine (AOT L2 graph + L1 Pallas kernel via PJRT) ==");
+        let mut builder = |solver: SolverKind,
+                           d: usize|
+         -> anyhow::Result<Box<dyn alx::als::SolveEngine>> {
+            Ok(Box::new(XlaEngine::new("artifacts", solver.name(), d, 64, 8)?))
+        };
+        match harness::run_fig5(Variant::InDense, 0.002, &dims, 4, 7, Some(&mut builder)) {
+            Ok(points) => harness::print_fig5(&points),
+            Err(e) => println!("xla sweep failed: {e}"),
+        }
+    } else {
+        println!("\n(xla engine sweep skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,105 @@
+//! Microbenchmarks of the per-batch hot path (the §Perf working set):
+//! sharded_gather, sufficient statistics, each solver, sharded_scatter —
+//! native vs XLA engine at the production shape (B=64, L=8, d=128).
+//!
+//! ```bash
+//! cargo bench --bench hotpath_micro
+//! ```
+
+use alx::als::{NativeEngine, SolveEngine};
+use alx::collectives::{sharded_gather, sharded_scatter, CommStats};
+use alx::densebatch::DenseBatcher;
+use alx::linalg::{Mat, SolveOptions, SolverKind};
+use alx::runtime::XlaEngine;
+use alx::sharding::{ShardedTable, Storage};
+use alx::sparse::Csr;
+use alx::util::{Pcg64, Timer};
+
+const B: usize = 64;
+const L: usize = 8;
+const D: usize = 128;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let timer = Timer::start();
+    for _ in 0..iters {
+        f();
+    }
+    let per = timer.elapsed_secs() / iters as f64;
+    println!("{name:<38} {:>10.3} ms/iter", per * 1e3);
+    per
+}
+
+fn main() {
+    let mut rng = Pcg64::new(7);
+    let n_items = 4000;
+
+    // A realistic batch from a zipf-ish matrix.
+    let mut triplets = Vec::new();
+    for r in 0..B as u32 {
+        for _ in 0..L {
+            triplets.push((r, rng.next_zipf(n_items, 1.2) as u32, 1.0f32));
+        }
+    }
+    let m = Csr::from_coo(B, n_items, &triplets);
+    let batcher = DenseBatcher::new(B, L);
+    let batch = batcher.batch_rows_of(&m, &(0..B as u32).collect::<Vec<_>>())[0].clone();
+
+    let table = ShardedTable::randn(n_items, D, 8, Storage::Bf16, &mut rng);
+    let items_dense = table.to_dense();
+    let gram = items_dense.gramian();
+    let stats = CommStats::new();
+
+    println!("hot path @ B={B} L={L} d={D}, {n_items} items, 8 shards\n");
+
+    bench("sharded_gather (collective emu)", 200, || {
+        let _ = sharded_gather(&table, &batch.items, &stats);
+    });
+
+    let gathered = sharded_gather(&table, &batch.items, &stats);
+
+    bench("sufficient statistics (native)", 50, || {
+        let _ = alx::als::stats::accumulate(&batch, &gathered, &gram, 0.01, 0.001, false);
+    });
+
+    for solver in SolverKind::ALL {
+        let mut eng = NativeEngine::new(solver, SolveOptions::default());
+        bench(&format!("solve_batch native/{}", solver.name()), 10, || {
+            let _ = eng.solve_batch(&batch, &gathered, &gram, 0.01, 0.001).unwrap();
+        });
+    }
+
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        for solver in SolverKind::ALL {
+            match XlaEngine::new("artifacts", solver.name(), D, B, L) {
+                Ok(mut eng) => {
+                    bench(&format!("solve_batch xla/{}", solver.name()), 10, || {
+                        let _ = eng.solve_batch(&batch, &gathered, &gram, 0.01, 0.001).unwrap();
+                    });
+                }
+                Err(e) => println!("xla/{}: unavailable ({e})", solver.name()),
+            }
+        }
+    } else {
+        println!("(xla engine benches skipped: run `make artifacts`)");
+    }
+
+    let mut table_mut = ShardedTable::randn(n_items, D, 8, Storage::Bf16, &mut rng);
+    let solutions = Mat::randn(batch.num_segments(), D, 1.0, &mut rng);
+    bench("sharded_scatter (collective emu)", 200, || {
+        sharded_scatter(&mut table_mut, &batch.segment_rows, &solutions, &stats);
+    });
+
+    // Throughput summary for the stats kernel (the O(|S|d²) hot spot).
+    let slots = batch.valid_slots();
+    let flops_per = 2.0 * slots as f64 * (D * D + D) as f64;
+    let per = bench("stats throughput probe", 50, || {
+        let _ = alx::als::stats::accumulate(&batch, &gathered, &gram, 0.01, 0.001, false);
+    });
+    println!(
+        "\nstatistics kernel: {:.2} GFLOP/s on {} valid slots",
+        flops_per / per / 1e9,
+        slots
+    );
+}

@@ -1,0 +1,28 @@
+//! Bench target for **Table 1**: generate all six WebGraph variants and
+//! report their statistics next to the paper's full-scale numbers, plus
+//! generation throughput.
+//!
+//! ```bash
+//! cargo bench --bench table1_webgraph
+//! ```
+
+use alx::harness;
+use alx::util::Timer;
+
+fn main() {
+    let scale = std::env::var("ALX_T1_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.002);
+    let timer = Timer::start();
+    let rows = harness::run_table1(scale, 7);
+    let secs = timer.elapsed_secs();
+    harness::print_table1(&rows, scale);
+    let edges: usize = rows.iter().map(|r| r.edges).sum();
+    println!(
+        "\ngenerated {} edges total in {:.2}s ({:.1}M edges/s)",
+        edges,
+        secs,
+        edges as f64 / secs / 1e6
+    );
+}

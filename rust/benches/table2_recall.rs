@@ -1,0 +1,80 @@
+//! Bench target for **Table 2**: train every WebGraph variant with the
+//! paper's recipe (d=128→scaled, 16 epochs→scaled, CG, mixed precision,
+//! per-variant hyper-parameters) and report Recall@20/@50 beside the
+//! paper's numbers.
+//!
+//! The two largest variants are evaluated with approximate MIPS, like the
+//! paper (the `*` rows). Hyper-parameters: λ from the paper's grid; α is
+//! the paper's value rescaled by the item-count ratio (α multiplies the
+//! all-items gramian, so its magnitude scales ~1/n — see DESIGN.md).
+//!
+//! ```bash
+//! cargo bench --bench table2_recall                 # ~2 min at default scale
+//! ALX_T2_SCALE=0.001 cargo bench --bench table2_recall
+//! ```
+
+use alx::als::TrainConfig;
+use alx::harness;
+use alx::util::Timer;
+use alx::webgraph::Variant;
+
+fn main() {
+    let scale: f64 = std::env::var("ALX_T2_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.002);
+    let epochs: usize = std::env::var("ALX_T2_EPOCHS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+
+    let mut rows = Vec::new();
+    for v in Variant::ALL {
+        // λ, α per variant — λ from the paper's grid; α is the paper's
+        // best value rescaled by the item-count ratio (~1/n scaling, see
+        // doc comment), then refined with `alx grid --coarse`.
+        let (lambda, alpha) = match v {
+            Variant::Sparse => (5e-2, 5e-3),
+            Variant::Dense => (1e-2, 1e-2),
+            Variant::DeSparse => (1e-2, 5e-3),
+            Variant::DeDense => (2e-2, 1e-2),
+            Variant::InSparse => (5e-3, 5e-3),
+            Variant::InDense => (5e-2, 1e-2),
+        };
+        let train = TrainConfig {
+            dim: 96,
+            epochs,
+            lambda,
+            alpha,
+            batch_rows: 64,
+            batch_width: 8,
+            compute_objective: false,
+            ..TrainConfig::default()
+        };
+        let timer = Timer::start();
+        // The full variants are 365M/136M nodes; scale them harder so all
+        // six land at comparable (tiny) sizes.
+        let vscale = match v {
+            Variant::Sparse => scale * 1.5e-3,
+            Variant::Dense => scale * 4e-3,
+            Variant::DeSparse => scale * 0.03,
+            Variant::DeDense => scale * 0.1,
+            Variant::InSparse => scale * 0.4,
+            Variant::InDense => scale,
+        };
+        match harness::run_table2_row(v, vscale, &train, 8, 7) {
+            Ok(row) => {
+                println!(
+                    "{}: R@20={:.3} R@50={:.3} ({:.1}s)",
+                    v.name(),
+                    row.recall_at_20,
+                    row.recall_at_50,
+                    timer.elapsed_secs()
+                );
+                rows.push(row);
+            }
+            Err(e) => println!("{}: failed: {e}", v.name()),
+        }
+    }
+    harness::print_table2(&rows);
+}

@@ -1,0 +1,128 @@
+//! Solve engines: the pluggable "Solve" stage of Figure 1.
+//!
+//! * [`NativeEngine`] — pure-rust statistics + solver; always available,
+//!   deterministic, the correctness oracle.
+//! * `runtime::XlaEngine` — executes the AOT-compiled L2 JAX graph (with
+//!   the L1 Pallas statistics kernel inside) through PJRT. Same inputs,
+//!   same outputs; tests assert the two agree.
+
+use super::stats::accumulate;
+use crate::densebatch::DenseBatch;
+use crate::linalg::{batched_solve, Mat, SolveOptions, SolverKind};
+
+/// A strategy that turns one dense batch into per-segment solutions.
+pub trait SolveEngine {
+    /// Engine name for logs/benches.
+    fn name(&self) -> &'static str;
+
+    /// Solve the batch: `h` holds one gathered embedding row per slot
+    /// (`[B·L × d]`). Returns `[num_segments × d]` new embeddings.
+    fn solve_batch(
+        &mut self,
+        batch: &DenseBatch,
+        h: &Mat,
+        gramian: &Mat,
+        lambda: f32,
+        alpha: f32,
+    ) -> anyhow::Result<Mat>;
+}
+
+/// Pure-rust engine.
+pub struct NativeEngine {
+    pub solver: SolverKind,
+    pub opts: SolveOptions,
+}
+
+impl NativeEngine {
+    pub fn new(solver: SolverKind, opts: SolveOptions) -> Self {
+        NativeEngine { solver, opts }
+    }
+}
+
+impl SolveEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn solve_batch(
+        &mut self,
+        batch: &DenseBatch,
+        h: &Mat,
+        gramian: &Mat,
+        lambda: f32,
+        alpha: f32,
+    ) -> anyhow::Result<Mat> {
+        let d = h.cols;
+        let stats = accumulate(batch, h, gramian, lambda, alpha, self.opts.bf16_accumulate);
+        let solutions = batched_solve(self.solver, d, &stats.a, &stats.b, &self.opts);
+        Ok(Mat::from_rows(stats.num_segments, d, &solutions))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::densebatch::DenseBatcher;
+    use crate::sparse::Csr;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn native_engine_solves_exactly_one_row_problem() {
+        // Single user with items {0,1}, y=1; H = identity-ish rows.
+        // Normal equations: (h0 h0ᵀ + h1 h1ᵀ + αG + λI) w = h0 + h1.
+        let m = Csr::from_coo(1, 2, &[(0, 0, 1.0), (0, 1, 1.0)]);
+        let batcher = DenseBatcher::new(1, 2);
+        let batch = &batcher.batch_rows_of(&m, &[0])[0];
+        let d = 2;
+        let items = Mat::from_rows(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let gram = items.gramian();
+        let mut h = Mat::zeros(batch.rows * batch.width, d);
+        for (slot, &it) in batch.items.iter().enumerate() {
+            h.row_mut(slot).copy_from_slice(items.row(it as usize));
+        }
+        let lambda = 0.5f32;
+        let alpha = 0.0f32;
+        let mut eng = NativeEngine::new(SolverKind::Cholesky, SolveOptions::default());
+        let w = eng.solve_batch(batch, &h, &gram, lambda, alpha).unwrap();
+        // A = I + 0.5I = 1.5I, b = [1,1] → w = [2/3, 2/3].
+        assert!((w[(0, 0)] - 2.0 / 3.0).abs() < 1e-5);
+        assert!((w[(0, 1)] - 2.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn solvers_agree_through_engine() {
+        let mut rng = Pcg64::new(31);
+        let n_items = 40;
+        let mut t = Vec::new();
+        for r in 0..8u32 {
+            for _ in 0..6 {
+                t.push((r, rng.range(0, n_items) as u32, 1.0));
+            }
+        }
+        let m = Csr::from_coo(8, n_items, &t);
+        let d = 12;
+        let items = Mat::randn(n_items, d, 0.5, &mut rng);
+        let gram = items.gramian();
+        let batcher = DenseBatcher::new(16, 4);
+        let batch = &batcher.batch_rows_of(&m, &(0..8).collect::<Vec<_>>())[0];
+        let mut h = Mat::zeros(batch.rows * batch.width, d);
+        for (slot, &it) in batch.items.iter().enumerate() {
+            h.row_mut(slot).copy_from_slice(items.row(it as usize));
+        }
+        let mut results = Vec::new();
+        for kind in SolverKind::ALL {
+            let mut eng = NativeEngine::new(
+                kind,
+                SolveOptions { cg_iters: 2 * d, ..Default::default() },
+            );
+            results.push(eng.solve_batch(batch, &h, &gram, 0.3, 0.01).unwrap());
+        }
+        for r in &results[1..] {
+            assert!(
+                r.max_abs_diff(&results[0]) < 5e-3,
+                "solver disagreement: {}",
+                r.max_abs_diff(&results[0])
+            );
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Alternating Least Squares for implicit feedback (iALS, Hu et al. 2008)
+//! in the paper's distributed formulation (Algorithms 1 & 2).
+//!
+//! One epoch = a **user pass** (solve every row of `W` with `H` fixed)
+//! followed by an **item pass** (the transpose problem). Each pass runs the
+//! Fig. 1 pipeline per dense batch: `sharded_gather` → sufficient
+//! statistics → batched solve → `sharded_scatter`.
+//!
+//! The per-row normal equation (paper Eq. 4):
+//!
+//! ```text
+//! w_u ← (Σ_{(u,i,y)∈S} h_i⊗h_i  +  α·HᵀH  +  λI)⁻¹ · Σ_{(u,i,y)∈S} y·h_i
+//! ```
+
+pub mod checkpoint;
+pub mod engine;
+pub mod local_stats;
+pub mod stats;
+pub mod trainer;
+
+pub use engine::{NativeEngine, SolveEngine};
+pub use trainer::{EpochStats, TrainConfig, Trainer};
+
+pub use crate::linalg::SolverKind;
+
+/// Numeric policy for tables / statistics / solve (paper §4.4, Figure 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecisionPolicy {
+    /// Everything float32 (2× memory + comm; the stable reference).
+    F32,
+    /// The paper's recommendation: tables and collectives in bfloat16,
+    /// solver inputs cast to float32, solutions cast back to bfloat16.
+    Mixed,
+    /// Naive bfloat16 end to end — statistics and solver accumulate in
+    /// bf16. Collapses mid-training at low λ (Figure 4a).
+    NaiveBf16,
+}
+
+impl PrecisionPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            PrecisionPolicy::F32 => "f32",
+            PrecisionPolicy::Mixed => "mixed",
+            PrecisionPolicy::NaiveBf16 => "naive-bf16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "float32" => Some(PrecisionPolicy::F32),
+            "mixed" | "bf16" => Some(PrecisionPolicy::Mixed),
+            "naive-bf16" | "naive_bf16" | "naivebf16" => Some(PrecisionPolicy::NaiveBf16),
+            _ => None,
+        }
+    }
+
+    /// Storage format of the sharded tables under this policy.
+    pub fn storage(self) -> crate::sharding::Storage {
+        match self {
+            PrecisionPolicy::F32 => crate::sharding::Storage::F32,
+            _ => crate::sharding::Storage::Bf16,
+        }
+    }
+
+    /// Whether statistic accumulation and solving round to bf16.
+    pub fn bf16_accumulate(self) -> bool {
+        self == PrecisionPolicy::NaiveBf16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [PrecisionPolicy::F32, PrecisionPolicy::Mixed, PrecisionPolicy::NaiveBf16] {
+            assert_eq!(PrecisionPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PrecisionPolicy::parse("x"), None);
+    }
+
+    #[test]
+    fn storage_mapping() {
+        use crate::sharding::Storage;
+        assert_eq!(PrecisionPolicy::F32.storage(), Storage::F32);
+        assert_eq!(PrecisionPolicy::Mixed.storage(), Storage::Bf16);
+        assert_eq!(PrecisionPolicy::NaiveBf16.storage(), Storage::Bf16);
+        assert!(!PrecisionPolicy::Mixed.bf16_accumulate());
+        assert!(PrecisionPolicy::NaiveBf16.bf16_accumulate());
+    }
+}

@@ -1,0 +1,276 @@
+//! Sufficient-statistic accumulation (Algorithm 2 lines 10-16).
+//!
+//! Given one dense batch and the gathered item embeddings, build per
+//! segment (= per source row):
+//!
+//! * `∇²_s = αG + λI + Σ_{valid slots of s} h⊗h`  — the `d×d` normal matrix
+//! * `∇_s  = Σ_{valid slots of s} y·h`            — the `d` right-hand side
+//!
+//! This is the paper's compute hot-spot (`O(|S|·d²)`); the L1 Pallas kernel
+//! `python/compile/kernels/als_stats.py` implements the same contraction as
+//! masked einsums for the XLA engine, and this module is the native-engine
+//! twin and the correctness oracle for both.
+
+use crate::densebatch::DenseBatch;
+use crate::linalg::mat::{symmetrize_upper, Mat};
+use crate::util::bf16::Bf16;
+
+/// Packed batched statistics: `num_segments` systems of dimension `d`.
+#[derive(Clone, Debug)]
+pub struct BatchStats {
+    pub d: usize,
+    pub num_segments: usize,
+    /// `num_segments` packed `d×d` normal matrices.
+    pub a: Vec<f32>,
+    /// `num_segments` packed `d`-vectors.
+    pub b: Vec<f32>,
+}
+
+/// Accumulate statistics for `batch`. `h` holds the gathered embeddings,
+/// one row per slot (`[B·L × d]`, padded slots arbitrary — the mask zeroes
+/// them). `bf16_acc` rounds every accumulation to bfloat16, reproducing
+/// the Figure 4 naive-bf16 failure mode.
+pub fn accumulate(
+    batch: &DenseBatch,
+    h: &Mat,
+    gramian: &Mat,
+    lambda: f32,
+    alpha: f32,
+    bf16_acc: bool,
+) -> BatchStats {
+    let d = h.cols;
+    assert_eq!(h.rows, batch.rows * batch.width, "one embedding per slot");
+    assert_eq!((gramian.rows, gramian.cols), (d, d));
+    let s = batch.num_segments();
+    let mut a = vec![0.0f32; s * d * d];
+    let mut b = vec![0.0f32; s * d];
+
+    // Initialize every A_s with αG + λI (Algorithm 2 line 12).
+    for seg in 0..s {
+        let block = &mut a[seg * d * d..(seg + 1) * d * d];
+        for i in 0..d {
+            for j in 0..d {
+                block[i * d + j] = alpha * gramian[(i, j)];
+            }
+            block[i * d + i] += lambda;
+        }
+    }
+
+    // Slot contributions (lines 13-16). Upper triangle only, mirrored after.
+    for dr in 0..batch.rows {
+        let seg = batch.segments[dr] as usize;
+        if seg >= s {
+            continue; // padded dense row
+        }
+        let ablock = &mut a[seg * d * d..(seg + 1) * d * d];
+        let bblock = &mut b[seg * d..(seg + 1) * d];
+        for slot in dr * batch.width..(dr + 1) * batch.width {
+            if batch.mask[slot] == 0.0 {
+                continue;
+            }
+            let hrow = h.row(slot);
+            let y = batch.values[slot];
+            if bf16_acc {
+                // TPU MXU semantics: bf16 multiplies, f32 accumulators.
+                for i in 0..d {
+                    let hi = hrow[i];
+                    bblock[i] += Bf16::round(y * hi);
+                    let arow = &mut ablock[i * d..(i + 1) * d];
+                    for j in i..d {
+                        arow[j] += Bf16::round(hi * hrow[j]);
+                    }
+                }
+            } else {
+                // Upper-triangle rank-1 update, written as bounds-check-free
+                // zipped slices so the compiler vectorizes the inner loop
+                // (≈2.4× over indexed form — EXPERIMENTS.md §Perf).
+                for i in 0..d {
+                    let hi = hrow[i];
+                    bblock[i] += y * hi;
+                    if hi == 0.0 {
+                        continue;
+                    }
+                    let arow = &mut ablock[i * d + i..(i + 1) * d];
+                    let hs = &hrow[i..];
+                    for (a, &hv) in arow.iter_mut().zip(hs) {
+                        *a += hi * hv;
+                    }
+                }
+            }
+        }
+    }
+    for seg in 0..s {
+        symmetrize_upper(&mut a[seg * d * d..(seg + 1) * d * d], d);
+    }
+    if bf16_acc {
+        // Naive-bf16 mode stores the *statistics themselves* in bfloat16
+        // (the paper's end-to-end-bf16 configuration). This is the Fig. 4
+        // failure mechanism: once the h⊗h diagonal grows, a small λ (and
+        // eventually α·G) is absorbed by the 8-bit mantissa and the normal
+        // matrix loses its regularization — solves then blow up and the
+        // training metric collapses unrecoverably.
+        crate::util::bf16::round_slice(&mut a);
+        crate::util::bf16::round_slice(&mut b);
+    }
+    BatchStats { d, num_segments: s, a, b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::densebatch::DenseBatcher;
+    use crate::sparse::Csr;
+    use crate::util::Pcg64;
+
+    /// Reference: direct per-row accumulation from the sparse matrix.
+    fn reference_stats(
+        matrix: &Csr,
+        row: usize,
+        items: &Mat, // full item table
+        gramian: &Mat,
+        lambda: f32,
+        alpha: f32,
+    ) -> (Mat, Vec<f32>) {
+        let d = items.cols;
+        let mut a = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                a[(i, j)] = alpha * gramian[(i, j)];
+            }
+            a[(i, i)] += lambda;
+        }
+        let mut b = vec![0.0f32; d];
+        for (&c, &y) in matrix.row_indices(row).iter().zip(matrix.row_values(row)) {
+            let h = items.row(c as usize);
+            for i in 0..d {
+                b[i] += y * h[i];
+                for j in 0..d {
+                    a[(i, j)] += h[i] * h[j];
+                }
+            }
+        }
+        (a, b)
+    }
+
+    fn setup(d: usize) -> (Csr, Mat, Mat) {
+        let mut rng = Pcg64::new(29);
+        let n_items = 30;
+        let mut t = Vec::new();
+        for r in 0..6u32 {
+            let len = 2 + rng.range(0, 9);
+            let mut cols = std::collections::HashSet::new();
+            while cols.len() < len {
+                cols.insert(rng.range(0, n_items) as u32);
+            }
+            for c in cols {
+                t.push((r, c, rng.next_f32() + 0.5));
+            }
+        }
+        let m = Csr::from_coo(6, n_items, &t);
+        let items = Mat::randn(n_items, d, 0.7, &mut rng);
+        let g = items.gramian();
+        (m, items, g)
+    }
+
+    #[test]
+    fn matches_reference_per_row() {
+        let d = 5;
+        let (m, items, g) = setup(d);
+        let batcher = DenseBatcher::new(16, 4);
+        let rows: Vec<u32> = (0..m.rows as u32).collect();
+        let lambda = 0.1;
+        let alpha = 0.01;
+        for batch in batcher.batch_rows_of(&m, &rows) {
+            let h = items.clone(); // gather all slots
+            let mut hslots = Mat::zeros(batch.rows * batch.width, d);
+            for (slot, &it) in batch.items.iter().enumerate() {
+                hslots.row_mut(slot).copy_from_slice(h.row(it as usize));
+            }
+            let stats = accumulate(&batch, &hslots, &g, lambda, alpha, false);
+            for (seg, &src) in batch.segment_rows.iter().enumerate() {
+                let (aref, bref) = reference_stats(&m, src as usize, &items, &g, lambda, alpha);
+                let ablock =
+                    Mat::from_rows(d, d, &stats.a[seg * d * d..(seg + 1) * d * d]);
+                assert!(
+                    ablock.max_abs_diff(&aref) < 1e-4,
+                    "A mismatch for row {src}: {}",
+                    ablock.max_abs_diff(&aref)
+                );
+                for i in 0..d {
+                    assert!((stats.b[seg * d + i] - bref[i]).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_segments_are_pure_regularizer() {
+        // A batch with zero valid slots for its only segment: A = αG + λI.
+        let m = Csr::from_coo(1, 4, &[(0, 1, 1.0)]);
+        let batcher = DenseBatcher::new(2, 2);
+        let batch = &batcher.batch_rows_of(&m, &[0])[0];
+        let d = 3;
+        let g = Mat::eye(d);
+        let mut h = Mat::zeros(batch.rows * batch.width, d);
+        // zero out the one valid slot's embedding too
+        for r in 0..h.rows {
+            for c in 0..d {
+                h[(r, c)] = 0.0;
+            }
+        }
+        let stats = accumulate(batch, &h, &g, 0.5, 2.0, false);
+        let a0 = Mat::from_rows(d, d, &stats.a[0..d * d]);
+        let mut expect = Mat::zeros(d, d);
+        for i in 0..d {
+            expect[(i, i)] = 2.0 + 0.5;
+        }
+        assert!(a0.max_abs_diff(&expect) < 1e-6);
+    }
+
+    #[test]
+    fn a_is_symmetric() {
+        let d = 6;
+        let (m, items, g) = setup(d);
+        let batcher = DenseBatcher::new(8, 4);
+        let rows: Vec<u32> = (0..m.rows as u32).collect();
+        for batch in batcher.batch_rows_of(&m, &rows) {
+            let mut hslots = Mat::zeros(batch.rows * batch.width, d);
+            for (slot, &it) in batch.items.iter().enumerate() {
+                hslots.row_mut(slot).copy_from_slice(items.row(it as usize));
+            }
+            let stats = accumulate(&batch, &hslots, &g, 0.01, 0.001, false);
+            for seg in 0..stats.num_segments {
+                let block = &stats.a[seg * d * d..(seg + 1) * d * d];
+                for i in 0..d {
+                    for j in 0..d {
+                        assert_eq!(block[i * d + j], block[j * d + i]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_accumulation_differs_from_f32() {
+        let d = 8;
+        let (m, items, g) = setup(d);
+        let batcher = DenseBatcher::new(16, 4);
+        let rows: Vec<u32> = (0..m.rows as u32).collect();
+        let batch = &batcher.batch_rows_of(&m, &rows)[0];
+        let mut hslots = Mat::zeros(batch.rows * batch.width, d);
+        for (slot, &it) in batch.items.iter().enumerate() {
+            hslots.row_mut(slot).copy_from_slice(items.row(it as usize));
+        }
+        let s32 = accumulate(batch, &hslots, &g, 1e-4, 1e-3, false);
+        let s16 = accumulate(batch, &hslots, &g, 1e-4, 1e-3, true);
+        let diff: f32 = s32
+            .a
+            .iter()
+            .zip(&s16.a)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max);
+        assert!(diff > 0.0, "bf16 accumulation should round");
+        // And the tiny λ is representable alone but lost under accumulation
+        // against O(1) gramian entries — the Figure 4 mechanism.
+    }
+}

@@ -1,0 +1,498 @@
+//! The distributed ALS trainer — Algorithm 2 end to end.
+
+use super::engine::{NativeEngine, SolveEngine};
+use super::PrecisionPolicy;
+use crate::collectives::{all_reduce_gramian, sharded_gather, sharded_scatter, CommStats};
+use crate::densebatch::DenseBatcher;
+use crate::linalg::{Mat, SolveOptions, SolverKind};
+use crate::sharding::ShardedTable;
+use crate::sparse::Csr;
+use crate::topo::Topology;
+use crate::util::timer::{Profiler, Timer};
+use crate::util::Pcg64;
+
+/// Training hyper-parameters and engine knobs.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Embedding dimension d (paper: 128).
+    pub dim: usize,
+    /// Alternating epochs T (paper: 16).
+    pub epochs: usize,
+    /// L2 regularization λ.
+    pub lambda: f32,
+    /// Weakly-negative weight α (implicit-feedback gravity term).
+    pub alpha: f32,
+    /// Linear solver (paper recommends CG).
+    pub solver: SolverKind,
+    /// Numeric policy (paper default: Mixed).
+    pub precision: PrecisionPolicy,
+    /// Dense-batch rows B (static shape).
+    pub batch_rows: usize,
+    /// Dense row width L (paper: 8 or 16 work well).
+    pub batch_width: usize,
+    /// CG iteration budget (0 = auto).
+    pub cg_iters: usize,
+    /// RNG seed for embedding init.
+    pub seed: u64,
+    /// Compute the full training objective each epoch (costs an extra
+    /// O(|S|·d) pass).
+    pub compute_objective: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dim: 128,
+            epochs: 16,
+            lambda: 1e-3,
+            alpha: 1e-4,
+            solver: SolverKind::Cg,
+            precision: PrecisionPolicy::Mixed,
+            batch_rows: 256,
+            batch_width: 16,
+            cg_iters: 0,
+            seed: 42,
+            compute_objective: true,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn solve_options(&self) -> SolveOptions {
+        SolveOptions {
+            cg_iters: self.cg_iters,
+            bf16_accumulate: self.precision.bf16_accumulate(),
+        }
+    }
+}
+
+/// Per-epoch record (history entry).
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    /// Wall-clock seconds for the epoch (both passes).
+    pub seconds: f64,
+    /// Full training objective (Eq. 3), if enabled.
+    pub objective: Option<f64>,
+    /// Collective bytes this epoch (priced by the topo model for Fig. 6).
+    pub comm_bytes: u64,
+    /// Predicted epoch seconds on the simulated TPU slice.
+    pub simulated_seconds: f64,
+}
+
+/// Distributed ALS trainer over a (simulated) TPU slice.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub topo: Topology,
+    /// Training matrix (users × items).
+    train: Csr,
+    /// Its transpose (items × users) for the item pass.
+    train_t: Csr,
+    /// User embedding table W, sharded over the slice.
+    pub w: ShardedTable,
+    /// Item embedding table H, sharded over the slice.
+    pub h: ShardedTable,
+    batcher: DenseBatcher,
+    engine: Box<dyn SolveEngine>,
+    pub comm: CommStats,
+    pub profiler: Profiler,
+    epoch: usize,
+}
+
+impl Trainer {
+    /// Build a trainer with the native engine.
+    pub fn new(train: &Csr, cfg: TrainConfig, topo: Topology) -> anyhow::Result<Trainer> {
+        let engine = Box::new(NativeEngine::new(cfg.solver, cfg.solve_options()));
+        Self::with_engine(train, cfg, topo, engine)
+    }
+
+    /// Build a trainer with an explicit engine (e.g. `runtime::XlaEngine`).
+    pub fn with_engine(
+        train: &Csr,
+        cfg: TrainConfig,
+        topo: Topology,
+        engine: Box<dyn SolveEngine>,
+    ) -> anyhow::Result<Trainer> {
+        anyhow::ensure!(cfg.dim > 0 && cfg.batch_rows > 0 && cfg.batch_width > 0);
+        let mut rng = Pcg64::new(cfg.seed);
+        let storage = cfg.precision.storage();
+        let m = topo.num_cores;
+        let w = ShardedTable::randn(train.rows, cfg.dim, m, storage, &mut rng);
+        let h = ShardedTable::randn(train.cols, cfg.dim, m, storage, &mut rng);
+
+        // Capacity check: the slice must hold both tables plus the runtime
+        // working set (Fig. 6 floors).
+        let table_bytes = ((w.memory_bytes() + h.memory_bytes()) as f64
+            * topo.core.working_set_overhead) as u64;
+        let capacity = topo.total_usable_hbm();
+        anyhow::ensure!(
+            table_bytes <= capacity,
+            "embedding tables need {} but the {}-core slice has {} usable HBM \
+             (min cores: {})",
+            crate::util::stats::human_bytes(table_bytes),
+            topo.num_cores,
+            crate::util::stats::human_bytes(capacity),
+            Topology::min_cores_for(table_bytes, &topo.core),
+        );
+
+        Ok(Trainer {
+            batcher: DenseBatcher::new(cfg.batch_rows, cfg.batch_width),
+            train: train.clone(),
+            train_t: train.transpose(),
+            w,
+            h,
+            topo,
+            cfg,
+            engine,
+            comm: CommStats::new(),
+            profiler: Profiler::new(),
+            epoch: 0,
+        })
+    }
+
+    /// Global gramian of `table` via local gramians + all-reduce
+    /// (Algorithm 2 lines 5-6).
+    fn global_gramian(&self, table: &ShardedTable) -> Mat {
+        let locals: Vec<Mat> = crate::util::threads::parallel_map_indexed(
+            table.num_shards(),
+            |s| table.local_gramian(s),
+        );
+        all_reduce_gramian(&locals, &self.comm)
+    }
+
+    /// One pass over one side (Algorithm 2 lines 7-20): solve every row of
+    /// `target` given fixed `fixed`, driven by `matrix` whose rows index
+    /// `target` and whose columns index `fixed`.
+    fn pass(
+        engine: &mut dyn SolveEngine,
+        batcher: &DenseBatcher,
+        profiler: &Profiler,
+        comm: &CommStats,
+        cfg: &TrainConfig,
+        matrix: &Csr,
+        target: &mut ShardedTable,
+        fixed: &ShardedTable,
+        gramian: &Mat,
+    ) -> anyhow::Result<()> {
+        // SPMD: core μ processes the rows of its own shard of `target`, so
+        // scatters stay shard-local exactly as in Fig. 2's layout.
+        for core in 0..target.num_shards() {
+            let range = target.range(core);
+            if range.is_empty() {
+                continue;
+            }
+            let rows: Vec<u32> = (range.start as u32..range.end as u32).collect();
+            let batches = profiler.time("densebatch", || batcher.batch_rows_of(matrix, &rows));
+            for batch in batches {
+                let gathered = profiler.time("sharded_gather", || {
+                    sharded_gather(fixed, &batch.items, comm)
+                });
+                let solutions = profiler.time("solve", || {
+                    engine.solve_batch(&batch, &gathered, gramian, cfg.lambda, cfg.alpha)
+                })?;
+                profiler.time("sharded_scatter", || {
+                    sharded_scatter(target, &batch.segment_rows, &solutions, comm)
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one full epoch (user pass + item pass). Returns its stats.
+    pub fn run_epoch(&mut self) -> anyhow::Result<EpochStats> {
+        let timer = Timer::start();
+        let comm_before = self.comm.total_bytes();
+
+        // --- user pass: fix H, solve W ---------------------------------
+        let g_items = self.profiler.time("gramian", || self.global_gramian(&self.h));
+        Self::pass(
+            self.engine.as_mut(),
+            &self.batcher,
+            &self.profiler,
+            &self.comm,
+            &self.cfg,
+            &self.train,
+            &mut self.w,
+            &self.h,
+            &g_items,
+        )?;
+
+        // --- item pass: fix W, solve H ----------------------------------
+        let g_users = self.profiler.time("gramian", || self.global_gramian(&self.w));
+        Self::pass(
+            self.engine.as_mut(),
+            &self.batcher,
+            &self.profiler,
+            &self.comm,
+            &self.cfg,
+            &self.train_t,
+            &mut self.h,
+            &self.w,
+            &g_users,
+        )?;
+
+        self.epoch += 1;
+        let objective =
+            if self.cfg.compute_objective { Some(self.objective()) } else { None };
+        let stats = EpochStats {
+            epoch: self.epoch,
+            seconds: timer.elapsed_secs(),
+            objective,
+            comm_bytes: self.comm.total_bytes() - comm_before,
+            simulated_seconds: self.simulated_epoch_seconds(),
+        };
+        crate::log_info!(
+            "epoch {} done in {:.2}s obj={:?} comm={}",
+            stats.epoch,
+            stats.seconds,
+            stats.objective,
+            crate::util::stats::human_bytes(stats.comm_bytes)
+        );
+        Ok(stats)
+    }
+
+    /// Train for `cfg.epochs` epochs, returning the history.
+    pub fn fit(&mut self) -> anyhow::Result<Vec<EpochStats>> {
+        let mut history = Vec::with_capacity(self.cfg.epochs);
+        for _ in 0..self.cfg.epochs {
+            history.push(self.run_epoch()?);
+        }
+        Ok(history)
+    }
+
+    /// Full training objective (paper Eq. 3):
+    /// `Σ_obs (y-ŷ)² + α·Σ_{u,i} ŷ² + λ(‖W‖² + ‖H‖²)`.
+    /// The all-pairs term uses the gramian identity
+    /// `Σ ŷ² = ⟨WᵀW, HᵀH⟩_F`, costing O((|U|+|I|)d²) instead of O(|U||I|d).
+    pub fn objective(&self) -> f64 {
+        let dense_w = self.w.to_dense();
+        let dense_h = self.h.to_dense();
+        let mut obs = 0.0f64;
+        for r in 0..self.train.rows {
+            let wrow = dense_w.row(r);
+            for (&c, &y) in self.train.row_indices(r).iter().zip(self.train.row_values(r)) {
+                let pred = crate::linalg::mat::dot(wrow, dense_h.row(c as usize));
+                let e = (y - pred) as f64;
+                obs += e * e;
+            }
+        }
+        let gw = dense_w.gramian();
+        let gh = dense_h.gramian();
+        let all_pairs: f64 = gw
+            .data
+            .iter()
+            .zip(&gh.data)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        obs + self.cfg.alpha as f64 * all_pairs
+            + self.cfg.lambda as f64 * (self.w.fro_norm_sq() + self.h.fro_norm_sq())
+    }
+
+    /// Fold a new row (user) into the embedding space via Eq. (4), given its
+    /// history — the strong-generalization eval path (paper §5).
+    pub fn fold_in(&self, history: &[(u32, f32)], gramian: &Mat) -> Vec<f32> {
+        let d = self.cfg.dim;
+        let mut a = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                a[(i, j)] = self.cfg.alpha * gramian[(i, j)];
+            }
+            a[(i, i)] += self.cfg.lambda;
+        }
+        let mut b = vec![0.0f32; d];
+        let mut hrow = vec![0.0f32; d];
+        for &(item, y) in history {
+            self.h.read_row(item as usize, &mut hrow);
+            for i in 0..d {
+                b[i] += y * hrow[i];
+                for j in i..d {
+                    a[(i, j)] += hrow[i] * hrow[j];
+                }
+            }
+        }
+        crate::linalg::mat::symmetrize_upper(&mut a.data, d);
+        crate::linalg::solvers::solve(self.cfg.solver, &a, &b, &self.cfg.solve_options())
+    }
+
+    /// Gramian of the item table (for fold-in / eval).
+    pub fn item_gramian(&self) -> Mat {
+        self.global_gramian(&self.h)
+    }
+
+    /// Predicted epoch time on the simulated TPU slice (topo cost model).
+    pub fn simulated_epoch_seconds(&self) -> f64 {
+        let w = crate::topo::Workload {
+            nnz: self.train.nnz() as u64,
+            rows_plus_cols: (self.train.rows + self.train.cols) as u64,
+            dim: self.cfg.dim,
+            elem_bytes: self.cfg.precision.storage().elem_bytes(),
+            batch_rows: self.cfg.batch_rows,
+            batch_width: self.cfg.batch_width,
+        };
+        crate::topo::epoch_time(&self.topo, &w).total()
+    }
+
+    pub fn current_epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Restore the epoch counter (checkpoint resume).
+    pub(crate) fn set_epoch(&mut self, epoch: usize) {
+        self.epoch = epoch;
+    }
+
+    pub fn train_matrix(&self) -> &Csr {
+        &self.train
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+    use crate::util::Pcg64;
+
+    /// A tiny rank-2-ish implicit matrix: two communities, users link
+    /// mostly within their community.
+    fn community_matrix(users: usize, items: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut t = Vec::new();
+        for u in 0..users as u32 {
+            let comm = (u as usize) % 2;
+            for _ in 0..6 {
+                let item = if rng.next_f64() < 0.9 {
+                    comm * (items / 2) + rng.range(0, items / 2)
+                } else {
+                    rng.range(0, items)
+                };
+                t.push((u, item as u32, 1.0));
+            }
+        }
+        Csr::from_coo(users, items, &t)
+    }
+
+    fn small_cfg() -> TrainConfig {
+        TrainConfig {
+            dim: 8,
+            epochs: 3,
+            lambda: 0.05,
+            alpha: 0.01,
+            batch_rows: 16,
+            batch_width: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn objective_decreases_over_epochs() {
+        let m = community_matrix(40, 30, 3);
+        let mut tr = Trainer::new(&m, small_cfg(), Topology::new(4)).unwrap();
+        let hist = tr.fit().unwrap();
+        let objs: Vec<f64> = hist.iter().map(|h| h.objective.unwrap()).collect();
+        assert!(
+            objs.last().unwrap() < objs.first().unwrap(),
+            "objective should decrease: {objs:?}"
+        );
+        // ALS is a block-coordinate-descent: each epoch must not increase
+        // the objective (small tolerance for bf16 storage rounding).
+        for w in objs.windows(2) {
+            assert!(w[1] <= w[0] * 1.02, "non-monotone objective: {objs:?}");
+        }
+    }
+
+    #[test]
+    fn f32_precision_is_strictly_monotone() {
+        let m = community_matrix(40, 30, 5);
+        let cfg = TrainConfig { precision: PrecisionPolicy::F32, ..small_cfg() };
+        let mut tr = Trainer::new(&m, cfg, Topology::new(2)).unwrap();
+        let hist = tr.fit().unwrap();
+        let objs: Vec<f64> = hist.iter().map(|h| h.objective.unwrap()).collect();
+        for w in objs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "ALS must be monotone in f32: {objs:?}");
+        }
+    }
+
+    #[test]
+    fn shard_count_does_not_change_numerics_f32() {
+        // The distributed algorithm must compute the same result regardless
+        // of M (SPMD correctness).
+        let m = community_matrix(30, 20, 7);
+        let cfg = TrainConfig { precision: PrecisionPolicy::F32, epochs: 2, ..small_cfg() };
+        let mut t1 = Trainer::new(&m, cfg.clone(), Topology::new(1)).unwrap();
+        let mut t4 = Trainer::new(&m, cfg, Topology::new(4)).unwrap();
+        let h1 = t1.fit().unwrap();
+        let h4 = t4.fit().unwrap();
+        let o1 = h1.last().unwrap().objective.unwrap();
+        let o4 = h4.last().unwrap().objective.unwrap();
+        // Init differs per shard (independent streams), so compare loss
+        // magnitude rather than exact equality.
+        assert!((o1 - o4).abs() / o1 < 0.35, "o1={o1} o4={o4}");
+    }
+
+    #[test]
+    fn all_solvers_reach_similar_objective() {
+        let m = community_matrix(30, 24, 9);
+        let mut finals = Vec::new();
+        for solver in SolverKind::ALL {
+            let cfg = TrainConfig {
+                solver,
+                precision: PrecisionPolicy::F32,
+                cg_iters: 16,
+                epochs: 3,
+                ..small_cfg()
+            };
+            let mut tr = Trainer::new(&m, cfg, Topology::new(2)).unwrap();
+            let hist = tr.fit().unwrap();
+            finals.push(hist.last().unwrap().objective.unwrap());
+        }
+        let base = finals[0];
+        for f in &finals {
+            assert!((f - base).abs() / base < 0.05, "solver objectives {finals:?}");
+        }
+    }
+
+    #[test]
+    fn fold_in_matches_trained_embedding_quality() {
+        // Folding in a training row's own history should reconstruct a
+        // vector close to its trained embedding.
+        let m = community_matrix(40, 30, 11);
+        let cfg = TrainConfig { precision: PrecisionPolicy::F32, epochs: 4, ..small_cfg() };
+        let mut tr = Trainer::new(&m, cfg, Topology::new(2)).unwrap();
+        tr.fit().unwrap();
+        let g = tr.item_gramian();
+        let history: Vec<(u32, f32)> = m
+            .row_indices(0)
+            .iter()
+            .zip(m.row_values(0))
+            .map(|(&c, &v)| (c, v))
+            .collect();
+        let folded = tr.fold_in(&history, &g);
+        let mut trained = vec![0.0f32; tr.cfg.dim];
+        tr.w.read_row(0, &mut trained);
+        let cos = crate::linalg::mat::dot(&folded, &trained)
+            / (crate::linalg::mat::dot(&folded, &folded).sqrt()
+                * crate::linalg::mat::dot(&trained, &trained).sqrt()).max(1e-12);
+        assert!(cos > 0.9, "fold-in should align with trained embedding, cos={cos}");
+    }
+
+    #[test]
+    fn capacity_check_rejects_oversized_models() {
+        let m = community_matrix(10, 10, 13);
+        let mut topo = Topology::new(1);
+        topo.core.hbm_bytes = 128; // tables need (10+10)·8·2 = 320 B
+        let cfg = small_cfg();
+        assert!(Trainer::new(&m, cfg, topo).is_err());
+    }
+
+    #[test]
+    fn comm_bytes_grow_with_epochs() {
+        let m = community_matrix(20, 20, 15);
+        let mut tr = Trainer::new(&m, small_cfg(), Topology::new(4)).unwrap();
+        let h1 = tr.run_epoch().unwrap();
+        let h2 = tr.run_epoch().unwrap();
+        assert!(h1.comm_bytes > 0);
+        // Same data each epoch → same traffic.
+        assert_eq!(h1.comm_bytes, h2.comm_bytes);
+        assert!(h2.simulated_seconds > 0.0);
+    }
+}

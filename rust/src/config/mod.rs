@@ -1,0 +1,273 @@
+//! Configuration: a TOML-subset file format plus CLI-style overrides.
+//!
+//! The launcher (`alx` binary) reads an optional config file and applies
+//! `--key value` overrides, so every experiment in EXPERIMENTS.md is a
+//! config + command line. Supported file syntax: `key = value` lines,
+//! `[section]` headers (flattened to `section.key`), `#` comments, quoted
+//! or bare strings, ints, floats, booleans.
+
+use crate::als::{PrecisionPolicy, TrainConfig};
+use crate::linalg::SolverKind;
+use crate::webgraph::Variant;
+use std::collections::BTreeMap;
+
+/// Flat key-value config store.
+#[derive(Clone, Debug, Default)]
+pub struct KvConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl KvConfig {
+    /// Parse the TOML-subset text.
+    pub fn parse(text: &str) -> anyhow::Result<KvConfig> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let v = v.trim().trim_matches('"').to_string();
+            values.insert(key, v);
+        }
+        Ok(KvConfig { values })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<KvConfig> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        self.parse_as(key)
+    }
+
+    pub fn get_f32(&self, key: &str) -> anyhow::Result<Option<f32>> {
+        self.parse_as(key)
+    }
+
+    pub fn get_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        self.parse_as(key)
+    }
+
+    pub fn get_u64(&self, key: &str) -> anyhow::Result<Option<u64>> {
+        self.parse_as(key)
+    }
+
+    pub fn get_bool(&self, key: &str) -> anyhow::Result<Option<bool>> {
+        self.parse_as(key)
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("config key '{key}' = '{v}': {e}")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// Fully resolved experiment configuration.
+#[derive(Clone, Debug)]
+pub struct AlxConfig {
+    /// Dataset variant preset.
+    pub variant: Variant,
+    /// Scale factor vs. the paper's Table 1 sizes.
+    pub scale: f64,
+    /// Dataset seed.
+    pub data_seed: u64,
+    /// Simulated TPU cores.
+    pub cores: usize,
+    /// Training hyper-parameters.
+    pub train: TrainConfig,
+    /// Engine: "native" or "xla".
+    pub engine: String,
+    /// Artifact directory for the XLA engine.
+    pub artifacts_dir: String,
+    /// Eval: approximate MIPS instead of exact top-k.
+    pub approximate_eval: bool,
+}
+
+impl Default for AlxConfig {
+    fn default() -> Self {
+        AlxConfig {
+            variant: Variant::InDense,
+            scale: 0.01,
+            data_seed: 7,
+            cores: 8,
+            train: TrainConfig::default(),
+            engine: "native".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            approximate_eval: false,
+        }
+    }
+}
+
+impl AlxConfig {
+    /// Build from a parsed [`KvConfig`] (missing keys keep defaults).
+    pub fn from_kv(kv: &KvConfig) -> anyhow::Result<AlxConfig> {
+        let mut cfg = AlxConfig::default();
+        if let Some(v) = kv.get("dataset.variant") {
+            cfg.variant = Variant::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown variant '{v}'"))?;
+        }
+        if let Some(v) = kv.get_f64("dataset.scale")? {
+            anyhow::ensure!(v > 0.0 && v <= 1.0, "dataset.scale must be in (0,1]");
+            cfg.scale = v;
+        }
+        if let Some(v) = kv.get_u64("dataset.seed")? {
+            cfg.data_seed = v;
+        }
+        if let Some(v) = kv.get_usize("topology.cores")? {
+            anyhow::ensure!(v >= 1, "topology.cores must be >= 1");
+            cfg.cores = v;
+        }
+        if let Some(v) = kv.get_usize("train.dim")? {
+            cfg.train.dim = v;
+        }
+        if let Some(v) = kv.get_usize("train.epochs")? {
+            cfg.train.epochs = v;
+        }
+        if let Some(v) = kv.get_f32("train.lambda")? {
+            cfg.train.lambda = v;
+        }
+        if let Some(v) = kv.get_f32("train.alpha")? {
+            cfg.train.alpha = v;
+        }
+        if let Some(v) = kv.get("train.solver") {
+            cfg.train.solver = SolverKind::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown solver '{v}'"))?;
+        }
+        if let Some(v) = kv.get("train.precision") {
+            cfg.train.precision = PrecisionPolicy::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown precision '{v}'"))?;
+        }
+        if let Some(v) = kv.get_usize("train.batch_rows")? {
+            cfg.train.batch_rows = v;
+        }
+        if let Some(v) = kv.get_usize("train.batch_width")? {
+            cfg.train.batch_width = v;
+        }
+        if let Some(v) = kv.get_usize("train.cg_iters")? {
+            cfg.train.cg_iters = v;
+        }
+        if let Some(v) = kv.get_u64("train.seed")? {
+            cfg.train.seed = v;
+        }
+        if let Some(v) = kv.get_bool("train.compute_objective")? {
+            cfg.train.compute_objective = v;
+        }
+        if let Some(v) = kv.get("engine.kind") {
+            anyhow::ensure!(v == "native" || v == "xla", "engine.kind must be native|xla");
+            cfg.engine = v.to_string();
+        }
+        if let Some(v) = kv.get("engine.artifacts_dir") {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = kv.get_bool("eval.approximate")? {
+            cfg.approximate_eval = v;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[dataset]
+variant = "in-dense"
+scale = 0.005
+
+[train]
+dim = 32
+lambda = 0.001
+solver = "cg"
+precision = "mixed"
+
+[topology]
+cores = 16
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let kv = KvConfig::parse(SAMPLE).unwrap();
+        assert_eq!(kv.get("dataset.variant"), Some("in-dense"));
+        assert_eq!(kv.get_usize("train.dim").unwrap(), Some(32));
+        assert_eq!(kv.get_f32("train.lambda").unwrap(), Some(0.001));
+        assert_eq!(kv.get("missing.key"), None);
+    }
+
+    #[test]
+    fn alx_config_from_kv() {
+        let kv = KvConfig::parse(SAMPLE).unwrap();
+        let cfg = AlxConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.variant, Variant::InDense);
+        assert_eq!(cfg.scale, 0.005);
+        assert_eq!(cfg.cores, 16);
+        assert_eq!(cfg.train.dim, 32);
+        assert_eq!(cfg.train.solver, SolverKind::Cg);
+        assert_eq!(cfg.train.precision, PrecisionPolicy::Mixed);
+    }
+
+    #[test]
+    fn defaults_survive_empty_config() {
+        let cfg = AlxConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(cfg.train.dim, TrainConfig::default().dim);
+        assert_eq!(cfg.engine, "native");
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut kv = KvConfig::default();
+        kv.set("train.solver", "gaussian");
+        assert!(AlxConfig::from_kv(&kv).is_err());
+        let mut kv = KvConfig::default();
+        kv.set("dataset.scale", "2.0");
+        assert!(AlxConfig::from_kv(&kv).is_err());
+        let mut kv = KvConfig::default();
+        kv.set("train.dim", "not-a-number");
+        assert!(AlxConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let kv = KvConfig::parse("# only comments\n\n  \n").unwrap();
+        assert_eq!(kv.keys().count(), 0);
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        assert!(KvConfig::parse("no equals sign here").is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Hyper-parameter grid search (paper §6.1).
+//!
+//! "Hyperparameter tuning over both norm penalty (λ) and unobserved weight
+//! (α) has been indispensable for good results." The paper sweeps
+//! λ ∈ {5e-2, 1e-2, 5e-3, 1e-3, 5e-4, 1e-4} × α ∈ {1e-3, 5e-4, 1e-4, 5e-5,
+//! 1e-5, 5e-6, 1e-6} per variant; Table 2 reports the best cell.
+
+use super::Coordinator;
+use crate::config::AlxConfig;
+use crate::eval::EvalConfig;
+
+/// The sweep grids. Defaults are exactly the paper's §6.1 lists.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub lambdas: Vec<f32>,
+    pub alphas: Vec<f32>,
+    /// Metric to select on ("recall@20" like Table 2).
+    pub select_k: usize,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        GridSpec {
+            lambdas: vec![5e-2, 1e-2, 5e-3, 1e-3, 5e-4, 1e-4],
+            alphas: vec![1e-3, 5e-4, 1e-4, 5e-5, 1e-5, 5e-6, 1e-6],
+            select_k: 20,
+        }
+    }
+}
+
+impl GridSpec {
+    /// A reduced grid (corner + center points) for time-bounded runs.
+    pub fn coarse() -> GridSpec {
+        GridSpec {
+            lambdas: vec![5e-2, 5e-3, 5e-4],
+            alphas: vec![1e-3, 1e-5, 1e-6],
+            select_k: 20,
+        }
+    }
+}
+
+/// One evaluated grid cell.
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    pub lambda: f32,
+    pub alpha: f32,
+    pub recall_at_20: f64,
+    pub recall_at_50: f64,
+}
+
+/// Run the grid over `(λ, α)` and return all cells, best first.
+pub fn grid_search(base: &AlxConfig, spec: &GridSpec) -> anyhow::Result<Vec<GridPoint>> {
+    let mut points = Vec::new();
+    for &lambda in &spec.lambdas {
+        for &alpha in &spec.alphas {
+            let mut cfg = base.clone();
+            cfg.train.lambda = lambda;
+            cfg.train.alpha = alpha;
+            cfg.train.compute_objective = false;
+            let mut coord = Coordinator::prepare(cfg)?;
+            coord.trainer.fit()?;
+            let recalls = coord.evaluate_with(&EvalConfig::default());
+            let get = |k: usize| {
+                recalls.iter().find(|r| r.k == k).map(|r| r.recall).unwrap_or(0.0)
+            };
+            let p = GridPoint {
+                lambda,
+                alpha,
+                recall_at_20: get(20),
+                recall_at_50: get(50),
+            };
+            crate::log_info!(
+                "grid λ={lambda:.0e} α={alpha:.0e} → R@20={:.3} R@50={:.3}",
+                p.recall_at_20,
+                p.recall_at_50
+            );
+            points.push(p);
+        }
+    }
+    let key = spec.select_k;
+    points.sort_by(|a, b| {
+        let (ra, rb) = match key {
+            50 => (a.recall_at_50, b.recall_at_50),
+            _ => (a.recall_at_20, b.recall_at_20),
+        };
+        rb.partial_cmp(&ra).unwrap()
+    });
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::als::TrainConfig;
+
+    #[test]
+    fn grid_orders_by_selected_metric() {
+        let base = AlxConfig {
+            scale: 0.0005,
+            cores: 2,
+            train: TrainConfig {
+                dim: 8,
+                epochs: 2,
+                batch_rows: 16,
+                batch_width: 8,
+                ..TrainConfig::default()
+            },
+            ..AlxConfig::default()
+        };
+        let spec = GridSpec { lambdas: vec![5e-2, 5e-4], alphas: vec![1e-4], select_k: 20 };
+        let points = grid_search(&base, &spec).unwrap();
+        assert_eq!(points.len(), 2);
+        assert!(points[0].recall_at_20 >= points[1].recall_at_20);
+    }
+
+    #[test]
+    fn default_grid_matches_paper_lists() {
+        let g = GridSpec::default();
+        assert_eq!(g.lambdas.len(), 6);
+        assert_eq!(g.alphas.len(), 7);
+        assert_eq!(g.lambdas[0], 5e-2);
+        assert_eq!(g.alphas[6], 1e-6);
+    }
+}

@@ -1,0 +1,175 @@
+//! The experiment coordinator — the leader process of the L3 layer.
+//!
+//! Owns the full job lifecycle the `alx` launcher and the examples drive:
+//! dataset synthesis → strong-generalization split → topology/capacity
+//! planning → engine selection (native or XLA/PJRT) → epoch loop with
+//! eval hooks → reports. The hyper-parameter grid-search driver of §6.1
+//! lives here too.
+
+pub mod grid;
+pub mod pipeline;
+
+pub use grid::{grid_search, GridPoint, GridSpec};
+pub use pipeline::BatchFeeder;
+
+use crate::als::{SolveEngine, Trainer};
+use crate::config::AlxConfig;
+use crate::eval::{evaluate, EvalConfig, RecallReport};
+use crate::sparse::{split_strong_generalization, Split};
+use crate::topo::Topology;
+use crate::webgraph::{generate, GeneratedGraph, VariantSpec};
+
+/// End-of-run report.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub history: Vec<crate::als::EpochStats>,
+    pub recalls: Vec<RecallReport>,
+    pub epoch_seconds_mean: f64,
+    pub simulated_epoch_seconds: f64,
+    pub comm_bytes_per_epoch: u64,
+}
+
+/// Coordinator: dataset + split + trainer, ready to run.
+pub struct Coordinator {
+    pub cfg: AlxConfig,
+    pub graph: GeneratedGraph,
+    pub split: Split,
+    pub trainer: Trainer,
+}
+
+impl Coordinator {
+    /// Prepare a job from a resolved config (native engine).
+    pub fn prepare(cfg: AlxConfig) -> anyhow::Result<Coordinator> {
+        let engine: Option<Box<dyn SolveEngine>> = None;
+        Self::prepare_with(cfg, engine)
+    }
+
+    /// Prepare with an explicit engine override (`None` → per-config).
+    pub fn prepare_with(
+        cfg: AlxConfig,
+        engine: Option<Box<dyn SolveEngine>>,
+    ) -> anyhow::Result<Coordinator> {
+        let spec = VariantSpec::preset(cfg.variant).scaled(cfg.scale);
+        crate::log_info!(
+            "generating {} at scale {} (~{} nodes)",
+            cfg.variant.name(),
+            cfg.scale,
+            spec.nodes
+        );
+        let graph = generate(&spec, cfg.data_seed);
+        let split = split_strong_generalization(&graph.adjacency, 0.9, 0.25, cfg.data_seed ^ 0x9);
+        let topo = Topology::new(cfg.cores);
+
+        let engine: Box<dyn SolveEngine> = match engine {
+            Some(e) => e,
+            None => match cfg.engine.as_str() {
+                "xla" => Box::new(crate::runtime::XlaEngine::new(
+                    &cfg.artifacts_dir,
+                    cfg.train.solver.name(),
+                    cfg.train.dim,
+                    cfg.train.batch_rows,
+                    cfg.train.batch_width,
+                )?),
+                _ => Box::new(crate::als::NativeEngine::new(
+                    cfg.train.solver,
+                    cfg.train.solve_options(),
+                )),
+            },
+        };
+
+        let trainer = Trainer::with_engine(&split.train, cfg.train.clone(), topo, engine)?;
+        Ok(Coordinator { cfg, graph, split, trainer })
+    }
+
+    /// Train for the configured number of epochs and evaluate.
+    pub fn run(&mut self) -> anyhow::Result<RunReport> {
+        let history = self.trainer.fit()?;
+        let recalls = self.evaluate()?;
+        let epoch_seconds_mean =
+            history.iter().map(|h| h.seconds).sum::<f64>() / history.len().max(1) as f64;
+        let comm = history.last().map(|h| h.comm_bytes).unwrap_or(0);
+        Ok(RunReport {
+            epoch_seconds_mean,
+            simulated_epoch_seconds: self.trainer.simulated_epoch_seconds(),
+            comm_bytes_per_epoch: comm,
+            history,
+            recalls,
+        })
+    }
+
+    /// Evaluate Recall@{20,50} on the held-out strong-generalization rows.
+    pub fn evaluate(&self) -> anyhow::Result<Vec<RecallReport>> {
+        let eval_cfg = EvalConfig {
+            approximate: self.cfg.approximate_eval,
+            ..EvalConfig::default()
+        };
+        Ok(evaluate(&self.trainer, &self.split.test, &eval_cfg))
+    }
+
+    /// Evaluate with an explicit eval config.
+    pub fn evaluate_with(&self, eval_cfg: &EvalConfig) -> Vec<RecallReport> {
+        evaluate(&self.trainer, &self.split.test, eval_cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::als::TrainConfig;
+
+    fn tiny_cfg() -> AlxConfig {
+        AlxConfig {
+            scale: 0.0008, // ~400 nodes of WebGraph-in-dense
+            cores: 4,
+            train: TrainConfig {
+                dim: 16,
+                epochs: 4,
+                lambda: 0.03,
+                alpha: 0.01,
+                batch_rows: 32,
+                batch_width: 8,
+                ..TrainConfig::default()
+            },
+            ..AlxConfig::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_learns_structure() {
+        let mut c = Coordinator::prepare(tiny_cfg()).unwrap();
+        let report = c.run().unwrap();
+        assert_eq!(report.history.len(), 4);
+        let r20 = report.recalls.iter().find(|r| r.k == 20).unwrap();
+        // The synthetic graph has strong domain structure; even a tiny
+        // model should beat random by a wide margin (random ≈ 20/400).
+        assert!(r20.recall > 0.3, "recall@20 = {}", r20.recall);
+        assert!(r20.rows_evaluated > 10);
+    }
+
+    #[test]
+    fn objective_improves_end_to_end() {
+        let mut c = Coordinator::prepare(tiny_cfg()).unwrap();
+        let report = c.run().unwrap();
+        let first = report.history.first().unwrap().objective.unwrap();
+        let last = report.history.last().unwrap().objective.unwrap();
+        assert!(last < first, "objective {first} -> {last}");
+    }
+
+    #[test]
+    fn approximate_eval_close_to_exact() {
+        let mut c = Coordinator::prepare(tiny_cfg()).unwrap();
+        c.trainer.fit().unwrap();
+        let exact = c.evaluate_with(&EvalConfig::default());
+        let approx = c.evaluate_with(&EvalConfig {
+            approximate: true,
+            mips_probes: 6,
+            ..EvalConfig::default()
+        });
+        let e20 = exact.iter().find(|r| r.k == 20).unwrap().recall;
+        let a20 = approx.iter().find(|r| r.k == 20).unwrap().recall;
+        // Approximate MIPS is a lower bound but should be in the ballpark
+        // (paper: "a lower bound of true recall with high probability").
+        assert!(a20 <= e20 + 0.05, "approx {a20} should not exceed exact {e20}");
+        assert!(a20 > e20 * 0.5, "approx {a20} too far below exact {e20}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Host input pipeline (paper Fig. 1): "a batch of data consisting of
+//! several user histories are continuously fed from the host CPU to TPU
+//! devices connected to that host".
+//!
+//! [`BatchFeeder`] prepares dense batches on a background host thread and
+//! hands them to the consumer through a bounded queue, so batching (host
+//! work) overlaps gather/solve/scatter (device work) — the same
+//! producer/consumer overlap a real TPU input pipeline provides. The
+//! queue is deliberately bounded (default 4) to model finite host-side
+//! staging memory and to exert backpressure on the producer.
+
+use crate::densebatch::{DenseBatch, DenseBatcher};
+use crate::sparse::Csr;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Bounded blocking queue.
+struct Bounded<T> {
+    q: Mutex<(VecDeque<T>, bool)>, // (items, producer_done)
+    cap: usize,
+    cv: Condvar,
+}
+
+impl<T> Bounded<T> {
+    fn new(cap: usize) -> Self {
+        Bounded { q: Mutex::new((VecDeque::new(), false)), cap, cv: Condvar::new() }
+    }
+
+    fn push(&self, item: T) {
+        let mut g = self.q.lock().unwrap();
+        while g.0.len() >= self.cap {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.0.push_back(item);
+        self.cv.notify_all();
+    }
+
+    fn close(&self) {
+        self.q.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Option<T> {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(item) = g.0.pop_front() {
+                self.cv.notify_all();
+                return Some(item);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Streams dense batches for a set of rows, prepared on a host thread.
+pub struct BatchFeeder {
+    queue: Arc<Bounded<DenseBatch>>,
+    producer: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BatchFeeder {
+    /// Start feeding batches of `rows` of `matrix`. `depth` bounds the
+    /// number of staged batches (host memory / backpressure).
+    pub fn start(matrix: Arc<Csr>, rows: Vec<u32>, batcher: DenseBatcher, depth: usize) -> Self {
+        let queue = Arc::new(Bounded::new(depth.max(1)));
+        let q2 = Arc::clone(&queue);
+        let producer = std::thread::spawn(move || {
+            // Produce incrementally (chunk of rows at a time) so staging
+            // memory stays bounded even for huge shards.
+            let chunk = 512usize;
+            for ids in rows.chunks(chunk) {
+                for batch in batcher.batch_rows_of(&matrix, ids) {
+                    q2.push(batch);
+                }
+            }
+            q2.close();
+        });
+        BatchFeeder { queue, producer: Some(producer) }
+    }
+
+    /// Next prepared batch, blocking until one is staged; `None` when the
+    /// row stream is exhausted.
+    pub fn next(&self) -> Option<DenseBatch> {
+        self.queue.pop()
+    }
+}
+
+impl Drop for BatchFeeder {
+    fn drop(&mut self) {
+        // Drain so the producer can finish, then join.
+        while self.queue.pop().is_some() {}
+        if let Some(h) = self.producer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn matrix(rows: usize) -> Csr {
+        let mut rng = Pcg64::new(5);
+        let mut t = Vec::new();
+        for r in 0..rows as u32 {
+            let len = 1 + rng.range(0, 10);
+            let mut seen = std::collections::HashSet::new();
+            while seen.len() < len {
+                seen.insert(rng.range(0, 50) as u32);
+            }
+            for c in seen {
+                t.push((r, c, 1.0));
+            }
+        }
+        Csr::from_coo(rows, 50, &t)
+    }
+
+    #[test]
+    fn feeder_yields_same_batches_as_direct_batching() {
+        let m = Arc::new(matrix(100));
+        let batcher = DenseBatcher::new(16, 4);
+        let rows: Vec<u32> = (0..100).collect();
+
+        // NOTE: the feeder chunks rows (512 > 100 here, so one chunk) —
+        // identical batching to the direct call.
+        let direct = batcher.batch_rows_of(&m, &rows);
+        let feeder = BatchFeeder::start(Arc::clone(&m), rows, batcher, 4);
+        let mut streamed = Vec::new();
+        while let Some(b) = feeder.next() {
+            streamed.push(b);
+        }
+        assert_eq!(streamed.len(), direct.len());
+        for (a, b) in streamed.iter().zip(&direct) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        // With depth 1 and a slow consumer, the producer cannot run ahead:
+        // at no point can more than depth+1 batches exist outside the
+        // consumer. Indirect check: everything still arrives, in order.
+        let m = Arc::new(matrix(60));
+        let batcher = DenseBatcher::new(4, 4);
+        let rows: Vec<u32> = (0..60).collect();
+        let feeder = BatchFeeder::start(Arc::clone(&m), rows.clone(), batcher.clone(), 1);
+        let mut seen_rows = Vec::new();
+        while let Some(b) = feeder.next() {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            seen_rows.extend(b.segment_rows.iter().copied());
+        }
+        let expected: Vec<u32> =
+            rows.iter().copied().filter(|&r| m.row_len(r as usize) > 0).collect();
+        assert_eq!(seen_rows, expected);
+    }
+
+    #[test]
+    fn dropping_mid_stream_does_not_deadlock() {
+        let m = Arc::new(matrix(500));
+        let batcher = DenseBatcher::new(4, 4);
+        let feeder = BatchFeeder::start(Arc::clone(&m), (0..500).collect(), batcher, 2);
+        let _first = feeder.next();
+        drop(feeder); // must join the producer cleanly
+    }
+}

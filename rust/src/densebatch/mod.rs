@@ -1,0 +1,295 @@
+//! Dense Batching (paper §4.3, Figure 3).
+//!
+//! XLA requires static tensor shapes, so variable-length sparse rows cannot
+//! be fed to the TPU directly, and padding every row to the global maximum
+//! wastes memory on a long-tailed length distribution. ALX instead breaks
+//! each sparse row into multiple fixed-width *dense rows* of length `L`
+//! (8 or 16 work well per the paper) and keeps a mapping from dense rows
+//! back to their source (sparse) row.
+//!
+//! A [`DenseBatch`] is the unit fed to a TPU core: `B` dense rows of `L`
+//! slots each, a validity mask, and a segment id per dense row. The solve
+//! stage segment-sums the per-dense-row sufficient statistics back into
+//! per-source-row statistics — in the XLA engine this is a one-hot matmul
+//! so the shapes stay static.
+
+use crate::sparse::Csr;
+
+/// A fixed-shape batch of dense rows (one SPMD step's input).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseBatch {
+    /// Dense rows per batch (B).
+    pub rows: usize,
+    /// Slots per dense row (L).
+    pub width: usize,
+    /// Item ids, row-major `[B*L]`; padded slots hold 0.
+    pub items: Vec<u32>,
+    /// Labels y, `[B*L]`; padded slots hold 0.
+    pub values: Vec<f32>,
+    /// 1.0 for valid slots, 0.0 for padding, `[B*L]`.
+    pub mask: Vec<f32>,
+    /// Segment id of each dense row, `[B]` (in `0..num_segments`); padded
+    /// dense rows point at segment 0 with an all-zero mask.
+    pub segments: Vec<u32>,
+    /// Source (sparse) row id of each segment, `[num_segments]`.
+    pub segment_rows: Vec<u32>,
+}
+
+impl DenseBatch {
+    /// Number of distinct source rows solved by this batch.
+    pub fn num_segments(&self) -> usize {
+        self.segment_rows.len()
+    }
+
+    /// Number of valid (unpadded) slots.
+    pub fn valid_slots(&self) -> usize {
+        self.mask.iter().filter(|&&m| m != 0.0).count()
+    }
+
+    /// Fraction of slots wasted on padding.
+    pub fn padding_waste(&self) -> f64 {
+        1.0 - self.valid_slots() as f64 / (self.rows * self.width) as f64
+    }
+}
+
+/// Splits a sparse matrix into a stream of fixed-shape [`DenseBatch`]es.
+#[derive(Clone, Debug)]
+pub struct DenseBatcher {
+    /// Dense rows per batch (B). Static at artifact-compile time.
+    pub batch_rows: usize,
+    /// Dense row width (L). Static at artifact-compile time.
+    pub width: usize,
+}
+
+impl DenseBatcher {
+    pub fn new(batch_rows: usize, width: usize) -> Self {
+        assert!(batch_rows > 0 && width > 0);
+        DenseBatcher { batch_rows, width }
+    }
+
+    /// Number of dense rows a sparse row of length `len` expands into.
+    #[inline]
+    pub fn dense_rows_for(&self, len: usize) -> usize {
+        len.div_ceil(self.width).max(1)
+    }
+
+    /// Batch the given sparse rows (by id) of `matrix`. Rows longer than
+    /// `batch_rows * width` are truncated to fit one batch (the artifact
+    /// shape is the hard limit — pick B·L above the max row length, or
+    /// accept truncation like any fixed-capacity system).
+    ///
+    /// A sparse row is never split across batches, so every batch's
+    /// segment-sum is complete and the solve for that row is exact.
+    pub fn batch_rows_of<'a>(
+        &self,
+        matrix: &'a Csr,
+        row_ids: &'a [u32],
+    ) -> Vec<DenseBatch> {
+        let mut out = Vec::new();
+        let mut cur = self.empty_batch();
+        let mut next_dense = 0usize;
+        for &row in row_ids {
+            let len = matrix.row_len(row as usize);
+            if len == 0 {
+                continue; // nothing to solve for an empty row
+            }
+            let mut need = self.dense_rows_for(len);
+            let capacity = self.batch_rows;
+            if need > capacity {
+                need = capacity; // truncate over-long rows
+            }
+            if next_dense + need > capacity {
+                out.push(std::mem::replace(&mut cur, self.empty_batch()));
+                next_dense = 0;
+            }
+            let seg = cur.segment_rows.len() as u32;
+            cur.segment_rows.push(row);
+            let idx = matrix.row_indices(row as usize);
+            let val = matrix.row_values(row as usize);
+            let take = len.min(need * self.width);
+            for k in 0..take {
+                let dr = next_dense + k / self.width;
+                let slot = dr * self.width + k % self.width;
+                cur.items[slot] = idx[k];
+                cur.values[slot] = val[k];
+                cur.mask[slot] = 1.0;
+            }
+            for dr in next_dense..next_dense + need {
+                cur.segments[dr] = seg;
+            }
+            next_dense += need;
+        }
+        if !cur.segment_rows.is_empty() {
+            out.push(cur);
+        }
+        out
+    }
+
+    fn empty_batch(&self) -> DenseBatch {
+        DenseBatch {
+            rows: self.batch_rows,
+            width: self.width,
+            items: vec![0; self.batch_rows * self.width],
+            values: vec![0.0; self.batch_rows * self.width],
+            mask: vec![0.0; self.batch_rows * self.width],
+            segments: vec![0; self.batch_rows],
+            segment_rows: Vec::new(),
+        }
+    }
+
+    /// Padding waste of dense batching over a whole matrix vs. the naive
+    /// strategy of padding every row to the global max length (§4.3's
+    /// motivating comparison). Returns `(dense_waste, naive_waste)` as
+    /// fractions of allocated slots.
+    pub fn waste_comparison(&self, matrix: &Csr) -> (f64, f64) {
+        let mut valid = 0usize;
+        let mut dense_slots = 0usize;
+        let mut max_len = 0usize;
+        let mut nonempty = 0usize;
+        for r in 0..matrix.rows {
+            let len = matrix.row_len(r);
+            if len == 0 {
+                continue;
+            }
+            nonempty += 1;
+            valid += len;
+            dense_slots += self.dense_rows_for(len) * self.width;
+            max_len = max_len.max(len);
+        }
+        if valid == 0 {
+            return (0.0, 0.0);
+        }
+        let naive_slots = nonempty * max_len;
+        (
+            1.0 - valid as f64 / dense_slots as f64,
+            1.0 - valid as f64 / naive_slots as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix_with_rows(rows: &[Vec<u32>]) -> Csr {
+        let mut t = Vec::new();
+        for (r, cols) in rows.iter().enumerate() {
+            for &c in cols {
+                t.push((r as u32, c, (r + 1) as f32));
+            }
+        }
+        let max_col = rows.iter().flatten().copied().max().unwrap_or(0) as usize + 1;
+        Csr::from_coo(rows.len(), max_col, &t)
+    }
+
+    #[test]
+    fn short_rows_fit_one_dense_row() {
+        let m = matrix_with_rows(&[vec![1, 2], vec![3]]);
+        let b = DenseBatcher::new(4, 4);
+        let batches = b.batch_rows_of(&m, &[0, 1]);
+        assert_eq!(batches.len(), 1);
+        let batch = &batches[0];
+        assert_eq!(batch.num_segments(), 2);
+        assert_eq!(batch.items[0..2], [1, 2]);
+        assert_eq!(batch.mask[0..4], [1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(batch.items[4], 3);
+        assert_eq!(batch.segments[0], 0);
+        assert_eq!(batch.segments[1], 1);
+    }
+
+    #[test]
+    fn long_row_spans_multiple_dense_rows() {
+        let m = matrix_with_rows(&[(0..10).collect()]);
+        let b = DenseBatcher::new(4, 4);
+        let batches = b.batch_rows_of(&m, &[0]);
+        assert_eq!(batches.len(), 1);
+        let batch = &batches[0];
+        // 10 items over width 4 → 3 dense rows, all segment 0.
+        assert_eq!(batch.segments[0..3], [0, 0, 0]);
+        assert_eq!(batch.valid_slots(), 10);
+        let got: Vec<u32> = batch
+            .items
+            .iter()
+            .zip(&batch.mask)
+            .filter(|&(_, &m)| m != 0.0)
+            .map(|(&i, _)| i)
+            .collect();
+        assert_eq!(got, (0..10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn rows_never_split_across_batches() {
+        // Batch capacity 2 dense rows; a 2-dense-row item after a 1-dense-row
+        // item must start a new batch.
+        let m = matrix_with_rows(&[vec![1, 2], (10..16).collect()]);
+        let b = DenseBatcher::new(2, 4);
+        let batches = b.batch_rows_of(&m, &[0, 1]);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].num_segments(), 1);
+        assert_eq!(batches[1].num_segments(), 1);
+        assert_eq!(batches[1].valid_slots(), 6);
+    }
+
+    #[test]
+    fn empty_rows_are_skipped() {
+        let m = Csr::from_coo(3, 5, &[(1, 1, 1.0)]);
+        let b = DenseBatcher::new(2, 2);
+        let batches = b.batch_rows_of(&m, &[0, 1, 2]);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].num_segments(), 1);
+        assert_eq!(batches[0].segment_rows, vec![1]);
+    }
+
+    #[test]
+    fn overlong_row_truncates_to_batch_capacity() {
+        let m = matrix_with_rows(&[(0..100).collect()]);
+        let b = DenseBatcher::new(2, 4); // capacity 8 slots
+        let batches = b.batch_rows_of(&m, &[0]);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].valid_slots(), 8);
+    }
+
+    #[test]
+    fn values_and_mask_align() {
+        let m = matrix_with_rows(&[vec![7, 8, 9]]);
+        let b = DenseBatcher::new(1, 4);
+        let batch = &b.batch_rows_of(&m, &[0])[0];
+        assert_eq!(batch.values[0..3], [1.0, 1.0, 1.0]);
+        assert_eq!(batch.values[3], 0.0);
+        assert_eq!(batch.padding_waste(), 0.25);
+    }
+
+    #[test]
+    fn dense_batching_beats_naive_padding_on_long_tail() {
+        // 1 giant row + many short rows: naive pads everything to 64.
+        let mut rows: Vec<Vec<u32>> = vec![(0..64).collect()];
+        for _ in 0..50 {
+            rows.push(vec![1, 2, 3]);
+        }
+        let m = matrix_with_rows(&rows);
+        let b = DenseBatcher::new(16, 8);
+        let (dense_waste, naive_waste) = b.waste_comparison(&m);
+        assert!(dense_waste < 0.7, "dense_waste={dense_waste}");
+        assert!(naive_waste > 0.9, "naive_waste={naive_waste}");
+        assert!(dense_waste < naive_waste);
+    }
+
+    #[test]
+    fn all_segments_have_valid_source_rows() {
+        let m = matrix_with_rows(&[vec![1], vec![2, 3], vec![4, 5, 6], vec![7]]);
+        let b = DenseBatcher::new(3, 2);
+        for batch in b.batch_rows_of(&m, &[0, 1, 2, 3]) {
+            for &sr in &batch.segment_rows {
+                assert!((sr as usize) < m.rows);
+            }
+            for (dr, &seg) in batch.segments.iter().enumerate() {
+                let valid = batch.mask[dr * batch.width..(dr + 1) * batch.width]
+                    .iter()
+                    .any(|&m| m != 0.0);
+                if valid {
+                    assert!((seg as usize) < batch.num_segments());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Additional ranking metrics beyond the paper's Recall@K.
+//!
+//! The paper reports Recall@{20,50}; downstream users of a MF framework
+//! usually also want MRR and MAP@K, so they ship with the eval harness
+//! (same inputs: a ranked prediction list + the sorted holdout set).
+
+/// Mean reciprocal rank contribution of one ranked list: `1/rank` of the
+/// first relevant prediction (0 if none within the list).
+pub fn reciprocal_rank(predictions: &[u32], holdout: &[u32]) -> f64 {
+    for (i, p) in predictions.iter().enumerate() {
+        if holdout.binary_search(p).is_ok() {
+            return 1.0 / (i + 1) as f64;
+        }
+    }
+    0.0
+}
+
+/// Average precision at K for one ranked list.
+pub fn average_precision_at_k(predictions: &[u32], holdout: &[u32], k: usize) -> f64 {
+    if holdout.is_empty() {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    let mut sum = 0.0f64;
+    for (i, p) in predictions.iter().take(k).enumerate() {
+        if holdout.binary_search(p).is_ok() {
+            hits += 1;
+            sum += hits as f64 / (i + 1) as f64;
+        }
+    }
+    sum / holdout.len().min(k) as f64
+}
+
+/// Normalized DCG at K with binary relevance.
+pub fn ndcg_at_k(predictions: &[u32], holdout: &[u32], k: usize) -> f64 {
+    if holdout.is_empty() {
+        return 0.0;
+    }
+    let dcg: f64 = predictions
+        .iter()
+        .take(k)
+        .enumerate()
+        .filter(|(_, p)| holdout.binary_search(p).is_ok())
+        .map(|(i, _)| 1.0 / ((i + 2) as f64).log2())
+        .sum();
+    let ideal: f64 = (0..holdout.len().min(k)).map(|i| 1.0 / ((i + 2) as f64).log2()).sum();
+    dcg / ideal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rr_finds_first_hit() {
+        assert_eq!(reciprocal_rank(&[9, 3, 7], &[3, 7]), 0.5);
+        assert_eq!(reciprocal_rank(&[3, 9], &[3]), 1.0);
+        assert_eq!(reciprocal_rank(&[9, 8], &[3]), 0.0);
+    }
+
+    #[test]
+    fn ap_perfect_list_is_one() {
+        let preds = [1u32, 2, 3];
+        let holdout = [1u32, 2, 3];
+        assert!((average_precision_at_k(&preds, &holdout, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_penalizes_late_hits() {
+        let early = average_precision_at_k(&[1, 9, 8], &[1], 3);
+        let late = average_precision_at_k(&[9, 8, 1], &[1], 3);
+        assert!(early > late);
+        assert_eq!(early, 1.0);
+        assert!((late - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ndcg_bounds_and_order() {
+        let perfect = ndcg_at_k(&[1, 2], &[1, 2], 2);
+        assert!((perfect - 1.0).abs() < 1e-12);
+        let partial = ndcg_at_k(&[9, 1], &[1, 2], 2);
+        assert!(partial > 0.0 && partial < 1.0);
+        assert_eq!(ndcg_at_k(&[9, 8], &[1], 2), 0.0);
+    }
+
+    #[test]
+    fn empty_holdout_is_zero() {
+        assert_eq!(average_precision_at_k(&[1], &[], 1), 0.0);
+        assert_eq!(ndcg_at_k(&[1], &[], 1), 0.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Approximate Maximum Inner Product Search (paper §4.6).
+//!
+//! Exact Top-K over hundreds of millions of items is too slow, so the paper
+//! evaluates its two largest variants with an approximate MIPS method and
+//! reports the recall numbers as high-probability lower bounds. We
+//! implement the classic cluster-pruning strategy (the core of ScaNN-style
+//! systems): k-means over the item embeddings, score the query against the
+//! `c` centroids, and run exact search only inside the best `p` clusters —
+//! expected cost `O(c·d + p·(n/c)·d)`, sublinear in n for `c ≈ √n`.
+
+use crate::linalg::{mat::dot, Mat};
+use crate::util::Pcg64;
+
+/// Cluster-pruned MIPS index over a fixed item matrix.
+#[derive(Clone, Debug)]
+pub struct MipsIndex {
+    /// `c × d` centroid matrix.
+    pub centroids: Mat,
+    /// Item ids per cluster.
+    pub clusters: Vec<Vec<u32>>,
+}
+
+impl MipsIndex {
+    /// Build with `num_clusters` k-means clusters (0 → `√n` heuristic).
+    /// A few Lloyd iterations suffice — the index only prunes.
+    pub fn build(items: &Mat, num_clusters: usize, seed: u64) -> MipsIndex {
+        let n = items.rows;
+        let d = items.cols;
+        let c = if num_clusters == 0 {
+            ((n as f64).sqrt().ceil() as usize).clamp(1, n.max(1))
+        } else {
+            num_clusters.clamp(1, n.max(1))
+        };
+        let mut rng = Pcg64::new(seed);
+
+        // Init: random distinct items as centroids.
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut ids);
+        let mut centroids = Mat::zeros(c, d);
+        for k in 0..c {
+            centroids.row_mut(k).copy_from_slice(items.row(ids[k % n.max(1)] as usize));
+        }
+
+        let mut assign = vec![0usize; n];
+        for _iter in 0..8 {
+            // Assign to nearest centroid (L2 — standard k-means; the probe
+            // step scores by inner product which is what MIPS needs).
+            let mut changed = 0usize;
+            for i in 0..n {
+                let x = items.row(i);
+                let mut best = 0usize;
+                let mut best_d = f32::INFINITY;
+                for k in 0..c {
+                    let cent = centroids.row(k);
+                    let mut dist = 0.0f32;
+                    for j in 0..d {
+                        let t = x[j] - cent[j];
+                        dist += t * t;
+                    }
+                    if dist < best_d {
+                        best_d = dist;
+                        best = k;
+                    }
+                }
+                if assign[i] != best {
+                    assign[i] = best;
+                    changed += 1;
+                }
+            }
+            // Update.
+            let mut counts = vec![0usize; c];
+            let mut sums = Mat::zeros(c, d);
+            for i in 0..n {
+                counts[assign[i]] += 1;
+                let row = items.row(i);
+                let srow = sums.row_mut(assign[i]);
+                for j in 0..d {
+                    srow[j] += row[j];
+                }
+            }
+            for k in 0..c {
+                if counts[k] > 0 {
+                    let inv = 1.0 / counts[k] as f32;
+                    let crow = centroids.row_mut(k);
+                    let srow = sums.row(k);
+                    for j in 0..d {
+                        crow[j] = srow[j] * inv;
+                    }
+                }
+            }
+            if changed == 0 {
+                break;
+            }
+        }
+
+        let mut clusters = vec![Vec::new(); c];
+        for (i, &k) in assign.iter().enumerate() {
+            clusters[k].push(i as u32);
+        }
+        MipsIndex { centroids, clusters }
+    }
+
+    /// Approximate top-k by probing the `probes` best clusters
+    /// (0 → `√c` heuristic, min 1).
+    pub fn search(
+        &self,
+        items: &Mat,
+        query: &[f32],
+        k: usize,
+        probes: usize,
+        exclude: &[u32],
+    ) -> Vec<u32> {
+        let c = self.centroids.rows;
+        let probes = if probes == 0 {
+            ((c as f64).sqrt().ceil() as usize).clamp(1, c)
+        } else {
+            probes.clamp(1, c)
+        };
+        // Rank clusters by centroid inner product.
+        let mut ranked: Vec<(f32, usize)> =
+            (0..c).map(|i| (dot(self.centroids.row(i), query), i)).collect();
+        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+        let mut scored: Vec<(f32, u32)> = Vec::new();
+        for &(_, cl) in ranked.iter().take(probes) {
+            for &id in &self.clusters[cl] {
+                if exclude.binary_search(&id).is_ok() {
+                    continue;
+                }
+                scored.push((dot(items.row(id as usize), query), id));
+            }
+        }
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.truncate(k);
+        scored.into_iter().map(|(_, id)| id).collect()
+    }
+
+    /// Expected fraction of items scored per query (search cost model).
+    pub fn probe_fraction(&self, probes: usize) -> f64 {
+        let total: usize = self.clusters.iter().map(|c| c.len()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut sizes: Vec<usize> = self.clusters.iter().map(|c| c.len()).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        let probes = probes.max(1).min(sizes.len());
+        sizes[..probes].iter().sum::<usize>() as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::topk_exact;
+
+    /// Items in two well-separated blobs.
+    fn blobs(n_per: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Mat::zeros(2 * n_per, d);
+        for i in 0..2 * n_per {
+            let center = if i < n_per { 3.0 } else { -3.0 };
+            for j in 0..d {
+                m[(i, j)] = center + rng.next_normal() as f32 * 0.3;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn clusters_partition_items() {
+        let items = blobs(50, 4, 1);
+        let idx = MipsIndex::build(&items, 4, 2);
+        let mut all: Vec<u32> = idx.clusters.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn separated_blobs_end_up_in_distinct_clusters() {
+        let items = blobs(50, 4, 3);
+        let idx = MipsIndex::build(&items, 2, 4);
+        // Each cluster should be (almost) pure.
+        for cl in &idx.clusters {
+            if cl.is_empty() {
+                continue;
+            }
+            let first_blob = cl.iter().filter(|&&i| i < 50).count();
+            let purity = first_blob.max(cl.len() - first_blob) as f64 / cl.len() as f64;
+            assert!(purity > 0.95, "purity={purity}");
+        }
+    }
+
+    #[test]
+    fn approximate_search_recovers_exact_topk_with_full_probes() {
+        let items = blobs(40, 6, 5);
+        let idx = MipsIndex::build(&items, 8, 6);
+        let query = vec![1.0f32; 6];
+        let exact = topk_exact(&items, &query, 10, &[]);
+        let approx = idx.search(&items, &query, 10, 8, &[]); // probe all
+        assert_eq!(approx, exact);
+    }
+
+    #[test]
+    fn pruned_search_has_high_recall_on_clustered_data() {
+        let items = blobs(100, 8, 7);
+        let idx = MipsIndex::build(&items, 16, 8);
+        let query = vec![1.0f32; 8]; // points at the +3 blob
+        let exact = topk_exact(&items, &query, 20, &[]);
+        let approx = idx.search(&items, &query, 20, 6, &[]);
+        let exact_set: std::collections::HashSet<u32> = exact.iter().copied().collect();
+        let hits = approx.iter().filter(|i| exact_set.contains(i)).count();
+        assert!(hits >= 15, "recall {hits}/20 too low for clustered data");
+    }
+
+    #[test]
+    fn pruning_actually_prunes() {
+        let items = blobs(100, 4, 9);
+        let idx = MipsIndex::build(&items, 16, 10);
+        assert!(idx.probe_fraction(4) < 0.8);
+    }
+
+    #[test]
+    fn exclusions_respected() {
+        let items = blobs(20, 4, 11);
+        let idx = MipsIndex::build(&items, 4, 12);
+        let query = vec![1.0f32; 4];
+        let full = idx.search(&items, &query, 5, 4, &[]);
+        let excluded = full[0];
+        let pruned = idx.search(&items, &query, 5, 4, &[excluded]);
+        assert!(!pruned.contains(&excluded));
+    }
+}

@@ -1,0 +1,260 @@
+//! Evaluation: Top-K retrieval and Recall@K under strong generalization
+//! (paper §4.6 and §5).
+//!
+//! For every test row the held-in history is folded into the embedding
+//! space via Eq. (4) and the resulting vector is scored against the whole
+//! item table. The paper notes exact Top-K is slow at the largest scales
+//! and recommends approximate MIPS; both paths are provided:
+//!
+//! * [`topk_exact`] — heap-based exact top-K over all items.
+//! * [`MipsIndex`] — k-means cluster-pruned approximate search (the
+//!   ScaNN-style "probe the best clusters" strategy). Table 2's two
+//!   largest variants were evaluated this way, with recall a lower bound.
+
+pub mod metrics;
+pub mod mips;
+
+pub use metrics::{average_precision_at_k, ndcg_at_k, reciprocal_rank};
+pub use mips::MipsIndex;
+
+use crate::als::Trainer;
+use crate::linalg::{mat::dot, Mat};
+use crate::sparse::TestRow;
+
+/// Eval knobs.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Cutoffs to report (paper: 20 and 50).
+    pub ks: Vec<usize>,
+    /// Use approximate MIPS instead of exact top-K.
+    pub approximate: bool,
+    /// MIPS: number of clusters (0 = auto ~ sqrt(n)).
+    pub mips_clusters: usize,
+    /// MIPS: clusters probed per query (0 = auto ~ sqrt(clusters)).
+    pub mips_probes: usize,
+    /// Exclude the history items from the candidate set (standard
+    /// protocol: do not "recommend" what the user already has).
+    pub exclude_history: bool,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig {
+            ks: vec![20, 50],
+            approximate: false,
+            mips_clusters: 0,
+            mips_probes: 0,
+            exclude_history: true,
+        }
+    }
+}
+
+/// Result per cutoff K.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecallReport {
+    pub k: usize,
+    pub recall: f64,
+    pub rows_evaluated: usize,
+}
+
+/// Exact top-k item indices by inner product with `query`, excluding ids in
+/// `exclude` (sorted). O(n·d + n log k) via a bounded min-heap.
+pub fn topk_exact(items: &Mat, query: &[f32], k: usize, exclude: &[u32]) -> Vec<u32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(OrderedF32, u32)>> = BinaryHeap::with_capacity(k + 1);
+    for i in 0..items.rows {
+        if exclude.binary_search(&(i as u32)).is_ok() {
+            continue;
+        }
+        let s = dot(items.row(i), query);
+        if heap.len() < k {
+            heap.push(Reverse((ordered(s), i as u32)));
+        } else if let Some(&Reverse((min, _))) = heap.peek() {
+            if ordered(s) > min {
+                heap.pop();
+                heap.push(Reverse((ordered(s), i as u32)));
+            }
+        }
+    }
+    let mut out: Vec<(OrderedF32, u32)> = heap.into_iter().map(|Reverse(x)| x).collect();
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    out.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Total-order f32 wrapper (NaN-free scores assumed; the bit trick gives a
+/// total order compatible with numeric order).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct OrderedF32(pub u32);
+
+/// Map an f32 into its order-preserving integer form.
+#[inline]
+pub fn ordered(x: f32) -> OrderedF32 {
+    let bits = x.to_bits();
+    // Flip so that the integer order matches the float order.
+    OrderedF32(if bits & 0x8000_0000 != 0 { !bits } else { bits | 0x8000_0000 })
+}
+
+/// Recall@K of one prediction list against a sorted holdout set.
+pub fn recall_at_k(predictions: &[u32], holdout: &[u32], k: usize) -> f64 {
+    if holdout.is_empty() {
+        return 0.0;
+    }
+    let hits = predictions
+        .iter()
+        .take(k)
+        .filter(|p| holdout.binary_search(p).is_ok())
+        .count();
+    hits as f64 / holdout.len().min(k) as f64
+}
+
+/// Fold a row's history into the embedding space (Eq. 4) against a dense
+/// item matrix — the strong-generalization query builder. Free-standing so
+/// the parallel eval loop only borrows `Sync` data.
+pub fn fold_in_dense(
+    items: &Mat,
+    history: &[(u32, f32)],
+    gramian: &Mat,
+    lambda: f32,
+    alpha: f32,
+    solver: crate::linalg::SolverKind,
+    opts: &crate::linalg::SolveOptions,
+) -> Vec<f32> {
+    let d = items.cols;
+    let mut a = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            a[(i, j)] = alpha * gramian[(i, j)];
+        }
+        a[(i, i)] += lambda;
+    }
+    let mut b = vec![0.0f32; d];
+    for &(item, y) in history {
+        let hrow = items.row(item as usize);
+        for i in 0..d {
+            b[i] += y * hrow[i];
+            for j in i..d {
+                a[(i, j)] += hrow[i] * hrow[j];
+            }
+        }
+    }
+    crate::linalg::mat::symmetrize_upper(&mut a.data, d);
+    crate::linalg::solvers::solve(solver, &a, &b, opts)
+}
+
+/// Evaluate a trained model on the strong-generalization test rows.
+pub fn evaluate(trainer: &Trainer, test: &[TestRow], cfg: &EvalConfig) -> Vec<RecallReport> {
+    let items = trainer.h.to_dense();
+    let gramian = trainer.item_gramian();
+    let kmax = cfg.ks.iter().copied().max().unwrap_or(50);
+    let (lambda, alpha) = (trainer.cfg.lambda, trainer.cfg.alpha);
+    let solver = trainer.cfg.solver;
+    let opts = trainer.cfg.solve_options();
+
+    let index = if cfg.approximate {
+        Some(MipsIndex::build(
+            &items,
+            cfg.mips_clusters,
+            trainer.cfg.seed ^ 0x5eed,
+        ))
+    } else {
+        None
+    };
+
+    let per_row: Vec<Vec<f64>> = crate::util::threads::parallel_map_indexed(test.len(), |t| {
+        let row = &test[t];
+        let query = fold_in_dense(&items, &row.history, &gramian, lambda, alpha, solver, &opts);
+        let mut exclude: Vec<u32> = if cfg.exclude_history {
+            row.history.iter().map(|&(c, _)| c).collect()
+        } else {
+            Vec::new()
+        };
+        exclude.sort_unstable();
+        let preds = match &index {
+            Some(idx) => idx.search(&items, &query, kmax, cfg.mips_probes, &exclude),
+            None => topk_exact(&items, &query, kmax, &exclude),
+        };
+        cfg.ks.iter().map(|&k| recall_at_k(&preds, &row.holdout, k)).collect()
+    });
+
+    cfg.ks
+        .iter()
+        .enumerate()
+        .map(|(ki, &k)| RecallReport {
+            k,
+            recall: if per_row.is_empty() {
+                0.0
+            } else {
+                per_row.iter().map(|r| r[ki]).sum::<f64>() / per_row.len() as f64
+            },
+            rows_evaluated: per_row.len(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_items() -> Mat {
+        // 5 items along distinct directions with varying norms.
+        Mat::from_rows(
+            5,
+            2,
+            &[
+                1.0, 0.0, // 0
+                0.0, 1.0, // 1
+                2.0, 0.0, // 2 (largest along x)
+                0.0, 0.5, // 3
+                0.7, 0.7, // 4
+            ],
+        )
+    }
+
+    #[test]
+    fn topk_orders_by_inner_product() {
+        let items = unit_items();
+        let got = topk_exact(&items, &[1.0, 0.0], 3, &[]);
+        assert_eq!(got, vec![2, 0, 4]);
+    }
+
+    #[test]
+    fn topk_respects_exclusions() {
+        let items = unit_items();
+        let got = topk_exact(&items, &[1.0, 0.0], 2, &[2]);
+        assert_eq!(got, vec![0, 4]);
+    }
+
+    #[test]
+    fn topk_with_k_larger_than_n() {
+        let items = unit_items();
+        let got = topk_exact(&items, &[0.0, 1.0], 10, &[]);
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0], 1);
+    }
+
+    #[test]
+    fn ordered_is_order_preserving() {
+        let xs = [-10.0f32, -1.0, -0.0, 0.0, 0.5, 1.0, 100.0];
+        for w in xs.windows(2) {
+            assert!(ordered(w[0]) <= ordered(w[1]), "{} vs {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn recall_counts_hits() {
+        let preds = [1u32, 2, 3, 4];
+        let holdout = [2u32, 9];
+        assert_eq!(recall_at_k(&preds, &holdout, 4), 0.5);
+        assert_eq!(recall_at_k(&preds, &holdout, 1), 0.0);
+        assert_eq!(recall_at_k(&preds, &[], 4), 0.0);
+    }
+
+    #[test]
+    fn recall_caps_denominator_at_k() {
+        // 3 holdout items but K=2: a perfect K=2 list scores 1.0.
+        let preds = [5u32, 6];
+        let holdout = [5u32, 6, 7];
+        assert_eq!(recall_at_k(&preds, &holdout, 2), 1.0);
+    }
+}

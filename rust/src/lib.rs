@@ -1,0 +1,46 @@
+//! # ALX-RS — Large Scale Matrix Factorization, reproduced in Rust + JAX + Pallas
+//!
+//! Reproduction of *"ALX: Large Scale Matrix Factorization on TPUs"*
+//! (Mehta, Rendle, Krichene, Zhang, 2021). The paper's distributed
+//! Alternating-Least-Squares architecture — sharded embedding tables,
+//! `sharded_gather` / batched solve / `sharded_scatter` over a TPU torus,
+//! dense batching, mixed bf16/f32 precision, and a CG-first solver stack —
+//! is implemented as a three-layer system:
+//!
+//! * **L3 (this crate)** — the coordinator: sharded tables, simulated-torus
+//!   collectives, dense batcher, epoch scheduler, evaluation and the CLI.
+//! * **L2 (python/compile/model.py)** — the per-batch ALS compute graph in
+//!   JAX, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the sufficient
+//!   statistics and gramian hot-spots, lowered inside the L2 graph.
+//!
+//! At runtime the [`runtime`] module loads the AOT artifacts through PJRT;
+//! python is never on the training path.
+
+pub mod als;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod densebatch;
+pub mod eval;
+pub mod harness;
+pub mod linalg;
+pub mod runtime;
+pub mod sharding;
+pub mod sparse;
+pub mod topo;
+pub mod util;
+pub mod webgraph;
+
+/// Most commonly used types, re-exported for examples and downstream users.
+pub mod prelude {
+    pub use crate::als::{PrecisionPolicy, SolverKind, TrainConfig, Trainer};
+    pub use crate::config::AlxConfig;
+    pub use crate::coordinator::Coordinator;
+    pub use crate::densebatch::{DenseBatch, DenseBatcher};
+    pub use crate::eval::{recall_at_k, EvalConfig};
+    pub use crate::linalg::Mat;
+    pub use crate::sparse::Csr;
+    pub use crate::topo::Topology;
+    pub use crate::webgraph::{Variant, VariantSpec};
+}

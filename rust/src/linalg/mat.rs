@@ -1,0 +1,291 @@
+//! Row-major dense matrix and vector helpers.
+//!
+//! Dimensions in ALX are small (`d ≤ 256`) but the *batch* of systems is
+//! large, so the layout favours cache-friendly row access and the hot
+//! kernels (`syrk_update`, `matmul_at_a`) are written as blocked loops the
+//! compiler auto-vectorizes.
+
+/// Convenience alias for an owned f32 vector.
+pub type Vecf = Vec<f32>;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data: data.to_vec() }
+    }
+
+    /// Random matrix with i.i.d. `N(0, scale²)` entries.
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut crate::util::Pcg64) -> Self {
+        let data = (0..rows * cols).map(|_| rng.next_normal() as f32 * scale).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transpose (out of place).
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dims must match");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // i-k-j loop order: unit-stride inner loop over `other` rows.
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (k, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * other.cols..(k + 1) * other.cols];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Gramian `selfᵀ · self` exploiting symmetry (SYRK).
+    pub fn gramian(&self) -> Mat {
+        let d = self.cols;
+        let mut g = Mat::zeros(d, d);
+        for r in 0..self.rows {
+            syrk_update(&mut g.data, self.row(r), 1.0);
+        }
+        // Mirror the upper triangle into the lower.
+        for i in 0..d {
+            for j in 0..i {
+                g.data[i * d + j] = g.data[j * d + i];
+            }
+        }
+        g
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f32]) -> Vecf {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|r| dot(self.row(r), x)).collect()
+    }
+
+    /// Frobenius norm squared.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Max absolute element-wise difference to `other`.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Round every entry to bf16 storage precision in place.
+    pub fn round_bf16(&mut self) {
+        crate::util::bf16::round_slice(&mut self.data);
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Dot product with 4-way unrolling (auto-vectorizes well).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let o = i * 4;
+        acc[0] += a[o] * b[o];
+        acc[1] += a[o + 1] * b[o + 1];
+        acc[2] += a[o + 2] * b[o + 2];
+        acc[3] += a[o + 3] * b[o + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Rank-1 symmetric update of the packed row-major `d×d` buffer:
+/// `G[i,j] += w * h[i]*h[j]` for the upper triangle `j >= i`.
+#[inline]
+pub fn syrk_update(g: &mut [f32], h: &[f32], w: f32) {
+    let d = h.len();
+    debug_assert_eq!(g.len(), d * d);
+    for i in 0..d {
+        let hi = w * h[i];
+        if hi == 0.0 {
+            continue;
+        }
+        // Zipped-slice form: no bounds checks, auto-vectorizes.
+        let grow = &mut g[i * d + i..(i + 1) * d];
+        for (gv, &hv) in grow.iter_mut().zip(&h[i..]) {
+            *gv += hi * hv;
+        }
+    }
+}
+
+/// Mirror the upper triangle of a packed `d×d` buffer into the lower.
+pub fn symmetrize_upper(g: &mut [f32], d: usize) {
+    debug_assert_eq!(g.len(), d * d);
+    for i in 0..d {
+        for j in 0..i {
+            g[i * d + j] = g[j * d + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn matmul_matches_hand_example() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_rows(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::randn(5, 5, 1.0, &mut rng);
+        let i = Mat::eye(5);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-6);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn gramian_matches_explicit_ata() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::randn(17, 6, 1.0, &mut rng);
+        let g = a.gramian();
+        let explicit = a.transpose().matmul(&a);
+        assert!(g.max_abs_diff(&explicit) < 1e-4);
+    }
+
+    #[test]
+    fn gramian_is_symmetric() {
+        let mut rng = Pcg64::new(3);
+        let a = Mat::randn(9, 4, 2.0, &mut rng);
+        let g = a.gramian();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(4);
+        let a = Mat::randn(3, 7, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::new(5);
+        let a = Mat::randn(6, 4, 1.0, &mut rng);
+        let x: Vec<f32> = (0..4).map(|i| i as f32 + 0.5).collect();
+        let xm = Mat::from_rows(4, 1, &x);
+        let y = a.matvec(&x);
+        let ym = a.matmul(&xm);
+        for i in 0..6 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in 0..10 {
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b = vec![2.0f32; n];
+            let expect: f32 = (0..n).map(|i| 2.0 * i as f32).sum();
+            assert_eq!(dot(&a, &b), expect);
+        }
+    }
+
+    #[test]
+    fn syrk_equals_outer_product_sum() {
+        let mut rng = Pcg64::new(6);
+        let d = 5;
+        let h: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let mut g = vec![0.0f32; d * d];
+        syrk_update(&mut g, &h, 2.0);
+        symmetrize_upper(&mut g, d);
+        for i in 0..d {
+            for j in 0..d {
+                assert!((g[i * d + j] - 2.0 * h[i] * h[j]).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense linear algebra for the ALS normal equations.
+//!
+//! The paper's per-row solve (Algorithm 1 line 10 / Algorithm 2 line 17) is
+//! a `d×d` symmetric positive-definite system `(αG + λI + Σ h⊗h) w = Σ y·h`.
+//! §4.5 compares four solvers — LU, QR, Cholesky and Conjugate Gradients —
+//! and finds CG scales best on the MXU. All four are implemented here for
+//! the native engine and mirrored in `python/compile/model.py` for the XLA
+//! engine, so Figure 5 can be regenerated on either path.
+
+pub mod mat;
+pub mod solvers;
+
+pub use mat::{Mat, Vecf};
+pub use solvers::{
+    batched_solve, solve_cg, solve_cholesky, solve_lu, solve_qr, SolveOptions, SolverKind,
+};

@@ -1,0 +1,461 @@
+//! The four linear-system solvers compared in the paper's §4.5 / Figure 5.
+//!
+//! All solve `A x = b` with `A` the `d×d` ALS normal matrix
+//! `αG + λI + Σ h⊗h` — symmetric and (with λ>0) positive definite. LU and
+//! QR do not exploit symmetry (the paper includes them as the generic
+//! alternatives), Cholesky does, and CG is the iterative MXU-friendly
+//! option the paper ultimately recommends.
+//!
+//! A `bf16_accumulate` option rounds every accumulation step to bfloat16 —
+//! used by `als::PrecisionPolicy::NaiveBf16` to reproduce the Figure 4
+//! training collapse.
+
+use super::mat::{dot, Mat};
+use crate::util::bf16::Bf16;
+
+/// Which linear solver the ALS step uses (paper §4.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    Lu,
+    Qr,
+    Cholesky,
+    /// Conjugate gradients with a fixed iteration budget (defaults to ~d/4,
+    /// matching the paper's observation that a few MXU-heavy iterations
+    /// suffice for the well-conditioned regularized normal equations).
+    Cg,
+}
+
+impl SolverKind {
+    pub const ALL: [SolverKind; 4] = [SolverKind::Lu, SolverKind::Qr, SolverKind::Cholesky, SolverKind::Cg];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverKind::Lu => "lu",
+            SolverKind::Qr => "qr",
+            SolverKind::Cholesky => "cholesky",
+            SolverKind::Cg => "cg",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lu" => Some(SolverKind::Lu),
+            "qr" => Some(SolverKind::Qr),
+            "cholesky" | "chol" => Some(SolverKind::Cholesky),
+            "cg" | "conjugate-gradients" => Some(SolverKind::Cg),
+            _ => None,
+        }
+    }
+}
+
+/// Options shared by the solver entry points.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveOptions {
+    /// CG iteration budget; `0` means `max(8, d/4)`.
+    pub cg_iters: usize,
+    /// Round accumulations to bf16 (Figure 4's "naive bf16" mode).
+    pub bf16_accumulate: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions { cg_iters: 0, bf16_accumulate: false }
+    }
+}
+
+/// Internal accumulation step. The solver's arithmetic units accumulate in
+/// f32 even in the paper's bf16 configuration (TPU MXU/VPU semantics), so
+/// this is a pass-through; the bf16 damage happens to the solver *inputs*
+/// (statistics rounded by `als::stats`) and *outputs* (rounded in
+/// [`solve`]) — which is exactly the Figure 4 failure mode.
+#[inline]
+fn acc(x: f32, _opts: &SolveOptions) -> f32 {
+    x
+}
+
+/// Solve via LU decomposition with partial pivoting (in-place Doolittle).
+pub fn solve_lu(a: &Mat, b: &[f32], opts: &SolveOptions) -> Vec<f32> {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    assert_eq!(b.len(), n);
+    let mut lu = a.data.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // Pivot: largest |value| in column k at/below row k.
+        let mut p = k;
+        let mut best = lu[k * n + k].abs();
+        for r in k + 1..n {
+            let v = lu[r * n + k].abs();
+            if v > best {
+                best = v;
+                p = r;
+            }
+        }
+        if p != k {
+            for c in 0..n {
+                lu.swap(k * n + c, p * n + c);
+            }
+            piv.swap(k, p);
+        }
+        let pivot = lu[k * n + k];
+        if pivot == 0.0 {
+            continue; // singular column; downstream produces inf/nan like XLA would
+        }
+        for r in k + 1..n {
+            let m = acc(lu[r * n + k] / pivot, opts);
+            lu[r * n + k] = m;
+            if m != 0.0 {
+                for c in k + 1..n {
+                    lu[r * n + c] = acc(lu[r * n + c] - m * lu[k * n + c], opts);
+                }
+            }
+        }
+    }
+    // Forward substitution (Ly = Pb).
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[piv[i]];
+        for j in 0..i {
+            s = acc(s - lu[i * n + j] * y[j], opts);
+        }
+        y[i] = s;
+    }
+    // Back substitution (Ux = y).
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in i + 1..n {
+            s = acc(s - lu[i * n + j] * x[j], opts);
+        }
+        x[i] = s / lu[i * n + i];
+    }
+    x
+}
+
+/// Solve via Householder QR: `A = QR`, `x = R⁻¹ Qᵀ b`.
+pub fn solve_qr(a: &Mat, b: &[f32], opts: &SolveOptions) -> Vec<f32> {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    let mut r = a.data.clone();
+    let mut qtb = b.to_vec();
+    let mut v = vec![0.0f32; n];
+    for k in 0..n {
+        // Householder vector for column k.
+        let mut norm_sq = 0.0f32;
+        for i in k..n {
+            let x = r[i * n + k];
+            v[i] = x;
+            norm_sq = acc(norm_sq + x * x, opts);
+        }
+        let norm = norm_sq.sqrt();
+        if norm == 0.0 {
+            continue;
+        }
+        let alpha = if v[k] >= 0.0 { -norm } else { norm };
+        v[k] -= alpha;
+        let vnorm_sq = acc(norm_sq - 2.0 * alpha * (v[k] + alpha) + (v[k] + alpha) * (v[k] + alpha), opts)
+            .max(f32::MIN_POSITIVE);
+        // Recompute directly for numerical clarity.
+        let mut vsq = 0.0f32;
+        for i in k..n {
+            vsq = acc(vsq + v[i] * v[i], opts);
+        }
+        let vsq = if vsq > 0.0 { vsq } else { vnorm_sq };
+        // Apply H = I - 2 v vᵀ / (vᵀv) to R (cols k..) and to qtb.
+        for c in k..n {
+            let mut s = 0.0f32;
+            for i in k..n {
+                s = acc(s + v[i] * r[i * n + c], opts);
+            }
+            let f = 2.0 * s / vsq;
+            for i in k..n {
+                r[i * n + c] = acc(r[i * n + c] - f * v[i], opts);
+            }
+        }
+        let mut s = 0.0f32;
+        for i in k..n {
+            s = acc(s + v[i] * qtb[i], opts);
+        }
+        let f = 2.0 * s / vsq;
+        for i in k..n {
+            qtb[i] = acc(qtb[i] - f * v[i], opts);
+        }
+    }
+    // Back substitution on R.
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = qtb[i];
+        for j in i + 1..n {
+            s = acc(s - r[i * n + j] * x[j], opts);
+        }
+        x[i] = s / r[i * n + i];
+    }
+    x
+}
+
+/// Solve via Cholesky (`A = L Lᵀ`), the classic choice for SPD normal
+/// equations. Fails softly (NaNs) when A is not positive definite — which
+/// is exactly what happens mid-training in naive-bf16 mode.
+pub fn solve_cholesky(a: &Mat, b: &[f32], opts: &SolveOptions) -> Vec<f32> {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    let mut l = vec![0.0f32; n * n];
+    for i in 0..n {
+        // Row i against rows j <= i: the k-sums are dot products of the
+        // already-computed row prefixes — contiguous, vectorized.
+        let (prev, cur) = l.split_at_mut(i * n);
+        let li = &mut cur[..n];
+        for j in 0..i {
+            let lj = &prev[j * n..j * n + j];
+            let s = a[(i, j)] - dot(&li[..j], lj);
+            li[j] = s / prev[j * n + j];
+        }
+        let s = a[(i, i)] - dot(&li[..i], &li[..i]);
+        li[i] = acc(s, opts).sqrt(); // NaN if s < 0 (not PD)
+    }
+    // Ly = b
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let s = b[i] - dot(&l[i * n..i * n + i], &y[..i]);
+        y[i] = acc(s, opts) / l[i * n + i];
+    }
+    // Lᵀx = y
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in i + 1..n {
+            s -= l[j * n + i] * x[j];
+        }
+        x[i] = acc(s, opts) / l[i * n + i];
+    }
+    x
+}
+
+/// Solve via conjugate gradients. The per-iteration work is one mat-vec —
+/// the operation that maps onto the MXU, which is why the paper finds CG
+/// the fastest option at large d (§4.5).
+pub fn solve_cg(a: &Mat, b: &[f32], opts: &SolveOptions) -> Vec<f32> {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    // Budget: the regularized ALS normal equations are well conditioned, so
+    // convergence (rel. residual < 1e-6) typically takes 10-30 iterations;
+    // 2n is a safe ceiling with early exit.
+    let iters = if opts.cg_iters == 0 { (2 * n).max(8) } else { opts.cg_iters };
+    let mut x = vec![0.0f32; n];
+    let mut r = b.to_vec(); // r = b - A·0
+    let mut p = r.clone();
+    let mut rs_old = dot(&r, &r);
+    if rs_old == 0.0 {
+        return x;
+    }
+    // Relative-residual stop: 1e-4 matches the f32 accuracy the ALS step
+    // needs (solution error ~ tol·κ, and κ is small for the regularized
+    // normal equations). Tightening to 1e-6 costs ~2× more iterations for
+    // no recall/objective change — measured in EXPERIMENTS.md §Perf.
+    let stop = 1e-4 * rs_old.sqrt();
+    for _ in 0..iters {
+        let ap = a.matvec(&p);
+        let pap = dot(&p, &ap);
+        if pap.abs() < f32::MIN_POSITIVE {
+            break;
+        }
+        let alpha = rs_old / pap;
+        for i in 0..n {
+            x[i] = acc(x[i] + alpha * p[i], opts);
+            r[i] = acc(r[i] - alpha * ap[i], opts);
+        }
+        let rs_new = dot(&r, &r);
+        if rs_new.sqrt() < stop {
+            break;
+        }
+        let beta = rs_new / rs_old;
+        for i in 0..n {
+            p[i] = acc(r[i] + beta * p[i], opts);
+        }
+        rs_old = rs_new;
+    }
+    x
+}
+
+/// Dispatch a single solve. In naive-bf16 mode the solution is rounded to
+/// bfloat16 on the way out (it is about to be stored/communicated in bf16
+/// anyway — this is the paper's end-to-end-bf16 configuration).
+pub fn solve(kind: SolverKind, a: &Mat, b: &[f32], opts: &SolveOptions) -> Vec<f32> {
+    let mut x = match kind {
+        SolverKind::Lu => solve_lu(a, b, opts),
+        SolverKind::Qr => solve_qr(a, b, opts),
+        SolverKind::Cholesky => solve_cholesky(a, b, opts),
+        SolverKind::Cg => solve_cg(a, b, opts),
+    };
+    if opts.bf16_accumulate {
+        for v in x.iter_mut() {
+            *v = Bf16::round(*v);
+        }
+    }
+    x
+}
+
+/// Solve a batch of systems `A_s x_s = b_s` (the "Solve" stage of Fig. 1).
+/// `as_` holds S packed `d×d` matrices, `bs` S packed `d`-vectors; returns S
+/// packed solutions.
+pub fn batched_solve(
+    kind: SolverKind,
+    d: usize,
+    as_: &[f32],
+    bs: &[f32],
+    opts: &SolveOptions,
+) -> Vec<f32> {
+    let s = bs.len() / d;
+    assert_eq!(as_.len(), s * d * d);
+    assert_eq!(bs.len(), s * d);
+    let mut out = vec![0.0f32; s * d];
+    let mut a = Mat::zeros(d, d);
+    for i in 0..s {
+        a.data.copy_from_slice(&as_[i * d * d..(i + 1) * d * d]);
+        let x = solve(kind, &a, &bs[i * d..(i + 1) * d], opts);
+        out[i * d..(i + 1) * d].copy_from_slice(&x);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// Random SPD matrix A = MᵀM + c·I.
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Mat {
+        let m = Mat::randn(n + 3, n, 1.0, rng);
+        let mut a = m.gramian();
+        for i in 0..n {
+            a[(i, i)] += 0.5;
+        }
+        a
+    }
+
+    fn residual(a: &Mat, x: &[f32], b: &[f32]) -> f32 {
+        let ax = a.matvec(x);
+        let num: f32 = ax.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum::<f32>().sqrt();
+        let den: f32 = b.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-20);
+        num / den
+    }
+
+    #[test]
+    fn all_solvers_agree_on_spd_systems() {
+        let mut rng = Pcg64::new(31);
+        for &n in &[1usize, 2, 4, 8, 16, 32] {
+            let a = random_spd(n, &mut rng);
+            let b: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let opts = SolveOptions::default();
+            for kind in SolverKind::ALL {
+                let x = solve(kind, &a, &b, &opts);
+                let r = residual(&a, &x, &b);
+                assert!(r < 5e-3, "{kind:?} n={n} residual={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn lu_handles_nonsymmetric() {
+        let a = Mat::from_rows(2, 2, &[2.0, 1.0, 0.5, 3.0]);
+        let b = [5.0f32, 10.0];
+        let x = solve_lu(&a, &b, &SolveOptions::default());
+        assert!(residual(&a, &x, &b) < 1e-5);
+    }
+
+    #[test]
+    fn lu_pivots_on_zero_diagonal() {
+        // Leading zero forces a row swap.
+        let a = Mat::from_rows(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        let b = [3.0f32, 7.0];
+        let x = solve_lu(&a, &b, &SolveOptions::default());
+        assert!((x[0] - 7.0).abs() < 1e-6 && (x[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn qr_handles_nonsymmetric() {
+        let a = Mat::from_rows(3, 3, &[1.0, 2.0, 0.0, 0.0, 1.0, 1.0, 2.0, 0.0, 1.0]);
+        let b = [1.0f32, 2.0, 3.0];
+        let x = solve_qr(&a, &b, &SolveOptions::default());
+        assert!(residual(&a, &x, &b) < 1e-5);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite_with_nan() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        let b = [1.0f32, 1.0];
+        let x = solve_cholesky(&a, &b, &SolveOptions::default());
+        assert!(x.iter().any(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn cg_converges_fast_on_well_conditioned() {
+        let mut rng = Pcg64::new(37);
+        let n = 64;
+        let a = {
+            let mut a = random_spd(n, &mut rng);
+            for i in 0..n {
+                a[(i, i)] += 10.0; // strong regularization -> tiny condition number
+            }
+            a
+        };
+        let b: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let x = solve_cg(&a, &b, &SolveOptions { cg_iters: 32, ..Default::default() });
+        assert!(residual(&a, &x, &b) < 1e-3, "residual={}", residual(&a, &x, &b));
+    }
+
+    #[test]
+    fn cg_zero_rhs_returns_zero() {
+        let a = Mat::eye(4);
+        let x = solve_cg(&a, &[0.0; 4], &SolveOptions::default());
+        assert_eq!(x, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn batched_solve_matches_individual() {
+        let mut rng = Pcg64::new(41);
+        let d = 8;
+        let s = 5;
+        let mut as_ = Vec::new();
+        let mut bs = Vec::new();
+        for _ in 0..s {
+            as_.extend_from_slice(&random_spd(d, &mut rng).data);
+            bs.extend((0..d).map(|_| rng.next_f32()));
+        }
+        let opts = SolveOptions::default();
+        let xs = batched_solve(SolverKind::Cholesky, d, &as_, &bs, &opts);
+        for i in 0..s {
+            let a = Mat::from_rows(d, d, &as_[i * d * d..(i + 1) * d * d]);
+            let x1 = solve_cholesky(&a, &bs[i * d..(i + 1) * d], &opts);
+            assert_eq!(&xs[i * d..(i + 1) * d], &x1[..]);
+        }
+    }
+
+    #[test]
+    fn bf16_accumulation_degrades_but_runs() {
+        let mut rng = Pcg64::new(43);
+        let n = 16;
+        let a = random_spd(n, &mut rng);
+        let b: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let opts = SolveOptions { bf16_accumulate: true, ..Default::default() };
+        let x = solve(SolverKind::Cholesky, &a, &b, &opts);
+        // Should produce finite output on a well-conditioned system but
+        // rounded to bf16 (visibly larger residual than f32).
+        let r = residual(&a, &x, &b);
+        assert!(x.iter().all(|v| v.is_finite()));
+        for &v in &x {
+            assert_eq!(v, Bf16::round(v), "solution must be bf16-representable");
+        }
+        let x32 = solve(SolverKind::Cholesky, &a, &b, &SolveOptions::default());
+        let r32 = residual(&a, &x32, &b);
+        assert!(r >= r32, "bf16 path should not be more accurate: {r} vs {r32}");
+    }
+
+    #[test]
+    fn solver_kind_parse_roundtrip() {
+        for k in SolverKind::ALL {
+            assert_eq!(SolverKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SolverKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,318 @@
+//! `alx` — the launcher binary (L3 leader entrypoint).
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//!
+//! ```text
+//! alx generate  --variant in-dense --scale 0.01        # build a dataset
+//! alx train     [--config cfg.toml] [--key value ...]  # train + eval
+//! alx table1    --scale 0.001                          # Table 1 stats
+//! alx table2    --scale 0.002 --epochs 8               # Table 2 recalls
+//! alx fig4      --lambda 1e-4                          # precision study
+//! alx fig5      --dims 16,32,64                        # solver study
+//! alx fig6                                             # scaling analysis
+//! alx grid      --coarse                               # λ×α grid search
+//! alx info                                             # topology/env info
+//! ```
+
+use alx::als::TrainConfig;
+use alx::config::{AlxConfig, KvConfig};
+use alx::coordinator::{grid_search, Coordinator, GridSpec};
+use alx::harness;
+use alx::topo::Topology;
+use alx::util::stats::human_bytes;
+use alx::webgraph::{generate, Variant, VariantSpec};
+
+/// Minimal `--key value` argument list (offline substitute for clap).
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.push((key.to_string(), argv[i + 1].clone()));
+                    i += 2;
+                } else {
+                    flags.push((key.to_string(), "true".to_string()));
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+/// Resolve an AlxConfig from `--config` plus CLI overrides.
+fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
+    let mut kv = match args.get("config") {
+        Some(path) => KvConfig::load(path)?,
+        None => KvConfig::default(),
+    };
+    // CLI overrides (flat names mapped onto the sectioned keys).
+    let map = [
+        ("variant", "dataset.variant"),
+        ("scale", "dataset.scale"),
+        ("data-seed", "dataset.seed"),
+        ("cores", "topology.cores"),
+        ("dim", "train.dim"),
+        ("epochs", "train.epochs"),
+        ("lambda", "train.lambda"),
+        ("alpha", "train.alpha"),
+        ("solver", "train.solver"),
+        ("precision", "train.precision"),
+        ("batch-rows", "train.batch_rows"),
+        ("batch-width", "train.batch_width"),
+        ("cg-iters", "train.cg_iters"),
+        ("seed", "train.seed"),
+        ("engine", "engine.kind"),
+        ("artifacts", "engine.artifacts_dir"),
+        ("approximate", "eval.approximate"),
+    ];
+    for (flag, key) in map {
+        if let Some(v) = args.get(flag) {
+            kv.set(key, v);
+        }
+    }
+    AlxConfig::from_kv(&kv)
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let cfg = resolve_config(args)?;
+    let spec = VariantSpec::preset(cfg.variant).scaled(cfg.scale);
+    let g = generate(&spec, cfg.data_seed);
+    println!(
+        "{}: {} nodes, {} edges, locality {:.1}%, {} filtered",
+        cfg.variant.name(),
+        g.nodes(),
+        g.edges(),
+        100.0 * g.locality(),
+        g.filtered_nodes
+    );
+    if let Some(path) = args.get("out") {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        g.adjacency.write_to(&mut f)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = resolve_config(args)?;
+    println!(
+        "training {} scale={} d={} epochs={} λ={:.0e} α={:.0e} solver={} precision={} engine={} cores={}",
+        cfg.variant.name(),
+        cfg.scale,
+        cfg.train.dim,
+        cfg.train.epochs,
+        cfg.train.lambda,
+        cfg.train.alpha,
+        cfg.train.solver.name(),
+        cfg.train.precision.name(),
+        cfg.engine,
+        cfg.cores,
+    );
+    let mut coord = Coordinator::prepare(cfg)?;
+    if let Some(path) = args.get("resume") {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        coord.trainer.load_checkpoint(&mut f)?;
+        println!("resumed from {path} at epoch {}", coord.trainer.current_epoch());
+    }
+    let report = coord.run()?;
+    if let Some(path) = args.get("checkpoint") {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        coord.trainer.save_checkpoint(&mut f)?;
+        println!("checkpoint written to {path}");
+    }
+    println!("\nepoch  objective        wall(s)  simulated(s)  comm");
+    for h in &report.history {
+        println!(
+            "{:>5}  {:>14.2}  {:>8.2}  {:>12.2}  {}",
+            h.epoch,
+            h.objective.unwrap_or(f64::NAN),
+            h.seconds,
+            h.simulated_seconds,
+            human_bytes(h.comm_bytes)
+        );
+    }
+    println!();
+    for r in &report.recalls {
+        println!("Recall@{:<3} = {:.4}  ({} test rows)", r.k, r.recall, r.rows_evaluated);
+    }
+    println!("\nprofiler breakdown:\n{}", coord.trainer.profiler.report());
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> anyhow::Result<()> {
+    let scale = args.get_or("scale", 0.001)?;
+    let seed = args.get_or("seed", 7u64)?;
+    let rows = harness::run_table1(scale, seed);
+    harness::print_table1(&rows, scale);
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> anyhow::Result<()> {
+    let scale = args.get_or("scale", 0.002)?;
+    let seed = args.get_or("seed", 7u64)?;
+    let cores = args.get_or("cores", 8usize)?;
+    let train = TrainConfig {
+        dim: args.get_or("dim", 32usize)?,
+        epochs: args.get_or("epochs", 8usize)?,
+        lambda: args.get_or("lambda", 5e-3f32)?,
+        alpha: args.get_or("alpha", 1e-4f32)?,
+        batch_rows: 64,
+        batch_width: 8,
+        ..TrainConfig::default()
+    };
+    let mut rows = Vec::new();
+    for v in Variant::ALL {
+        rows.push(harness::run_table2_row(v, scale, &train, cores, seed)?);
+    }
+    harness::print_table2(&rows);
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
+    let series = harness::run_fig4(
+        Variant::InDense,
+        args.get_or("scale", 0.002)?,
+        args.get_or("epochs", 8usize)?,
+        args.get_or("dim", 16usize)?,
+        args.get_or("lambda", 1e-4f32)?,
+        args.get_or("cores", 4usize)?,
+        args.get_or("seed", 7u64)?,
+    )?;
+    harness::print_fig4(&series);
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> anyhow::Result<()> {
+    let dims: Vec<usize> = args
+        .get("dims")
+        .unwrap_or("16,32,64,128")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    let points = harness::run_fig5(
+        Variant::InDense,
+        args.get_or("scale", 0.002)?,
+        &dims,
+        args.get_or("cores", 4usize)?,
+        args.get_or("seed", 7u64)?,
+        None,
+    )?;
+    harness::print_fig5(&points);
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> anyhow::Result<()> {
+    let dim = args.get_or("dim", 128usize)?;
+    let cores: Vec<usize> = args
+        .get("cores")
+        .unwrap_or("8,16,32,64,128,256,512,1024,2048")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    let variants = [Variant::Sparse, Variant::Dense, Variant::DeSparse, Variant::DeDense];
+    let points = harness::run_fig6(&variants, &cores, dim);
+    harness::print_fig6(&points);
+    Ok(())
+}
+
+fn cmd_grid(args: &Args) -> anyhow::Result<()> {
+    let cfg = resolve_config(args)?;
+    let spec = if args.has("coarse") { GridSpec::coarse() } else { GridSpec::default() };
+    let points = grid_search(&cfg, &spec)?;
+    println!("\nGrid search ({} cells), best first:", points.len());
+    println!("{:>10} {:>10} {:>9} {:>9}", "lambda", "alpha", "R@20", "R@50");
+    for p in &points {
+        println!(
+            "{:>10.0e} {:>10.0e} {:>9.3} {:>9.3}",
+            p.lambda, p.alpha, p.recall_at_20, p.recall_at_50
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let cores = args.get_or("cores", 8usize)?;
+    let topo = Topology::new(cores);
+    println!("simulated TPU v3 slice: {} cores, torus {:?}", topo.num_cores, topo.torus);
+    println!("  HBM/core: {}", human_bytes(topo.core.hbm_bytes));
+    println!("  usable HBM total: {}", human_bytes(topo.total_usable_hbm()));
+    println!("  link bandwidth: {:.0} GB/s × {} links", topo.core.link_bandwidth / 1e9, topo.core.links);
+    println!("  effective compute: {:.1} TFLOP/s/core", topo.effective_flops() / 1e12);
+    for v in Variant::ALL {
+        let bytes = 2 * v.paper_nodes() * 128 * 2;
+        println!(
+            "  {}: tables need {} → min {} cores",
+            v.name(),
+            human_bytes(bytes),
+            Topology::min_cores_for(bytes, &topo.core)
+        );
+    }
+    if args.has("artifacts") {
+        let rt = alx::runtime::Runtime::open(args.get("artifacts").unwrap())?;
+        println!("\nartifacts ({}):", rt.platform());
+        for e in rt.manifest().entries() {
+            println!("  {} ({})", e.name, e.file);
+        }
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: alx <generate|train|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
+         see `alx <cmd> --help` patterns in README.md"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let _ = &args.positional;
+    match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "train" => cmd_train(&args),
+        "table1" => cmd_table1(&args),
+        "table2" => cmd_table2(&args),
+        "fig4" => cmd_fig4(&args),
+        "fig5" => cmd_fig5(&args),
+        "fig6" => cmd_fig6(&args),
+        "grid" => cmd_grid(&args),
+        "info" => cmd_info(&args),
+        _ => usage(),
+    }
+}

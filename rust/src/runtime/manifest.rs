@@ -1,0 +1,151 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the rust runtime.
+//!
+//! Plain TSV (no JSON dependency): one artifact per line,
+//!
+//! ```text
+//! name<TAB>file<TAB>key=value<TAB>key=value...
+//! ```
+//!
+//! Keys describe the static shapes the artifact was compiled for
+//! (`op`, `solver`, `d`, `b`, `l`, `n`, ...). The runtime selects
+//! artifacts by these attributes, mirroring how XLA's static-shape
+//! constraint forces one executable per shape (paper §4.3).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One artifact line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub attrs: BTreeMap<String, String>,
+}
+
+impl ArtifactEntry {
+    /// Integer attribute accessor.
+    pub fn attr_usize(&self, key: &str) -> Option<usize> {
+        self.attrs.get(key)?.parse().ok()
+    }
+
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load and parse `manifest.tsv`.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {:?}: {e}. Run `make artifacts` first.",
+                path.as_ref()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let name = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing name", lineno + 1))?
+                .to_string();
+            let file = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing file", lineno + 1))?
+                .to_string();
+            let mut attrs = BTreeMap::new();
+            for kv in parts {
+                if let Some((k, v)) = kv.split_once('=') {
+                    attrs.insert(k.to_string(), v.to_string());
+                }
+            }
+            entries.push(ArtifactEntry { name, file, attrs });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Look up by exact name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All entries matching `(key, value)` attribute pairs.
+    pub fn find(&self, attrs: &[(&str, &str)]) -> Vec<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| attrs.iter().all(|(k, v)| e.attr(k) == Some(*v)))
+            .collect()
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Canonical artifact name for an ALS solve step.
+    pub fn solve_name(solver: &str, d: usize, b: usize, l: usize) -> String {
+        format!("solve_{solver}_d{d}_b{b}_l{l}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+solve_cg_d16_b32_l8\tsolve_cg_d16_b32_l8.hlo.txt\top=solve\tsolver=cg\td=16\tb=32\tl=8
+gramian_d16\tgramian_d16.hlo.txt\top=gramian\td=16\tn=1024
+";
+
+    #[test]
+    fn parse_entries_and_attrs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.get("solve_cg_d16_b32_l8").unwrap();
+        assert_eq!(e.file, "solve_cg_d16_b32_l8.hlo.txt");
+        assert_eq!(e.attr("solver"), Some("cg"));
+        assert_eq!(e.attr_usize("d"), Some(16));
+        assert_eq!(e.attr_usize("missing"), None);
+    }
+
+    #[test]
+    fn find_by_attrs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let hits = m.find(&[("op", "solve"), ("solver", "cg")]);
+        assert_eq!(hits.len(), 1);
+        assert!(m.find(&[("op", "nonexistent")]).is_empty());
+    }
+
+    #[test]
+    fn solve_name_format() {
+        assert_eq!(Manifest::solve_name("cg", 16, 32, 8), "solve_cg_d16_b32_l8");
+    }
+
+    #[test]
+    fn blank_and_comment_lines_skipped() {
+        let m = Manifest::parse("\n# x\n\n").unwrap();
+        assert!(m.entries().is_empty());
+    }
+
+    #[test]
+    fn malformed_line_missing_file() {
+        // A name with no file column is an error.
+        assert!(Manifest::parse("justaname").is_err());
+    }
+}

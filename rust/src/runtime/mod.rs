@@ -1,0 +1,133 @@
+//! PJRT runtime — loads and executes the AOT-compiled L2/L1 artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once at build time: it
+//! lowers the JAX ALS step (with the Pallas statistics kernel inside) to
+//! HLO **text** per static shape, and writes `artifacts/manifest.tsv`.
+//! This module is the only bridge between the rust hot path and those
+//! artifacts: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `compile` → `execute`. Python never runs at training time.
+//!
+//! Interchange is HLO text (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod xla_engine;
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use xla_engine::XlaEngine;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus a lazily compiled executable cache, keyed by
+/// artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.tsv"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// The manifest of available artifacts.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform string of the PJRT backend.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn executable(&mut self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+            let path = self.dir.join(&entry.file);
+            let timer = crate::util::Timer::start();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("load {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            crate::log_debug!("compiled artifact '{name}' in {:.1}ms", timer.elapsed_ms());
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on f32/i32 literals and return the flattened
+    /// outputs (the aot pipeline lowers with `return_tuple=True`).
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e:?}"))?;
+        let mut lit = lit;
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result of {name}: {e:?}"))?;
+        Ok(parts)
+    }
+
+    /// Helper: literal from an f32 slice with the given dims.
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// Helper: literal from an i32 slice with the given dims.
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Runtime::literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(Runtime::literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(Runtime::open("/nonexistent/alx-artifacts").is_err());
+    }
+}

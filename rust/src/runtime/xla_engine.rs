@@ -1,0 +1,120 @@
+//! The XLA solve engine — the production hot path.
+//!
+//! Executes the AOT-compiled L2 graph (`python/compile/model.py::solve_step`,
+//! with the L1 Pallas statistics kernel lowered inside it) for every dense
+//! batch. Shapes are static per artifact: the engine is bound to one
+//! `(solver, d, B, L)` tuple at construction and validates every batch
+//! against it — exactly the XLA constraint that motivates Dense Batching.
+//!
+//! Artifact signature (must match `aot.py`):
+//!
+//! ```text
+//! inputs : h[B,L,D] f32, y[B,L] f32, mask[B,L] f32,
+//!          onehot[B,S] f32 (S = B), gram[D,D] f32,
+//!          lam f32 scalar, alpha f32 scalar
+//! output : (w[S,D] f32,)
+//! ```
+
+use super::{manifest::Manifest, Runtime};
+use crate::als::SolveEngine;
+use crate::densebatch::DenseBatch;
+use crate::linalg::Mat;
+
+/// PJRT-backed [`SolveEngine`] bound to one compiled shape.
+pub struct XlaEngine {
+    runtime: Runtime,
+    artifact: String,
+    pub d: usize,
+    pub b: usize,
+    pub l: usize,
+}
+
+impl XlaEngine {
+    /// Open `artifacts_dir` and bind to the `(solver, d, b, l)` artifact.
+    pub fn new(
+        artifacts_dir: impl AsRef<std::path::Path>,
+        solver: &str,
+        d: usize,
+        b: usize,
+        l: usize,
+    ) -> anyhow::Result<XlaEngine> {
+        let mut runtime = Runtime::open(artifacts_dir)?;
+        let artifact = Manifest::solve_name(solver, d, b, l);
+        anyhow::ensure!(
+            runtime.manifest().get(&artifact).is_some(),
+            "artifact '{artifact}' not found — rebuild with `make artifacts` \
+             (available: {:?})",
+            runtime
+                .manifest()
+                .entries()
+                .iter()
+                .map(|e| e.name.as_str())
+                .collect::<Vec<_>>()
+        );
+        // Compile eagerly so the first training batch is not penalized.
+        runtime.executable(&artifact)?;
+        Ok(XlaEngine { runtime, artifact, d, b, l })
+    }
+
+    /// Access the underlying runtime (e.g. for gramian artifacts).
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.runtime
+    }
+}
+
+impl SolveEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn solve_batch(
+        &mut self,
+        batch: &DenseBatch,
+        h: &Mat,
+        gramian: &Mat,
+        lambda: f32,
+        alpha: f32,
+    ) -> anyhow::Result<Mat> {
+        let (b, l, d) = (self.b, self.l, self.d);
+        anyhow::ensure!(
+            batch.rows == b && batch.width == l,
+            "batch shape ({}, {}) does not match compiled artifact ({b}, {l})",
+            batch.rows,
+            batch.width
+        );
+        anyhow::ensure!(h.cols == d, "dim {} != compiled d {d}", h.cols);
+        anyhow::ensure!(h.rows == b * l, "h rows {} != B*L {}", h.rows, b * l);
+        let s = batch.num_segments();
+        anyhow::ensure!(s <= b, "more segments than dense rows");
+
+        // Segment one-hot (padded dense rows keep an all-zero row).
+        let mut onehot = vec![0.0f32; b * b];
+        for dr in 0..b {
+            let valid = batch.mask[dr * l..(dr + 1) * l].iter().any(|&m| m != 0.0);
+            if valid {
+                let seg = batch.segments[dr] as usize;
+                if seg < s {
+                    onehot[dr * b + seg] = 1.0;
+                }
+            }
+        }
+
+        let inputs = [
+            Runtime::literal_f32(&h.data, &[b as i64, l as i64, d as i64])?,
+            Runtime::literal_f32(&batch.values, &[b as i64, l as i64])?,
+            Runtime::literal_f32(&batch.mask, &[b as i64, l as i64])?,
+            Runtime::literal_f32(&onehot, &[b as i64, b as i64])?,
+            Runtime::literal_f32(&gramian.data, &[d as i64, d as i64])?,
+            xla::Literal::scalar(lambda),
+            xla::Literal::scalar(alpha),
+        ];
+        let outputs = self.runtime.execute(&self.artifact, &inputs)?;
+        anyhow::ensure!(!outputs.is_empty(), "artifact returned no outputs");
+        let w = outputs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("output fetch: {e:?}"))?;
+        anyhow::ensure!(w.len() == b * d, "output len {} != S*D {}", w.len(), b * d);
+        // Keep only the live segments.
+        Ok(Mat::from_rows(s, d, &w[..s * d]))
+    }
+}

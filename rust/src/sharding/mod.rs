@@ -1,0 +1,369 @@
+//! Uniformly sharded embedding tables (paper §4.2, Figure 2).
+//!
+//! Both `W (|U|×d)` and `H (|I|×d)` are split into contiguous row ranges,
+//! one per TPU core, so the pod's combined HBM bounds the model size.
+//! Storage is bfloat16 (paper §4.4's memory/communication-halving choice)
+//! or f32 for the precision ablation.
+
+use crate::linalg::Mat;
+use crate::util::bf16::{self, Bf16};
+use crate::util::Pcg64;
+
+/// Element storage format of a sharded table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Storage {
+    /// bfloat16 — the paper's default (half the memory + comm bytes).
+    Bf16,
+    /// float32 — ablation / high-precision mode.
+    F32,
+}
+
+impl Storage {
+    pub fn elem_bytes(self) -> u64 {
+        match self {
+            Storage::Bf16 => 2,
+            Storage::F32 => 4,
+        }
+    }
+}
+
+/// One shard's row range `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRange {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl ShardRange {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+
+    #[inline]
+    pub fn contains(&self, row: usize) -> bool {
+        row >= self.start && row < self.end
+    }
+}
+
+/// Physical storage of one shard.
+#[derive(Clone, Debug)]
+enum ShardData {
+    Bf16(Vec<u16>),
+    F32(Vec<f32>),
+}
+
+/// An embedding table uniformly sharded over `num_shards` cores.
+#[derive(Clone, Debug)]
+pub struct ShardedTable {
+    pub rows: usize,
+    pub dim: usize,
+    ranges: Vec<ShardRange>,
+    shards: Vec<ShardData>,
+    storage: Storage,
+}
+
+impl ShardedTable {
+    /// Uniform contiguous sharding: shard `i` holds rows
+    /// `[i·ceil(n/M), min((i+1)·ceil(n/M), n))`.
+    pub fn ranges_for(rows: usize, num_shards: usize) -> Vec<ShardRange> {
+        let per = rows.div_ceil(num_shards.max(1)).max(1);
+        (0..num_shards)
+            .map(|i| ShardRange { start: (i * per).min(rows), end: ((i + 1) * per).min(rows) })
+            .collect()
+    }
+
+    /// Create a zeroed table.
+    pub fn zeros(rows: usize, dim: usize, num_shards: usize, storage: Storage) -> ShardedTable {
+        let ranges = Self::ranges_for(rows, num_shards);
+        let shards = ranges
+            .iter()
+            .map(|r| match storage {
+                Storage::Bf16 => ShardData::Bf16(vec![0u16; r.len() * dim]),
+                Storage::F32 => ShardData::F32(vec![0.0f32; r.len() * dim]),
+            })
+            .collect();
+        ShardedTable { rows, dim, ranges, shards, storage }
+    }
+
+    /// Random-normal initialization scaled by `1/sqrt(d)` (the usual MF
+    /// init so initial scores are O(1)).
+    pub fn randn(
+        rows: usize,
+        dim: usize,
+        num_shards: usize,
+        storage: Storage,
+        rng: &mut Pcg64,
+    ) -> ShardedTable {
+        let mut t = Self::zeros(rows, dim, num_shards, storage);
+        let scale = 1.0 / (dim as f64).sqrt();
+        for s in 0..t.num_shards() {
+            let mut srng = rng.split();
+            let n = t.ranges[s].len() * dim;
+            match &mut t.shards[s] {
+                ShardData::Bf16(v) => {
+                    for x in v.iter_mut().take(n) {
+                        *x = Bf16::from_f32((srng.next_normal() * scale) as f32).0;
+                    }
+                }
+                ShardData::F32(v) => {
+                    for x in v.iter_mut().take(n) {
+                        *x = (srng.next_normal() * scale) as f32;
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn storage(&self) -> Storage {
+        self.storage
+    }
+
+    pub fn range(&self, shard: usize) -> ShardRange {
+        self.ranges[shard]
+    }
+
+    /// Which shard owns `row`.
+    #[inline]
+    pub fn shard_of(&self, row: usize) -> usize {
+        debug_assert!(row < self.rows);
+        let per = self.rows.div_ceil(self.num_shards()).max(1);
+        (row / per).min(self.num_shards() - 1)
+    }
+
+    /// Total stored bytes (the HBM-footprint number the capacity model uses).
+    pub fn memory_bytes(&self) -> u64 {
+        self.rows as u64 * self.dim as u64 * self.storage.elem_bytes()
+    }
+
+    /// Read one row into `out` (widened to f32).
+    #[inline]
+    pub fn read_row(&self, row: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let s = self.shard_of(row);
+        let off = (row - self.ranges[s].start) * self.dim;
+        match &self.shards[s] {
+            ShardData::Bf16(v) => {
+                for (o, &b) in out.iter_mut().zip(&v[off..off + self.dim]) {
+                    *o = Bf16(b).to_f32();
+                }
+            }
+            ShardData::F32(v) => out.copy_from_slice(&v[off..off + self.dim]),
+        }
+    }
+
+    /// Write one row (rounding to the storage precision).
+    #[inline]
+    pub fn write_row(&mut self, row: usize, data: &[f32]) {
+        debug_assert_eq!(data.len(), self.dim);
+        let s = self.shard_of(row);
+        let off = (row - self.ranges[s].start) * self.dim;
+        match &mut self.shards[s] {
+            ShardData::Bf16(v) => {
+                for (b, &x) in v[off..off + self.dim].iter_mut().zip(data) {
+                    *b = Bf16::from_f32(x).0;
+                }
+            }
+            ShardData::F32(v) => v[off..off + self.dim].copy_from_slice(data),
+        }
+    }
+
+    /// Gather many rows into a dense `[ids.len() × dim]` matrix.
+    pub fn gather(&self, ids: &[u32]) -> Mat {
+        let mut out = Mat::zeros(ids.len(), self.dim);
+        for (k, &id) in ids.iter().enumerate() {
+            let dst = &mut out.data[k * self.dim..(k + 1) * self.dim];
+            self.read_row(id as usize, dst);
+        }
+        out
+    }
+
+    /// Scatter rows of `data` into the table at `ids` (overwrite semantics —
+    /// each ALS solve fully replaces the row, Algorithm 2 line 19).
+    pub fn scatter(&mut self, ids: &[u32], data: &Mat) {
+        assert_eq!(ids.len(), data.rows);
+        assert_eq!(data.cols, self.dim);
+        for (k, &id) in ids.iter().enumerate() {
+            self.write_row(id as usize, data.row(k));
+        }
+    }
+
+    /// Shard-local gramian `H_μᵀ H_μ` (Algorithm 2 line 5); the caller
+    /// all-reduce-sums these across shards (line 6).
+    pub fn local_gramian(&self, shard: usize) -> Mat {
+        let d = self.dim;
+        let n = self.ranges[shard].len();
+        let mut g = Mat::zeros(d, d);
+        let mut row = vec![0.0f32; d];
+        for r in 0..n {
+            let off = r * d;
+            match &self.shards[shard] {
+                ShardData::Bf16(v) => {
+                    for (o, &b) in row.iter_mut().zip(&v[off..off + d]) {
+                        *o = Bf16(b).to_f32();
+                    }
+                }
+                ShardData::F32(v) => row.copy_from_slice(&v[off..off + d]),
+            }
+            crate::linalg::mat::syrk_update(&mut g.data, &row, 1.0);
+        }
+        crate::linalg::mat::symmetrize_upper(&mut g.data, d);
+        g
+    }
+
+    /// Materialize the full table as a dense matrix (eval / small problems).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.dim);
+        for r in 0..self.rows {
+            let d = self.dim;
+            let dst = &mut out.data[r * d..(r + 1) * d];
+            self.read_row(r, dst);
+        }
+        out
+    }
+
+    /// Squared Frobenius norm (for the training objective's λ‖·‖² term).
+    pub fn fro_norm_sq(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for s in 0..self.num_shards() {
+            match &self.shards[s] {
+                ShardData::Bf16(v) => {
+                    for &b in v {
+                        let x = Bf16(b).to_f32() as f64;
+                        acc += x * x;
+                    }
+                }
+                ShardData::F32(v) => {
+                    for &x in v {
+                        acc += (x as f64) * (x as f64);
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    /// Raw f32 view of a shard (copies; used by the collectives emulation).
+    pub fn shard_f32(&self, shard: usize) -> Vec<f32> {
+        match &self.shards[shard] {
+            ShardData::Bf16(v) => bf16::unpack(v),
+            ShardData::F32(v) => v.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_partition_rows() {
+        for (rows, shards) in [(10usize, 3usize), (7, 7), (5, 8), (100, 1), (1, 4)] {
+            let rs = ShardedTable::ranges_for(rows, shards);
+            assert_eq!(rs.len(), shards);
+            let total: usize = rs.iter().map(|r| r.len()).sum();
+            assert_eq!(total, rows, "rows={rows} shards={shards}");
+            // Contiguous and ordered.
+            let mut prev = 0;
+            for r in &rs {
+                assert_eq!(r.start, prev);
+                prev = r.end;
+            }
+        }
+    }
+
+    #[test]
+    fn shard_of_agrees_with_ranges() {
+        let t = ShardedTable::zeros(103, 4, 7, Storage::F32);
+        for row in 0..103 {
+            let s = t.shard_of(row);
+            assert!(t.range(s).contains(row), "row {row} shard {s}");
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip_f32() {
+        let mut t = ShardedTable::zeros(20, 3, 4, Storage::F32);
+        t.write_row(13, &[1.5, -2.25, 3.75]);
+        let mut out = [0.0f32; 3];
+        t.read_row(13, &mut out);
+        assert_eq!(out, [1.5, -2.25, 3.75]);
+    }
+
+    #[test]
+    fn bf16_storage_rounds() {
+        let mut t = ShardedTable::zeros(4, 2, 2, Storage::Bf16);
+        let x = 1.0 + 1.0 / 512.0; // not representable in bf16
+        t.write_row(0, &[x, 1.0]);
+        let mut out = [0.0f32; 2];
+        t.read_row(0, &mut out);
+        assert_eq!(out[0], Bf16::round(x));
+        assert_eq!(out[1], 1.0);
+        assert_ne!(out[0], x);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut rng = Pcg64::new(3);
+        let mut t = ShardedTable::zeros(50, 8, 5, Storage::F32);
+        let ids = [3u32, 17, 44, 9];
+        let data = Mat::randn(4, 8, 1.0, &mut rng);
+        t.scatter(&ids, &data);
+        let got = t.gather(&ids);
+        assert!(got.max_abs_diff(&data) < 1e-7);
+    }
+
+    #[test]
+    fn local_gramians_sum_to_global() {
+        let mut rng = Pcg64::new(5);
+        let t = ShardedTable::randn(37, 6, 4, Storage::F32, &mut rng);
+        let dense = t.to_dense();
+        let global = dense.gramian();
+        let mut summed = Mat::zeros(6, 6);
+        for s in 0..t.num_shards() {
+            let g = t.local_gramian(s);
+            for (a, b) in summed.data.iter_mut().zip(&g.data) {
+                *a += b;
+            }
+        }
+        assert!(summed.max_abs_diff(&global) < 1e-3);
+    }
+
+    #[test]
+    fn memory_bytes_by_storage() {
+        let b = ShardedTable::zeros(1000, 128, 8, Storage::Bf16);
+        let f = ShardedTable::zeros(1000, 128, 8, Storage::F32);
+        assert_eq!(b.memory_bytes(), 1000 * 128 * 2);
+        assert_eq!(f.memory_bytes(), 2 * b.memory_bytes());
+    }
+
+    #[test]
+    fn randn_init_has_expected_scale() {
+        let mut rng = Pcg64::new(7);
+        let t = ShardedTable::randn(2000, 16, 4, Storage::F32, &mut rng);
+        // E[‖row‖²] = d · (1/√d)² = 1.
+        let norm_sq = t.fro_norm_sq() / 2000.0;
+        assert!((norm_sq - 1.0).abs() < 0.1, "mean row norm² = {norm_sq}");
+    }
+
+    #[test]
+    fn more_shards_than_rows_leaves_empty_shards() {
+        let t = ShardedTable::zeros(3, 2, 8, Storage::F32);
+        let nonempty = (0..8).filter(|&s| !t.range(s).is_empty()).count();
+        assert_eq!(nonempty, 3);
+        // All rows still reachable.
+        for r in 0..3 {
+            assert!(t.range(t.shard_of(r)).contains(r));
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Compressed-sparse-row matrix over f32 values.
+//!
+//! The training set `S` (paper §3) is a sparse rating/link matrix: rows are
+//! users (source pages), columns items (target pages), values the label
+//! `y`. One epoch needs a row-major pass for the user side and a
+//! column-major pass for the item side, so [`Csr::transpose`] is a core
+//! operation (counting sort, O(nnz)).
+
+/// CSR sparse matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointer array, length `rows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, length nnz, sorted within each row.
+    pub indices: Vec<u32>,
+    /// Values, length nnz.
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from COO triplets (row, col, value). Duplicate (row, col)
+    /// entries are summed. Triplets need not be sorted.
+    pub fn from_coo(rows: usize, cols: usize, triplets: &[(u32, u32, f32)]) -> Csr {
+        // Counting sort by row.
+        let mut counts = vec![0usize; rows + 1];
+        for &(r, c, _) in triplets {
+            assert!((r as usize) < rows && (c as usize) < cols, "triplet out of bounds");
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..rows {
+            counts[i + 1] += counts[i];
+        }
+        let mut order = counts.clone();
+        let nnz = triplets.len();
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0.0f32; nnz];
+        for &(r, c, v) in triplets {
+            let slot = order[r as usize];
+            order[r as usize] += 1;
+            indices[slot] = c;
+            values[slot] = v;
+        }
+        // Sort within each row and merge duplicates.
+        let mut out_indices = Vec::with_capacity(nnz);
+        let mut out_values = Vec::with_capacity(nnz);
+        let mut indptr = vec![0usize; rows + 1];
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for r in 0..rows {
+            scratch.clear();
+            scratch.extend(
+                indices[counts[r]..counts[r + 1]]
+                    .iter()
+                    .copied()
+                    .zip(values[counts[r]..counts[r + 1]].iter().copied()),
+            );
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (c, mut v) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                out_indices.push(c);
+                out_values.push(v);
+                i = j;
+            }
+            indptr[r + 1] = out_indices.len();
+        }
+        Csr { rows, cols, indptr, indices: out_indices, values: out_values }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        &self.indices[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_values(&self, r: usize) -> &[f32] {
+        &self.values[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Length of row `r`.
+    #[inline]
+    pub fn row_len(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Transpose in O(nnz) via counting sort; the item-side pass of ALS
+    /// iterates rows of `Sᵀ`.
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let mut indptr = counts.clone();
+        let mut slots = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f32; self.nnz()];
+        for r in 0..self.rows {
+            for (i, &c) in self.row_indices(r).iter().enumerate() {
+                let v = self.row_values(r)[i];
+                let slot = slots[c as usize];
+                slots[c as usize] += 1;
+                indices[slot] = r as u32;
+                values[slot] = v;
+            }
+        }
+        indptr[self.cols] = self.nnz();
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// Row-length distribution as f64s (used for dense-batch tuning).
+    pub fn row_length_histogram(&self) -> Vec<f64> {
+        (0..self.rows).map(|r| self.row_len(r) as f64).collect()
+    }
+
+    /// Serialize to a simple little-endian binary format.
+    pub fn write_to(&self, w: &mut impl std::io::Write) -> std::io::Result<()> {
+        w.write_all(b"ALXCSR01")?;
+        for v in [self.rows as u64, self.cols as u64, self.nnz() as u64] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for &p in &self.indptr {
+            w.write_all(&(p as u64).to_le_bytes())?;
+        }
+        for &i in &self.indices {
+            w.write_all(&i.to_le_bytes())?;
+        }
+        for &v in &self.values {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Deserialize the [`Csr::write_to`] format.
+    pub fn read_from(r: &mut impl std::io::Read) -> std::io::Result<Csr> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != b"ALXCSR01" {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+        }
+        let mut u64buf = [0u8; 8];
+        let mut read_u64 = |r: &mut dyn std::io::Read| -> std::io::Result<u64> {
+            r.read_exact(&mut u64buf)?;
+            Ok(u64::from_le_bytes(u64buf))
+        };
+        let rows = read_u64(r)? as usize;
+        let cols = read_u64(r)? as usize;
+        let nnz = read_u64(r)? as usize;
+        let mut indptr = Vec::with_capacity(rows + 1);
+        for _ in 0..=rows {
+            indptr.push(read_u64(r)? as usize);
+        }
+        let mut indices = vec![0u32; nnz];
+        let mut buf4 = [0u8; 4];
+        for i in indices.iter_mut() {
+            r.read_exact(&mut buf4)?;
+            *i = u32::from_le_bytes(buf4);
+        }
+        let mut values = vec![0.0f32; nnz];
+        for v in values.iter_mut() {
+            r.read_exact(&mut buf4)?;
+            *v = f32::from_le_bytes(buf4);
+        }
+        Ok(Csr { rows, cols, indptr, indices, values })
+    }
+
+    /// Memory footprint of the stored arrays in bytes.
+    pub fn memory_bytes(&self) -> u64 {
+        (self.indptr.len() * 8 + self.indices.len() * 4 + self.values.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[0 1 0]
+        //  [2 0 3]
+        //  [0 0 0]
+        //  [4 5 6]]
+        Csr::from_coo(
+            4,
+            3,
+            &[(0, 1, 1.0), (1, 0, 2.0), (1, 2, 3.0), (3, 0, 4.0), (3, 1, 5.0), (3, 2, 6.0)],
+        )
+    }
+
+    #[test]
+    fn from_coo_sorts_rows() {
+        let m = Csr::from_coo(2, 4, &[(0, 3, 1.0), (0, 1, 2.0), (0, 2, 3.0)]);
+        assert_eq!(m.row_indices(0), &[1, 2, 3]);
+        assert_eq!(m.row_values(0), &[2.0, 3.0, 1.0]);
+        assert_eq!(m.row_len(1), 0);
+    }
+
+    #[test]
+    fn from_coo_merges_duplicates() {
+        let m = Csr::from_coo(1, 2, &[(0, 1, 1.0), (0, 1, 2.5)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row_values(0), &[3.5]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.cols, 4);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn transpose_entries_match() {
+        let m = sample();
+        let t = m.transpose();
+        // Column 0 of m = rows {1:2.0, 3:4.0}
+        assert_eq!(t.row_indices(0), &[1, 3]);
+        assert_eq!(t.row_values(0), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::from_coo(3, 3, &[]);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.transpose().nnz(), 0);
+    }
+
+    #[test]
+    fn io_roundtrip() {
+        let m = sample();
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        let m2 = Csr::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn io_rejects_bad_magic() {
+        let buf = b"NOTMAGIC".to_vec();
+        assert!(Csr::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn from_coo_bounds_checked() {
+        Csr::from_coo(2, 2, &[(2, 0, 1.0)]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Sparse matrix substrate: CSR storage, transpose, and the paper's
+//! strong-generalization train/test split (§5).
+
+pub mod csr;
+pub mod split;
+
+pub use csr::Csr;
+pub use split::{split_strong_generalization, Split, TestRow};

@@ -1,0 +1,159 @@
+//! Strong-generalization train/test split (paper §5).
+//!
+//! The linkage graph is split **by row** (source link): 90% of rows go to
+//! the training set; for each of the remaining 10% test rows, 25% of the
+//! outlinks are held out as ground truth and the rest form the "history"
+//! used to fold the row into the embedding space via Eq. (4) at eval time.
+//! Test rows therefore never contribute to training — the model must
+//! generalize to unseen users (Marlin's "strong generalization" protocol).
+
+use super::csr::Csr;
+use crate::util::Pcg64;
+
+/// One test row: its history (observed outlinks used for fold-in) and the
+/// held-out ground-truth outlinks used to compute Recall@K.
+#[derive(Clone, Debug)]
+pub struct TestRow {
+    pub row: u32,
+    pub history: Vec<(u32, f32)>,
+    pub holdout: Vec<u32>,
+}
+
+/// The result of the split.
+#[derive(Clone, Debug)]
+pub struct Split {
+    /// Training matrix; test rows are present but empty so that row ids and
+    /// shard layouts stay aligned with the full graph.
+    pub train: Csr,
+    pub test: Vec<TestRow>,
+}
+
+/// Perform the strong-generalization split.
+///
+/// * `train_frac` — fraction of rows kept fully in training (paper: 0.9).
+/// * `holdout_frac` — fraction of a test row's outlinks held out (paper: 0.25).
+pub fn split_strong_generalization(
+    full: &Csr,
+    train_frac: f64,
+    holdout_frac: f64,
+    seed: u64,
+) -> Split {
+    assert!((0.0..=1.0).contains(&train_frac));
+    assert!((0.0..=1.0).contains(&holdout_frac));
+    let mut rng = Pcg64::new(seed);
+    let mut rows: Vec<u32> = (0..full.rows as u32).collect();
+    rng.shuffle(&mut rows);
+    let n_train = (full.rows as f64 * train_frac).round() as usize;
+    let mut is_test = vec![false; full.rows];
+    for &r in &rows[n_train..] {
+        is_test[r as usize] = true;
+    }
+
+    let mut triplets: Vec<(u32, u32, f32)> = Vec::with_capacity(full.nnz());
+    let mut test = Vec::new();
+    for r in 0..full.rows {
+        let idx = full.row_indices(r);
+        let val = full.row_values(r);
+        if !is_test[r] {
+            for (&c, &v) in idx.iter().zip(val) {
+                triplets.push((r as u32, c, v));
+            }
+            continue;
+        }
+        if idx.is_empty() {
+            continue;
+        }
+        // Hold out a random 25% (at least one if the row is non-trivial,
+        // but always keep at least one history link for fold-in).
+        let mut order: Vec<usize> = (0..idx.len()).collect();
+        rng.shuffle(&mut order);
+        let mut n_hold = (idx.len() as f64 * holdout_frac).round() as usize;
+        n_hold = n_hold.clamp(usize::from(idx.len() >= 2), idx.len().saturating_sub(1));
+        let mut history = Vec::with_capacity(idx.len() - n_hold);
+        let mut holdout = Vec::with_capacity(n_hold);
+        for (pos, &i) in order.iter().enumerate() {
+            if pos < n_hold {
+                holdout.push(idx[i]);
+            } else {
+                history.push((idx[i], val[i]));
+            }
+        }
+        if holdout.is_empty() {
+            continue; // single-link rows cannot be evaluated
+        }
+        holdout.sort_unstable();
+        test.push(TestRow { row: r as u32, history, holdout });
+    }
+
+    Split { train: Csr::from_coo(full.rows, full.cols, &triplets), test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_graph(rows: usize, cols: usize, links_per_row: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut t = Vec::new();
+        for r in 0..rows {
+            let mut seen = std::collections::HashSet::new();
+            while seen.len() < links_per_row {
+                seen.insert(rng.range(0, cols) as u32);
+            }
+            for c in seen {
+                t.push((r as u32, c, 1.0));
+            }
+        }
+        Csr::from_coo(rows, cols, &t)
+    }
+
+    #[test]
+    fn split_fractions_roughly_hold() {
+        let g = dense_graph(200, 100, 8, 1);
+        let s = split_strong_generalization(&g, 0.9, 0.25, 2);
+        assert_eq!(s.test.len(), 20);
+        // Train keeps all non-test links.
+        assert_eq!(s.train.nnz(), 180 * 8);
+    }
+
+    #[test]
+    fn test_rows_are_empty_in_train() {
+        let g = dense_graph(50, 40, 5, 3);
+        let s = split_strong_generalization(&g, 0.8, 0.25, 4);
+        for tr in &s.test {
+            assert_eq!(s.train.row_len(tr.row as usize), 0, "test row leaked into train");
+        }
+    }
+
+    #[test]
+    fn holdout_plus_history_partition_the_row() {
+        let g = dense_graph(50, 40, 8, 5);
+        let s = split_strong_generalization(&g, 0.8, 0.25, 6);
+        for tr in &s.test {
+            let mut all: Vec<u32> =
+                tr.history.iter().map(|&(c, _)| c).chain(tr.holdout.iter().copied()).collect();
+            all.sort_unstable();
+            assert_eq!(all, g.row_indices(tr.row as usize));
+            // ~25% of 8 links = 2 held out.
+            assert_eq!(tr.holdout.len(), 2);
+            assert_eq!(tr.history.len(), 6);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = dense_graph(60, 30, 4, 7);
+        let a = split_strong_generalization(&g, 0.9, 0.25, 8);
+        let b = split_strong_generalization(&g, 0.9, 0.25, 8);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test.len(), b.test.len());
+    }
+
+    #[test]
+    fn single_link_rows_are_skipped() {
+        let g = Csr::from_coo(10, 10, &(0..10).map(|r| (r as u32, 0u32, 1.0)).collect::<Vec<_>>());
+        let s = split_strong_generalization(&g, 0.0, 0.25, 9); // everything is a test row
+        // Rows have 1 link: cannot hold out and keep history; all skipped.
+        assert!(s.test.is_empty());
+    }
+}

@@ -1,0 +1,313 @@
+//! TPU v3 pod topology model (paper §4.1) — the hardware substrate we
+//! cannot attach, simulated (DESIGN.md §3).
+//!
+//! A TPU v3 pod connects up to 2048 cores: 2 cores per chip, 4 chips per
+//! host board, chips in a 2-D toroidal mesh with four dedicated
+//! inter-chip-interconnect (ICI) links each. Every core has 16 GiB of HBM.
+//! The model exposes:
+//!
+//! * **capacity** — minimum #cores needed just to hold the sharded
+//!   embedding tables (reproduces Fig. 6's "WebGraph-sparse needs ≥32
+//!   cores to even begin training"),
+//! * **collective cost** — ring-style all-gather / all-reduce time over the
+//!   torus, with per-hop latency (this is what bends Fig. 6's curves away
+//!   from linear),
+//! * **compute rate** — per-core MXU flops for the analytic epoch-time
+//!   decomposition `T(M) = T_compute/M + T_comm(M)` of §4.2.
+
+/// Hardware constants for one TPU v3 core and its ICI links.
+#[derive(Clone, Copy, Debug)]
+pub struct CoreSpec {
+    /// HBM capacity per core in bytes (v3: 16 GiB).
+    pub hbm_bytes: u64,
+    /// Usable fraction of HBM after runtime/program reservations.
+    pub hbm_usable: f64,
+    /// Working-set multiplier over the raw table bytes (gathered batches,
+    /// XLA temporaries, double buffers). Calibrated so the Fig. 6 floors
+    /// reproduce: WebGraph-dense starts at 8 cores, -sparse at 32.
+    pub working_set_overhead: f64,
+    /// Peak bf16 MXU throughput per core, FLOP/s (v3: the paper's "100+
+    /// PFLOPs over 2048 cores" ≈ 5e13 per core).
+    pub peak_flops: f64,
+    /// Achieved fraction of peak on the sparse-ALS workload. Calibrated
+    /// (not peak-MXU): the ALS inner loop is gather-dominated small-matmul
+    /// work with host input-pipeline overhead. The value is fit to the
+    /// paper's two published wall-clock anchors — WebGraph-dense trains 16
+    /// epochs on 8 cores "in less than a day" (§7) and WebGraph-sparse
+    /// takes ~20 min/epoch on 256 cores (§7) — see DESIGN.md §Perf.
+    pub workload_efficiency: f64,
+    /// ICI bandwidth per link per direction, bytes/s (v3: ~70 GB/s).
+    pub link_bandwidth: f64,
+    /// Achieved fraction of peak link bandwidth for the gather/scatter
+    /// collectives (same calibration as `workload_efficiency`).
+    pub link_efficiency: f64,
+    /// Number of torus links per chip (2-D torus: 4).
+    pub links: usize,
+    /// Per-hop message latency, seconds.
+    pub hop_latency: f64,
+}
+
+impl Default for CoreSpec {
+    fn default() -> Self {
+        CoreSpec {
+            hbm_bytes: 16 << 30,
+            hbm_usable: 0.85,
+            working_set_overhead: 1.35,
+            peak_flops: 5.0e13,
+            workload_efficiency: 1.0e-3,
+            link_bandwidth: 70.0e9,
+            link_efficiency: 0.06,
+            links: 4,
+            hop_latency: 1.5e-6,
+        }
+    }
+}
+
+/// A pod slice: `num_cores` cores arranged on a (near-square) 2-D torus.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub num_cores: usize,
+    pub core: CoreSpec,
+    /// Torus dimensions in chips (rows, cols); 2 cores share a chip.
+    pub torus: (usize, usize),
+}
+
+impl Topology {
+    /// Build a near-square torus of `num_cores` cores.
+    pub fn new(num_cores: usize) -> Topology {
+        assert!(num_cores >= 1);
+        let chips = num_cores.div_ceil(2).max(1);
+        let mut rows = (chips as f64).sqrt().floor() as usize;
+        while rows > 1 && chips % rows != 0 {
+            rows -= 1;
+        }
+        let rows = rows.max(1);
+        Topology { num_cores, core: CoreSpec::default(), torus: (rows, chips / rows) }
+    }
+
+    pub fn with_core(mut self, core: CoreSpec) -> Topology {
+        self.core = core;
+        self
+    }
+
+    /// Usable HBM bytes across the slice.
+    pub fn total_usable_hbm(&self) -> u64 {
+        (self.num_cores as f64 * self.core.hbm_bytes as f64 * self.core.hbm_usable) as u64
+    }
+
+    /// Minimum number of cores whose HBM can hold `table_bytes` of sharded
+    /// embedding tables (Fig. 6's per-variant floor).
+    pub fn min_cores_for(table_bytes: u64, core: &CoreSpec) -> usize {
+        let per_core = (core.hbm_bytes as f64 * core.hbm_usable) as u64;
+        let need = (table_bytes as f64 * core.working_set_overhead) as u64;
+        (need.div_ceil(per_core.max(1)) as usize).max(1)
+    }
+
+    /// Network diameter in hops on the torus (worst-case point-to-point).
+    pub fn diameter_hops(&self) -> usize {
+        let (r, c) = self.torus;
+        r / 2 + c / 2
+    }
+
+    /// Time for a ring all-gather where every core contributes
+    /// `bytes_per_core` and ends with all `M * bytes_per_core` bytes.
+    ///
+    /// Bidirectional-ring schedule over the torus: (M-1) steps, each moving
+    /// `bytes_per_core` over `links` parallel directions.
+    /// Achieved collective bandwidth out of one core (all links).
+    pub fn effective_link_bw(&self) -> f64 {
+        self.core.link_bandwidth * self.core.links as f64 * self.core.link_efficiency
+    }
+
+    pub fn all_gather_time(&self, bytes_per_core: u64) -> f64 {
+        let m = self.num_cores as f64;
+        if self.num_cores <= 1 {
+            return 0.0;
+        }
+        (m - 1.0) * bytes_per_core as f64 / self.effective_link_bw()
+            + (m - 1.0) * self.core.hop_latency
+    }
+
+    /// Time for a ring all-reduce(sum) over a buffer of `bytes` replicated
+    /// on every core (reduce-scatter + all-gather: `2(M-1)/M · bytes`).
+    pub fn all_reduce_time(&self, bytes: u64) -> f64 {
+        let m = self.num_cores as f64;
+        if self.num_cores <= 1 {
+            return 0.0;
+        }
+        2.0 * (m - 1.0) / m * bytes as f64 / self.effective_link_bw()
+            + 2.0 * (m - 1.0) * self.core.hop_latency
+    }
+
+    /// Effective per-core compute rate (FLOP/s) on the ALS workload.
+    pub fn effective_flops(&self) -> f64 {
+        self.core.peak_flops * self.core.workload_efficiency
+    }
+}
+
+/// Analytic epoch-time decomposition of §4.2 for Figure 6.
+///
+/// One epoch (both passes) costs `2(|S|d² + n·d³)` FLOPs of statistics +
+/// solve work distributed over M cores, plus the sharded gather/scatter
+/// traffic: every core moves O(|S|·d/M · M) = O(|S|·d) bytes — constant
+/// per core — but each batch pays collective latency that grows with M.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochCost {
+    pub compute_s: f64,
+    pub comm_bandwidth_s: f64,
+    pub comm_latency_s: f64,
+}
+
+impl EpochCost {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.comm_bandwidth_s + self.comm_latency_s
+    }
+}
+
+/// Workload description for the cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    /// Non-zeros in the training matrix |S|.
+    pub nnz: u64,
+    /// Rows + cols (|U| + |I|).
+    pub rows_plus_cols: u64,
+    /// Embedding dimension d.
+    pub dim: usize,
+    /// Bytes per stored element (2 for bf16 tables).
+    pub elem_bytes: u64,
+    /// Dense-batch rows per step (B) — sets the number of collectives.
+    pub batch_rows: usize,
+    /// Dense row width (L).
+    pub batch_width: usize,
+}
+
+impl Workload {
+    /// Total embedding-table bytes (W and H).
+    pub fn table_bytes(&self) -> u64 {
+        self.rows_plus_cols * self.dim as u64 * self.elem_bytes
+    }
+
+    /// FLOPs for one full epoch (user + item pass): statistics `|S|·d²`
+    /// (the h⊗h accumulation counts d² MACs per non-zero, twice for the
+    /// two passes) plus solves `(|U|+|I|)·d³`.
+    pub fn epoch_flops(&self) -> f64 {
+        let d = self.dim as f64;
+        2.0 * self.nnz as f64 * d * d + self.rows_plus_cols as f64 * d * d * d
+    }
+}
+
+/// Predict one epoch's runtime on `topo` (Fig. 6 generator).
+pub fn epoch_time(topo: &Topology, w: &Workload) -> EpochCost {
+    let m = topo.num_cores as f64;
+    let compute_s = w.epoch_flops() / (topo.effective_flops() * m);
+
+    // Sharded gather: both passes together move every observed embedding to
+    // its consumer — 2·|S|·d·elem_bytes contributed across all cores. The
+    // ring schedule costs each core (M-1)·(per-core contribution)/bw =
+    // (M-1)/M · total/bw, which tends to a *constant* as M grows — exactly
+    // the paper's "for a single core this step has a constant runtime, and
+    // does not get worse with more machines" (§4.2).
+    let gather_bytes = 2.0 * w.nnz as f64 * w.dim as f64 * w.elem_bytes as f64;
+    // Sharded scatter: all-gather of the solved rows, (|U|+|I|)·d bytes.
+    let scatter_bytes = w.rows_plus_cols as f64 * w.dim as f64 * w.elem_bytes as f64;
+    let ring = (m - 1.0).max(0.0) / m;
+    let comm_bandwidth_s = ring * (gather_bytes + scatter_bytes) / topo.effective_link_bw();
+
+    // Collective launches: each dense batch triggers one all-gather and one
+    // all-reduce; latency per launch grows with ring length (M-1 hops).
+    // This is the term that eventually *bends the curve up* at very large M.
+    let slots = (w.batch_rows * w.batch_width) as f64;
+    let batches_per_core = (2.0 * w.nnz as f64 / slots / m).ceil();
+    let comm_latency_s = batches_per_core * 2.0 * (m - 1.0).max(0.0) * topo.core.hop_latency;
+
+    EpochCost { compute_s, comm_bandwidth_s, comm_latency_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn webgraph_dense_workload(d: usize) -> Workload {
+        Workload {
+            nnz: 22_158_000_000,
+            rows_plus_cols: 2 * 136_500_000,
+            dim: d,
+            elem_bytes: 2,
+            batch_rows: 65536,
+            batch_width: 16,
+        }
+    }
+
+    #[test]
+    fn torus_is_near_square_and_covers_chips() {
+        for m in [1usize, 2, 8, 32, 128, 2048] {
+            let t = Topology::new(m);
+            let (r, c) = t.torus;
+            assert!(r * c * 2 >= m, "torus {r}x{c} too small for {m} cores");
+            assert!(c <= 4 * r.max(1) || r == 1, "degenerate torus {r}x{c}");
+        }
+    }
+
+    #[test]
+    fn min_cores_matches_fig6_floors() {
+        let core = CoreSpec::default();
+        // WebGraph-dense: 2·136.5M rows × d=128 × 2B ≈ 70 GiB → ≥ 8 cores
+        // at the paper's observed floor (tables + working set).
+        let dense_tables = 2 * 136_500_000u64 * 128 * 2;
+        let m = Topology::min_cores_for(dense_tables, &core);
+        assert!((4..=8).contains(&m), "dense min cores = {m}");
+        // WebGraph-sparse: 2·365.4M × 128 × 2 ≈ 187 GiB → tens of cores.
+        let sparse_tables = 2 * 365_400_000u64 * 128 * 2;
+        let m = Topology::min_cores_for(sparse_tables, &core);
+        assert!((13..=32).contains(&m), "sparse min cores = {m}");
+    }
+
+    #[test]
+    fn all_reduce_scales_with_bytes_and_is_zero_single_core() {
+        let t = Topology::new(8);
+        assert_eq!(t.all_reduce_time(0) > 0.0, true); // latency term only
+        assert!(t.all_reduce_time(1 << 20) < t.all_reduce_time(1 << 24));
+        let single = Topology::new(1);
+        assert_eq!(single.all_reduce_time(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn epoch_time_decreases_then_flattens() {
+        // Fig. 6's qualitative shape: near-linear speedup at small M,
+        // diminishing returns at large M.
+        let w = webgraph_dense_workload(128);
+        let t8 = epoch_time(&Topology::new(8), &w).total();
+        let t16 = epoch_time(&Topology::new(16), &w).total();
+        let t32 = epoch_time(&Topology::new(32), &w).total();
+        let t1024 = epoch_time(&Topology::new(1024), &w).total();
+        let t2048 = epoch_time(&Topology::new(2048), &w).total();
+        assert!(t16 < t8 && t32 < t16, "small-M speedup missing: {t8} {t16} {t32}");
+        let early_speedup = t8 / t16;
+        let late_speedup = t1024 / t2048;
+        assert!(early_speedup > 1.5, "early speedup {early_speedup}");
+        assert!(late_speedup < early_speedup, "late speedup should flatten");
+    }
+
+    #[test]
+    fn epoch_flops_formula() {
+        let w = Workload {
+            nnz: 100,
+            rows_plus_cols: 10,
+            dim: 4,
+            elem_bytes: 2,
+            batch_rows: 8,
+            batch_width: 4,
+        };
+        // 2·100·16 + 10·64 = 3200 + 640
+        assert_eq!(w.epoch_flops(), 3840.0);
+    }
+
+    #[test]
+    fn dense_epoch_time_magnitude_plausible() {
+        // Paper: WebGraph-dense trains one epoch in well under an hour on
+        // 8-64 cores (a full 16-epoch run < 1 day on 8 cores ≈ 90 min/epoch).
+        let w = webgraph_dense_workload(128);
+        let t8 = epoch_time(&Topology::new(8), &w).total();
+        assert!(t8 > 60.0 && t8 < 7200.0, "t8={t8}s out of plausible range");
+    }
+}

@@ -1,0 +1,151 @@
+//! Software bfloat16 — the storage format of the sharded embedding tables.
+//!
+//! TPUs store and multiply-accumulate in bfloat16 natively (paper §4.1,
+//! §4.4); on our CPU substrate we emulate the format in software: 1 sign
+//! bit, 8 exponent bits (same range as f32), 7 mantissa bits. Conversion
+//! uses round-to-nearest-even, which is what the TPU vector units do.
+//!
+//! The paper's Figure 4 precision study — naive bf16 collapses, mixed
+//! bf16-storage/f32-solve is stable — is reproduced by routing all table
+//! storage through [`Bf16`] and optionally also rounding the sufficient-
+//! statistic accumulation (see `als::PrecisionPolicy`).
+
+/// A bfloat16 value stored as its raw 16-bit pattern.
+#[derive(Clone, Copy, PartialEq, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3f80);
+
+    /// Convert from f32 with round-to-nearest-even (RNE).
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Preserve NaN; set the quiet bit so truncation cannot produce Inf.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // RNE: add 0x7fff + lsb of the kept part.
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x7fff + lsb);
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Widen to f32 (exact — bf16 is a prefix of the f32 bit pattern).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Round-trip an f32 through bf16 precision ("storage rounding").
+    #[inline]
+    pub fn round(x: f32) -> f32 {
+        Self::from_f32(x).to_f32()
+    }
+}
+
+impl std::fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bf16({})", self.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> f32 {
+        x.to_f32()
+    }
+}
+
+/// Round every element of a slice to bf16 precision in place.
+pub fn round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = Bf16::round(*x);
+    }
+}
+
+/// Convert an f32 slice into packed bf16 words.
+pub fn pack(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| Bf16::from_f32(x).0).collect()
+}
+
+/// Unpack bf16 words into f32.
+pub fn unpack(xs: &[u16]) -> Vec<f32> {
+    xs.iter().map(|&b| Bf16(b).to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values_roundtrip() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1.5] {
+            assert_eq!(Bf16::round(x), x, "{x} should be exactly representable");
+        }
+    }
+
+    #[test]
+    fn widening_is_exact() {
+        for bits in (0..=u16::MAX).step_by(7) {
+            let b = Bf16(bits);
+            let f = b.to_f32();
+            if f.is_nan() {
+                assert!(Bf16::from_f32(f).to_f32().is_nan());
+            } else {
+                assert_eq!(Bf16::from_f32(f).0, bits, "bits={bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between 1.0 and 1.0078125 (the next
+        // bf16). RNE must choose the even mantissa, i.e. 1.0.
+        let halfway = 1.0f32 + 2.0f32.powi(-8);
+        assert_eq!(Bf16::round(halfway), 1.0);
+        // Slightly above halfway rounds up.
+        let above = 1.0f32 + 2.0f32.powi(-8) + 2.0f32.powi(-16);
+        assert_eq!(Bf16::round(above), 1.0078125);
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // bf16 has 8 mantissa bits incl. hidden one: rel err <= 2^-8.
+        let mut rng = crate::util::Pcg64::new(23);
+        for _ in 0..10_000 {
+            let x = (rng.next_f32() - 0.5) * 1e6;
+            if x == 0.0 {
+                continue;
+            }
+            let r = Bf16::round(x);
+            assert!(((r - x) / x).abs() <= 1.0 / 256.0, "x={x} r={r}");
+        }
+    }
+
+    #[test]
+    fn infinity_and_nan() {
+        assert_eq!(Bf16::round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(Bf16::round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(Bf16::round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn large_finite_does_not_overflow_spuriously() {
+        // Values below the bf16 max (~3.39e38) must stay finite.
+        let x = 1e38f32;
+        assert!(Bf16::round(x).is_finite());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let xs = vec![0.0f32, 1.0, -2.5, 100.0];
+        assert_eq!(unpack(&pack(&xs)), xs);
+    }
+}

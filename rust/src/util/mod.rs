@@ -1,0 +1,16 @@
+//! Small self-contained utilities: deterministic RNG, software bfloat16,
+//! timers, a minimal logger, descriptive statistics and a scoped thread pool.
+//!
+//! The build environment is offline, so everything that would normally come
+//! from `rand`, `half`, `log` or `rayon` is implemented here.
+
+pub mod bf16;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod threads;
+pub mod timer;
+
+pub use bf16::Bf16;
+pub use rng::Pcg64;
+pub use timer::Timer;

@@ -1,0 +1,134 @@
+//! Descriptive statistics helpers used by dataset reports, the dense-batch
+//! padding accounting and the benchmark harnesses.
+
+/// Summary of a sample: count, mean, std, min, max and selected quantiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// Compute a [`Summary`] of `xs`. Empty input yields an all-zero summary.
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary { count: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 };
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        count: xs.len(),
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        p50: quantile_sorted(&sorted, 0.50),
+        p90: quantile_sorted(&sorted, 0.90),
+        p99: quantile_sorted(&sorted, 0.99),
+    }
+}
+
+/// Linear-interpolated quantile of an ascending-sorted slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Geometric mean (positive inputs).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Format a byte count with binary units.
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a large count like the paper's tables ("365.4M", "29904M").
+pub fn human_count(c: u64) -> String {
+    if c >= 1_000_000_000 {
+        format!("{:.1}B", c as f64 / 1e9)
+    } else if c >= 1_000_000 {
+        format!("{:.1}M", c as f64 / 1e6)
+    } else if c >= 1_000 {
+        format!("{:.1}K", c as f64 / 1e3)
+    } else {
+        format!("{c}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let s = summarize(&xs);
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.std - 2.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let xs = [0.0, 10.0];
+        assert_eq!(quantile_sorted(&xs, 0.5), 5.0);
+        assert_eq!(quantile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn empty_summary_is_zeros() {
+        let s = summarize(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn geomean_matches_hand_value() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_count(365_400_000), "365.4M");
+        assert_eq!(human_count(999), "999");
+    }
+}

@@ -1,0 +1,110 @@
+//! Scoped data-parallel helpers (offline substitute for `rayon`).
+//!
+//! The simulated multi-core SPMD execution in the coordinator maps each
+//! "TPU core" to a closure; [`parallel_map_indexed`] fans those out over OS
+//! threads via `std::thread::scope`. On single-CPU hosts it degrades to a
+//! sequential loop with no thread overhead.
+
+/// Number of worker threads to use (``ALX_THREADS`` override, else the
+/// machine's available parallelism).
+pub fn worker_threads() -> usize {
+    if let Ok(v) = std::env::var("ALX_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f(i)` for `i in 0..n`, potentially in parallel, collecting results
+/// in index order. `f` must be `Sync` because multiple threads share it.
+pub fn parallel_map_indexed<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = worker_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let out_ptr = SyncSlice(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let fref = &f;
+            let nextref = &next;
+            let slice = &out_ptr;
+            scope.spawn(move || loop {
+                let i = nextref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = fref(i);
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic counter, so writes never alias.
+                unsafe { slice.0.add(i).write(Some(v)) };
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker wrote every index")).collect()
+}
+
+/// Wrapper making a raw pointer Sync for the disjoint-index write pattern.
+struct SyncSlice<T>(*mut Option<T>);
+unsafe impl<T: Send> Sync for SyncSlice<T> {}
+unsafe impl<T: Send> Send for SyncSlice<T> {}
+
+/// Chunked parallel for-each over a mutable slice: splits `xs` into
+/// `chunks` contiguous pieces and runs `f(chunk_index, chunk)` on each.
+pub fn parallel_chunks_mut<T, F>(xs: &mut [T], chunks: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunks = chunks.max(1);
+    let len = xs.len();
+    let chunk_size = len.div_ceil(chunks);
+    if chunk_size == 0 {
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (ci, chunk) in xs.chunks_mut(chunk_size).enumerate() {
+            let fref = &f;
+            scope.spawn(move || fref(ci, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map_indexed(100, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        assert!(parallel_map_indexed(0, |i| i).is_empty());
+        assert_eq!(parallel_map_indexed(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn chunks_cover_all_elements() {
+        let mut xs = vec![0u32; 37];
+        parallel_chunks_mut(&mut xs, 4, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(xs.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn worker_threads_positive() {
+        assert!(worker_threads() >= 1);
+    }
+}

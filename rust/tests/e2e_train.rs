@@ -1,0 +1,153 @@
+//! End-to-end integration: generate → split → distributed train → eval,
+//! exercising the full native pipeline the way `examples/webgraph_e2e.rs`
+//! does, plus failure-injection and precision-collapse integration checks.
+
+use alx::als::{PrecisionPolicy, TrainConfig, Trainer};
+use alx::config::AlxConfig;
+use alx::coordinator::Coordinator;
+use alx::eval::EvalConfig;
+use alx::sparse::split_strong_generalization;
+use alx::topo::Topology;
+use alx::webgraph::{generate, Variant, VariantSpec};
+
+fn base_cfg() -> AlxConfig {
+    AlxConfig {
+        variant: Variant::InDense,
+        scale: 0.0012, // ~600 nodes
+        cores: 4,
+        data_seed: 17,
+        train: TrainConfig {
+            dim: 32,
+            epochs: 6,
+            lambda: 0.05,
+            alpha: 0.005,
+            batch_rows: 64,
+            batch_width: 8,
+            compute_objective: true,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    }
+}
+
+#[test]
+fn full_pipeline_reaches_good_recall() {
+    let mut coord = Coordinator::prepare(base_cfg()).unwrap();
+    let report = coord.run().unwrap();
+    let r20 = report.recalls.iter().find(|r| r.k == 20).unwrap().recall;
+    let r50 = report.recalls.iter().find(|r| r.k == 50).unwrap().recall;
+    // In-dense is the paper's easiest variant (0.965/0.974); our synthetic
+    // twin at tiny scale should still clear a high bar.
+    assert!(r20 > 0.6, "recall@20 = {r20}");
+    assert!(r50 > 0.6, "recall@50 = {r50}");
+    // ALS objective decreases.
+    let objs: Vec<f64> = report.history.iter().map(|h| h.objective.unwrap()).collect();
+    assert!(objs.last().unwrap() < objs.first().unwrap());
+}
+
+#[test]
+fn sparse_variant_is_harder_than_dense() {
+    // Table 2's qualitative ordering: dense >> sparse recall.
+    let dense = {
+        let mut coord = Coordinator::prepare(base_cfg()).unwrap();
+        coord.run().unwrap().recalls[0].recall
+    };
+    let sparse = {
+        let mut cfg = base_cfg();
+        cfg.variant = Variant::Sparse; // full-crawl sparse: noisy
+        cfg.scale = 0.0000018; // similar node count
+        let mut coord = Coordinator::prepare(cfg).unwrap();
+        coord.run().unwrap().recalls[0].recall
+    };
+    assert!(
+        dense > sparse + 0.1,
+        "dense ({dense}) should clearly beat sparse ({sparse})"
+    );
+}
+
+#[test]
+fn naive_bf16_underperforms_mixed_at_low_lambda() {
+    // Figure 4 as an integration property: at low λ the naive-bf16 run
+    // must end up clearly worse than mixed (collapse or degradation),
+    // while mixed stays close to f32.
+    let spec = VariantSpec::preset(Variant::InDense).scaled(0.0012);
+    let graph = generate(&spec, 23);
+    let split = split_strong_generalization(&graph.adjacency, 0.9, 0.25, 5);
+    let mut finals = std::collections::HashMap::new();
+    for precision in [PrecisionPolicy::F32, PrecisionPolicy::Mixed, PrecisionPolicy::NaiveBf16] {
+        let cfg = TrainConfig {
+            dim: 32,
+            epochs: 6,
+            lambda: 1e-4, // low regularization — the collapse regime
+            alpha: 1e-3,  // (α·G also regularizes; keep it low too)
+            precision,
+            batch_rows: 64,
+            batch_width: 8,
+            compute_objective: false,
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::new(&split.train, cfg, Topology::new(2)).unwrap();
+        tr.fit().unwrap();
+        let recalls = alx::eval::evaluate(&tr, &split.test, &EvalConfig::default());
+        finals.insert(precision.name(), recalls[0].recall);
+    }
+    let f32r = finals["f32"];
+    let mixed = finals["mixed"];
+    let naive = finals["naive-bf16"];
+    assert!(
+        naive < mixed - 0.1,
+        "naive-bf16 ({naive}) should collapse below mixed ({mixed})"
+    );
+    assert!(
+        (mixed - f32r).abs() < 0.15,
+        "mixed ({mixed}) should track f32 ({f32r})"
+    );
+}
+
+#[test]
+fn empty_training_matrix_is_handled() {
+    let m = alx::sparse::Csr::from_coo(10, 10, &[]);
+    let cfg = TrainConfig {
+        dim: 4,
+        epochs: 1,
+        batch_rows: 8,
+        batch_width: 4,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&m, cfg, Topology::new(2)).unwrap();
+    // No batches → pure regularizer world; must not panic.
+    let stats = tr.run_epoch().unwrap();
+    assert!(stats.objective.unwrap() >= 0.0);
+}
+
+#[test]
+fn single_core_topology_works() {
+    let mut cfg = base_cfg();
+    cfg.cores = 1;
+    cfg.train.epochs = 2;
+    let mut coord = Coordinator::prepare(cfg).unwrap();
+    let report = coord.run().unwrap();
+    assert_eq!(report.history.len(), 2);
+    // Single core → no cross-core traffic needed, but the collectives are
+    // still issued (degenerate ring).
+    assert!(report.comm_bytes_per_epoch > 0);
+}
+
+#[test]
+fn many_cores_more_than_rows() {
+    // Degenerate sharding: more cores than rows must still work.
+    let m = alx::sparse::Csr::from_coo(
+        6,
+        6,
+        &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 4, 1.0), (4, 5, 1.0), (5, 0, 1.0)],
+    );
+    let cfg = TrainConfig {
+        dim: 4,
+        epochs: 2,
+        batch_rows: 8,
+        batch_width: 4,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&m, cfg, Topology::new(16)).unwrap();
+    tr.fit().unwrap();
+}

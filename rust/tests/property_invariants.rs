@@ -1,0 +1,200 @@
+//! Property-based tests over the coordinator's core invariants (routing,
+//! batching, sharding, collectives, splits). The environment is offline so
+//! `proptest` is unavailable; this file uses the same methodology with an
+//! in-repo harness: seeded random generators, many cases per property, and
+//! the failing seed printed on assertion failure.
+
+use alx::collectives::{sharded_gather, sharded_scatter, CommStats};
+use alx::densebatch::DenseBatcher;
+use alx::linalg::Mat;
+use alx::sharding::{ShardedTable, Storage};
+use alx::sparse::{split_strong_generalization, Csr};
+use alx::util::Pcg64;
+
+const CASES: u64 = 120;
+
+/// Random CSR with heavy-tailed row lengths.
+fn random_csr(rng: &mut Pcg64) -> Csr {
+    let rows = 1 + rng.range(0, 40);
+    let cols = 1 + rng.range(0, 60);
+    let mut t = Vec::new();
+    for r in 0..rows as u32 {
+        let len = match rng.range(0, 10) {
+            0..=5 => rng.range(0, 4),
+            6..=8 => rng.range(0, 12),
+            _ => rng.range(0, 40),
+        }
+        .min(cols);
+        let mut seen = std::collections::HashSet::new();
+        while seen.len() < len {
+            seen.insert(rng.range(0, cols) as u32);
+        }
+        for c in seen {
+            t.push((r, c, rng.next_f32() * 2.0 - 0.5));
+        }
+    }
+    Csr::from_coo(rows, cols, &t)
+}
+
+/// PROPERTY: dense batching preserves every (row, item, value) triple of
+/// non-empty rows exactly once, never splits a row across batches, and
+/// never exceeds the static shape.
+#[test]
+fn prop_densebatch_is_a_partition() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed);
+        let m = random_csr(&mut rng);
+        let b = 1 + rng.range(0, 16);
+        let w = 1 + rng.range(0, 12);
+        let batcher = DenseBatcher::new(b, w);
+        let rows: Vec<u32> = (0..m.rows as u32).collect();
+        let capacity = b * w;
+
+        let mut recovered: Vec<(u32, u32, f32)> = Vec::new();
+        let mut rows_seen = std::collections::HashSet::new();
+        for batch in batcher.batch_rows_of(&m, &rows) {
+            assert_eq!(batch.items.len(), capacity, "seed {seed}: static shape violated");
+            for &sr in &batch.segment_rows {
+                assert!(rows_seen.insert(sr), "seed {seed}: row {sr} split across batches");
+            }
+            for dr in 0..batch.rows {
+                let seg = batch.segments[dr] as usize;
+                for slot in dr * w..(dr + 1) * w {
+                    if batch.mask[slot] != 0.0 {
+                        recovered.push((
+                            batch.segment_rows[seg],
+                            batch.items[slot],
+                            batch.values[slot],
+                        ));
+                    }
+                }
+            }
+        }
+        let mut expected: Vec<(u32, u32, f32)> = Vec::new();
+        for r in 0..m.rows {
+            let take = m.row_len(r).min(capacity); // over-long rows truncate
+            for k in 0..take {
+                expected.push((r as u32, m.row_indices(r)[k], m.row_values(r)[k]));
+            }
+        }
+        recovered.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        expected.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(recovered, expected, "seed {seed}: batching lost/duplicated slots");
+    }
+}
+
+/// PROPERTY: the paper's collective-based sharded_gather reconstructs the
+/// direct gather for any table/shard-count/id multiset, in both storages.
+#[test]
+fn prop_sharded_gather_reconstructs() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(1000 + seed);
+        let rows = 1 + rng.range(0, 100);
+        let dim = 1 + rng.range(0, 24);
+        let shards = 1 + rng.range(0, 12);
+        let storage = if seed % 2 == 0 { Storage::F32 } else { Storage::Bf16 };
+        let table = ShardedTable::randn(rows, dim, shards, storage, &mut rng);
+        let n_ids = rng.range(0, 50);
+        let ids: Vec<u32> = (0..n_ids).map(|_| rng.range(0, rows) as u32).collect();
+        let stats = CommStats::new();
+        let got = sharded_gather(&table, &ids, &stats);
+        let want = table.gather(&ids);
+        assert!(
+            got.max_abs_diff(&want) == 0.0,
+            "seed {seed}: sharded gather diverged (shards={shards}, {storage:?})"
+        );
+    }
+}
+
+/// PROPERTY: scatter-then-gather round-trips through any sharding, up to
+/// storage rounding (exact in f32, bf16-rounded otherwise).
+#[test]
+fn prop_scatter_gather_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(2000 + seed);
+        let rows = 2 + rng.range(0, 80);
+        let dim = 1 + rng.range(0, 16);
+        let shards = 1 + rng.range(0, 9);
+        let mut table = ShardedTable::zeros(rows, dim, shards, Storage::F32);
+        // Distinct ids (scatter overwrite semantics are per-row).
+        let mut ids: Vec<u32> = (0..rows as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(1 + rng.range(0, rows));
+        let data = Mat::randn(ids.len(), dim, 1.0, &mut rng);
+        let stats = CommStats::new();
+        sharded_scatter(&mut table, &ids, &data, &stats);
+        let got = sharded_gather(&table, &ids, &stats);
+        assert!(got.max_abs_diff(&data) == 0.0, "seed {seed}: roundtrip failed");
+    }
+}
+
+/// PROPERTY: shard ranges are a contiguous partition and `shard_of` is
+/// consistent with them for any (rows, shards).
+#[test]
+fn prop_shard_routing_consistent() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(3000 + seed);
+        let rows = 1 + rng.range(0, 500);
+        let shards = 1 + rng.range(0, 40);
+        let table = ShardedTable::zeros(rows, 4, shards, Storage::F32);
+        let mut covered = 0;
+        for s in 0..table.num_shards() {
+            let r = table.range(s);
+            assert_eq!(r.start, covered, "seed {seed}: gap in shard ranges");
+            covered = r.end;
+        }
+        assert_eq!(covered, rows, "seed {seed}: shards do not cover all rows");
+        for row in 0..rows {
+            assert!(
+                table.range(table.shard_of(row)).contains(row),
+                "seed {seed}: routing broken for row {row}"
+            );
+        }
+    }
+}
+
+/// PROPERTY: strong-generalization split — train rows and test rows are
+/// disjoint, every test row's history+holdout equals its original links,
+/// and no training data leaks from test rows.
+#[test]
+fn prop_split_leak_free() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(4000 + seed);
+        let m = random_csr(&mut rng);
+        let split = split_strong_generalization(&m, 0.8, 0.25, seed);
+        for tr in &split.test {
+            assert_eq!(
+                split.train.row_len(tr.row as usize),
+                0,
+                "seed {seed}: test row {} leaked into train",
+                tr.row
+            );
+            let mut all: Vec<u32> =
+                tr.history.iter().map(|&(c, _)| c).chain(tr.holdout.iter().copied()).collect();
+            all.sort_unstable();
+            assert_eq!(
+                all,
+                m.row_indices(tr.row as usize),
+                "seed {seed}: history+holdout != original row"
+            );
+            assert!(!tr.holdout.is_empty(), "seed {seed}: empty holdout");
+            assert!(!tr.history.is_empty(), "seed {seed}: empty history");
+        }
+        // Conservation: train nnz + test links == original nnz (minus
+        // skipped single-link test rows).
+        let test_links: usize =
+            split.test.iter().map(|t| t.history.len() + t.holdout.len()).sum();
+        assert!(split.train.nnz() + test_links <= m.nnz(), "seed {seed}: links created");
+    }
+}
+
+/// PROPERTY: CSR transpose is an involution and preserves every entry.
+#[test]
+fn prop_transpose_involution() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(5000 + seed);
+        let m = random_csr(&mut rng);
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt, "seed {seed}: transpose not involutive");
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration: the XLA/PJRT engine (AOT L2 graph + L1 Pallas kernel) must
+//! agree with the native rust engine on identical inputs, per solver —
+//! the cross-layer correctness contract of the whole architecture.
+//!
+//! Requires `make artifacts`; tests skip (pass vacuously, with a stderr
+//! note) when the artifact directory is absent so `cargo test` stays
+//! usable on a fresh checkout.
+
+use alx::als::{NativeEngine, SolveEngine, TrainConfig, Trainer};
+use alx::densebatch::DenseBatcher;
+use alx::linalg::{Mat, SolveOptions, SolverKind};
+use alx::runtime::XlaEngine;
+use alx::sparse::Csr;
+use alx::topo::Topology;
+use alx::util::Pcg64;
+
+const ARTIFACTS: &str = "artifacts";
+const B: usize = 64;
+const L: usize = 8;
+
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new(ARTIFACTS).join("manifest.tsv").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` to enable XLA engine tests");
+    }
+    ok
+}
+
+/// Random sparse problem + gathered slot embeddings for one batch.
+fn random_batch(
+    d: usize,
+    rows: usize,
+    seed: u64,
+) -> (alx::densebatch::DenseBatch, Mat, Mat) {
+    let mut rng = Pcg64::new(seed);
+    let n_items = 50;
+    let mut triplets = Vec::new();
+    for r in 0..rows as u32 {
+        let len = 1 + rng.range(0, 12);
+        let mut cols = std::collections::HashSet::new();
+        while cols.len() < len {
+            cols.insert(rng.range(0, n_items) as u32);
+        }
+        for c in cols {
+            triplets.push((r, c, rng.next_f32() + 0.25));
+        }
+    }
+    let m = Csr::from_coo(rows, n_items, &triplets);
+    let items = Mat::randn(n_items, d, 0.6, &mut rng);
+    let gram = items.gramian();
+    let batcher = DenseBatcher::new(B, L);
+    let batch = batcher.batch_rows_of(&m, &(0..rows as u32).collect::<Vec<_>>())[0].clone();
+    let mut h = Mat::zeros(B * L, d);
+    for (slot, &it) in batch.items.iter().enumerate() {
+        h.row_mut(slot).copy_from_slice(items.row(it as usize));
+    }
+    (batch, h, gram)
+}
+
+#[test]
+fn xla_matches_native_all_solvers() {
+    if !artifacts_available() {
+        return;
+    }
+    for solver in SolverKind::ALL {
+        for d in [16usize, 32] {
+            let (batch, h, gram) = random_batch(d, 20, 42 + d as u64);
+            let mut native = NativeEngine::new(solver, SolveOptions::default());
+            let mut xla =
+                XlaEngine::new(ARTIFACTS, solver.name(), d, B, L).expect("open artifact");
+            let wn = native.solve_batch(&batch, &h, &gram, 0.1, 0.01).unwrap();
+            let wx = xla.solve_batch(&batch, &h, &gram, 0.1, 0.01).unwrap();
+            assert_eq!(wn.rows, wx.rows);
+            let diff = wn.max_abs_diff(&wx);
+            let scale = wn.data.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1e-6);
+            assert!(
+                diff / scale < 5e-3,
+                "{} d={d}: native vs xla rel diff {}",
+                solver.name(),
+                diff / scale
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_engine_rejects_wrong_shapes() {
+    if !artifacts_available() {
+        return;
+    }
+    let (batch, h, gram) = random_batch(16, 10, 7);
+    // Engine compiled for d=32 must reject d=16 inputs.
+    let mut xla = XlaEngine::new(ARTIFACTS, "cg", 32, B, L).unwrap();
+    assert!(xla.solve_batch(&batch, &h, &gram, 0.1, 0.01).is_err());
+}
+
+#[test]
+fn xla_engine_missing_artifact_errors() {
+    if !artifacts_available() {
+        return;
+    }
+    assert!(XlaEngine::new(ARTIFACTS, "cg", 17, B, L).is_err()); // d=17 never compiled
+}
+
+#[test]
+fn training_with_xla_engine_learns() {
+    if !artifacts_available() {
+        return;
+    }
+    // Small community matrix; train with the XLA engine end to end.
+    let mut rng = Pcg64::new(11);
+    let (users, items) = (48, 40);
+    let mut t = Vec::new();
+    for u in 0..users as u32 {
+        let comm = (u as usize) % 2;
+        for _ in 0..8 {
+            let item = if rng.next_f64() < 0.9 {
+                comm * (items / 2) + rng.range(0, items / 2)
+            } else {
+                rng.range(0, items)
+            };
+            t.push((u, item as u32, 1.0));
+        }
+    }
+    let m = Csr::from_coo(users, items, &t);
+    let cfg = TrainConfig {
+        dim: 16,
+        epochs: 3,
+        lambda: 0.05,
+        alpha: 0.01,
+        batch_rows: B,
+        batch_width: L,
+        ..TrainConfig::default()
+    };
+    let engine = Box::new(XlaEngine::new(ARTIFACTS, "cg", 16, B, L).unwrap());
+    let mut trainer = Trainer::with_engine(&m, cfg.clone(), Topology::new(2), engine).unwrap();
+    let hist = trainer.fit().unwrap();
+    let objs: Vec<f64> = hist.iter().map(|h| h.objective.unwrap()).collect();
+    assert!(
+        objs.last().unwrap() < objs.first().unwrap(),
+        "xla-engine training should reduce the objective: {objs:?}"
+    );
+
+    // And the native engine lands at a comparable objective.
+    let mut native = Trainer::new(&m, cfg, Topology::new(2)).unwrap();
+    let hist_n = native.fit().unwrap();
+    let on = hist_n.last().unwrap().objective.unwrap();
+    let ox = objs.last().unwrap();
+    assert!((on - ox).abs() / on < 0.05, "native {on} vs xla {ox}");
+}
