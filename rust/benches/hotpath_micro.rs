@@ -64,7 +64,7 @@ fn main() {
     });
 
     for solver in SolverKind::ALL {
-        let mut eng = NativeEngine::new(solver, SolveOptions::default());
+        let eng = NativeEngine::new(solver, SolveOptions::default());
         bench(&format!("solve_batch native/{}", solver.name()), 10, || {
             let _ = eng.solve_batch(&batch, &gathered, &gram, 0.01, 0.001).unwrap();
         });
@@ -73,7 +73,7 @@ fn main() {
     if std::path::Path::new("artifacts/manifest.tsv").exists() {
         for solver in SolverKind::ALL {
             match XlaEngine::new("artifacts", solver.name(), D, B, L) {
-                Ok(mut eng) => {
+                Ok(eng) => {
                     bench(&format!("solve_batch xla/{}", solver.name()), 10, || {
                         let _ = eng.solve_batch(&batch, &gathered, &gram, 0.01, 0.001).unwrap();
                     });

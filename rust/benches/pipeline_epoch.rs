@@ -1,0 +1,71 @@
+//! Pipelined epoch throughput — the tentpole measurement: one full ALS
+//! epoch (user pass + item pass) through the serial reference
+//! (`threads = 1`) vs the pipelined multi-threaded engine
+//! (`threads = 0` → auto), same problem, same numerics (the determinism
+//! tests prove the outputs are bitwise identical).
+//!
+//! ```bash
+//! cargo bench --bench pipeline_epoch
+//! ```
+
+use alx::prelude::*;
+use alx::util::Pcg64;
+
+fn build_matrix(users: usize, items: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut t = Vec::new();
+    for u in 0..users as u32 {
+        for _ in 0..per_row {
+            t.push((u, rng.next_zipf(items, 1.1) as u32, 1.0f32));
+        }
+    }
+    Csr::from_coo(users, items, &t)
+}
+
+fn cfg(threads: usize) -> TrainConfig {
+    TrainConfig {
+        dim: 64,
+        epochs: 1,
+        lambda: 1e-3,
+        alpha: 1e-4,
+        batch_rows: 64,
+        batch_width: 8,
+        compute_objective: false,
+        threads,
+        ..TrainConfig::default()
+    }
+}
+
+/// Best-of-`reps` epoch wall clock at the given thread budget.
+fn epoch_seconds(m: &Csr, threads: usize, reps: usize) -> f64 {
+    let mut tr = Trainer::new(m, cfg(threads), Topology::new(8)).expect("trainer");
+    tr.run_epoch().expect("warmup epoch"); // warm caches / page in tables
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        best = best.min(tr.run_epoch().expect("epoch").seconds);
+    }
+    best
+}
+
+fn main() {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let m = build_matrix(6000, 3000, 32, 7);
+    println!(
+        "pipeline_epoch: {} users x {} items, {} nnz, d=64, B=64 L=8, 8 shards, host threads={host}\n",
+        m.rows,
+        m.cols,
+        m.nnz()
+    );
+
+    // threads=1: serial compute — one shard at a time, one segment worker
+    // (feeder/scatter stage overlap stays, as on a real host pipeline).
+    let serial = epoch_seconds(&m, 1, 3);
+    println!("serial compute (threads=1) {serial:>8.3} s/epoch");
+    let pipelined = epoch_seconds(&m, 0, 3);
+    println!("pipelined   (threads=auto) {pipelined:>8.3} s/epoch");
+    let speedup = serial / pipelined;
+    println!("\nspeedup: {speedup:.2}x");
+    if host >= 4 && speedup < 2.0 {
+        println!("WARNING: expected >=2x over serial on a >=4-thread host");
+    }
+}

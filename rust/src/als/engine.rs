@@ -6,36 +6,82 @@
 //!   the L1 Pallas statistics kernel inside) through PJRT. Same inputs,
 //!   same outputs; tests assert the two agree.
 
-use super::stats::accumulate;
+use super::stats::{accumulate_with, TableSlots};
 use crate::densebatch::DenseBatch;
-use crate::linalg::{batched_solve, Mat, SolveOptions, SolverKind};
+use crate::linalg::{batched_solve_parallel, Mat, SolveOptions, SolverKind};
+use crate::sharding::ShardedTable;
 
 /// A strategy that turns one dense batch into per-segment solutions.
-pub trait SolveEngine {
+///
+/// Engines take `&self` and are `Send + Sync` so the pipelined trainer can
+/// drive independent shard passes from multiple threads through one engine.
+pub trait SolveEngine: Send + Sync {
     /// Engine name for logs/benches.
     fn name(&self) -> &'static str;
 
     /// Solve the batch: `h` holds one gathered embedding row per slot
     /// (`[B·L × d]`). Returns `[num_segments × d]` new embeddings.
     fn solve_batch(
-        &mut self,
+        &self,
         batch: &DenseBatch,
         h: &Mat,
         gramian: &Mat,
         lambda: f32,
         alpha: f32,
     ) -> anyhow::Result<Mat>;
+
+    /// Solve the batch reading slot embeddings straight from the fixed
+    /// table. The default materializes the gathered copy and defers to
+    /// [`SolveEngine::solve_batch`] (the XLA engine needs the dense `h`
+    /// input anyway); [`NativeEngine`] overrides it with a fused
+    /// gather-into-accumulation that never builds the `[B·L × d]` copy.
+    fn solve_batch_fused(
+        &self,
+        batch: &DenseBatch,
+        fixed: &ShardedTable,
+        gramian: &Mat,
+        lambda: f32,
+        alpha: f32,
+    ) -> anyhow::Result<Mat> {
+        let h = fixed.gather(&batch.items);
+        self.solve_batch(batch, &h, gramian, lambda, alpha)
+    }
 }
 
 /// Pure-rust engine.
 pub struct NativeEngine {
     pub solver: SolverKind,
     pub opts: SolveOptions,
+    /// Worker threads for the per-segment statistics + solve fan-out
+    /// (`0` = auto). Results are bitwise identical for every setting.
+    workers: usize,
 }
 
 impl NativeEngine {
+    /// Serial engine (one worker) — the correctness oracle.
     pub fn new(solver: SolverKind, opts: SolveOptions) -> Self {
-        NativeEngine { solver, opts }
+        NativeEngine { solver, opts, workers: 1 }
+    }
+
+    /// Engine with an explicit intra-batch worker budget (`0` = auto).
+    pub fn with_workers(solver: SolverKind, opts: SolveOptions, workers: usize) -> Self {
+        NativeEngine { solver, opts, workers }
+    }
+
+    fn workers(&self) -> usize {
+        crate::util::threads::resolve_workers(self.workers)
+    }
+
+    fn solve_stats(&self, stats: super::stats::BatchStats) -> Mat {
+        let solutions = batched_solve_parallel(
+            self.solver,
+            stats.d,
+            &stats.a,
+            &stats.b,
+            &self.opts,
+            self.workers(),
+        );
+        Mat::from_rows(stats.num_segments, stats.d, &solutions)
     }
 }
 
@@ -45,17 +91,44 @@ impl SolveEngine for NativeEngine {
     }
 
     fn solve_batch(
-        &mut self,
+        &self,
         batch: &DenseBatch,
         h: &Mat,
         gramian: &Mat,
         lambda: f32,
         alpha: f32,
     ) -> anyhow::Result<Mat> {
-        let d = h.cols;
-        let stats = accumulate(batch, h, gramian, lambda, alpha, self.opts.bf16_accumulate);
-        let solutions = batched_solve(self.solver, d, &stats.a, &stats.b, &self.opts);
-        Ok(Mat::from_rows(stats.num_segments, d, &solutions))
+        anyhow::ensure!(h.rows == batch.rows * batch.width, "one embedding per slot");
+        let stats = accumulate_with(
+            batch,
+            h,
+            gramian,
+            lambda,
+            alpha,
+            self.opts.bf16_accumulate,
+            self.workers(),
+        );
+        Ok(self.solve_stats(stats))
+    }
+
+    fn solve_batch_fused(
+        &self,
+        batch: &DenseBatch,
+        fixed: &ShardedTable,
+        gramian: &Mat,
+        lambda: f32,
+        alpha: f32,
+    ) -> anyhow::Result<Mat> {
+        let stats = accumulate_with(
+            batch,
+            &TableSlots(fixed),
+            gramian,
+            lambda,
+            alpha,
+            self.opts.bf16_accumulate,
+            self.workers(),
+        );
+        Ok(self.solve_stats(stats))
     }
 }
 
@@ -82,7 +155,7 @@ mod tests {
         }
         let lambda = 0.5f32;
         let alpha = 0.0f32;
-        let mut eng = NativeEngine::new(SolverKind::Cholesky, SolveOptions::default());
+        let eng = NativeEngine::new(SolverKind::Cholesky, SolveOptions::default());
         let w = eng.solve_batch(batch, &h, &gram, lambda, alpha).unwrap();
         // A = I + 0.5I = 1.5I, b = [1,1] → w = [2/3, 2/3].
         assert!((w[(0, 0)] - 2.0 / 3.0).abs() < 1e-5);
@@ -111,7 +184,7 @@ mod tests {
         }
         let mut results = Vec::new();
         for kind in SolverKind::ALL {
-            let mut eng = NativeEngine::new(
+            let eng = NativeEngine::new(
                 kind,
                 SolveOptions { cg_iters: 2 * d, ..Default::default() },
             );
@@ -123,6 +196,37 @@ mod tests {
                 "solver disagreement: {}",
                 r.max_abs_diff(&results[0])
             );
+        }
+    }
+
+    #[test]
+    fn fused_and_materialized_paths_agree_bitwise() {
+        use crate::sharding::{ShardedTable, Storage};
+        let mut rng = Pcg64::new(53);
+        let n_items = 32;
+        let d = 8;
+        let mut t = Vec::new();
+        for r in 0..6u32 {
+            for _ in 0..5 {
+                t.push((r, rng.range(0, n_items) as u32, 1.0));
+            }
+        }
+        let m = Csr::from_coo(6, n_items, &t);
+        let table = ShardedTable::randn(n_items, d, 3, Storage::Bf16, &mut rng);
+        let gram = table.to_dense().gramian();
+        let batcher = DenseBatcher::new(12, 4);
+        for workers in [1usize, 4] {
+            let eng = NativeEngine::with_workers(
+                SolverKind::Cholesky,
+                SolveOptions::default(),
+                workers,
+            );
+            for batch in batcher.batch_rows_of(&m, &(0..6).collect::<Vec<_>>()) {
+                let h = table.gather(&batch.items);
+                let via_mat = eng.solve_batch(&batch, &h, &gram, 0.1, 0.01).unwrap();
+                let fused = eng.solve_batch_fused(&batch, &table, &gram, 0.1, 0.01).unwrap();
+                assert_eq!(via_mat.data, fused.data, "workers={workers}");
+            }
         }
     }
 }

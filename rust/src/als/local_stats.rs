@@ -18,7 +18,6 @@ use crate::sparse::Csr;
 /// One pass over `matrix`'s rows (solving into `target`) using the
 /// local-statistics strategy. Returns nothing; `target` is updated and the
 /// collective traffic is accounted in `stats`.
-#[allow(clippy::too_many_arguments)]
 pub fn local_stats_pass(
     matrix: &Csr,
     target: &mut ShardedTable,
@@ -131,7 +130,7 @@ mod tests {
         let mut target_a = ShardedTable::zeros(m.rows, d, 3, Storage::F32);
         let batcher = DenseBatcher::new(16, 4);
         let stats = CommStats::new();
-        let mut engine = NativeEngine::new(SolverKind::Cholesky, opts);
+        let engine = NativeEngine::new(SolverKind::Cholesky, opts);
         for batch in batcher.batch_rows_of(&m, &(0..m.rows as u32).collect::<Vec<_>>()) {
             let gathered = crate::collectives::sharded_gather(&fixed, &batch.items, &stats);
             let sol = engine.solve_batch(&batch, &gathered, &gram, lambda, alpha).unwrap();

@@ -13,6 +13,7 @@
 
 use crate::densebatch::DenseBatch;
 use crate::linalg::mat::{symmetrize_upper, Mat};
+use crate::sharding::ShardedTable;
 use crate::util::bf16::Bf16;
 
 /// Packed batched statistics: `num_segments` systems of dimension `d`.
@@ -24,6 +25,47 @@ pub struct BatchStats {
     pub a: Vec<f32>,
     /// `num_segments` packed `d`-vectors.
     pub b: Vec<f32>,
+}
+
+/// A source of per-slot embedding rows for the accumulation kernel.
+///
+/// The production path ([`TableSlots`]) reads each row straight out of the
+/// sharded table — the fused gather that avoids materializing the
+/// `[B·L × d]` gathered copy per batch, cutting the dominant host memory
+/// traffic of the epoch. A pre-gathered [`Mat`] (one row per slot)
+/// implements it too, so the XLA engine contract and the reference tests
+/// exercise the exact same kernel.
+pub trait SlotRows: Sync {
+    fn dim(&self) -> usize;
+    /// The embedding for `slot` (which holds item `item`). Sources that
+    /// already hold a dense f32 row return a borrow of it (zero-copy);
+    /// sources that must widen (bf16 tables) fill `scratch` and return it.
+    fn slot_row<'a>(&'a self, slot: usize, item: u32, scratch: &'a mut [f32]) -> &'a [f32];
+}
+
+impl SlotRows for Mat {
+    fn dim(&self) -> usize {
+        self.cols
+    }
+
+    fn slot_row<'a>(&'a self, slot: usize, _item: u32, _scratch: &'a mut [f32]) -> &'a [f32] {
+        self.row(slot)
+    }
+}
+
+/// Fused-gather source: slot embeddings read directly from the fixed table
+/// (bf16 widened exactly as `sharded_gather` would).
+pub struct TableSlots<'a>(pub &'a ShardedTable);
+
+impl SlotRows for TableSlots<'_> {
+    fn dim(&self) -> usize {
+        self.0.dim
+    }
+
+    fn slot_row<'a>(&'a self, _slot: usize, item: u32, scratch: &'a mut [f32]) -> &'a [f32] {
+        self.0.read_row(item as usize, scratch);
+        scratch
+    }
 }
 
 /// Accumulate statistics for `batch`. `h` holds the gathered embeddings,
@@ -38,37 +80,137 @@ pub fn accumulate(
     alpha: f32,
     bf16_acc: bool,
 ) -> BatchStats {
-    let d = h.cols;
     assert_eq!(h.rows, batch.rows * batch.width, "one embedding per slot");
+    accumulate_with(batch, h, gramian, lambda, alpha, bf16_acc, 1)
+}
+
+/// Generalized accumulation: any [`SlotRows`] source, fanned out over
+/// `workers` threads. Segments are assigned to workers by a fixed
+/// contiguous partition and each segment is accumulated by exactly one
+/// worker in dense-row order, so the result is bitwise identical to the
+/// serial path for every worker count (not a racey reduce).
+pub fn accumulate_with<S: SlotRows>(
+    batch: &DenseBatch,
+    src: &S,
+    gramian: &Mat,
+    lambda: f32,
+    alpha: f32,
+    bf16_acc: bool,
+    workers: usize,
+) -> BatchStats {
+    let d = src.dim();
     assert_eq!((gramian.rows, gramian.cols), (d, d));
     let s = batch.num_segments();
     let mut a = vec![0.0f32; s * d * d];
     let mut b = vec![0.0f32; s * d];
 
-    // Initialize every A_s with αG + λI (Algorithm 2 line 12).
-    for seg in 0..s {
-        let block = &mut a[seg * d * d..(seg + 1) * d * d];
-        for i in 0..d {
-            for j in 0..d {
-                block[i * d + j] = alpha * gramian[(i, j)];
-            }
-            block[i * d + i] += lambda;
+    // Dense rows of each segment, in dense-row order, as one flat
+    // counting-sorted array (`seg_rows[offsets[seg]..offsets[seg+1]]`) —
+    // three allocations per batch however many segments there are.
+    // Padded dense rows carry segment 0 with an all-zero mask; they are
+    // walked and skipped slot-by-slot exactly as the original single-pass
+    // loop did.
+    let mut offsets = vec![0usize; s + 1];
+    for dr in 0..batch.rows {
+        let seg = batch.segments[dr] as usize;
+        if seg < s {
+            offsets[seg + 1] += 1;
+        }
+    }
+    for i in 0..s {
+        offsets[i + 1] += offsets[i];
+    }
+    let mut cursor = offsets.clone();
+    let mut seg_rows = vec![0u32; offsets[s]];
+    for dr in 0..batch.rows {
+        let seg = batch.segments[dr] as usize;
+        if seg < s {
+            seg_rows[cursor[seg]] = dr as u32;
+            cursor[seg] += 1;
         }
     }
 
-    // Slot contributions (lines 13-16). Upper triangle only, mirrored after.
-    for dr in 0..batch.rows {
-        let seg = batch.segments[dr] as usize;
-        if seg >= s {
-            continue; // padded dense row
+    let workers = workers.max(1).min(s.max(1));
+    if workers <= 1 {
+        let mut hbuf = vec![0.0f32; d];
+        for seg in 0..s {
+            accumulate_segment(
+                batch,
+                src,
+                gramian,
+                lambda,
+                alpha,
+                bf16_acc,
+                &seg_rows[offsets[seg]..offsets[seg + 1]],
+                &mut a[seg * d * d..(seg + 1) * d * d],
+                &mut b[seg * d..(seg + 1) * d],
+                &mut hbuf,
+            );
         }
-        let ablock = &mut a[seg * d * d..(seg + 1) * d * d];
-        let bblock = &mut b[seg * d..(seg + 1) * d];
+    } else {
+        let per = s.div_ceil(workers);
+        let offsets_ref = &offsets;
+        let seg_rows_ref = &seg_rows;
+        std::thread::scope(|scope| {
+            for ((w, a_chunk), b_chunk) in
+                a.chunks_mut(per * d * d).enumerate().zip(b.chunks_mut(per * d))
+            {
+                scope.spawn(move || {
+                    let mut hbuf = vec![0.0f32; d];
+                    for (k, (ablock, bblock)) in
+                        a_chunk.chunks_mut(d * d).zip(b_chunk.chunks_mut(d)).enumerate()
+                    {
+                        let seg = w * per + k;
+                        accumulate_segment(
+                            batch,
+                            src,
+                            gramian,
+                            lambda,
+                            alpha,
+                            bf16_acc,
+                            &seg_rows_ref[offsets_ref[seg]..offsets_ref[seg + 1]],
+                            ablock,
+                            bblock,
+                            &mut hbuf,
+                        );
+                    }
+                });
+            }
+        });
+    }
+    BatchStats { d, num_segments: s, a, b }
+}
+
+/// Build one segment's `(∇²_s, ∇_s)` pair (Algorithm 2 lines 12-16).
+fn accumulate_segment<S: SlotRows>(
+    batch: &DenseBatch,
+    src: &S,
+    gramian: &Mat,
+    lambda: f32,
+    alpha: f32,
+    bf16_acc: bool,
+    dense_rows: &[u32],
+    ablock: &mut [f32],
+    bblock: &mut [f32],
+    hbuf: &mut [f32],
+) {
+    let d = hbuf.len();
+    // Initialize A_s with αG + λI (line 12).
+    for i in 0..d {
+        for j in 0..d {
+            ablock[i * d + j] = alpha * gramian[(i, j)];
+        }
+        ablock[i * d + i] += lambda;
+    }
+
+    // Slot contributions (lines 13-16). Upper triangle only, mirrored after.
+    for &dr in dense_rows {
+        let dr = dr as usize;
         for slot in dr * batch.width..(dr + 1) * batch.width {
             if batch.mask[slot] == 0.0 {
                 continue;
             }
-            let hrow = h.row(slot);
+            let hrow = src.slot_row(slot, batch.items[slot], hbuf);
             let y = batch.values[slot];
             if bf16_acc {
                 // TPU MXU semantics: bf16 multiplies, f32 accumulators.
@@ -99,9 +241,7 @@ pub fn accumulate(
             }
         }
     }
-    for seg in 0..s {
-        symmetrize_upper(&mut a[seg * d * d..(seg + 1) * d * d], d);
-    }
+    symmetrize_upper(ablock, d);
     if bf16_acc {
         // Naive-bf16 mode stores the *statistics themselves* in bfloat16
         // (the paper's end-to-end-bf16 configuration). This is the Fig. 4
@@ -109,10 +249,9 @@ pub fn accumulate(
         // eventually α·G) is absorbed by the 8-bit mantissa and the normal
         // matrix loses its regularization — solves then blow up and the
         // training metric collapses unrecoverably.
-        crate::util::bf16::round_slice(&mut a);
-        crate::util::bf16::round_slice(&mut b);
+        crate::util::bf16::round_slice(ablock);
+        crate::util::bf16::round_slice(bblock);
     }
-    BatchStats { d, num_segments: s, a, b }
 }
 
 #[cfg(test)]
@@ -245,6 +384,50 @@ mod tests {
                     for j in 0..d {
                         assert_eq!(block[i * d + j], block[j * d + i]);
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_table_source_matches_gathered_mat_bitwise() {
+        let d = 7;
+        let (m, items, g) = setup(d);
+        // Put the item table behind sharded bf16 storage: the fused source
+        // must widen exactly like a materialized sharded_gather would.
+        let mut table =
+            crate::sharding::ShardedTable::zeros(items.rows, d, 3, crate::sharding::Storage::Bf16);
+        for r in 0..items.rows {
+            table.write_row(r, items.row(r));
+        }
+        let batcher = DenseBatcher::new(8, 4);
+        let rows: Vec<u32> = (0..m.rows as u32).collect();
+        for batch in batcher.batch_rows_of(&m, &rows) {
+            let gathered = table.gather(&batch.items);
+            let via_mat = accumulate(&batch, &gathered, &g, 0.1, 0.01, false);
+            let fused = accumulate_with(&batch, &TableSlots(&table), &g, 0.1, 0.01, false, 1);
+            assert_eq!(via_mat.a, fused.a);
+            assert_eq!(via_mat.b, fused.b);
+        }
+    }
+
+    #[test]
+    fn parallel_workers_are_bitwise_identical_to_serial() {
+        let d = 6;
+        let (m, items, g) = setup(d);
+        let batcher = DenseBatcher::new(16, 4);
+        let rows: Vec<u32> = (0..m.rows as u32).collect();
+        for batch in batcher.batch_rows_of(&m, &rows) {
+            let mut hslots = Mat::zeros(batch.rows * batch.width, d);
+            for (slot, &it) in batch.items.iter().enumerate() {
+                hslots.row_mut(slot).copy_from_slice(items.row(it as usize));
+            }
+            for bf16 in [false, true] {
+                let serial = accumulate_with(&batch, &hslots, &g, 0.05, 0.01, bf16, 1);
+                for workers in [2, 3, 8] {
+                    let par = accumulate_with(&batch, &hslots, &g, 0.05, 0.01, bf16, workers);
+                    assert_eq!(serial.a, par.a, "bf16={bf16} workers={workers}");
+                    assert_eq!(serial.b, par.b, "bf16={bf16} workers={workers}");
                 }
             }
         }

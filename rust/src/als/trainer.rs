@@ -1,15 +1,35 @@
-//! The distributed ALS trainer — Algorithm 2 end to end.
+//! The distributed ALS trainer — Algorithm 2 end to end, executed as a
+//! pipelined multi-threaded engine:
+//!
+//! * each shard's pass runs on its own worker (scatters are shard-local,
+//!   Fig. 2), all shards concurrently;
+//! * within a shard, a [`BatchFeeder`] thread prepares dense batches
+//!   (Fig. 1's host input pipeline), the worker runs the fused
+//!   gather+statistics+solve, and a double-buffered scatter thread writes
+//!   solutions back — so batch k+1 is batching while k solves and k-1
+//!   scatters;
+//! * the engine itself fans the per-segment statistics and solves out over
+//!   its worker budget.
+//!
+//! Every stage uses a fixed work assignment (no racey reductions), so the
+//! trained tables and epoch history are bitwise identical for every thread
+//! count — `ALX_THREADS=1` is the serial reference.
 
 use super::engine::{NativeEngine, SolveEngine};
 use super::PrecisionPolicy;
-use crate::collectives::{all_reduce_gramian, sharded_gather, sharded_scatter, CommStats};
+use crate::collectives::{
+    all_reduce_gramian, record_gather_traffic, record_scatter_traffic, CommStats,
+};
+use crate::coordinator::pipeline::{BatchFeeder, BoundedQueue, CloseGuard};
 use crate::densebatch::DenseBatcher;
 use crate::linalg::{Mat, SolveOptions, SolverKind};
-use crate::sharding::ShardedTable;
+use crate::sharding::{ShardViewMut, ShardedTable};
 use crate::sparse::Csr;
 use crate::topo::Topology;
+use crate::util::threads;
 use crate::util::timer::{Profiler, Timer};
 use crate::util::Pcg64;
+use std::sync::Arc;
 
 /// Training hyper-parameters and engine knobs.
 #[derive(Clone, Debug)]
@@ -37,6 +57,16 @@ pub struct TrainConfig {
     /// Compute the full training objective each epoch (costs an extra
     /// O(|S|·d) pass).
     pub compute_objective: bool,
+    /// Compute-worker budget for the pipelined epoch (`0` = auto: the
+    /// `ALX_THREADS` env override, else the machine's parallelism), split
+    /// between concurrent shard passes and per-segment fan-out. Results
+    /// are bitwise identical for every setting; `1` is the serial-compute
+    /// reference (one shard at a time, one segment worker — the feeder
+    /// and scatter stages still overlap, as a real host pipeline would).
+    pub threads: usize,
+    /// Dense batches each shard's feeder may stage ahead of the solve
+    /// stage (host memory / backpressure; Fig. 1's input queue).
+    pub feed_depth: usize,
 }
 
 impl Default for TrainConfig {
@@ -53,6 +83,8 @@ impl Default for TrainConfig {
             cg_iters: 0,
             seed: 42,
             compute_objective: true,
+            threads: 0,
+            feed_depth: 4,
         }
     }
 }
@@ -84,10 +116,10 @@ pub struct EpochStats {
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub topo: Topology,
-    /// Training matrix (users × items).
-    train: Csr,
+    /// Training matrix (users × items); shared with the feeder threads.
+    train: Arc<Csr>,
     /// Its transpose (items × users) for the item pass.
-    train_t: Csr,
+    train_t: Arc<Csr>,
     /// User embedding table W, sharded over the slice.
     pub w: ShardedTable,
     /// Item embedding table H, sharded over the slice.
@@ -95,15 +127,25 @@ pub struct Trainer {
     batcher: DenseBatcher,
     engine: Box<dyn SolveEngine>,
     pub comm: CommStats,
-    pub profiler: Profiler,
+    pub profiler: Arc<Profiler>,
     epoch: usize,
 }
 
 impl Trainer {
     /// Build a trainer with the native engine.
     pub fn new(train: &Csr, cfg: TrainConfig, topo: Topology) -> anyhow::Result<Trainer> {
-        let engine = Box::new(NativeEngine::new(cfg.solver, cfg.solve_options()));
+        let engine = Self::default_engine(&cfg, &topo);
         Self::with_engine(train, cfg, topo, engine)
+    }
+
+    /// The native engine with the thread budget split between concurrent
+    /// shard passes and the engine's per-segment fan-out within each batch
+    /// — the construction both [`Trainer::new`] and the coordinator use.
+    pub fn default_engine(cfg: &TrainConfig, topo: &Topology) -> Box<dyn SolveEngine> {
+        let total = threads::resolve_workers(cfg.threads);
+        let shard_workers = topo.num_cores.clamp(1, total.max(1));
+        let inner = (total / shard_workers).max(1);
+        Box::new(NativeEngine::with_workers(cfg.solver, cfg.solve_options(), inner))
     }
 
     /// Build a trainer with an explicit engine (e.g. `runtime::XlaEngine`).
@@ -137,15 +179,15 @@ impl Trainer {
 
         Ok(Trainer {
             batcher: DenseBatcher::new(cfg.batch_rows, cfg.batch_width),
-            train: train.clone(),
-            train_t: train.transpose(),
+            train: Arc::new(train.clone()),
+            train_t: Arc::new(train.transpose()),
             w,
             h,
             topo,
             cfg,
             engine,
             comm: CommStats::new(),
-            profiler: Profiler::new(),
+            profiler: Arc::new(Profiler::new()),
             epoch: 0,
         })
     }
@@ -153,7 +195,9 @@ impl Trainer {
     /// Global gramian of `table` via local gramians + all-reduce
     /// (Algorithm 2 lines 5-6).
     fn global_gramian(&self, table: &ShardedTable) -> Mat {
-        let locals: Vec<Mat> = crate::util::threads::parallel_map_indexed(
+        let workers = threads::resolve_workers(self.cfg.threads);
+        let locals: Vec<Mat> = threads::parallel_map_indexed_with(
+            workers,
             table.num_shards(),
             |s| table.local_gramian(s),
         );
@@ -163,39 +207,135 @@ impl Trainer {
     /// One pass over one side (Algorithm 2 lines 7-20): solve every row of
     /// `target` given fixed `fixed`, driven by `matrix` whose rows index
     /// `target` and whose columns index `fixed`.
+    ///
+    /// SPMD: core μ processes the rows of its own shard of `target`, so
+    /// scatters stay shard-local exactly as in Fig. 2's layout — which is
+    /// what lets every shard pass run concurrently on its own worker.
     fn pass(
-        engine: &mut dyn SolveEngine,
+        engine: &dyn SolveEngine,
         batcher: &DenseBatcher,
-        profiler: &Profiler,
+        profiler: &Arc<Profiler>,
         comm: &CommStats,
         cfg: &TrainConfig,
-        matrix: &Csr,
+        matrix: &Arc<Csr>,
         target: &mut ShardedTable,
         fixed: &ShardedTable,
         gramian: &Mat,
     ) -> anyhow::Result<()> {
-        // SPMD: core μ processes the rows of its own shard of `target`, so
-        // scatters stay shard-local exactly as in Fig. 2's layout.
-        for core in 0..target.num_shards() {
-            let range = target.range(core);
-            if range.is_empty() {
-                continue;
-            }
-            let rows: Vec<u32> = (range.start as u32..range.end as u32).collect();
-            let batches = profiler.time("densebatch", || batcher.batch_rows_of(matrix, &rows));
-            for batch in batches {
-                let gathered = profiler.time("sharded_gather", || {
-                    sharded_gather(fixed, &batch.items, comm)
-                });
-                let solutions = profiler.time("solve", || {
-                    engine.solve_batch(&batch, &gathered, gramian, cfg.lambda, cfg.alpha)
-                })?;
-                profiler.time("sharded_scatter", || {
-                    sharded_scatter(target, &batch.segment_rows, &solutions, comm)
-                });
-            }
+        let num_shards = target.num_shards();
+        let dim = target.dim;
+        let elem_bytes = target.storage().elem_bytes();
+        let views: Vec<ShardViewMut<'_>> = target
+            .shard_views_mut()
+            .into_iter()
+            .filter(|v| !v.range().is_empty())
+            .collect();
+        // The thread budget caps concurrent shard passes (a 256-core
+        // simulated slice on a 8-thread host runs 8 shards at a time, not
+        // 256); workers claim shards from a shared pool. Claim order is
+        // timing-dependent but irrelevant: shards are disjoint.
+        let shard_workers =
+            threads::resolve_workers(cfg.threads).min(views.len()).max(1);
+        let pool = std::sync::Mutex::new(views);
+        let results: Vec<anyhow::Result<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..shard_workers)
+                .map(|_| {
+                    let pool = &pool;
+                    scope.spawn(move || -> anyhow::Result<()> {
+                        loop {
+                            let view = pool.lock().unwrap().pop();
+                            let Some(view) = view else { return Ok(()) };
+                            Self::shard_pass(
+                                engine, batcher, profiler, comm, cfg, matrix, view, fixed,
+                                gramian, dim, elem_bytes, num_shards,
+                            )?;
+                        }
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        for r in results {
+            r?;
         }
         Ok(())
+    }
+
+    /// One shard's pass, run as a three-stage pipeline over consecutive
+    /// batches: the feeder thread batches (host work, Fig. 1), this worker
+    /// runs the fused gather+statistics+solve, and a double-buffered
+    /// scatter thread writes solutions back — batch k+1 batches while k
+    /// solves and k-1 scatters. Batch order is fixed by the feeder and
+    /// scattered rows are disjoint, so the result does not depend on
+    /// stage timing.
+    fn shard_pass(
+        engine: &dyn SolveEngine,
+        batcher: &DenseBatcher,
+        profiler: &Arc<Profiler>,
+        comm: &CommStats,
+        cfg: &TrainConfig,
+        matrix: &Arc<Csr>,
+        view: ShardViewMut<'_>,
+        fixed: &ShardedTable,
+        gramian: &Mat,
+        dim: usize,
+        elem_bytes: u64,
+        num_shards: usize,
+    ) -> anyhow::Result<()> {
+        let range = view.range();
+        let rows: Vec<u32> = (range.start as u32..range.end as u32).collect();
+        let feeder = BatchFeeder::start_profiled(
+            Arc::clone(matrix),
+            rows,
+            batcher.clone(),
+            cfg.feed_depth,
+            Some(Arc::clone(profiler)),
+        );
+        let scatter_q: BoundedQueue<(Vec<u32>, Mat)> = BoundedQueue::new(2);
+        std::thread::scope(|scope| {
+            let qref = &scatter_q;
+            let scatter = scope.spawn(move || {
+                // Unblocks the solve stage's `push` if a scatter panics.
+                let _guard = CloseGuard(qref);
+                let mut view = view;
+                while let Some((ids, sols)) = qref.pop() {
+                    profiler.time("sharded_scatter", || view.scatter(&ids, &sols));
+                }
+            });
+            // Unblocks the scatter stage's `pop` if the solve stage panics
+            // (scope would otherwise join a forever-blocked thread).
+            let _close_guard = CloseGuard(&scatter_q);
+            let mut out = Ok(());
+            while let Some(batch) = feeder.next() {
+                // Fused path: no gathered [B·L × d] copy is materialized,
+                // but the collective a real pod would run is accounted.
+                record_gather_traffic(fixed, batch.items.len(), comm);
+                match profiler.time("solve", || {
+                    engine.solve_batch_fused(&batch, fixed, gramian, cfg.lambda, cfg.alpha)
+                }) {
+                    Ok(sols) => {
+                        record_scatter_traffic(
+                            batch.segment_rows.len(),
+                            dim,
+                            elem_bytes,
+                            num_shards,
+                            comm,
+                        );
+                        scatter_q.push((batch.segment_rows, sols));
+                    }
+                    Err(e) => {
+                        out = Err(e);
+                        break;
+                    }
+                }
+            }
+            scatter_q.close();
+            scatter.join().expect("scatter stage panicked");
+            out
+        })
     }
 
     /// Run one full epoch (user pass + item pass). Returns its stats.
@@ -206,7 +346,7 @@ impl Trainer {
         // --- user pass: fix H, solve W ---------------------------------
         let g_items = self.profiler.time("gramian", || self.global_gramian(&self.h));
         Self::pass(
-            self.engine.as_mut(),
+            self.engine.as_ref(),
             &self.batcher,
             &self.profiler,
             &self.comm,
@@ -220,7 +360,7 @@ impl Trainer {
         // --- item pass: fix W, solve H ----------------------------------
         let g_users = self.profiler.time("gramian", || self.global_gramian(&self.w));
         Self::pass(
-            self.engine.as_mut(),
+            self.engine.as_ref(),
             &self.batcher,
             &self.profiler,
             &self.comm,
@@ -267,15 +407,28 @@ impl Trainer {
     pub fn objective(&self) -> f64 {
         let dense_w = self.w.to_dense();
         let dense_h = self.h.to_dense();
-        let mut obs = 0.0f64;
-        for r in 0..self.train.rows {
-            let wrow = dense_w.row(r);
-            for (&c, &y) in self.train.row_indices(r).iter().zip(self.train.row_values(r)) {
-                let pred = crate::linalg::mat::dot(wrow, dense_h.row(c as usize));
-                let e = (y - pred) as f64;
-                obs += e * e;
+        let train = self.train.as_ref();
+        // Fixed-size row chunks (NOT per-worker chunks): the f64 grouping
+        // is a function of the data alone, so the sum is bitwise identical
+        // for every worker count, while the partials vector stays small.
+        const OBJ_CHUNK_ROWS: usize = 1024;
+        let n_chunks = train.rows.div_ceil(OBJ_CHUNK_ROWS);
+        let workers = threads::resolve_workers(self.cfg.threads);
+        let partials = threads::parallel_map_indexed_with(workers, n_chunks, |c| {
+            let lo = c * OBJ_CHUNK_ROWS;
+            let hi = (lo + OBJ_CHUNK_ROWS).min(train.rows);
+            let mut obs = 0.0f64;
+            for r in lo..hi {
+                let wrow = dense_w.row(r);
+                for (&col, &y) in train.row_indices(r).iter().zip(train.row_values(r)) {
+                    let pred = crate::linalg::mat::dot(wrow, dense_h.row(col as usize));
+                    let e = (y - pred) as f64;
+                    obs += e * e;
+                }
             }
-        }
+            obs
+        });
+        let obs: f64 = partials.into_iter().sum();
         let gw = dense_w.gramian();
         let gh = dense_h.gramian();
         let all_pairs: f64 = gw
@@ -342,7 +495,7 @@ impl Trainer {
     }
 
     pub fn train_matrix(&self) -> &Csr {
-        &self.train
+        self.train.as_ref()
     }
 }
 

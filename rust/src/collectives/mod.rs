@@ -96,6 +96,29 @@ pub fn sharded_gather(table: &ShardedTable, ids: &[u32], stats: &CommStats) -> M
     acc
 }
 
+/// Account the collective traffic of a `sharded_gather` without
+/// materializing the gathered matrix — used by the fused
+/// gather-into-accumulation path, which reads rows straight out of the
+/// table. Byte-for-byte the same accounting as [`sharded_gather`].
+pub fn record_gather_traffic(table: &ShardedTable, num_ids: usize, stats: &CommStats) {
+    let m = table.num_shards() as u64;
+    stats.record_all_gather((num_ids * 4) as u64 * m);
+    stats.record_all_reduce((num_ids * table.dim) as u64 * table.storage().elem_bytes());
+}
+
+/// Account the collective traffic of a `sharded_scatter` performed through
+/// a shard-local view (`ShardViewMut::scatter`). Byte-for-byte the same
+/// accounting as [`sharded_scatter`].
+pub fn record_scatter_traffic(
+    num_ids: usize,
+    dim: usize,
+    elem_bytes: u64,
+    num_shards: usize,
+    stats: &CommStats,
+) {
+    stats.record_all_gather((num_ids * dim) as u64 * elem_bytes * num_shards as u64);
+}
+
 /// Paper-faithful `sharded_scatter`: write solved rows back into the
 /// sharded table. All cores all-gather the solved embeddings, then each
 /// core keeps only the rows inside its shard bounds.
@@ -202,6 +225,24 @@ mod tests {
         let g = all_reduce_gramian(&[a, b], &stats);
         assert_eq!(g.data, vec![3.0, 1.0, 1.0, 3.0]);
         assert_eq!(stats.all_reduce_ops.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn fused_traffic_accounting_matches_materialized() {
+        let mut rng = Pcg64::new(29);
+        let mut t = ShardedTable::randn(64, 8, 4, Storage::Bf16, &mut rng);
+        let ids: Vec<u32> = (0..12).collect();
+        let rows = Mat::randn(12, 8, 1.0, &mut rng);
+
+        let a = CommStats::new();
+        sharded_gather(&t, &ids, &a);
+        sharded_scatter(&mut t, &ids, &rows, &a);
+
+        let b = CommStats::new();
+        record_gather_traffic(&t, ids.len(), &b);
+        record_scatter_traffic(ids.len(), t.dim, t.storage().elem_bytes(), t.num_shards(), &b);
+
+        assert_eq!(a.snapshot(), b.snapshot());
     }
 
     #[test]

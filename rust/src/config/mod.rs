@@ -185,6 +185,13 @@ impl AlxConfig {
         if let Some(v) = kv.get_bool("train.compute_objective")? {
             cfg.train.compute_objective = v;
         }
+        if let Some(v) = kv.get_usize("train.threads")? {
+            cfg.train.threads = v; // 0 = auto (ALX_THREADS env, else all cores)
+        }
+        if let Some(v) = kv.get_usize("train.feed_depth")? {
+            anyhow::ensure!(v >= 1, "train.feed_depth must be >= 1");
+            cfg.train.feed_depth = v;
+        }
         if let Some(v) = kv.get("engine.kind") {
             anyhow::ensure!(v == "native" || v == "xla", "engine.kind must be native|xla");
             cfg.engine = v.to_string();
@@ -238,6 +245,19 @@ cores = 16
         assert_eq!(cfg.train.dim, 32);
         assert_eq!(cfg.train.solver, SolverKind::Cg);
         assert_eq!(cfg.train.precision, PrecisionPolicy::Mixed);
+    }
+
+    #[test]
+    fn pipeline_knobs_parse() {
+        let mut kv = KvConfig::default();
+        kv.set("train.threads", "3");
+        kv.set("train.feed_depth", "2");
+        let cfg = AlxConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.train.threads, 3);
+        assert_eq!(cfg.train.feed_depth, 2);
+        let mut bad = KvConfig::default();
+        bad.set("train.feed_depth", "0");
+        assert!(AlxConfig::from_kv(&bad).is_err());
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod grid;
 pub mod pipeline;
 
 pub use grid::{grid_search, GridPoint, GridSpec};
-pub use pipeline::BatchFeeder;
+pub use pipeline::{BatchFeeder, BoundedQueue, CloseGuard, FEED_CHUNK_ROWS};
 
 use crate::als::{SolveEngine, Trainer};
 use crate::config::AlxConfig;
@@ -70,10 +70,9 @@ impl Coordinator {
                     cfg.train.batch_rows,
                     cfg.train.batch_width,
                 )?),
-                _ => Box::new(crate::als::NativeEngine::new(
-                    cfg.train.solver,
-                    cfg.train.solve_options(),
-                )),
+                // Same engine (and thread-budget split) Trainer::new uses,
+                // so `train.threads` reaches the per-segment fan-out here.
+                _ => Trainer::default_engine(&cfg.train, &topo),
             },
         };
 

@@ -11,36 +11,52 @@
 
 use crate::densebatch::{DenseBatch, DenseBatcher};
 use crate::sparse::Csr;
+use crate::util::timer::Profiler;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
-/// Bounded blocking queue.
-struct Bounded<T> {
+/// Rows batched per producer step: staging memory stays bounded even for
+/// huge shards, and the batch stream is a pure function of the row list
+/// (chunking included), so every consumer sees the same batches in the
+/// same order regardless of thread timing.
+pub const FEED_CHUNK_ROWS: usize = 512;
+
+/// Bounded blocking MPMC queue — the backpressure primitive behind both
+/// the [`BatchFeeder`] and the trainer's double-buffered scatter stage.
+pub struct BoundedQueue<T> {
     q: Mutex<(VecDeque<T>, bool)>, // (items, producer_done)
     cap: usize,
     cv: Condvar,
 }
 
-impl<T> Bounded<T> {
-    fn new(cap: usize) -> Self {
-        Bounded { q: Mutex::new((VecDeque::new(), false)), cap, cv: Condvar::new() }
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue { q: Mutex::new((VecDeque::new(), false)), cap: cap.max(1), cv: Condvar::new() }
     }
 
-    fn push(&self, item: T) {
+    /// Block until there is room, then enqueue. Once the queue is closed
+    /// the item is dropped instead — a producer must never block forever
+    /// on a consumer that is gone (see [`CloseGuard`]).
+    pub fn push(&self, item: T) {
         let mut g = self.q.lock().unwrap();
-        while g.0.len() >= self.cap {
+        while g.0.len() >= self.cap && !g.1 {
             g = self.cv.wait(g).unwrap();
+        }
+        if g.1 {
+            return;
         }
         g.0.push_back(item);
         self.cv.notify_all();
     }
 
-    fn close(&self) {
+    /// Mark the stream finished; pending items still drain.
+    pub fn close(&self) {
         self.q.lock().unwrap().1 = true;
         self.cv.notify_all();
     }
 
-    fn pop(&self) -> Option<T> {
+    /// Blocking dequeue; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
         let mut g = self.q.lock().unwrap();
         loop {
             if let Some(item) = g.0.pop_front() {
@@ -55,9 +71,21 @@ impl<T> Bounded<T> {
     }
 }
 
+/// Closes a [`BoundedQueue`] when dropped. Pipeline stages hold one so a
+/// panic in either stage closes the queue during unwinding, unblocking
+/// the peer stage instead of deadlocking the epoch: the consumer's `pop`
+/// drains and returns `None`, and a producer's `push` stops blocking.
+pub struct CloseGuard<'a, T>(pub &'a BoundedQueue<T>);
+
+impl<T> Drop for CloseGuard<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
 /// Streams dense batches for a set of rows, prepared on a host thread.
 pub struct BatchFeeder {
-    queue: Arc<Bounded<DenseBatch>>,
+    queue: Arc<BoundedQueue<DenseBatch>>,
     producer: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -65,18 +93,33 @@ impl BatchFeeder {
     /// Start feeding batches of `rows` of `matrix`. `depth` bounds the
     /// number of staged batches (host memory / backpressure).
     pub fn start(matrix: Arc<Csr>, rows: Vec<u32>, batcher: DenseBatcher, depth: usize) -> Self {
-        let queue = Arc::new(Bounded::new(depth.max(1)));
+        Self::start_profiled(matrix, rows, batcher, depth, None)
+    }
+
+    /// [`BatchFeeder::start`] with host batching time accounted under the
+    /// profiler's `densebatch` bucket (the trainer's epoch breakdown).
+    pub fn start_profiled(
+        matrix: Arc<Csr>,
+        rows: Vec<u32>,
+        batcher: DenseBatcher,
+        depth: usize,
+        profiler: Option<Arc<Profiler>>,
+    ) -> Self {
+        let queue = Arc::new(BoundedQueue::new(depth));
         let q2 = Arc::clone(&queue);
         let producer = std::thread::spawn(move || {
-            // Produce incrementally (chunk of rows at a time) so staging
-            // memory stays bounded even for huge shards.
-            let chunk = 512usize;
-            for ids in rows.chunks(chunk) {
-                for batch in batcher.batch_rows_of(&matrix, ids) {
+            // Closes the queue however this thread exits (panic included),
+            // so the consumer can never block on a dead producer.
+            let _guard = CloseGuard(&q2);
+            for ids in rows.chunks(FEED_CHUNK_ROWS) {
+                let batches = match &profiler {
+                    Some(p) => p.time("densebatch", || batcher.batch_rows_of(&matrix, ids)),
+                    None => batcher.batch_rows_of(&matrix, ids),
+                };
+                for batch in batches {
                     q2.push(batch);
                 }
             }
-            q2.close();
         });
         BatchFeeder { queue, producer: Some(producer) }
     }
@@ -156,6 +199,50 @@ mod tests {
         let expected: Vec<u32> =
             rows.iter().copied().filter(|&r| m.row_len(r as usize) > 0).collect();
         assert_eq!(seen_rows, expected);
+    }
+
+    #[test]
+    fn feeder_chunking_is_deterministic_past_chunk_boundary() {
+        // More rows than FEED_CHUNK_ROWS: the stream must equal direct
+        // batching applied chunk by chunk, independent of consumer timing.
+        let rows_n = FEED_CHUNK_ROWS + 173;
+        let m = Arc::new(matrix(rows_n));
+        let batcher = DenseBatcher::new(8, 4);
+        let rows: Vec<u32> = (0..rows_n as u32).collect();
+        let mut expected = Vec::new();
+        for ids in rows.chunks(FEED_CHUNK_ROWS) {
+            expected.extend(batcher.batch_rows_of(&m, ids));
+        }
+        let feeder = BatchFeeder::start(Arc::clone(&m), rows, batcher, 3);
+        let mut streamed = Vec::new();
+        while let Some(b) = feeder.next() {
+            streamed.push(b);
+        }
+        assert_eq!(streamed, expected);
+    }
+
+    #[test]
+    fn bounded_queue_fifo_and_close_semantics() {
+        let q = BoundedQueue::new(2);
+        q.push(1);
+        q.push(2);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None); // stays closed
+    }
+
+    #[test]
+    fn push_after_close_drops_instead_of_blocking() {
+        // A full, closed queue must not block the producer (the panic
+        // recovery path: CloseGuard closed it because the consumer died).
+        let q = BoundedQueue::new(1);
+        q.push(1);
+        q.close();
+        q.push(2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -12,5 +12,6 @@ pub mod solvers;
 
 pub use mat::{Mat, Vecf};
 pub use solvers::{
-    batched_solve, solve_cg, solve_cholesky, solve_lu, solve_qr, SolveOptions, SolverKind,
+    batched_solve, batched_solve_parallel, solve_cg, solve_cholesky, solve_lu, solve_qr,
+    SolveOptions, SolverKind,
 };

@@ -153,14 +153,13 @@ pub fn solve_qr(a: &Mat, b: &[f32], opts: &SolveOptions) -> Vec<f32> {
         }
         let alpha = if v[k] >= 0.0 { -norm } else { norm };
         v[k] -= alpha;
-        let vnorm_sq = acc(norm_sq - 2.0 * alpha * (v[k] + alpha) + (v[k] + alpha) * (v[k] + alpha), opts)
-            .max(f32::MIN_POSITIVE);
-        // Recompute directly for numerical clarity.
+        // ‖v‖² computed directly from the reflector (the sign choice above
+        // guarantees |v[k]| ≥ norm, so this never cancels to zero).
         let mut vsq = 0.0f32;
         for i in k..n {
             vsq = acc(vsq + v[i] * v[i], opts);
         }
-        let vsq = if vsq > 0.0 { vsq } else { vnorm_sq };
+        let vsq = vsq.max(f32::MIN_POSITIVE);
         // Apply H = I - 2 v vᵀ / (vᵀv) to R (cols k..) and to qtb.
         for c in k..n {
             let mut s = 0.0f32;
@@ -314,6 +313,34 @@ pub fn batched_solve(
         a.data.copy_from_slice(&as_[i * d * d..(i + 1) * d * d]);
         let x = solve(kind, &a, &bs[i * d..(i + 1) * d], opts);
         out[i * d..(i + 1) * d].copy_from_slice(&x);
+    }
+    out
+}
+
+/// [`batched_solve`] fanned out over `workers` threads. Each segment's
+/// system is independent, so the solutions are bitwise identical to the
+/// serial path for every worker count.
+pub fn batched_solve_parallel(
+    kind: SolverKind,
+    d: usize,
+    as_: &[f32],
+    bs: &[f32],
+    opts: &SolveOptions,
+    workers: usize,
+) -> Vec<f32> {
+    let s = bs.len() / d;
+    assert_eq!(as_.len(), s * d * d);
+    assert_eq!(bs.len(), s * d);
+    if workers <= 1 || s <= 1 {
+        return batched_solve(kind, d, as_, bs, opts);
+    }
+    let solutions = crate::util::threads::parallel_map_indexed_with(workers, s, |i| {
+        let a = Mat::from_rows(d, d, &as_[i * d * d..(i + 1) * d * d]);
+        solve(kind, &a, &bs[i * d..(i + 1) * d], opts)
+    });
+    let mut out = Vec::with_capacity(s * d);
+    for x in solutions {
+        out.extend_from_slice(&x);
     }
     out
 }

@@ -91,6 +91,8 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("batch-width", "train.batch_width"),
         ("cg-iters", "train.cg_iters"),
         ("seed", "train.seed"),
+        ("threads", "train.threads"),
+        ("feed-depth", "train.feed_depth"),
         ("engine", "engine.kind"),
         ("artifacts", "engine.artifacts_dir"),
         ("approximate", "eval.approximate"),

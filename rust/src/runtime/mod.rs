@@ -13,9 +13,14 @@
 
 pub mod manifest;
 pub mod xla_engine;
+mod xla_stub;
 
 pub use manifest::{ArtifactEntry, Manifest};
 pub use xla_engine::XlaEngine;
+
+// Compile against the pure-rust stub by default; swap for `use ::xla;`
+// when linking the real PJRT bindings (see xla_stub.rs).
+use xla_stub as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

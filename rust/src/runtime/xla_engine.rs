@@ -15,14 +15,20 @@
 //! output : (w[S,D] f32,)
 //! ```
 
+use super::xla_stub as xla;
 use super::{manifest::Manifest, Runtime};
 use crate::als::SolveEngine;
 use crate::densebatch::DenseBatch;
 use crate::linalg::Mat;
+use std::sync::Mutex;
 
 /// PJRT-backed [`SolveEngine`] bound to one compiled shape.
+///
+/// The runtime sits behind a mutex: PJRT execution itself is thread-safe,
+/// but the executable cache mutates on first use, and `SolveEngine` takes
+/// `&self` so the trainer can drive shard passes from multiple threads.
 pub struct XlaEngine {
-    runtime: Runtime,
+    runtime: Mutex<Runtime>,
     artifact: String,
     pub d: usize,
     pub b: usize,
@@ -53,12 +59,12 @@ impl XlaEngine {
         );
         // Compile eagerly so the first training batch is not penalized.
         runtime.executable(&artifact)?;
-        Ok(XlaEngine { runtime, artifact, d, b, l })
+        Ok(XlaEngine { runtime: Mutex::new(runtime), artifact, d, b, l })
     }
 
     /// Access the underlying runtime (e.g. for gramian artifacts).
     pub fn runtime_mut(&mut self) -> &mut Runtime {
-        &mut self.runtime
+        self.runtime.get_mut().unwrap()
     }
 }
 
@@ -68,7 +74,7 @@ impl SolveEngine for XlaEngine {
     }
 
     fn solve_batch(
-        &mut self,
+        &self,
         batch: &DenseBatch,
         h: &Mat,
         gramian: &Mat,
@@ -108,7 +114,7 @@ impl SolveEngine for XlaEngine {
             xla::Literal::scalar(lambda),
             xla::Literal::scalar(alpha),
         ];
-        let outputs = self.runtime.execute(&self.artifact, &inputs)?;
+        let outputs = self.runtime.lock().unwrap().execute(&self.artifact, &inputs)?;
         anyhow::ensure!(!outputs.is_empty(), "artifact returned no outputs");
         let w = outputs[0]
             .to_vec::<f32>()

@@ -1,0 +1,217 @@
+//! Pure-rust stand-in for the `xla` (xla-rs / PJRT) crate API surface the
+//! runtime bridge uses, so the crate builds and tests with no native XLA
+//! toolchain installed.
+//!
+//! [`Literal`] is fully functional (host-side tensor of f32/i32 with a
+//! shape) — the literal helpers and their tests work unchanged. The client
+//! / executable types are deliberately uninhabited: [`PjRtClient::cpu`]
+//! returns an error, so every execution path fails fast with a clear
+//! message instead of segfaulting into a missing library.
+//!
+//! To link the real PJRT runtime, add the `xla` crate to `Cargo.toml` and
+//! swap the `use xla_stub as xla;` aliases in `runtime/{mod,xla_engine}.rs`
+//! for `use ::xla;` — the call sites compile against either.
+
+use std::convert::Infallible;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (call sites only format it).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime not linked in this build (pure-rust xla stub); \
+         see rust/src/runtime/xla_stub.rs for how to enable it"
+            .to_string(),
+    )
+}
+
+/// Element payload of a [`Literal`].
+#[derive(Clone, Debug)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side tensor literal (the only stub type that actually works).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Element types [`Literal::to_vec`] can extract.
+pub trait NativeType: Sized {
+    fn extract(lit: &Literal) -> Result<Vec<Self>, Error>;
+}
+
+impl NativeType for f32 {
+    fn extract(lit: &Literal) -> Result<Vec<f32>, Error> {
+        match &lit.payload {
+            Payload::F32(v) => Ok(v.clone()),
+            Payload::I32(_) => Err(Error("literal holds i32, asked for f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn extract(lit: &Literal) -> Result<Vec<i32>, Error> {
+        match &lit.payload {
+            Payload::I32(v) => Ok(v.clone()),
+            Payload::F32(_) => Err(Error("literal holds f32, asked for i32".into())),
+        }
+    }
+}
+
+/// Slice types [`Literal::vec1`] accepts.
+pub trait FromSlice {
+    fn payload(&self) -> Payload;
+}
+
+impl FromSlice for [f32] {
+    fn payload(&self) -> Payload {
+        Payload::F32(self.to_vec())
+    }
+}
+
+impl FromSlice for [i32] {
+    fn payload(&self) -> Payload {
+        Payload::I32(self.to_vec())
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: FromSlice + ?Sized>(data: &T) -> Literal {
+        let payload = data.payload();
+        let len = match &payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        };
+        Literal { payload, dims: vec![len as i64] }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { payload: Payload::F32(vec![x]), dims: Vec::new() }
+    }
+
+    /// Reshape, validating the element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        let len = match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        };
+        if n as usize != len {
+            return Err(Error(format!("cannot reshape {len} elements to {dims:?}")));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Extract the flattened elements.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::extract(self)
+    }
+
+    /// Tuple decomposition — stub literals are never tuples.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        Err(Error(format!("literal of shape {:?} is not a tuple", self.dims)))
+    }
+}
+
+/// Uninhabited: no PJRT client can exist in a stub build.
+pub struct PjRtClient {
+    never: Infallible,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        match comp.never {}
+    }
+}
+
+/// Uninhabited: produced only by [`PjRtClient::compile`].
+pub struct PjRtLoadedExecutable {
+    never: Infallible,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        match self.never {}
+    }
+}
+
+/// Uninhabited: produced only by [`PjRtLoadedExecutable::execute`].
+pub struct PjRtBuffer {
+    never: Infallible,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        match self.never {}
+    }
+}
+
+/// Uninhabited: loading HLO text requires the real parser.
+pub struct HloModuleProto {
+    never: Infallible,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Uninhabited: wraps an [`HloModuleProto`].
+pub struct XlaComputation {
+    never: Infallible,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match proto.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_and_scalar_shapes() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0][..]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert_eq!(Literal::scalar(7.0).to_vec::<f32>().unwrap(), vec![7.0]);
+    }
+
+    #[test]
+    fn literal_i32_roundtrip() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4][..]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_unavailable_in_stub_build() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+    }
+}

@@ -58,6 +58,21 @@ enum ShardData {
     F32(Vec<f32>),
 }
 
+/// Write `src` into a shard at element offset `off`, rounding to the
+/// storage precision (shared by [`ShardedTable::write_row`] and
+/// [`ShardViewMut::write_row`] so both round identically).
+#[inline]
+fn write_row_data(data: &mut ShardData, off: usize, src: &[f32]) {
+    match data {
+        ShardData::Bf16(v) => {
+            for (b, &x) in v[off..off + src.len()].iter_mut().zip(src) {
+                *b = Bf16::from_f32(x).0;
+            }
+        }
+        ShardData::F32(v) => v[off..off + src.len()].copy_from_slice(src),
+    }
+}
+
 /// An embedding table uniformly sharded over `num_shards` cores.
 #[derive(Clone, Debug)]
 pub struct ShardedTable {
@@ -168,14 +183,19 @@ impl ShardedTable {
         debug_assert_eq!(data.len(), self.dim);
         let s = self.shard_of(row);
         let off = (row - self.ranges[s].start) * self.dim;
-        match &mut self.shards[s] {
-            ShardData::Bf16(v) => {
-                for (b, &x) in v[off..off + self.dim].iter_mut().zip(data) {
-                    *b = Bf16::from_f32(x).0;
-                }
-            }
-            ShardData::F32(v) => v[off..off + self.dim].copy_from_slice(data),
-        }
+        write_row_data(&mut self.shards[s], off, data);
+    }
+
+    /// Split the table into one mutable view per shard, so independent
+    /// shard passes can scatter concurrently without locks (Fig. 2's
+    /// layout: core μ only ever writes its own shard).
+    pub fn shard_views_mut(&mut self) -> Vec<ShardViewMut<'_>> {
+        let dim = self.dim;
+        self.ranges
+            .iter()
+            .zip(self.shards.iter_mut())
+            .map(|(&range, data)| ShardViewMut { range, dim, data })
+            .collect()
     }
 
     /// Gather many rows into a dense `[ids.len() × dim]` matrix.
@@ -258,6 +278,39 @@ impl ShardedTable {
         match &self.shards[shard] {
             ShardData::Bf16(v) => bf16::unpack(v),
             ShardData::F32(v) => v.clone(),
+        }
+    }
+}
+
+/// Mutable view of a single shard (from [`ShardedTable::shard_views_mut`]).
+/// Writes are restricted to the shard's own row range, which is what makes
+/// lock-free parallel shard passes safe.
+pub struct ShardViewMut<'a> {
+    range: ShardRange,
+    dim: usize,
+    data: &'a mut ShardData,
+}
+
+impl ShardViewMut<'_> {
+    pub fn range(&self) -> ShardRange {
+        self.range
+    }
+
+    /// Write one row (global row id), rounding to the storage precision
+    /// exactly like [`ShardedTable::write_row`].
+    pub fn write_row(&mut self, row: usize, data: &[f32]) {
+        assert!(self.range.contains(row), "row {row} outside shard {:?}", self.range);
+        assert_eq!(data.len(), self.dim);
+        write_row_data(self.data, (row - self.range.start) * self.dim, data);
+    }
+
+    /// Scatter solved rows into this shard (overwrite semantics, same as
+    /// [`ShardedTable::scatter`]). Every id must fall inside the shard.
+    pub fn scatter(&mut self, ids: &[u32], rows: &Mat) {
+        assert_eq!(ids.len(), rows.rows);
+        assert_eq!(rows.cols, self.dim);
+        for (k, &id) in ids.iter().enumerate() {
+            self.write_row(id as usize, rows.row(k));
         }
     }
 }
@@ -354,6 +407,34 @@ mod tests {
         // E[‖row‖²] = d · (1/√d)² = 1.
         let norm_sq = t.fro_norm_sq() / 2000.0;
         assert!((norm_sq - 1.0).abs() < 0.1, "mean row norm² = {norm_sq}");
+    }
+
+    #[test]
+    fn shard_views_scatter_matches_table_scatter() {
+        let mut rng = Pcg64::new(41);
+        for storage in [Storage::F32, Storage::Bf16] {
+            let mut a = ShardedTable::zeros(23, 5, 4, storage);
+            let mut b = ShardedTable::zeros(23, 5, 4, storage);
+            let ids: Vec<u32> = (0..23).collect();
+            let data = Mat::randn(23, 5, 1.0, &mut rng);
+            a.scatter(&ids, &data);
+            // Scatter the same rows through per-shard views, shard-local ids.
+            for mut view in b.shard_views_mut() {
+                let r = view.range();
+                for id in r.start..r.end {
+                    view.write_row(id, data.row(id));
+                }
+            }
+            assert_eq!(a.to_dense().data, b.to_dense().data);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside shard")]
+    fn shard_view_rejects_foreign_rows() {
+        let mut t = ShardedTable::zeros(20, 3, 4, Storage::F32);
+        let mut views = t.shard_views_mut();
+        views[0].write_row(19, &[0.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -16,6 +16,16 @@ pub fn worker_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Resolve a requested worker count: `0` means "auto" (the `ALX_THREADS`
+/// override, else the machine's available parallelism).
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested == 0 {
+        worker_threads()
+    } else {
+        requested
+    }
+}
+
 /// Apply `f(i)` for `i in 0..n`, potentially in parallel, collecting results
 /// in index order. `f` must be `Sync` because multiple threads share it.
 pub fn parallel_map_indexed<T, F>(n: usize, f: F) -> Vec<T>
@@ -23,7 +33,19 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let workers = worker_threads().min(n.max(1));
+    parallel_map_indexed_with(worker_threads(), n, f)
+}
+
+/// [`parallel_map_indexed`] with an explicit worker count. Results are
+/// identical for every worker count (each index is computed independently
+/// and collected in index order), which is what lets the trainer's
+/// determinism contract hold across `ALX_THREADS` settings.
+pub fn parallel_map_indexed_with<T, F>(workers: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
     if workers <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
@@ -106,5 +128,19 @@ mod tests {
     #[test]
     fn worker_threads_positive() {
         assert!(worker_threads() >= 1);
+    }
+
+    #[test]
+    fn explicit_worker_counts_agree() {
+        let expect: Vec<usize> = (0..57).map(|i| i * i).collect();
+        for workers in [1, 2, 3, 8, 64] {
+            assert_eq!(parallel_map_indexed_with(workers, 57, |i| i * i), expect);
+        }
+    }
+
+    #[test]
+    fn resolve_workers_zero_is_auto() {
+        assert!(resolve_workers(0) >= 1);
+        assert_eq!(resolve_workers(3), 3);
     }
 }

@@ -30,6 +30,12 @@ impl Timer {
 
 /// Accumulates named durations across a run; the coordinator uses one of
 /// these to break an epoch into gather/solve/scatter/batching time.
+///
+/// With the pipelined trainer, stage buckets are fed concurrently from
+/// many threads, so totals are **aggregate busy time** (utilization),
+/// not wall-clock shares: `total_secs()` can legitimately exceed the
+/// epoch's `seconds` by up to the worker count, and the per-bucket
+/// percentages compare stage cost, not elapsed time.
 #[derive(Default)]
 pub struct Profiler {
     buckets: Mutex<BTreeMap<&'static str, (Duration, u64)>>,

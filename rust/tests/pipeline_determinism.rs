@@ -1,0 +1,134 @@
+//! The pipelined multi-threaded trainer's core contract: every stage uses
+//! a fixed work assignment, so the trained tables and epoch history are
+//! **bitwise identical** to the serial path (`threads = 1`) for every
+//! thread budget and feeder depth.
+
+use alx::als::{PrecisionPolicy, TrainConfig, Trainer};
+use alx::sparse::Csr;
+use alx::topo::Topology;
+use alx::util::Pcg64;
+
+/// Two-community implicit matrix (same generator family as the unit
+/// tests): every row nonempty, realistic overlap between shards.
+fn community_matrix(users: usize, items: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut t = Vec::new();
+    for u in 0..users as u32 {
+        let comm = (u as usize) % 2;
+        for _ in 0..6 {
+            let item = if rng.next_f64() < 0.9 {
+                comm * (items / 2) + rng.range(0, items / 2)
+            } else {
+                rng.range(0, items)
+            };
+            t.push((u, item as u32, 1.0));
+        }
+    }
+    Csr::from_coo(users, items, &t)
+}
+
+fn cfg(threads: usize, feed_depth: usize, precision: PrecisionPolicy) -> TrainConfig {
+    TrainConfig {
+        dim: 12,
+        epochs: 3,
+        lambda: 0.05,
+        alpha: 0.01,
+        batch_rows: 16,
+        batch_width: 4,
+        precision,
+        threads,
+        feed_depth,
+        ..TrainConfig::default()
+    }
+}
+
+/// Full training run → (W, H, per-epoch objectives, per-epoch comm bytes).
+fn run(
+    m: &Csr,
+    cores: usize,
+    threads: usize,
+    feed_depth: usize,
+    precision: PrecisionPolicy,
+) -> (Vec<f32>, Vec<f32>, Vec<f64>, Vec<u64>) {
+    let mut tr = Trainer::new(m, cfg(threads, feed_depth, precision), Topology::new(cores))
+        .expect("trainer");
+    let hist = tr.fit().expect("fit");
+    (
+        tr.w.to_dense().data,
+        tr.h.to_dense().data,
+        hist.iter().map(|h| h.objective.unwrap()).collect(),
+        hist.iter().map(|h| h.comm_bytes).collect(),
+    )
+}
+
+#[test]
+fn multithreaded_is_bitwise_identical_to_serial() {
+    let m = community_matrix(60, 40, 3);
+    let serial = run(&m, 4, 1, 4, PrecisionPolicy::F32);
+    for threads in [2usize, 4, 7] {
+        let par = run(&m, 4, threads, 4, PrecisionPolicy::F32);
+        assert_eq!(serial.0, par.0, "W differs at threads={threads}");
+        assert_eq!(serial.1, par.1, "H differs at threads={threads}");
+        assert_eq!(serial.2, par.2, "objective history differs at threads={threads}");
+        assert_eq!(serial.3, par.3, "comm accounting differs at threads={threads}");
+    }
+}
+
+#[test]
+fn mixed_precision_is_bitwise_deterministic_too() {
+    // bf16 tables, f32 accumulators — the paper's default policy must obey
+    // the same contract (the fused gather widens exactly like a
+    // materialized gather).
+    let m = community_matrix(50, 36, 11);
+    let serial = run(&m, 4, 1, 4, PrecisionPolicy::Mixed);
+    let par = run(&m, 4, 4, 4, PrecisionPolicy::Mixed);
+    assert_eq!(serial.0, par.0);
+    assert_eq!(serial.1, par.1);
+    assert_eq!(serial.2, par.2);
+}
+
+#[test]
+fn feeder_depth_does_not_change_results() {
+    // The BatchFeeder's backpressure depth changes stage overlap, never
+    // batch content or order (the in-trainer feeder ordering contract).
+    let m = community_matrix(60, 40, 5);
+    let shallow = run(&m, 4, 4, 1, PrecisionPolicy::F32);
+    let deep = run(&m, 4, 4, 8, PrecisionPolicy::F32);
+    assert_eq!(shallow.0, deep.0);
+    assert_eq!(shallow.1, deep.1);
+    assert_eq!(shallow.2, deep.2);
+}
+
+#[test]
+fn ordering_stable_across_feeder_chunk_boundaries() {
+    // Shards larger than the feeder's row chunk (512): the producer emits
+    // multiple chunks per shard, and the pipelined result must still match
+    // the serial path bitwise.
+    let m = community_matrix(1100, 64, 17); // 2 shards × 550 rows > 512
+    let mut cfg0 = cfg(1, 4, PrecisionPolicy::F32);
+    cfg0.epochs = 1;
+    let mut cfg4 = cfg0.clone();
+    cfg4.threads = 4;
+    let mut serial = Trainer::new(&m, cfg0, Topology::new(2)).expect("trainer");
+    let mut par = Trainer::new(&m, cfg4, Topology::new(2)).expect("trainer");
+    serial.fit().expect("fit");
+    par.fit().expect("fit");
+    assert_eq!(serial.w.to_dense().data, par.w.to_dense().data);
+    assert_eq!(serial.h.to_dense().data, par.h.to_dense().data);
+}
+
+#[test]
+fn pipelined_pass_covers_every_shard_row() {
+    // Every nonempty row must be solved exactly once per pass: after one
+    // epoch, no user row may still sit at its random init.
+    let m = community_matrix(50, 30, 9);
+    let mut tr = Trainer::new(&m, cfg(0, 4, PrecisionPolicy::F32), Topology::new(4))
+        .expect("trainer");
+    let before = tr.w.to_dense();
+    tr.run_epoch().expect("epoch");
+    let after = tr.w.to_dense();
+    for r in 0..m.rows {
+        let moved = (0..before.cols).any(|c| before[(r, c)] != after[(r, c)]);
+        assert!(moved, "row {r} was never solved by the pipelined pass");
+    }
+}

@@ -65,8 +65,8 @@ fn xla_matches_native_all_solvers() {
     for solver in SolverKind::ALL {
         for d in [16usize, 32] {
             let (batch, h, gram) = random_batch(d, 20, 42 + d as u64);
-            let mut native = NativeEngine::new(solver, SolveOptions::default());
-            let mut xla =
+            let native = NativeEngine::new(solver, SolveOptions::default());
+            let xla =
                 XlaEngine::new(ARTIFACTS, solver.name(), d, B, L).expect("open artifact");
             let wn = native.solve_batch(&batch, &h, &gram, 0.1, 0.01).unwrap();
             let wx = xla.solve_batch(&batch, &h, &gram, 0.1, 0.01).unwrap();
@@ -90,7 +90,7 @@ fn xla_engine_rejects_wrong_shapes() {
     }
     let (batch, h, gram) = random_batch(16, 10, 7);
     // Engine compiled for d=32 must reject d=16 inputs.
-    let mut xla = XlaEngine::new(ARTIFACTS, "cg", 32, B, L).unwrap();
+    let xla = XlaEngine::new(ARTIFACTS, "cg", 32, B, L).unwrap();
     assert!(xla.solve_batch(&batch, &h, &gram, 0.1, 0.01).is_err());
 }
 
