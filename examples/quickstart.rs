@@ -1,24 +1,38 @@
-//! Quickstart: factorize a small synthetic WebGraph in ~20 lines.
+//! Quickstart: factorize a small synthetic WebGraph with the session API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- --scale 0.0008 --epochs 3  # CI-sized
 //! ```
 
-use alx::als::TrainConfig;
-use alx::config::AlxConfig;
-use alx::coordinator::Coordinator;
-use alx::webgraph::Variant;
+use alx::prelude::*;
 
 fn main() -> anyhow::Result<()> {
+    // Optional overrides so CI can run this at a tiny scale.
+    let mut scale = 0.002; // ~1000 nodes of the paper's 0.5M-node variant
+    let mut epochs = 8usize;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    for pair in argv.chunks(2) {
+        match (pair[0].as_str(), pair.get(1)) {
+            ("--scale", Some(v)) => scale = v.parse()?,
+            ("--epochs", Some(v)) => epochs = v.parse()?,
+            ("--scale" | "--epochs", None) => anyhow::bail!("{} needs a value", pair[0]),
+            (flag, _) => anyhow::bail!("unknown flag {flag} (expected --scale/--epochs)"),
+        }
+    }
+
     // 1. Describe the job: which dataset, how big, how many simulated
-    //    TPU cores, and the iALS hyper-parameters.
+    //    TPU cores, and the iALS hyper-parameters. The `[data]` section
+    //    (here: the default synthetic WebGraph source) decides where the
+    //    matrix comes from; `--source edge-list --data edges.txt` would
+    //    train on a file instead.
     let cfg = AlxConfig {
         variant: Variant::InDense,
-        scale: 0.002, // ~1000 nodes of the paper's 0.5M-node variant
+        scale,
         cores: 8,
         train: TrainConfig {
             dim: 32,
-            epochs: 8,
+            epochs,
             lambda: 0.05,
             alpha: 0.005,
             batch_rows: 64,
@@ -28,28 +42,45 @@ fn main() -> anyhow::Result<()> {
         ..AlxConfig::default()
     };
 
-    // 2. The coordinator generates the graph, makes the strong-
-    //    generalization split, checks HBM capacity and builds the trainer.
-    let mut coord = Coordinator::prepare(cfg)?;
+    // 2. The session loads the dataset, makes the strong-generalization
+    //    split, checks HBM capacity and builds the trainer.
+    let mut session = TrainSession::from_config(cfg.clone())?;
     println!(
-        "dataset: {} nodes, {} edges ({} test rows)",
-        coord.graph.nodes(),
-        coord.graph.edges(),
-        coord.split.test.len()
+        "dataset {}: {}x{}, {} edges ({} test rows)",
+        session.dataset.name,
+        session.dataset.matrix.rows,
+        session.dataset.matrix.cols,
+        session.dataset.matrix.nnz(),
+        session.split.test.len()
     );
 
-    // 3. Train and evaluate.
-    let report = coord.run()?;
-    for h in &report.history {
+    // 3. Step through training one epoch at a time — the session is in
+    //    control between epochs (hooks, checkpoints, early exit).
+    while session.remaining_epochs() > 0 {
+        let stats = session.step()?;
         println!(
             "epoch {:>2}: objective {:>12.2}  ({:.2}s wall)",
-            h.epoch,
-            h.objective.unwrap_or(f64::NAN),
-            h.seconds
+            stats.epoch,
+            stats.objective.unwrap_or(f64::NAN),
+            stats.seconds
         );
     }
-    for r in &report.recalls {
+    for r in session.evaluate()? {
         println!("Recall@{} = {:.3}", r.k, r.recall);
     }
+
+    // 4. Checkpoint, then resume into a fresh session — the resumed
+    //    trainer continues from the same epoch with bitwise-identical
+    //    tables (the `session_resume` integration test proves it).
+    let ckpt = std::env::temp_dir().join("alx_quickstart.ckpt");
+    session.checkpoint(&ckpt)?;
+    let resumed = TrainSession::resume(&ckpt, cfg)?;
+    println!(
+        "resumed from {}: epoch {}, {} epochs remaining",
+        ckpt.display(),
+        resumed.trainer.current_epoch(),
+        resumed.remaining_epochs()
+    );
+    std::fs::remove_file(&ckpt)?;
     Ok(())
 }

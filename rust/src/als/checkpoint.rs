@@ -132,14 +132,31 @@ impl super::Trainer {
     }
 
     /// Restore tables (and the epoch counter) from a checkpoint. The
-    /// checkpoint must match the trainer's dim and matrix shape; the shard
-    /// count may differ (uniform resharding).
+    /// checkpoint must match the trainer's dim, matrix shape and storage
+    /// precision; the shard count may differ (uniform resharding).
     pub fn load_checkpoint(&mut self, r: &mut impl Read) -> anyhow::Result<()> {
         let (meta, users, items) = load(r, self.topo.num_cores)?;
-        anyhow::ensure!(meta.dim as usize == self.cfg.dim, "checkpoint dim mismatch");
+        anyhow::ensure!(
+            meta.dim as usize == self.cfg.dim,
+            "checkpoint dim mismatch: checkpoint has d={}, config wants d={}",
+            meta.dim,
+            self.cfg.dim
+        );
         anyhow::ensure!(
             meta.users as usize == self.w.rows && meta.items as usize == self.h.rows,
-            "checkpoint table shape mismatch"
+            "checkpoint table shape mismatch: checkpoint is {}x{}, trainer is {}x{}",
+            meta.users,
+            meta.items,
+            self.w.rows,
+            self.h.rows
+        );
+        let want_bf16 = self.cfg.precision.storage() == Storage::Bf16;
+        anyhow::ensure!(
+            meta.storage_bf16 == want_bf16,
+            "checkpoint storage mismatch: checkpoint is {}, config precision '{}' wants {}",
+            if meta.storage_bf16 { "bf16" } else { "f32" },
+            self.cfg.precision.name(),
+            if want_bf16 { "bf16" } else { "f32" }
         );
         self.w = users;
         self.h = items;
@@ -185,9 +202,83 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_f32_exact() {
+        let u = table(17, 5, 2, Storage::F32, 21);
+        let h = table(19, 5, 2, Storage::F32, 22);
+        let meta = CheckpointMeta { epoch: 9, dim: 5, users: 17, items: 19, storage_bf16: false };
+        let mut buf = Vec::new();
+        save(&mut buf, &meta, &u, &h).unwrap();
+        let (m2, u2, h2) = load(&mut &buf[..], 2).unwrap();
+        assert_eq!(meta, m2);
+        assert!(u2.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
+        assert!(h2.to_dense().max_abs_diff(&h.to_dense()) == 0.0);
+    }
+
+    #[test]
     fn bad_magic_rejected() {
         let buf = b"NOTACKPT".to_vec();
         assert!(load(&mut &buf[..], 2).is_err());
+    }
+
+    #[test]
+    fn truncated_file_rejected_at_every_boundary() {
+        let u = table(6, 3, 2, Storage::Bf16, 31);
+        let h = table(5, 3, 2, Storage::Bf16, 32);
+        let meta = CheckpointMeta { epoch: 2, dim: 3, users: 6, items: 5, storage_bf16: true };
+        let mut buf = Vec::new();
+        save(&mut buf, &meta, &u, &h).unwrap();
+        // Truncations inside the magic, the header, and each table payload
+        // must all surface as errors, never as silently-short tables.
+        for cut in [4, 12, 30, buf.len() / 2, buf.len() - 1] {
+            assert!(cut < buf.len(), "test cut {cut} out of range");
+            assert!(
+                load(&mut &buf[..cut], 2).is_err(),
+                "truncation at byte {cut}/{} accepted",
+                buf.len()
+            );
+        }
+        // The untruncated file still loads.
+        assert!(load(&mut &buf[..], 2).is_ok());
+    }
+
+    #[test]
+    fn trainer_rejects_meta_mismatches() {
+        use crate::als::{PrecisionPolicy, TrainConfig};
+        use crate::sparse::Csr;
+        use crate::topo::Topology;
+        let m = Csr::from_coo(
+            12,
+            10,
+            &(0..12u32).flat_map(|r| [(r, 0u32, 1.0), (r, r % 10, 1.0)]).collect::<Vec<_>>(),
+        );
+        let cfg = TrainConfig {
+            dim: 6,
+            epochs: 1,
+            batch_rows: 8,
+            batch_width: 4,
+            ..TrainConfig::default()
+        };
+        let tr = crate::als::Trainer::new(&m, cfg.clone(), Topology::new(2)).unwrap();
+        let mut buf = Vec::new();
+        tr.save_checkpoint(&mut buf).unwrap();
+
+        // dim mismatch
+        let bad_dim = TrainConfig { dim: 8, ..cfg.clone() };
+        let mut t2 = crate::als::Trainer::new(&m, bad_dim, Topology::new(2)).unwrap();
+        let err = t2.load_checkpoint(&mut &buf[..]).unwrap_err();
+        assert!(err.to_string().contains("dim mismatch"), "{err}");
+
+        // shape mismatch (different matrix)
+        let m2 = Csr::from_coo(8, 10, &[(0, 1, 1.0), (7, 9, 1.0)]);
+        let mut t3 = crate::als::Trainer::new(&m2, cfg.clone(), Topology::new(2)).unwrap();
+        let err = t3.load_checkpoint(&mut &buf[..]).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+
+        // storage mismatch (default Mixed → bf16 checkpoint vs f32 config)
+        let f32_cfg = TrainConfig { precision: PrecisionPolicy::F32, ..cfg };
+        let mut t4 = crate::als::Trainer::new(&m, f32_cfg, Topology::new(2)).unwrap();
+        let err = t4.load_checkpoint(&mut &buf[..]).unwrap_err();
+        assert!(err.to_string().contains("storage mismatch"), "{err}");
     }
 
     #[test]

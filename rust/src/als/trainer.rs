@@ -392,6 +392,12 @@ impl Trainer {
     }
 
     /// Train for `cfg.epochs` epochs, returning the history.
+    ///
+    /// Note: prefer driving a [`crate::coordinator::TrainSession`] — it
+    /// wraps this same epoch loop with checkpoint/resume, eval/checkpoint
+    /// hooks and early stopping, and stops at the configured epoch total
+    /// when resumed. `fit` always runs `cfg.epochs` *more* epochs and
+    /// remains for low-level/bench use.
     pub fn fit(&mut self) -> anyhow::Result<Vec<EpochStats>> {
         let mut history = Vec::with_capacity(self.cfg.epochs);
         for _ in 0..self.cfg.epochs {
@@ -404,10 +410,16 @@ impl Trainer {
     /// `Σ_obs (y-ŷ)² + α·Σ_{u,i} ŷ² + λ(‖W‖² + ‖H‖²)`.
     /// The all-pairs term uses the gramian identity
     /// `Σ ŷ² = ⟨WᵀW, HᵀH⟩_F`, costing O((|U|+|I|)d²) instead of O(|U||I|d).
+    ///
+    /// Computed entirely from shard-local partials — neither table is ever
+    /// materialized dense. The observed term reads rows straight out of
+    /// the sharded storage (widened to f32 exactly like a gather), and the
+    /// gramians are per-shard partials summed in fixed shard order, so the
+    /// value is bitwise identical for every worker count.
     pub fn objective(&self) -> f64 {
-        let dense_w = self.w.to_dense();
-        let dense_h = self.h.to_dense();
         let train = self.train.as_ref();
+        let (w, h) = (&self.w, &self.h);
+        let d = self.cfg.dim;
         // Fixed-size row chunks (NOT per-worker chunks): the f64 grouping
         // is a function of the data alone, so the sum is bitwise identical
         // for every worker count, while the partials vector stays small.
@@ -417,11 +429,17 @@ impl Trainer {
         let partials = threads::parallel_map_indexed_with(workers, n_chunks, |c| {
             let lo = c * OBJ_CHUNK_ROWS;
             let hi = (lo + OBJ_CHUNK_ROWS).min(train.rows);
+            let mut wrow = vec![0.0f32; d];
+            let mut hrow = vec![0.0f32; d];
             let mut obs = 0.0f64;
             for r in lo..hi {
-                let wrow = dense_w.row(r);
+                if train.row_len(r) == 0 {
+                    continue;
+                }
+                w.read_row(r, &mut wrow);
                 for (&col, &y) in train.row_indices(r).iter().zip(train.row_values(r)) {
-                    let pred = crate::linalg::mat::dot(wrow, dense_h.row(col as usize));
+                    h.read_row(col as usize, &mut hrow);
+                    let pred = crate::linalg::mat::dot(&wrow, &hrow);
                     let e = (y - pred) as f64;
                     obs += e * e;
                 }
@@ -429,8 +447,8 @@ impl Trainer {
             obs
         });
         let obs: f64 = partials.into_iter().sum();
-        let gw = dense_w.gramian();
-        let gh = dense_h.gramian();
+        let gw = self.gramian_from_shards(&self.w);
+        let gh = self.gramian_from_shards(&self.h);
         let all_pairs: f64 = gw
             .data
             .iter()
@@ -439,6 +457,21 @@ impl Trainer {
             .sum();
         obs + self.cfg.alpha as f64 * all_pairs
             + self.cfg.lambda as f64 * (self.w.fro_norm_sq() + self.h.fro_norm_sq())
+    }
+
+    /// Shard-local gramians summed in fixed shard order — the objective's
+    /// comm-free twin of [`Trainer::global_gramian`] (no collective is
+    /// priced, since a real pod computes the objective from partials that
+    /// ride the epoch's existing all-reduce). Shares the reduction
+    /// grouping via [`crate::collectives::sum_gramians`].
+    fn gramian_from_shards(&self, table: &ShardedTable) -> Mat {
+        let workers = threads::resolve_workers(self.cfg.threads);
+        let locals: Vec<Mat> = threads::parallel_map_indexed_with(
+            workers,
+            table.num_shards(),
+            |s| table.local_gramian(s),
+        );
+        crate::collectives::sum_gramians(&locals)
     }
 
     /// Fold a new row (user) into the embedding space via Eq. (4), given its

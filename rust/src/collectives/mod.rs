@@ -135,6 +135,16 @@ pub fn sharded_scatter(table: &mut ShardedTable, ids: &[u32], rows: &Mat, stats:
 
 /// All-reduce-sum of per-shard gramians (Algorithm 2 line 6).
 pub fn all_reduce_gramian(locals: &[Mat], stats: &CommStats) -> Mat {
+    let g = sum_gramians(locals);
+    stats.record_all_reduce((g.rows * g.cols * 4) as u64);
+    g
+}
+
+/// Fixed-shard-order sum of per-shard gramians — the reduction grouping
+/// both the training path ([`all_reduce_gramian`]) and the comm-free
+/// objective path share. The grouping is part of the bitwise-determinism
+/// contract: change it in one place or not at all.
+pub fn sum_gramians(locals: &[Mat]) -> Mat {
     assert!(!locals.is_empty());
     let d = locals[0].rows;
     let mut g = Mat::zeros(d, d);
@@ -144,7 +154,6 @@ pub fn all_reduce_gramian(locals: &[Mat], stats: &CommStats) -> Mat {
             *a += b;
         }
     }
-    stats.record_all_reduce((d * d * 4) as u64);
     g
 }
 

@@ -104,6 +104,11 @@ pub struct AlxConfig {
     pub scale: f64,
     /// Dataset seed.
     pub data_seed: u64,
+    /// Dataset acquisition: "webgraph" (synthetic generator) or
+    /// "edge-list" (file loader; see `data.path`).
+    pub data_source: String,
+    /// File path for file-backed data sources.
+    pub data_path: String,
     /// Simulated TPU cores.
     pub cores: usize,
     /// Training hyper-parameters.
@@ -114,6 +119,15 @@ pub struct AlxConfig {
     pub artifacts_dir: String,
     /// Eval: approximate MIPS instead of exact top-k.
     pub approximate_eval: bool,
+    /// Session hook: checkpoint to `checkpoint_path` every k epochs
+    /// (0 = off).
+    pub checkpoint_every: usize,
+    /// Session hook: evaluate Recall@K every k epochs (0 = off).
+    pub eval_every: usize,
+    /// Session hook: early-stop after this many plateau epochs (0 = off).
+    pub early_stop_patience: usize,
+    /// Where periodic/final checkpoints are written.
+    pub checkpoint_path: String,
 }
 
 impl Default for AlxConfig {
@@ -122,11 +136,17 @@ impl Default for AlxConfig {
             variant: Variant::InDense,
             scale: 0.01,
             data_seed: 7,
+            data_source: "webgraph".to_string(),
+            data_path: String::new(),
             cores: 8,
             train: TrainConfig::default(),
             engine: "native".to_string(),
             artifacts_dir: "artifacts".to_string(),
             approximate_eval: false,
+            checkpoint_every: 0,
+            eval_every: 0,
+            early_stop_patience: 0,
+            checkpoint_path: "alx.ckpt".to_string(),
         }
     }
 }
@@ -145,6 +165,18 @@ impl AlxConfig {
         }
         if let Some(v) = kv.get_u64("dataset.seed")? {
             cfg.data_seed = v;
+        }
+        if let Some(v) = kv.get("data.source") {
+            // Early validation only; data::source_from_config is the single
+            // dispatch point and must accept exactly this list.
+            anyhow::ensure!(
+                matches!(v, "webgraph" | "edge-list"),
+                "data.source must be webgraph|edge-list"
+            );
+            cfg.data_source = v.to_string();
+        }
+        if let Some(v) = kv.get("data.path") {
+            cfg.data_path = v.to_string();
         }
         if let Some(v) = kv.get_usize("topology.cores")? {
             anyhow::ensure!(v >= 1, "topology.cores must be >= 1");
@@ -202,6 +234,19 @@ impl AlxConfig {
         if let Some(v) = kv.get_bool("eval.approximate")? {
             cfg.approximate_eval = v;
         }
+        if let Some(v) = kv.get_usize("session.checkpoint_every")? {
+            cfg.checkpoint_every = v; // 0 = off
+        }
+        if let Some(v) = kv.get_usize("session.eval_every")? {
+            cfg.eval_every = v; // 0 = off
+        }
+        if let Some(v) = kv.get_usize("session.early_stop_patience")? {
+            cfg.early_stop_patience = v; // 0 = off
+        }
+        if let Some(v) = kv.get("session.checkpoint_path") {
+            anyhow::ensure!(!v.is_empty(), "session.checkpoint_path must be non-empty");
+            cfg.checkpoint_path = v.to_string();
+        }
         Ok(cfg)
     }
 }
@@ -258,6 +303,47 @@ cores = 16
         let mut bad = KvConfig::default();
         bad.set("train.feed_depth", "0");
         assert!(AlxConfig::from_kv(&bad).is_err());
+    }
+
+    #[test]
+    fn data_and_session_sections_parse() {
+        let kv = KvConfig::parse(
+            r#"
+[data]
+source = "edge-list"
+path = "edges.txt"
+
+[session]
+checkpoint_every = 2
+eval_every = 4
+early_stop_patience = 3
+checkpoint_path = "run.ckpt"
+"#,
+        )
+        .unwrap();
+        let cfg = AlxConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.data_source, "edge-list");
+        assert_eq!(cfg.data_path, "edges.txt");
+        assert_eq!(cfg.checkpoint_every, 2);
+        assert_eq!(cfg.eval_every, 4);
+        assert_eq!(cfg.early_stop_patience, 3);
+        assert_eq!(cfg.checkpoint_path, "run.ckpt");
+    }
+
+    #[test]
+    fn session_defaults_are_off() {
+        let cfg = AlxConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(cfg.data_source, "webgraph");
+        assert_eq!(cfg.checkpoint_every, 0);
+        assert_eq!(cfg.eval_every, 0);
+        assert_eq!(cfg.early_stop_patience, 0);
+    }
+
+    #[test]
+    fn bad_data_source_rejected() {
+        let mut kv = KvConfig::default();
+        kv.set("data.source", "parquet");
+        assert!(AlxConfig::from_kv(&kv).is_err());
     }
 
     #[test]

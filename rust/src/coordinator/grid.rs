@@ -5,8 +5,9 @@
 //! λ ∈ {5e-2, 1e-2, 5e-3, 1e-3, 5e-4, 1e-4} × α ∈ {1e-3, 5e-4, 1e-4, 5e-5,
 //! 1e-5, 5e-6, 1e-6} per variant; Table 2 reports the best cell.
 
-use super::Coordinator;
+use super::TrainSession;
 use crate::config::AlxConfig;
+use crate::data::source_from_config;
 use crate::eval::EvalConfig;
 
 /// The sweep grids. Defaults are exactly the paper's §6.1 lists.
@@ -48,8 +49,11 @@ pub struct GridPoint {
     pub recall_at_50: f64,
 }
 
-/// Run the grid over `(λ, α)` and return all cells, best first.
+/// Run the grid over `(λ, α)` and return all cells, best first. A thin
+/// driver over [`TrainSession`]: the dataset is loaded once and every grid
+/// cell trains its own session over a clone of it.
 pub fn grid_search(base: &AlxConfig, spec: &GridSpec) -> anyhow::Result<Vec<GridPoint>> {
+    let dataset = source_from_config(base)?.load()?;
     let mut points = Vec::new();
     for &lambda in &spec.lambdas {
         for &alpha in &spec.alphas {
@@ -57,9 +61,11 @@ pub fn grid_search(base: &AlxConfig, spec: &GridSpec) -> anyhow::Result<Vec<Grid
             cfg.train.lambda = lambda;
             cfg.train.alpha = alpha;
             cfg.train.compute_objective = false;
-            let mut coord = Coordinator::prepare(cfg)?;
-            coord.trainer.fit()?;
-            let recalls = coord.evaluate_with(&EvalConfig::default());
+            let mut session = TrainSession::from_dataset(dataset.clone(), cfg, None)?;
+            while session.remaining_epochs() > 0 {
+                session.step()?;
+            }
+            let recalls = session.evaluate_with(&EvalConfig::default());
             let get = |k: usize| {
                 recalls.iter().find(|r| r.k == k).map(|r| r.recall).unwrap_or(0.0)
             };

@@ -1,0 +1,572 @@
+//! Step-wise training sessions — the resumable, observable job API.
+//!
+//! The paper's largest WebGraph run takes 5.5 hours on 256 cores; jobs at
+//! that scale cannot be fire-and-forget. A [`TrainSession`] owns the
+//! dataset, split, topology and trainer, and exposes the lifecycle one
+//! epoch at a time:
+//!
+//! * [`TrainSession::step`] — run one epoch, fire hooks, return its stats;
+//! * [`TrainSession::evaluate`] — Recall@K on the held-out split, any time;
+//! * [`TrainSession::checkpoint`] / [`TrainSession::resume`] — persist and
+//!   restore mid-run state (atomic rename, bitwise-deterministic resume);
+//! * [`EpochHook`]s — registrable callbacks after every epoch, with
+//!   built-ins for eval-every-k ([`EvalEvery`]), checkpoint-every-k
+//!   ([`CheckpointEvery`]) and early stopping ([`EarlyStopOnPlateau`]).
+//!
+//! [`super::Coordinator`] and [`super::grid_search`] are thin drivers over
+//! sessions; the `alx train` CLI maps `--resume`, `--source`,
+//! `--checkpoint-every` and `--eval-every` straight onto this API.
+
+use super::RunReport;
+use crate::als::{EpochStats, SolveEngine, Trainer};
+use crate::config::AlxConfig;
+use crate::data::{source_from_config, DataSource, Dataset};
+use crate::eval::{evaluate, EvalConfig, RecallReport};
+use crate::sparse::{split_strong_generalization, Split};
+use crate::topo::Topology;
+use std::path::{Path, PathBuf};
+
+/// What a hook wants the session to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HookAction {
+    /// Keep training.
+    Continue,
+    /// Stop the run after this epoch (e.g. objective plateau).
+    Stop,
+}
+
+/// A callback fired after every completed epoch. Hooks receive the session
+/// itself, so they can evaluate, checkpoint, or inspect history.
+pub trait EpochHook {
+    fn after_epoch(
+        &mut self,
+        session: &mut TrainSession,
+        stats: &EpochStats,
+    ) -> anyhow::Result<HookAction>;
+}
+
+/// A training job with step-wise control: dataset + split + trainer, plus
+/// the epoch history and registered hooks.
+pub struct TrainSession {
+    pub cfg: AlxConfig,
+    pub dataset: Dataset,
+    pub split: Split,
+    pub trainer: Trainer,
+    history: Vec<EpochStats>,
+    eval_log: Vec<(usize, Vec<RecallReport>)>,
+    hooks: Vec<Box<dyn EpochHook>>,
+    stopped: bool,
+}
+
+impl TrainSession {
+    /// Build a session from a resolved config: the `[data]` section picks
+    /// the source, and `[session]` keys (`checkpoint_every`, `eval_every`,
+    /// `early_stop_patience`) install the matching hooks.
+    pub fn from_config(cfg: AlxConfig) -> anyhow::Result<TrainSession> {
+        let source = source_from_config(&cfg)?;
+        let mut session = Self::new(source.as_ref(), cfg)?;
+        session.install_config_hooks();
+        Ok(session)
+    }
+
+    /// Build a session over an explicit [`DataSource`] (no hooks installed).
+    pub fn new(source: &dyn DataSource, cfg: AlxConfig) -> anyhow::Result<TrainSession> {
+        Self::with_engine(source, cfg, None)
+    }
+
+    /// [`TrainSession::new`] with an engine override (`None` → per-config).
+    pub fn with_engine(
+        source: &dyn DataSource,
+        cfg: AlxConfig,
+        engine: Option<Box<dyn SolveEngine>>,
+    ) -> anyhow::Result<TrainSession> {
+        let dataset = source.load()?;
+        Self::from_dataset(dataset, cfg, engine)
+    }
+
+    /// Build a session over an already-loaded [`Dataset`].
+    pub fn from_dataset(
+        dataset: Dataset,
+        cfg: AlxConfig,
+        engine: Option<Box<dyn SolveEngine>>,
+    ) -> anyhow::Result<TrainSession> {
+        let split =
+            split_strong_generalization(&dataset.matrix, 0.9, 0.25, cfg.data_seed ^ 0x9);
+        let topo = Topology::new(cfg.cores);
+        let engine: Box<dyn SolveEngine> = match engine {
+            Some(e) => e,
+            None => match cfg.engine.as_str() {
+                "xla" => Box::new(crate::runtime::XlaEngine::new(
+                    &cfg.artifacts_dir,
+                    cfg.train.solver.name(),
+                    cfg.train.dim,
+                    cfg.train.batch_rows,
+                    cfg.train.batch_width,
+                )?),
+                // Same engine (and thread-budget split) Trainer::new uses,
+                // so `train.threads` reaches the per-segment fan-out here.
+                _ => Trainer::default_engine(&cfg.train, &topo),
+            },
+        };
+        let trainer = Trainer::with_engine(&split.train, cfg.train.clone(), topo, engine)?;
+        Ok(TrainSession {
+            cfg,
+            dataset,
+            split,
+            trainer,
+            history: Vec::new(),
+            eval_log: Vec::new(),
+            hooks: Vec::new(),
+            stopped: false,
+        })
+    }
+
+    /// Restore a session from a checkpoint using the config's data source
+    /// (what `alx train --resume <ckpt>` does). The config must describe
+    /// the same dataset/model shape the checkpoint was written from.
+    pub fn resume(path: impl AsRef<Path>, cfg: AlxConfig) -> anyhow::Result<TrainSession> {
+        let source = source_from_config(&cfg)?;
+        let mut session = Self::resume_with(path, source.as_ref(), cfg, None)?;
+        session.install_config_hooks();
+        Ok(session)
+    }
+
+    /// [`TrainSession::resume`] over an explicit source/engine (no hooks).
+    pub fn resume_with(
+        path: impl AsRef<Path>,
+        source: &dyn DataSource,
+        cfg: AlxConfig,
+        engine: Option<Box<dyn SolveEngine>>,
+    ) -> anyhow::Result<TrainSession> {
+        let path = path.as_ref();
+        let mut session = Self::with_engine(source, cfg, engine)?;
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .map_err(|e| anyhow::anyhow!("open checkpoint {}: {e}", path.display()))?,
+        );
+        session.trainer.load_checkpoint(&mut f)?;
+        crate::log_info!(
+            "resumed {} from {} at epoch {}",
+            session.dataset.name,
+            path.display(),
+            session.trainer.current_epoch()
+        );
+        Ok(session)
+    }
+
+    /// Install the hooks the `[session]` config keys ask for.
+    pub fn install_config_hooks(&mut self) {
+        if self.cfg.eval_every > 0 {
+            self.add_hook(Box::new(EvalEvery::new(self.cfg.eval_every)));
+        }
+        if self.cfg.checkpoint_every > 0 {
+            self.add_hook(Box::new(CheckpointEvery::new(
+                self.cfg.checkpoint_every,
+                self.cfg.checkpoint_path.clone(),
+            )));
+        }
+        if self.cfg.early_stop_patience > 0 {
+            self.add_hook(Box::new(EarlyStopOnPlateau::new(self.cfg.early_stop_patience, 1e-4)));
+        }
+    }
+
+    /// Register an epoch hook (fires after every [`TrainSession::step`]).
+    pub fn add_hook(&mut self, hook: Box<dyn EpochHook>) {
+        self.hooks.push(hook);
+    }
+
+    /// Epochs still to run before the configured total is reached.
+    pub fn remaining_epochs(&self) -> usize {
+        self.cfg.train.epochs.saturating_sub(self.trainer.current_epoch())
+    }
+
+    /// Whether a hook has requested the run to stop.
+    pub fn stopped(&self) -> bool {
+        self.stopped
+    }
+
+    /// Epoch stats recorded by this session (resumed sessions only record
+    /// the epochs they ran themselves).
+    pub fn history(&self) -> &[EpochStats] {
+        &self.history
+    }
+
+    /// `(epoch, recalls)` pairs recorded by [`EvalEvery`] hooks.
+    pub fn eval_log(&self) -> &[(usize, Vec<RecallReport>)] {
+        &self.eval_log
+    }
+
+    /// Run one epoch, record it, and fire the registered hooks.
+    pub fn step(&mut self) -> anyhow::Result<EpochStats> {
+        anyhow::ensure!(!self.stopped, "session stopped (a hook requested early stop)");
+        let stats = self.trainer.run_epoch()?;
+        self.history.push(stats.clone());
+        // Take the hooks out so they can borrow the session mutably.
+        let mut hooks = std::mem::take(&mut self.hooks);
+        let mut failure = None;
+        for hook in hooks.iter_mut() {
+            match hook.after_epoch(self, &stats) {
+                Ok(HookAction::Continue) => {}
+                Ok(HookAction::Stop) => self.stopped = true,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        // Keep hooks a hook may have registered during the sweep.
+        let added = std::mem::replace(&mut self.hooks, hooks);
+        self.hooks.extend(added);
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(stats),
+        }
+    }
+
+    /// Drive the session to the configured epoch count (or an early stop)
+    /// and evaluate. The resumable equivalent of the old fire-and-forget
+    /// `Coordinator::run`.
+    pub fn run(&mut self) -> anyhow::Result<RunReport> {
+        while !self.stopped && self.remaining_epochs() > 0 {
+            self.step()?;
+        }
+        // Reuse the final-epoch eval if an EvalEvery hook just produced it
+        // (the exact top-k pass is the expensive part of a large run).
+        let recalls = match self.eval_log.last() {
+            Some((epoch, recalls)) if *epoch == self.trainer.current_epoch() => recalls.clone(),
+            _ => self.evaluate()?,
+        };
+        let history = self.history.clone();
+        let epoch_seconds_mean =
+            history.iter().map(|h| h.seconds).sum::<f64>() / history.len().max(1) as f64;
+        let comm = history.last().map(|h| h.comm_bytes).unwrap_or(0);
+        Ok(RunReport {
+            epoch_seconds_mean,
+            simulated_epoch_seconds: self.trainer.simulated_epoch_seconds(),
+            comm_bytes_per_epoch: comm,
+            history,
+            recalls,
+        })
+    }
+
+    /// Evaluate Recall@{20,50} on the held-out strong-generalization rows.
+    pub fn evaluate(&self) -> anyhow::Result<Vec<RecallReport>> {
+        let eval_cfg = EvalConfig {
+            approximate: self.cfg.approximate_eval,
+            ..EvalConfig::default()
+        };
+        Ok(evaluate(&self.trainer, &self.split.test, &eval_cfg))
+    }
+
+    /// Evaluate with an explicit eval config.
+    pub fn evaluate_with(&self, eval_cfg: &EvalConfig) -> Vec<RecallReport> {
+        evaluate(&self.trainer, &self.split.test, eval_cfg)
+    }
+
+    /// Write a checkpoint of the current model state to `path` (write to a
+    /// sibling tmp file, then rename, so a crash never corrupts the last
+    /// good checkpoint).
+    pub fn checkpoint(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        // Per-process tmp name so concurrent writers to the same path
+        // degrade to last-rename-wins instead of interleaving one file.
+        let tmp =
+            PathBuf::from(format!("{}.tmp.{}", path.display(), std::process::id()));
+        let write = || -> anyhow::Result<()> {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp)
+                    .map_err(|e| anyhow::anyhow!("create {}: {e}", tmp.display()))?,
+            );
+            self.trainer.save_checkpoint(&mut f)?;
+            use std::io::Write;
+            f.flush()?;
+            // fsync before the rename: otherwise a power loss can persist
+            // the rename with unwritten data, destroying the previous good
+            // checkpoint the atomic-rename dance is meant to protect.
+            f.get_ref().sync_all()?;
+            Ok(())
+        };
+        if let Err(e) = write() {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+        crate::log_info!(
+            "checkpoint @ epoch {} -> {}",
+            self.trainer.current_epoch(),
+            path.display()
+        );
+        Ok(())
+    }
+}
+
+/// Built-in hook: evaluate every `k` epochs and record the result in the
+/// session's [`TrainSession::eval_log`].
+pub struct EvalEvery {
+    every: usize,
+}
+
+impl EvalEvery {
+    pub fn new(every: usize) -> EvalEvery {
+        EvalEvery { every: every.max(1) }
+    }
+}
+
+impl EpochHook for EvalEvery {
+    fn after_epoch(
+        &mut self,
+        session: &mut TrainSession,
+        stats: &EpochStats,
+    ) -> anyhow::Result<HookAction> {
+        if stats.epoch % self.every == 0 {
+            let recalls = session.evaluate()?;
+            for r in &recalls {
+                crate::log_info!("epoch {}: Recall@{} = {:.4}", stats.epoch, r.k, r.recall);
+            }
+            session.eval_log.push((stats.epoch, recalls));
+        }
+        Ok(HookAction::Continue)
+    }
+}
+
+/// Built-in hook: checkpoint every `k` epochs (overwriting `path`, so the
+/// file always holds the latest resumable state).
+pub struct CheckpointEvery {
+    every: usize,
+    path: PathBuf,
+}
+
+impl CheckpointEvery {
+    pub fn new(every: usize, path: impl Into<PathBuf>) -> CheckpointEvery {
+        CheckpointEvery { every: every.max(1), path: path.into() }
+    }
+}
+
+impl EpochHook for CheckpointEvery {
+    fn after_epoch(
+        &mut self,
+        session: &mut TrainSession,
+        stats: &EpochStats,
+    ) -> anyhow::Result<HookAction> {
+        if stats.epoch % self.every == 0 {
+            session.checkpoint(&self.path)?;
+        }
+        Ok(HookAction::Continue)
+    }
+}
+
+/// Built-in hook: stop when the training objective has not improved by at
+/// least `min_rel_improvement` (relative) for `patience` consecutive
+/// epochs. A no-op when `train.compute_objective` is off.
+///
+/// Hook state is in-memory only: checkpoints persist model state, not
+/// hooks, so a resumed run restarts plateau tracking from scratch. The
+/// bitwise resume ≡ uninterrupted contract covers the training state
+/// (tables, epoch counter, per-epoch stats); where a run *stops* under
+/// early stopping can differ across an interruption.
+pub struct EarlyStopOnPlateau {
+    patience: usize,
+    min_rel_improvement: f64,
+    best: f64,
+    epochs_since_best: usize,
+    warned: bool,
+}
+
+impl EarlyStopOnPlateau {
+    pub fn new(patience: usize, min_rel_improvement: f64) -> EarlyStopOnPlateau {
+        EarlyStopOnPlateau {
+            patience: patience.max(1),
+            min_rel_improvement,
+            best: f64::INFINITY,
+            epochs_since_best: 0,
+            warned: false,
+        }
+    }
+}
+
+impl EpochHook for EarlyStopOnPlateau {
+    fn after_epoch(
+        &mut self,
+        _session: &mut TrainSession,
+        stats: &EpochStats,
+    ) -> anyhow::Result<HookAction> {
+        let Some(obj) = stats.objective else {
+            if !self.warned {
+                crate::log_warn!(
+                    "early-stop hook inactive: train.compute_objective is disabled"
+                );
+                self.warned = true;
+            }
+            return Ok(HookAction::Continue);
+        };
+        if !self.best.is_finite() || obj < self.best * (1.0 - self.min_rel_improvement) {
+            self.best = obj;
+            self.epochs_since_best = 0;
+        } else {
+            self.epochs_since_best += 1;
+            if self.epochs_since_best >= self.patience {
+                crate::log_info!(
+                    "early stop @ epoch {}: objective plateau ({} epochs without {}% improvement)",
+                    stats.epoch,
+                    self.patience,
+                    self.min_rel_improvement * 100.0
+                );
+                return Ok(HookAction::Stop);
+            }
+        }
+        Ok(HookAction::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::als::TrainConfig;
+    use crate::data::InMemorySource;
+    use crate::sparse::Csr;
+    use crate::util::Pcg64;
+
+    fn community_matrix(users: usize, items: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut t = Vec::new();
+        for u in 0..users as u32 {
+            let comm = (u as usize) % 2;
+            for _ in 0..6 {
+                let item = if rng.next_f64() < 0.9 {
+                    comm * (items / 2) + rng.range(0, items / 2)
+                } else {
+                    rng.range(0, items)
+                };
+                t.push((u, item as u32, 1.0));
+            }
+        }
+        Csr::from_coo(users, items, &t)
+    }
+
+    fn tiny_cfg(epochs: usize) -> AlxConfig {
+        AlxConfig {
+            cores: 3,
+            train: TrainConfig {
+                dim: 8,
+                epochs,
+                lambda: 0.05,
+                alpha: 0.01,
+                batch_rows: 16,
+                batch_width: 4,
+                ..TrainConfig::default()
+            },
+            ..AlxConfig::default()
+        }
+    }
+
+    fn tiny_session(epochs: usize) -> TrainSession {
+        let source = InMemorySource::new("community", community_matrix(60, 40, 3));
+        TrainSession::new(&source, tiny_cfg(epochs)).unwrap()
+    }
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("alx_session_{}_{}.ckpt", tag, std::process::id()))
+    }
+
+    #[test]
+    fn step_matches_configured_epochs() {
+        let mut s = tiny_session(3);
+        assert_eq!(s.remaining_epochs(), 3);
+        let st = s.step().unwrap();
+        assert_eq!(st.epoch, 1);
+        assert_eq!(s.remaining_epochs(), 2);
+        while s.remaining_epochs() > 0 {
+            s.step().unwrap();
+        }
+        assert_eq!(s.history().len(), 3);
+        let objs: Vec<f64> = s.history().iter().map(|h| h.objective.unwrap()).collect();
+        assert!(objs.last().unwrap() < objs.first().unwrap(), "objective: {objs:?}");
+    }
+
+    #[test]
+    fn run_returns_report_and_evaluates() {
+        let mut s = tiny_session(2);
+        let report = s.run().unwrap();
+        assert_eq!(report.history.len(), 2);
+        assert!(!report.recalls.is_empty());
+        // A second run() call trains nothing further.
+        let report2 = s.run().unwrap();
+        assert_eq!(report2.history.len(), 2);
+    }
+
+    #[test]
+    fn eval_every_hook_records_log() {
+        let mut s = tiny_session(4);
+        s.add_hook(Box::new(EvalEvery::new(2)));
+        s.run().unwrap();
+        let epochs: Vec<usize> = s.eval_log().iter().map(|(e, _)| *e).collect();
+        assert_eq!(epochs, vec![2, 4]);
+        assert!(!s.eval_log()[0].1.is_empty());
+    }
+
+    #[test]
+    fn checkpoint_every_hook_writes_resumable_file() {
+        let path = tmp_path("hook");
+        let mut s = tiny_session(3);
+        s.add_hook(Box::new(CheckpointEvery::new(3, &path)));
+        s.run().unwrap();
+        assert!(path.exists(), "hook should have written {path:?}");
+        let source = InMemorySource::new("community", community_matrix(60, 40, 3));
+        let resumed = TrainSession::resume_with(&path, &source, tiny_cfg(3), None).unwrap();
+        assert_eq!(resumed.trainer.current_epoch(), 3);
+        assert_eq!(resumed.remaining_epochs(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn early_stop_hook_halts_on_plateau() {
+        let mut s = tiny_session(50);
+        // Demand an absurd 90% per-epoch improvement: plateau immediately.
+        s.add_hook(Box::new(EarlyStopOnPlateau::new(2, 0.9)));
+        let report = s.run().unwrap();
+        assert!(s.stopped());
+        assert!(report.history.len() < 50, "ran {} epochs", report.history.len());
+        // Stepping a stopped session is an error.
+        assert!(s.step().is_err());
+    }
+
+    #[test]
+    fn config_hooks_installed_from_session_keys() {
+        let path = tmp_path("cfgkeys");
+        let cfg = AlxConfig {
+            scale: 0.0008,
+            cores: 2,
+            checkpoint_every: 2,
+            eval_every: 2,
+            checkpoint_path: path.display().to_string(),
+            train: TrainConfig {
+                dim: 8,
+                epochs: 2,
+                batch_rows: 16,
+                batch_width: 4,
+                ..TrainConfig::default()
+            },
+            ..AlxConfig::default()
+        };
+        let mut s = TrainSession::from_config(cfg).unwrap();
+        s.run().unwrap();
+        assert_eq!(s.eval_log().len(), 1);
+        assert!(path.exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_model_shape() {
+        let path = tmp_path("mismatch");
+        let mut s = tiny_session(2);
+        s.step().unwrap();
+        s.checkpoint(&path).unwrap();
+        // Different dim: the checkpoint must be rejected.
+        let mut cfg = tiny_cfg(2);
+        cfg.train.dim = 16;
+        let source = InMemorySource::new("community", community_matrix(60, 40, 3));
+        assert!(TrainSession::resume_with(&path, &source, cfg, None).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -16,6 +16,12 @@
 //!
 //! At runtime the [`runtime`] module loads the AOT artifacts through PJRT;
 //! python is never on the training path.
+//!
+//! The public job API is session-based: a [`data::DataSource`] acquires
+//! the matrix and a [`coordinator::TrainSession`] drives the lifecycle
+//! step by step, with checkpoint/resume and per-epoch hooks
+//! (`eval_every`, `checkpoint_every`, early stopping). See the crate
+//! README and `examples/quickstart.rs`.
 
 // Numeric-kernel style: indexed loops deliberately mirror the paper's
 // algebra, and the hot-path entry points thread many explicit knobs.
@@ -26,6 +32,7 @@ pub mod als;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;
+pub mod data;
 pub mod densebatch;
 pub mod eval;
 pub mod harness;
@@ -39,11 +46,15 @@ pub mod webgraph;
 
 /// Most commonly used types, re-exported for examples and downstream users.
 pub mod prelude {
-    pub use crate::als::{PrecisionPolicy, SolverKind, TrainConfig, Trainer};
+    pub use crate::als::{EpochStats, PrecisionPolicy, SolverKind, TrainConfig, Trainer};
     pub use crate::config::AlxConfig;
-    pub use crate::coordinator::Coordinator;
+    pub use crate::coordinator::{
+        CheckpointEvery, Coordinator, EarlyStopOnPlateau, EpochHook, EvalEvery, HookAction,
+        RunReport, TrainSession,
+    };
+    pub use crate::data::{DataSource, Dataset, EdgeListSource, InMemorySource, WebGraphSource};
     pub use crate::densebatch::{DenseBatch, DenseBatcher};
-    pub use crate::eval::{recall_at_k, EvalConfig};
+    pub use crate::eval::{recall_at_k, EvalConfig, RecallReport};
     pub use crate::linalg::Mat;
     pub use crate::sparse::Csr;
     pub use crate::topo::Topology;

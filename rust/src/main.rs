@@ -5,6 +5,9 @@
 //! ```text
 //! alx generate  --variant in-dense --scale 0.01        # build a dataset
 //! alx train     [--config cfg.toml] [--key value ...]  # train + eval
+//! alx train     --source edge-list --data edges.txt    # train on a file
+//! alx train     --checkpoint-every 4 --eval-every 2    # session hooks
+//! alx train     --resume run.ckpt                      # continue a run
 //! alx table1    --scale 0.001                          # Table 1 stats
 //! alx table2    --scale 0.002 --epochs 8               # Table 2 recalls
 //! alx fig4      --lambda 1e-4                          # precision study
@@ -13,10 +16,15 @@
 //! alx grid      --coarse                               # λ×α grid search
 //! alx info                                             # topology/env info
 //! ```
+//!
+//! `train` is a thin driver over [`TrainSession`]: `--checkpoint-every`,
+//! `--eval-every` and `--early-stop` install the matching epoch hooks, and
+//! `--resume <ckpt>` restores the tables and epoch counter, then trains to
+//! the configured `--epochs` total.
 
 use alx::als::TrainConfig;
 use alx::config::{AlxConfig, KvConfig};
-use alx::coordinator::{grid_search, Coordinator, GridSpec};
+use alx::coordinator::{grid_search, GridSpec, TrainSession};
 use alx::harness;
 use alx::topo::Topology;
 use alx::util::stats::human_bytes;
@@ -80,6 +88,12 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("variant", "dataset.variant"),
         ("scale", "dataset.scale"),
         ("data-seed", "dataset.seed"),
+        ("source", "data.source"),
+        ("data", "data.path"),
+        ("checkpoint-every", "session.checkpoint_every"),
+        ("eval-every", "session.eval_every"),
+        ("early-stop", "session.early_stop_patience"),
+        ("checkpoint", "session.checkpoint_path"),
         ("cores", "topology.cores"),
         ("dim", "train.dim"),
         ("epochs", "train.epochs"),
@@ -127,10 +141,12 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = resolve_config(args)?;
+    let dataset_desc = match cfg.data_source.as_str() {
+        "webgraph" => format!("{} scale={}", cfg.variant.name(), cfg.scale),
+        _ => format!("{}:{}", cfg.data_source, cfg.data_path),
+    };
     println!(
-        "training {} scale={} d={} epochs={} λ={:.0e} α={:.0e} solver={} precision={} engine={} cores={}",
-        cfg.variant.name(),
-        cfg.scale,
+        "training {dataset_desc} d={} epochs={} λ={:.0e} α={:.0e} solver={} precision={} engine={} cores={}",
         cfg.train.dim,
         cfg.train.epochs,
         cfg.train.lambda,
@@ -140,17 +156,28 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.engine,
         cfg.cores,
     );
-    let mut coord = Coordinator::prepare(cfg)?;
-    if let Some(path) = args.get("resume") {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-        coord.trainer.load_checkpoint(&mut f)?;
-        println!("resumed from {path} at epoch {}", coord.trainer.current_epoch());
-    }
-    let report = coord.run()?;
-    if let Some(path) = args.get("checkpoint") {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        coord.trainer.save_checkpoint(&mut f)?;
-        println!("checkpoint written to {path}");
+    let mut session = match args.get("resume") {
+        Some(path) => {
+            let s = TrainSession::resume(path, cfg)?;
+            println!(
+                "resumed from {path} at epoch {} ({} epochs remaining)",
+                s.trainer.current_epoch(),
+                s.remaining_epochs()
+            );
+            s
+        }
+        None => TrainSession::from_config(cfg)?,
+    };
+    let report = session.run()?;
+    // Final checkpoint whenever the user asked for checkpointing anywhere:
+    // periodic hooks, an explicit --checkpoint flag, or a non-default
+    // session.checkpoint_path in the config file.
+    let want_final = session.cfg.checkpoint_every > 0
+        || args.has("checkpoint")
+        || session.cfg.checkpoint_path != AlxConfig::default().checkpoint_path;
+    if want_final {
+        session.checkpoint(&session.cfg.checkpoint_path)?;
+        println!("checkpoint written to {}", session.cfg.checkpoint_path);
     }
     println!("\nepoch  objective        wall(s)  simulated(s)  comm");
     for h in &report.history {
@@ -163,11 +190,23 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             human_bytes(h.comm_bytes)
         );
     }
+    let final_epoch = report.history.last().map(|h| h.epoch);
+    for (epoch, recalls) in session.eval_log() {
+        if Some(*epoch) == final_epoch {
+            continue; // identical to the final report printed below
+        }
+        for r in recalls {
+            println!("epoch {epoch:>3}: Recall@{:<3} = {:.4}", r.k, r.recall);
+        }
+    }
     println!();
     for r in &report.recalls {
         println!("Recall@{:<3} = {:.4}  ({} test rows)", r.k, r.recall, r.rows_evaluated);
     }
-    println!("\nprofiler breakdown:\n{}", coord.trainer.profiler.report());
+    if session.stopped() {
+        println!("(stopped early: objective plateau)");
+    }
+    println!("\nprofiler breakdown:\n{}", session.trainer.profiler.report());
     Ok(())
 }
 
@@ -292,7 +331,9 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 fn usage() -> ! {
     eprintln!(
         "usage: alx <generate|train|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
-         see `alx <cmd> --help` patterns in README.md"
+         train flags: --source webgraph|edge-list --data <file> --resume <ckpt>\n\
+                      --checkpoint <path> --checkpoint-every <k> --eval-every <k> --early-stop <k>\n\
+         see the CLI cheatsheet in README.md"
     );
     std::process::exit(2)
 }

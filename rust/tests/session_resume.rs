@@ -1,0 +1,215 @@
+//! The session lifecycle's core contract: `step()` / `checkpoint()` /
+//! `resume()` is **bitwise deterministic** — a run interrupted at epoch k
+//! and resumed from its checkpoint produces tables and remaining history
+//! bitwise identical to the uninterrupted run, at every thread count and
+//! in both storage precisions (tables round-trip losslessly through the
+//! checkpoint format).
+
+use alx::als::{EpochStats, PrecisionPolicy, TrainConfig};
+use alx::config::AlxConfig;
+use alx::coordinator::TrainSession;
+use alx::data::InMemorySource;
+use alx::sparse::Csr;
+use alx::util::Pcg64;
+use std::path::PathBuf;
+
+/// Two-community implicit matrix (same generator family as the trainer's
+/// unit tests).
+fn community_matrix(users: usize, items: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut t = Vec::new();
+    for u in 0..users as u32 {
+        let comm = (u as usize) % 2;
+        for _ in 0..6 {
+            let item = if rng.next_f64() < 0.9 {
+                comm * (items / 2) + rng.range(0, items / 2)
+            } else {
+                rng.range(0, items)
+            };
+            t.push((u, item as u32, 1.0));
+        }
+    }
+    Csr::from_coo(users, items, &t)
+}
+
+fn cfg(epochs: usize, threads: usize, precision: PrecisionPolicy) -> AlxConfig {
+    AlxConfig {
+        cores: 4,
+        train: TrainConfig {
+            dim: 12,
+            epochs,
+            lambda: 0.05,
+            alpha: 0.01,
+            batch_rows: 16,
+            batch_width: 4,
+            threads,
+            precision,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    }
+}
+
+fn source() -> InMemorySource {
+    InMemorySource::new("community", community_matrix(60, 40, 3))
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("alx_resume_{}_{}.ckpt", tag, std::process::id()))
+}
+
+/// The timing-free fingerprint of an epoch (seconds vary run to run).
+fn fingerprint(h: &EpochStats) -> (usize, Option<u64>, u64) {
+    (h.epoch, h.objective.map(f64::to_bits), h.comm_bytes)
+}
+
+/// Train all `epochs` epochs in one session.
+fn run_uninterrupted(
+    epochs: usize,
+    threads: usize,
+    precision: PrecisionPolicy,
+) -> (Vec<f32>, Vec<f32>, Vec<(usize, Option<u64>, u64)>) {
+    let mut s = TrainSession::new(&source(), cfg(epochs, threads, precision)).unwrap();
+    while s.remaining_epochs() > 0 {
+        s.step().unwrap();
+    }
+    (
+        s.trainer.w.to_dense().data,
+        s.trainer.h.to_dense().data,
+        s.history().iter().map(fingerprint).collect(),
+    )
+}
+
+/// Train `stop_at` epochs, checkpoint, drop the session, resume from the
+/// file in a brand-new session, and finish the run. Returns the final
+/// tables and only the post-resume history.
+fn run_interrupted(
+    epochs: usize,
+    stop_at: usize,
+    threads: usize,
+    precision: PrecisionPolicy,
+    tag: &str,
+) -> (Vec<f32>, Vec<f32>, Vec<(usize, Option<u64>, u64)>) {
+    let path = tmp_path(tag);
+    {
+        let mut s = TrainSession::new(&source(), cfg(epochs, threads, precision)).unwrap();
+        for _ in 0..stop_at {
+            s.step().unwrap();
+        }
+        s.checkpoint(&path).unwrap();
+    }
+    let mut s =
+        TrainSession::resume_with(&path, &source(), cfg(epochs, threads, precision), None)
+            .unwrap();
+    assert_eq!(s.trainer.current_epoch(), stop_at);
+    while s.remaining_epochs() > 0 {
+        s.step().unwrap();
+    }
+    let out = (
+        s.trainer.w.to_dense().data,
+        s.trainer.h.to_dense().data,
+        s.history().iter().map(fingerprint).collect(),
+    );
+    let _ = std::fs::remove_file(&path);
+    out
+}
+
+fn assert_resume_bitwise(threads: usize, precision: PrecisionPolicy, tag: &str) {
+    const EPOCHS: usize = 6;
+    const STOP_AT: usize = 3;
+    let (w_full, h_full, hist_full) = run_uninterrupted(EPOCHS, threads, precision);
+    let (w_res, h_res, hist_res) = run_interrupted(EPOCHS, STOP_AT, threads, precision, tag);
+    assert_eq!(w_full, w_res, "W differs after resume ({tag})");
+    assert_eq!(h_full, h_res, "H differs after resume ({tag})");
+    // The resumed session's history must be exactly the tail of the
+    // uninterrupted run: same epoch numbers, bitwise-equal objectives,
+    // same comm accounting.
+    assert_eq!(hist_res.len(), EPOCHS - STOP_AT);
+    assert_eq!(&hist_full[STOP_AT..], &hist_res[..], "remaining history differs ({tag})");
+}
+
+#[test]
+fn resume_is_bitwise_identical_serial_mixed() {
+    assert_resume_bitwise(1, PrecisionPolicy::Mixed, "t1_mixed");
+}
+
+#[test]
+fn resume_is_bitwise_identical_parallel_mixed() {
+    assert_resume_bitwise(4, PrecisionPolicy::Mixed, "t4_mixed");
+}
+
+#[test]
+fn resume_is_bitwise_identical_serial_f32() {
+    assert_resume_bitwise(1, PrecisionPolicy::F32, "t1_f32");
+}
+
+#[test]
+fn resume_is_bitwise_identical_parallel_f32() {
+    assert_resume_bitwise(4, PrecisionPolicy::F32, "t4_f32");
+}
+
+#[test]
+fn resume_across_thread_counts_matches() {
+    // Checkpoint written by a serial run, resumed by a 4-thread run (and
+    // vice versa): the pipelined engine's determinism contract extends
+    // through the checkpoint boundary.
+    let path = tmp_path("cross_threads");
+    {
+        let mut s = TrainSession::new(&source(), cfg(6, 1, PrecisionPolicy::F32)).unwrap();
+        for _ in 0..3 {
+            s.step().unwrap();
+        }
+        s.checkpoint(&path).unwrap();
+    }
+    let mut resumed =
+        TrainSession::resume_with(&path, &source(), cfg(6, 4, PrecisionPolicy::F32), None)
+            .unwrap();
+    while resumed.remaining_epochs() > 0 {
+        resumed.step().unwrap();
+    }
+    let (w_full, h_full, _) = run_uninterrupted(6, 1, PrecisionPolicy::F32);
+    assert_eq!(w_full, resumed.trainer.w.to_dense().data);
+    assert_eq!(h_full, resumed.trainer.h.to_dense().data);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn config_driven_resume_matches_cli_path() {
+    // What `alx train --resume <ckpt>` does: both sessions built purely
+    // from the (webgraph-source) config.
+    let make_cfg = || AlxConfig {
+        scale: 0.0008,
+        cores: 3,
+        train: TrainConfig {
+            dim: 8,
+            epochs: 4,
+            lambda: 0.03,
+            alpha: 0.01,
+            batch_rows: 32,
+            batch_width: 8,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    };
+    let path = tmp_path("cfg_driven");
+
+    let mut full = TrainSession::from_config(make_cfg()).unwrap();
+    while full.remaining_epochs() > 0 {
+        full.step().unwrap();
+    }
+
+    {
+        let mut s = TrainSession::from_config(make_cfg()).unwrap();
+        s.step().unwrap();
+        s.step().unwrap();
+        s.checkpoint(&path).unwrap();
+    }
+    let mut resumed = TrainSession::resume(&path, make_cfg()).unwrap();
+    assert_eq!(resumed.trainer.current_epoch(), 2);
+    while resumed.remaining_epochs() > 0 {
+        resumed.step().unwrap();
+    }
+    assert_eq!(full.trainer.w.to_dense().data, resumed.trainer.w.to_dense().data);
+    assert_eq!(full.trainer.h.to_dense().data, resumed.trainer.h.to_dense().data);
+    let _ = std::fs::remove_file(&path);
+}
