@@ -48,10 +48,10 @@ fn main() -> anyhow::Result<()> {
     println!(
         "dataset {}: {}x{}, {} edges ({} test rows)",
         session.dataset.name,
-        session.dataset.matrix.rows,
-        session.dataset.matrix.cols,
-        session.dataset.matrix.nnz(),
-        session.split.test.len()
+        session.dataset.rows,
+        session.dataset.cols,
+        session.dataset.nnz,
+        session.test.len()
     );
 
     // 3. Step through training one epoch at a time — the session is in

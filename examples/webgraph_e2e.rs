@@ -81,7 +81,7 @@ fn main() -> anyhow::Result<()> {
             human_bytes(h.comm_bytes)
         );
     }
-    println!("\nstrong-generalization eval ({} held-out rows):", coord.split.test.len());
+    println!("\nstrong-generalization eval ({} held-out rows):", coord.test.len());
     for r in &report.recalls {
         println!("  Recall@{:<3} = {:.4}", r.k, r.recall);
     }

@@ -1,0 +1,151 @@
+//! Streaming ingestion — the out-of-core tentpole measurement.
+//!
+//! Proves the acceptance bar: a dataset whose full `Csr` is ~2× larger
+//! than the configured ingest budget trains end-to-end through the
+//! streaming path, with peak ingestion memory bounded by the chunk size
+//! (not the matrix size) and an objective bitwise identical to the
+//! in-memory path. Also times epoch-0 load for the bulk-IO `ALXCSR01`
+//! codec and the chunked cursor.
+//!
+//! ```bash
+//! cargo bench --bench streaming_ingest
+//! ```
+//! Record the printed table in EXPERIMENTS.md §Perf.
+
+use alx::config::AlxConfig;
+use alx::coordinator::TrainSession;
+use alx::data::{InMemorySource, StreamingSource};
+use alx::prelude::*;
+use alx::util::{mem, Pcg64, Timer};
+
+fn build_matrix(users: usize, items: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut t = Vec::new();
+    for u in 0..users as u32 {
+        for _ in 0..per_row {
+            t.push((u, rng.next_zipf(items, 1.1) as u32, 1.0f32));
+        }
+    }
+    Csr::from_coo(users, items, &t)
+}
+
+fn session_cfg(epochs: usize) -> AlxConfig {
+    AlxConfig {
+        cores: 8,
+        train: TrainConfig {
+            dim: 16,
+            epochs,
+            lambda: 1e-3,
+            alpha: 1e-4,
+            batch_rows: 64,
+            batch_width: 8,
+            threads: 1,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    }
+}
+
+fn main() {
+    let m = build_matrix(60_000, 30_000, 16, 7);
+    let matrix_bytes = m.memory_bytes();
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let path01 = dir.join(format!("alx_ingest_bench_{pid}.csr01"));
+    let path02 = dir.join(format!("alx_ingest_bench_{pid}.csr02"));
+    let chunk_rows = 4096usize;
+
+    println!(
+        "streaming_ingest: {}x{}, {} nnz, in-memory Csr = {}",
+        m.rows,
+        m.cols,
+        m.nnz(),
+        human(matrix_bytes)
+    );
+
+    // --- epoch-0 load time: bulk-IO ALXCSR01 round trip ------------------
+    {
+        let t = Timer::start();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path01).unwrap());
+        m.write_to(&mut f).unwrap();
+        use std::io::Write;
+        f.flush().unwrap();
+        let write_s = t.elapsed_secs();
+        let t = Timer::start();
+        let file = std::fs::File::open(&path01).unwrap();
+        let len = file.metadata().unwrap().len();
+        let mut r = std::io::BufReader::new(file);
+        let m2 = Csr::read_from_limited(&mut r, Some(len)).unwrap();
+        let read_s = t.elapsed_secs();
+        assert_eq!(m2, m);
+        println!("ALXCSR01 bulk IO : write {write_s:.3}s, read {read_s:.3}s ({len} bytes)");
+    }
+
+    // --- chunked write + streaming cursor --------------------------------
+    {
+        let t = Timer::start();
+        let f = std::io::BufWriter::new(std::fs::File::create(&path02).unwrap());
+        alx::sparse::write_chunked(&m, f, chunk_rows).unwrap();
+        let write_s = t.elapsed_secs();
+        println!("ALXCSR02 write   : {write_s:.3}s ({chunk_rows} rows/chunk)");
+    }
+
+    // --- the acceptance bar ---------------------------------------------
+    // Budget = half the in-memory matrix: the full Csr is 2x over budget,
+    // yet the streaming cursor must ingest within it.
+    let budget = matrix_bytes / 2;
+    let t = Timer::start();
+    let streamed = StreamingSource::new(&path02, budget)
+        .load_split(8, 0.9, 0.25, AlxConfig::default().data_seed ^ 0x9)
+        .unwrap();
+    let ingest_s = t.elapsed_secs();
+    let peak = streamed.ingest.peak_chunk_bytes;
+    assert!(
+        peak <= budget,
+        "peak chunk {} exceeded the {} budget",
+        human(peak),
+        human(budget)
+    );
+    println!(
+        "streaming ingest : {ingest_s:.3}s, {} chunks, peak chunk {} (budget {}, matrix {})",
+        streamed.ingest.chunks,
+        human(peak),
+        human(budget),
+        human(matrix_bytes)
+    );
+    drop(streamed);
+
+    // --- end-to-end equivalence on a one-epoch run -----------------------
+    let mut cfg = session_cfg(1);
+    cfg.ingest_budget_mb = ((budget >> 20) as usize).max(1);
+    let t = Timer::start();
+    let mut s_stream = TrainSession::from_streaming(&path02, cfg, None).unwrap();
+    let stream_build_s = t.elapsed_secs();
+    let obj_stream = s_stream.step().unwrap().objective.unwrap();
+
+    let t = Timer::start();
+    let source = InMemorySource::new("bench", m.clone());
+    let mut s_mem = TrainSession::new(&source, session_cfg(1)).unwrap();
+    let mem_build_s = t.elapsed_secs();
+    let obj_mem = s_mem.step().unwrap().objective.unwrap();
+
+    assert_eq!(
+        obj_stream.to_bits(),
+        obj_mem.to_bits(),
+        "streaming epoch objective must be bitwise identical"
+    );
+    println!(
+        "epoch-1 objective: {obj_stream:.4} (bitwise identical streaming vs in-memory)"
+    );
+    println!(
+        "session build    : streaming {stream_build_s:.3}s vs in-memory {mem_build_s:.3}s"
+    );
+    println!("peak RSS         : {}", human(mem::peak_rss_bytes()));
+
+    let _ = std::fs::remove_file(&path01);
+    let _ = std::fs::remove_file(&path02);
+}
+
+fn human(b: u64) -> String {
+    alx::util::stats::human_bytes(b)
+}

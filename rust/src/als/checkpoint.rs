@@ -4,7 +4,13 @@
 //! need resumable state. A checkpoint stores both tables in their storage
 //! precision (bf16 tables round-trip losslessly) plus enough metadata to
 //! verify the topology/config at load time. Format: a single little-endian
-//! binary file, `ALXCKPT1` magic.
+//! binary file, `ALXCKPT2` magic (the `ALXCKPT1` layout is still read).
+//!
+//! `ALXCKPT2` additionally persists the per-epoch **objective log** — the
+//! `(epoch, objective)` sequence of every epoch up to the checkpoint — so
+//! session hooks with cross-epoch state (early stopping) can reconstruct
+//! their exact state on resume and a resumed run stops at the same epoch
+//! as an uninterrupted one.
 
 use crate::sharding::{ShardedTable, Storage};
 use std::io::{Read, Write};
@@ -68,19 +74,29 @@ fn read_table(
     Ok(t)
 }
 
-/// Save a checkpoint of both tables.
+/// One persisted epoch record: `(epoch, objective)`.
+pub type ObjectiveLogEntry = (u64, Option<f64>);
+
+/// Save a checkpoint of both tables plus the objective log.
 pub fn save(
     w: &mut impl Write,
     meta: &CheckpointMeta,
     users: &ShardedTable,
     items: &ShardedTable,
+    objective_log: &[ObjectiveLogEntry],
 ) -> std::io::Result<()> {
-    w.write_all(b"ALXCKPT1")?;
+    w.write_all(b"ALXCKPT2")?;
     w.write_all(&meta.epoch.to_le_bytes())?;
     w.write_all(&meta.dim.to_le_bytes())?;
     w.write_all(&meta.users.to_le_bytes())?;
     w.write_all(&meta.items.to_le_bytes())?;
     w.write_all(&[u8::from(meta.storage_bf16)])?;
+    w.write_all(&(objective_log.len() as u64).to_le_bytes())?;
+    for &(epoch, obj) in objective_log {
+        w.write_all(&epoch.to_le_bytes())?;
+        w.write_all(&[u8::from(obj.is_some())])?;
+        w.write_all(&obj.unwrap_or(0.0).to_bits().to_le_bytes())?;
+    }
     write_table(w, users)?;
     write_table(w, items)?;
     Ok(())
@@ -88,16 +104,20 @@ pub fn save(
 
 /// Load a checkpoint; tables are resharded onto `num_shards` cores (the
 /// slice size may differ between save and resume — uniform sharding makes
-/// relayout trivial).
+/// relayout trivial). Accepts both `ALXCKPT2` and the legacy `ALXCKPT1`
+/// layout (which carries an empty objective log).
 pub fn load(
     r: &mut impl Read,
     num_shards: usize,
-) -> std::io::Result<(CheckpointMeta, ShardedTable, ShardedTable)> {
+) -> std::io::Result<(CheckpointMeta, ShardedTable, ShardedTable, Vec<ObjectiveLogEntry>)> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != b"ALXCKPT1" {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad checkpoint magic"));
-    }
+    let v2 = match &magic {
+        b"ALXCKPT2" => true,
+        b"ALXCKPT1" => false,
+        _ => return Err(bad("bad checkpoint magic")),
+    };
     let mut b8 = [0u8; 8];
     let mut b4 = [0u8; 4];
     let mut b1 = [0u8; 1];
@@ -113,14 +133,47 @@ pub fn load(
     let storage_bf16 = b1[0] != 0;
     let storage = if storage_bf16 { Storage::Bf16 } else { Storage::F32 };
     let meta = CheckpointMeta { epoch, dim, users: users_n, items: items_n, storage_bf16 };
+    let mut objective_log = Vec::new();
+    if v2 {
+        r.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8);
+        // One record per trained epoch at most. `epoch` is itself
+        // untrusted, so never preallocate from it: grow the Vec only as
+        // records actually arrive — a lying length hits EOF, not an
+        // allocation-failure abort.
+        if n > epoch {
+            return Err(bad("objective log longer than the epoch count"));
+        }
+        for _ in 0..n {
+            r.read_exact(&mut b8)?;
+            let e = u64::from_le_bytes(b8);
+            r.read_exact(&mut b1)?;
+            let has = b1[0] != 0;
+            r.read_exact(&mut b8)?;
+            let bits = u64::from_le_bytes(b8);
+            objective_log.push((e, has.then_some(f64::from_bits(bits))));
+        }
+    }
     let users = read_table(r, users_n as usize, dim as usize, num_shards, storage)?;
     let items = read_table(r, items_n as usize, dim as usize, num_shards, storage)?;
-    Ok((meta, users, items))
+    Ok((meta, users, items, objective_log))
 }
 
 impl super::Trainer {
-    /// Write a checkpoint of the current model state.
+    /// Write a checkpoint of the current model state (no objective log —
+    /// the trainer does not track per-epoch history; sessions use
+    /// [`super::Trainer::save_checkpoint_with`]).
     pub fn save_checkpoint(&self, w: &mut impl Write) -> std::io::Result<()> {
+        self.save_checkpoint_with(w, &[])
+    }
+
+    /// Write a checkpoint of the current model state plus the session's
+    /// objective log (for hook-state reconstruction on resume).
+    pub fn save_checkpoint_with(
+        &self,
+        w: &mut impl Write,
+        objective_log: &[ObjectiveLogEntry],
+    ) -> std::io::Result<()> {
         let meta = CheckpointMeta {
             epoch: self.current_epoch() as u64,
             dim: self.cfg.dim as u32,
@@ -128,14 +181,18 @@ impl super::Trainer {
             items: self.h.rows as u64,
             storage_bf16: self.cfg.precision.storage() == Storage::Bf16,
         };
-        save(w, &meta, &self.w, &self.h)
+        save(w, &meta, &self.w, &self.h, objective_log)
     }
 
-    /// Restore tables (and the epoch counter) from a checkpoint. The
-    /// checkpoint must match the trainer's dim, matrix shape and storage
-    /// precision; the shard count may differ (uniform resharding).
-    pub fn load_checkpoint(&mut self, r: &mut impl Read) -> anyhow::Result<()> {
-        let (meta, users, items) = load(r, self.topo.num_cores)?;
+    /// Restore tables (and the epoch counter) from a checkpoint, returning
+    /// the persisted objective log. The checkpoint must match the
+    /// trainer's dim, matrix shape and storage precision; the shard count
+    /// may differ (uniform resharding).
+    pub fn load_checkpoint(
+        &mut self,
+        r: &mut impl Read,
+    ) -> anyhow::Result<Vec<ObjectiveLogEntry>> {
+        let (meta, users, items, objective_log) = load(r, self.topo.num_cores)?;
         anyhow::ensure!(
             meta.dim as usize == self.cfg.dim,
             "checkpoint dim mismatch: checkpoint has d={}, config wants d={}",
@@ -161,7 +218,7 @@ impl super::Trainer {
         self.w = users;
         self.h = items;
         self.set_epoch(meta.epoch as usize);
-        Ok(())
+        Ok(objective_log)
     }
 }
 
@@ -181,8 +238,9 @@ mod tests {
         let h = table(31, 4, 3, Storage::Bf16, 2);
         let meta = CheckpointMeta { epoch: 5, dim: 4, users: 23, items: 31, storage_bf16: true };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h).unwrap();
-        let (m2, u2, h2) = load(&mut &buf[..], 3).unwrap();
+        save(&mut buf, &meta, &u, &h, &[]).unwrap();
+        let (m2, u2, h2, log) = load(&mut &buf[..], 3).unwrap();
+        assert!(log.is_empty());
         assert_eq!(meta, m2);
         assert!(u2.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
         assert!(h2.to_dense().max_abs_diff(&h.to_dense()) == 0.0);
@@ -194,9 +252,9 @@ mod tests {
         let h = table(40, 6, 8, Storage::F32, 4);
         let meta = CheckpointMeta { epoch: 1, dim: 6, users: 40, items: 40, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h).unwrap();
+        save(&mut buf, &meta, &u, &h, &[]).unwrap();
         // Resume on a 3-core slice.
-        let (_, u2, _) = load(&mut &buf[..], 3).unwrap();
+        let (_, u2, _, _) = load(&mut &buf[..], 3).unwrap();
         assert_eq!(u2.num_shards(), 3);
         assert!(u2.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
     }
@@ -207,8 +265,8 @@ mod tests {
         let h = table(19, 5, 2, Storage::F32, 22);
         let meta = CheckpointMeta { epoch: 9, dim: 5, users: 17, items: 19, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h).unwrap();
-        let (m2, u2, h2) = load(&mut &buf[..], 2).unwrap();
+        save(&mut buf, &meta, &u, &h, &[]).unwrap();
+        let (m2, u2, h2, _) = load(&mut &buf[..], 2).unwrap();
         assert_eq!(meta, m2);
         assert!(u2.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
         assert!(h2.to_dense().max_abs_diff(&h.to_dense()) == 0.0);
@@ -221,12 +279,55 @@ mod tests {
     }
 
     #[test]
+    fn objective_log_roundtrips_bitwise() {
+        let u = table(9, 3, 2, Storage::F32, 41);
+        let h = table(7, 3, 2, Storage::F32, 42);
+        let meta = CheckpointMeta { epoch: 3, dim: 3, users: 9, items: 7, storage_bf16: false };
+        let log = vec![(1u64, Some(123.456f64)), (2, None), (3, Some(f64::MIN_POSITIVE))];
+        let mut buf = Vec::new();
+        save(&mut buf, &meta, &u, &h, &log).unwrap();
+        let (_, _, _, log2) = load(&mut &buf[..], 2).unwrap();
+        assert_eq!(log, log2);
+    }
+
+    #[test]
+    fn oversized_objective_log_rejected() {
+        let u = table(4, 2, 1, Storage::F32, 43);
+        let h = table(4, 2, 1, Storage::F32, 44);
+        let meta = CheckpointMeta { epoch: 1, dim: 2, users: 4, items: 4, storage_bf16: false };
+        let mut buf = Vec::new();
+        save(&mut buf, &meta, &u, &h, &[(1, Some(1.0))]).unwrap();
+        // Corrupt the log length (offset: 8 magic + 29 meta) to a huge value.
+        buf[37..45].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(load(&mut &buf[..], 1).is_err());
+    }
+
+    #[test]
+    fn legacy_v1_checkpoint_still_loads() {
+        let u = table(6, 3, 2, Storage::F32, 45);
+        let h = table(5, 3, 2, Storage::F32, 46);
+        let meta = CheckpointMeta { epoch: 2, dim: 3, users: 6, items: 5, storage_bf16: false };
+        let mut buf = Vec::new();
+        save(&mut buf, &meta, &u, &h, &[]).unwrap();
+        // Rewrite as the v1 layout: old magic, no log-length field.
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(b"ALXCKPT1");
+        v1.extend_from_slice(&buf[8..37]); // meta
+        v1.extend_from_slice(&buf[45..]); // tables (skip the empty log len)
+        let (m2, u2, h2, log) = load(&mut &v1[..], 2).unwrap();
+        assert_eq!(m2, meta);
+        assert!(log.is_empty());
+        assert_eq!(u2.to_dense().data, u.to_dense().data);
+        assert_eq!(h2.to_dense().data, h.to_dense().data);
+    }
+
+    #[test]
     fn truncated_file_rejected_at_every_boundary() {
         let u = table(6, 3, 2, Storage::Bf16, 31);
         let h = table(5, 3, 2, Storage::Bf16, 32);
         let meta = CheckpointMeta { epoch: 2, dim: 3, users: 6, items: 5, storage_bf16: true };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h).unwrap();
+        save(&mut buf, &meta, &u, &h, &[]).unwrap();
         // Truncations inside the magic, the header, and each table payload
         // must all surface as errors, never as silently-short tables.
         for cut in [4, 12, 30, buf.len() / 2, buf.len() - 1] {

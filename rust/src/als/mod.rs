@@ -18,6 +18,7 @@ pub mod local_stats;
 pub mod stats;
 pub mod trainer;
 
+pub use checkpoint::ObjectiveLogEntry;
 pub use engine::{NativeEngine, SolveEngine};
 pub use trainer::{EpochStats, TrainConfig, Trainer};
 

@@ -24,7 +24,7 @@ use crate::coordinator::pipeline::{BatchFeeder, BoundedQueue, CloseGuard};
 use crate::densebatch::DenseBatcher;
 use crate::linalg::{Mat, SolveOptions, SolverKind};
 use crate::sharding::{ShardViewMut, ShardedTable};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, ShardedCsr};
 use crate::topo::Topology;
 use crate::util::threads;
 use crate::util::timer::{Profiler, Timer};
@@ -116,10 +116,11 @@ pub struct EpochStats {
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub topo: Topology,
-    /// Training matrix (users × items); shared with the feeder threads.
-    train: Arc<Csr>,
+    /// Training matrix (users × items) in row-sharded storage; shared with
+    /// the feeder threads.
+    train: Arc<ShardedCsr>,
     /// Its transpose (items × users) for the item pass.
-    train_t: Arc<Csr>,
+    train_t: Arc<ShardedCsr>,
     /// User embedding table W, sharded over the slice.
     pub w: ShardedTable,
     /// Item embedding table H, sharded over the slice.
@@ -149,13 +150,44 @@ impl Trainer {
     }
 
     /// Build a trainer with an explicit engine (e.g. `runtime::XlaEngine`).
+    /// Copies the monolithic matrix into row-sharded storage; callers that
+    /// already hold shards (the streaming ingestion path) should use
+    /// [`Trainer::from_sharded`] instead.
     pub fn with_engine(
         train: &Csr,
         cfg: TrainConfig,
         topo: Topology,
         engine: Box<dyn SolveEngine>,
     ) -> anyhow::Result<Trainer> {
+        let sharded = ShardedCsr::from_csr(train, topo.num_cores);
+        let train_t = sharded.transpose(topo.num_cores);
+        Self::from_sharded(Arc::new(sharded), Arc::new(train_t), cfg, topo, engine)
+    }
+
+    /// Build a trainer over pre-sharded training data: the matrix and its
+    /// transpose as row-range shards — what the streaming ingestion path
+    /// produces without ever materializing the full matrix.
+    pub fn from_sharded(
+        train: Arc<ShardedCsr>,
+        train_t: Arc<ShardedCsr>,
+        cfg: TrainConfig,
+        topo: Topology,
+        engine: Box<dyn SolveEngine>,
+    ) -> anyhow::Result<Trainer> {
         anyhow::ensure!(cfg.dim > 0 && cfg.batch_rows > 0 && cfg.batch_width > 0);
+        anyhow::ensure!(train.rows > 0 && train.cols > 0, "empty training matrix");
+        anyhow::ensure!(
+            train_t.rows == train.cols
+                && train_t.cols == train.rows
+                && train_t.nnz() == train.nnz(),
+            "train_t is not the transpose of train ({}x{}/{} vs {}x{}/{})",
+            train_t.rows,
+            train_t.cols,
+            train_t.nnz(),
+            train.rows,
+            train.cols,
+            train.nnz(),
+        );
         let mut rng = Pcg64::new(cfg.seed);
         let storage = cfg.precision.storage();
         let m = topo.num_cores;
@@ -179,8 +211,8 @@ impl Trainer {
 
         Ok(Trainer {
             batcher: DenseBatcher::new(cfg.batch_rows, cfg.batch_width),
-            train: Arc::new(train.clone()),
-            train_t: Arc::new(train.transpose()),
+            train,
+            train_t,
             w,
             h,
             topo,
@@ -217,7 +249,7 @@ impl Trainer {
         profiler: &Arc<Profiler>,
         comm: &CommStats,
         cfg: &TrainConfig,
-        matrix: &Arc<Csr>,
+        matrix: &Arc<ShardedCsr>,
         target: &mut ShardedTable,
         fixed: &ShardedTable,
         gramian: &Mat,
@@ -277,7 +309,7 @@ impl Trainer {
         profiler: &Arc<Profiler>,
         comm: &CommStats,
         cfg: &TrainConfig,
-        matrix: &Arc<Csr>,
+        matrix: &Arc<ShardedCsr>,
         view: ShardViewMut<'_>,
         fixed: &ShardedTable,
         gramian: &Mat,
@@ -527,7 +559,8 @@ impl Trainer {
         self.epoch = epoch;
     }
 
-    pub fn train_matrix(&self) -> &Csr {
+    /// The (row-sharded) training matrix.
+    pub fn train_matrix(&self) -> &ShardedCsr {
         self.train.as_ref()
     }
 }

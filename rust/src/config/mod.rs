@@ -109,6 +109,15 @@ pub struct AlxConfig {
     pub data_source: String,
     /// File path for file-backed data sources.
     pub data_path: String,
+    /// Stream `data.path` (an `ALXCSR02` file) through the out-of-core
+    /// ingestion path instead of materializing the full matrix.
+    pub data_streaming: bool,
+    /// Max bytes (in MiB) one chunk may need during streaming ingestion
+    /// (0 = unbounded).
+    pub ingest_budget_mb: usize,
+    /// Rows per chunk for `ALXCSR02` writers (`alx generate --out`,
+    /// `alx convert`).
+    pub chunk_rows: usize,
     /// Simulated TPU cores.
     pub cores: usize,
     /// Training hyper-parameters.
@@ -138,6 +147,9 @@ impl Default for AlxConfig {
             data_seed: 7,
             data_source: "webgraph".to_string(),
             data_path: String::new(),
+            data_streaming: false,
+            ingest_budget_mb: 0,
+            chunk_rows: crate::sparse::DEFAULT_CHUNK_ROWS,
             cores: 8,
             train: TrainConfig::default(),
             engine: "native".to_string(),
@@ -177,6 +189,16 @@ impl AlxConfig {
         }
         if let Some(v) = kv.get("data.path") {
             cfg.data_path = v.to_string();
+        }
+        if let Some(v) = kv.get_bool("data.streaming")? {
+            cfg.data_streaming = v;
+        }
+        if let Some(v) = kv.get_usize("data.ingest_budget_mb")? {
+            cfg.ingest_budget_mb = v; // 0 = unbounded
+        }
+        if let Some(v) = kv.get_usize("data.chunk_rows")? {
+            anyhow::ensure!(v >= 1, "data.chunk_rows must be >= 1");
+            cfg.chunk_rows = v;
         }
         if let Some(v) = kv.get_usize("topology.cores")? {
             anyhow::ensure!(v >= 1, "topology.cores must be >= 1");
@@ -312,6 +334,9 @@ cores = 16
 [data]
 source = "edge-list"
 path = "edges.txt"
+streaming = true
+ingest_budget_mb = 64
+chunk_rows = 4096
 
 [session]
 checkpoint_every = 2
@@ -324,6 +349,9 @@ checkpoint_path = "run.ckpt"
         let cfg = AlxConfig::from_kv(&kv).unwrap();
         assert_eq!(cfg.data_source, "edge-list");
         assert_eq!(cfg.data_path, "edges.txt");
+        assert!(cfg.data_streaming);
+        assert_eq!(cfg.ingest_budget_mb, 64);
+        assert_eq!(cfg.chunk_rows, 4096);
         assert_eq!(cfg.checkpoint_every, 2);
         assert_eq!(cfg.eval_every, 4);
         assert_eq!(cfg.early_stop_patience, 3);
@@ -337,6 +365,12 @@ checkpoint_path = "run.ckpt"
         assert_eq!(cfg.checkpoint_every, 0);
         assert_eq!(cfg.eval_every, 0);
         assert_eq!(cfg.early_stop_patience, 0);
+        assert!(!cfg.data_streaming);
+        assert_eq!(cfg.ingest_budget_mb, 0);
+        assert_eq!(cfg.chunk_rows, crate::sparse::DEFAULT_CHUNK_ROWS);
+        let mut bad = KvConfig::default();
+        bad.set("data.chunk_rows", "0");
+        assert!(AlxConfig::from_kv(&bad).is_err());
     }
 
     #[test]

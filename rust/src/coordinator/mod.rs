@@ -24,7 +24,7 @@ pub use session::{
 
 use crate::als::SolveEngine;
 use crate::config::AlxConfig;
-use crate::data::WebGraphSource;
+use crate::data::{DataSource, IngestReport, WebGraphSource};
 use crate::eval::{EvalConfig, RecallReport};
 use crate::webgraph::GeneratedGraph;
 
@@ -36,6 +36,11 @@ pub struct RunReport {
     pub epoch_seconds_mean: f64,
     pub simulated_epoch_seconds: f64,
     pub comm_bytes_per_epoch: u64,
+    /// Peak resident set size of the process at the end of the run
+    /// (`VmHWM`; 0 on platforms without procfs).
+    pub peak_rss_bytes: u64,
+    /// Streaming-ingestion accounting (None for in-memory sources).
+    pub ingest: Option<IngestReport>,
 }
 
 /// Compat shim: the classic WebGraph job driver. Wraps a [`TrainSession`]
@@ -76,23 +81,21 @@ impl Coordinator {
         engine: Option<Box<dyn SolveEngine>>,
     ) -> anyhow::Result<Coordinator> {
         let source = WebGraphSource::from_config(&cfg);
-        let session = TrainSession::with_engine(&source, cfg, engine)?;
-        // Clone (not take) the cheap metadata so the session's dataset
-        // keeps its provenance for anyone reaching it through the shim.
-        let meta = session
-            .dataset
+        let dataset = source.load()?;
+        let meta = dataset
             .graph
             .clone()
             .expect("webgraph source always yields generator metadata");
         // Rebuild the classic GeneratedGraph view for compat callers; the
         // adjacency clone is the price of this shim only — plain sessions
-        // hold a single copy of the matrix.
+        // keep the matrix solely inside the trainer's sharded storage.
         let graph = GeneratedGraph {
-            adjacency: session.dataset.matrix.clone(),
+            adjacency: dataset.matrix.clone(),
             domains: meta.domains,
             num_domains: meta.num_domains,
             filtered_nodes: meta.filtered_nodes,
         };
+        let session = TrainSession::from_dataset(dataset, cfg, engine)?;
         Ok(Coordinator { graph, session })
     }
 
@@ -177,9 +180,10 @@ mod tests {
     #[test]
     fn coordinator_fields_reachable_through_deref() {
         let c = Coordinator::prepare(tiny_cfg()).unwrap();
-        // The compat surface: cfg/split/trainer as before, graph inherent.
+        // The compat surface: cfg/test/trainer as before, graph inherent.
         assert_eq!(c.cfg.train.dim, 16);
-        assert!(c.split.test.len() < c.graph.nodes());
+        assert!(c.test.len() < c.graph.nodes());
         assert_eq!(c.trainer.current_epoch(), 0);
+        assert_eq!(c.dataset.rows, c.graph.nodes());
     }
 }

@@ -10,7 +10,7 @@
 //! staging memory and to exert backpressure on the producer.
 
 use crate::densebatch::{DenseBatch, DenseBatcher};
-use crate::sparse::Csr;
+use crate::sparse::RowMatrix;
 use crate::util::timer::Profiler;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -91,15 +91,22 @@ pub struct BatchFeeder {
 
 impl BatchFeeder {
     /// Start feeding batches of `rows` of `matrix`. `depth` bounds the
-    /// number of staged batches (host memory / backpressure).
-    pub fn start(matrix: Arc<Csr>, rows: Vec<u32>, batcher: DenseBatcher, depth: usize) -> Self {
+    /// number of staged batches (host memory / backpressure). Generic over
+    /// [`RowMatrix`] so shard-local [`crate::sparse::ShardedCsr`] storage
+    /// feeds exactly like a monolithic [`crate::sparse::Csr`].
+    pub fn start<M: RowMatrix + Send + Sync + 'static>(
+        matrix: Arc<M>,
+        rows: Vec<u32>,
+        batcher: DenseBatcher,
+        depth: usize,
+    ) -> Self {
         Self::start_profiled(matrix, rows, batcher, depth, None)
     }
 
     /// [`BatchFeeder::start`] with host batching time accounted under the
     /// profiler's `densebatch` bucket (the trainer's epoch breakdown).
-    pub fn start_profiled(
-        matrix: Arc<Csr>,
+    pub fn start_profiled<M: RowMatrix + Send + Sync + 'static>(
+        matrix: Arc<M>,
         rows: Vec<u32>,
         batcher: DenseBatcher,
         depth: usize,
@@ -113,8 +120,10 @@ impl BatchFeeder {
             let _guard = CloseGuard(&q2);
             for ids in rows.chunks(FEED_CHUNK_ROWS) {
                 let batches = match &profiler {
-                    Some(p) => p.time("densebatch", || batcher.batch_rows_of(&matrix, ids)),
-                    None => batcher.batch_rows_of(&matrix, ids),
+                    Some(p) => {
+                        p.time("densebatch", || batcher.batch_rows_of(matrix.as_ref(), ids))
+                    }
+                    None => batcher.batch_rows_of(matrix.as_ref(), ids),
                 };
                 for batch in batches {
                     q2.push(batch);
@@ -144,6 +153,7 @@ impl Drop for BatchFeeder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::Csr;
     use crate::util::Pcg64;
 
     fn matrix(rows: usize) -> Csr {

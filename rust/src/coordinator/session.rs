@@ -18,13 +18,16 @@
 //! `--checkpoint-every` and `--eval-every` straight onto this API.
 
 use super::RunReport;
-use crate::als::{EpochStats, SolveEngine, Trainer};
+use crate::als::{EpochStats, ObjectiveLogEntry, SolveEngine, Trainer};
 use crate::config::AlxConfig;
-use crate::data::{source_from_config, DataSource, Dataset};
+use crate::data::{
+    source_from_config, DataSource, Dataset, DatasetInfo, IngestReport, StreamingSource,
+};
 use crate::eval::{evaluate, EvalConfig, RecallReport};
-use crate::sparse::{split_strong_generalization, Split};
+use crate::sparse::{split_to_shards, ShardedCsr, TestRow};
 use crate::topo::Topology;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// What a hook wants the session to do next.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,30 +46,73 @@ pub trait EpochHook {
         session: &mut TrainSession,
         stats: &EpochStats,
     ) -> anyhow::Result<HookAction>;
+
+    /// Called when the hook is installed on a **resumed** session:
+    /// `prior` is the persisted `(epoch, objective)` log of every epoch
+    /// that ran before the checkpoint, in order. Hooks with cross-epoch
+    /// state (e.g. [`EarlyStopOnPlateau`]) replay it so a resumed run
+    /// behaves exactly like an uninterrupted one; returning
+    /// [`HookAction::Stop`] marks the session stopped immediately (the
+    /// checkpoint was written at an epoch where the hook had already
+    /// decided to stop). Default: no-op, continue.
+    fn on_resume(&mut self, _prior: &[ObjectiveLogEntry]) -> HookAction {
+        HookAction::Continue
+    }
 }
 
-/// A training job with step-wise control: dataset + split + trainer, plus
-/// the epoch history and registered hooks.
+/// A training job with step-wise control: dataset + held-out test rows +
+/// trainer, plus the epoch history and registered hooks.
+///
+/// The training matrix lives **only** inside the trainer, as per-shard
+/// CSRs (and their transposes) — the session holds the dataset's shape
+/// and provenance ([`DatasetInfo`]), not a second copy of the matrix.
 pub struct TrainSession {
     pub cfg: AlxConfig,
-    pub dataset: Dataset,
-    pub split: Split,
+    /// Shape and provenance of the loaded dataset.
+    pub dataset: DatasetInfo,
+    /// Held-out strong-generalization test rows.
+    pub test: Vec<TestRow>,
     pub trainer: Trainer,
+    /// Streaming-ingestion accounting (None for in-memory sources).
+    pub ingest: Option<IngestReport>,
     history: Vec<EpochStats>,
     eval_log: Vec<(usize, Vec<RecallReport>)>,
     hooks: Vec<Box<dyn EpochHook>>,
     stopped: bool,
+    /// `(epoch, objective)` log restored from a checkpoint (empty for
+    /// fresh sessions); replayed into hooks as they are installed and
+    /// persisted back out by [`TrainSession::checkpoint`].
+    restored_objectives: Vec<ObjectiveLogEntry>,
 }
 
 impl TrainSession {
     /// Build a session from a resolved config: the `[data]` section picks
-    /// the source, and `[session]` keys (`checkpoint_every`, `eval_every`,
+    /// the source (`streaming = true` selects the out-of-core `ALXCSR02`
+    /// path), and `[session]` keys (`checkpoint_every`, `eval_every`,
     /// `early_stop_patience`) install the matching hooks.
     pub fn from_config(cfg: AlxConfig) -> anyhow::Result<TrainSession> {
-        let source = source_from_config(&cfg)?;
-        let mut session = Self::new(source.as_ref(), cfg)?;
+        let mut session = Self::build_from_config(cfg, None)?;
         session.install_config_hooks();
         Ok(session)
+    }
+
+    /// Config-driven construction without hooks (shared by
+    /// [`TrainSession::from_config`] and [`TrainSession::resume`]).
+    fn build_from_config(
+        cfg: AlxConfig,
+        engine: Option<Box<dyn SolveEngine>>,
+    ) -> anyhow::Result<TrainSession> {
+        if cfg.data_streaming {
+            anyhow::ensure!(
+                !cfg.data_path.is_empty(),
+                "data.streaming = true requires data.path (--data <file.alxcsr02>)"
+            );
+            let path = PathBuf::from(&cfg.data_path);
+            Self::from_streaming(path, cfg, engine)
+        } else {
+            let source = source_from_config(&cfg)?;
+            Self::with_engine(source.as_ref(), cfg, engine)
+        }
     }
 
     /// Build a session over an explicit [`DataSource`] (no hooks installed).
@@ -84,14 +130,48 @@ impl TrainSession {
         Self::from_dataset(dataset, cfg, engine)
     }
 
-    /// Build a session over an already-loaded [`Dataset`].
+    /// Build a session over an already-loaded [`Dataset`]. The matrix is
+    /// split and moved into sharded training storage; the session keeps
+    /// only its [`DatasetInfo`].
     pub fn from_dataset(
         dataset: Dataset,
         cfg: AlxConfig,
         engine: Option<Box<dyn SolveEngine>>,
     ) -> anyhow::Result<TrainSession> {
-        let split =
-            split_strong_generalization(&dataset.matrix, 0.9, 0.25, cfg.data_seed ^ 0x9);
+        let info = dataset.info();
+        let sharded =
+            split_to_shards(&dataset.matrix, cfg.cores, 0.9, 0.25, cfg.data_seed ^ 0x9);
+        drop(dataset); // the monolithic matrix is no longer needed
+        Self::assemble(info, sharded.train, sharded.train_t, sharded.test, None, cfg, engine)
+    }
+
+    /// Build a session by streaming an `ALXCSR02` file: chunks flow
+    /// through a bounded-memory cursor straight into per-shard CSRs, so
+    /// peak ingestion memory is bounded by the chunk size, not the matrix
+    /// size. Training is bitwise identical to the in-memory path on the
+    /// same data.
+    pub fn from_streaming(
+        path: impl AsRef<Path>,
+        cfg: AlxConfig,
+        engine: Option<Box<dyn SolveEngine>>,
+    ) -> anyhow::Result<TrainSession> {
+        let budget = (cfg.ingest_budget_mb as u64) << 20;
+        let source = StreamingSource::new(path.as_ref(), budget);
+        let s = source.load_split(cfg.cores, 0.9, 0.25, cfg.data_seed ^ 0x9)?;
+        Self::assemble(s.info, s.train, s.train_t, s.test, Some(s.ingest), cfg, engine)
+    }
+
+    /// Shared tail of every constructor: resolve the engine, build the
+    /// trainer over the sharded matrix, assemble the session.
+    fn assemble(
+        info: DatasetInfo,
+        train: ShardedCsr,
+        train_t: ShardedCsr,
+        test: Vec<TestRow>,
+        ingest: Option<IngestReport>,
+        cfg: AlxConfig,
+        engine: Option<Box<dyn SolveEngine>>,
+    ) -> anyhow::Result<TrainSession> {
         let topo = Topology::new(cfg.cores);
         let engine: Box<dyn SolveEngine> = match engine {
             Some(e) => e,
@@ -108,25 +188,34 @@ impl TrainSession {
                 _ => Trainer::default_engine(&cfg.train, &topo),
             },
         };
-        let trainer = Trainer::with_engine(&split.train, cfg.train.clone(), topo, engine)?;
+        let trainer = Trainer::from_sharded(
+            Arc::new(train),
+            Arc::new(train_t),
+            cfg.train.clone(),
+            topo,
+            engine,
+        )?;
         Ok(TrainSession {
             cfg,
-            dataset,
-            split,
+            dataset: info,
+            test,
             trainer,
+            ingest,
             history: Vec::new(),
             eval_log: Vec::new(),
             hooks: Vec::new(),
             stopped: false,
+            restored_objectives: Vec::new(),
         })
     }
 
     /// Restore a session from a checkpoint using the config's data source
-    /// (what `alx train --resume <ckpt>` does). The config must describe
-    /// the same dataset/model shape the checkpoint was written from.
+    /// (what `alx train --resume <ckpt>` does, streaming included). The
+    /// config must describe the same dataset/model shape the checkpoint
+    /// was written from.
     pub fn resume(path: impl AsRef<Path>, cfg: AlxConfig) -> anyhow::Result<TrainSession> {
-        let source = source_from_config(&cfg)?;
-        let mut session = Self::resume_with(path, source.as_ref(), cfg, None)?;
+        let mut session = Self::build_from_config(cfg, None)?;
+        session.load_checkpoint_file(path.as_ref())?;
         session.install_config_hooks();
         Ok(session)
     }
@@ -138,20 +227,26 @@ impl TrainSession {
         cfg: AlxConfig,
         engine: Option<Box<dyn SolveEngine>>,
     ) -> anyhow::Result<TrainSession> {
-        let path = path.as_ref();
         let mut session = Self::with_engine(source, cfg, engine)?;
+        session.load_checkpoint_file(path.as_ref())?;
+        Ok(session)
+    }
+
+    /// Load checkpoint state (tables, epoch counter, objective log) into
+    /// this freshly-built session.
+    fn load_checkpoint_file(&mut self, path: &Path) -> anyhow::Result<()> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path)
                 .map_err(|e| anyhow::anyhow!("open checkpoint {}: {e}", path.display()))?,
         );
-        session.trainer.load_checkpoint(&mut f)?;
+        self.restored_objectives = self.trainer.load_checkpoint(&mut f)?;
         crate::log_info!(
             "resumed {} from {} at epoch {}",
-            session.dataset.name,
+            self.dataset.name,
             path.display(),
-            session.trainer.current_epoch()
+            self.trainer.current_epoch()
         );
-        Ok(session)
+        Ok(())
     }
 
     /// Install the hooks the `[session]` config keys ask for.
@@ -171,7 +266,18 @@ impl TrainSession {
     }
 
     /// Register an epoch hook (fires after every [`TrainSession::step`]).
-    pub fn add_hook(&mut self, hook: Box<dyn EpochHook>) {
+    /// On a resumed session the hook first replays the persisted
+    /// pre-checkpoint objective log, so cross-epoch hook state (early
+    /// stopping) continues exactly where the uninterrupted run would be —
+    /// including the case where the checkpoint was written in the very
+    /// epoch the hook stopped at (the replay then stops the session
+    /// before it trains a single extra epoch).
+    pub fn add_hook(&mut self, mut hook: Box<dyn EpochHook>) {
+        if !self.restored_objectives.is_empty()
+            && hook.on_resume(&self.restored_objectives) == HookAction::Stop
+        {
+            self.stopped = true;
+        }
         self.hooks.push(hook);
     }
 
@@ -246,6 +352,8 @@ impl TrainSession {
             comm_bytes_per_epoch: comm,
             history,
             recalls,
+            peak_rss_bytes: crate::util::mem::peak_rss_bytes(),
+            ingest: self.ingest.clone(),
         })
     }
 
@@ -255,12 +363,12 @@ impl TrainSession {
             approximate: self.cfg.approximate_eval,
             ..EvalConfig::default()
         };
-        Ok(evaluate(&self.trainer, &self.split.test, &eval_cfg))
+        Ok(evaluate(&self.trainer, &self.test, &eval_cfg))
     }
 
     /// Evaluate with an explicit eval config.
     pub fn evaluate_with(&self, eval_cfg: &EvalConfig) -> Vec<RecallReport> {
-        evaluate(&self.trainer, &self.split.test, eval_cfg)
+        evaluate(&self.trainer, &self.test, eval_cfg)
     }
 
     /// Write a checkpoint of the current model state to `path` (write to a
@@ -272,12 +380,16 @@ impl TrainSession {
         // degrade to last-rename-wins instead of interleaving one file.
         let tmp =
             PathBuf::from(format!("{}.tmp.{}", path.display(), std::process::id()));
+        // Persist the full (epoch, objective) sequence — pre-resume epochs
+        // plus this session's own — so hooks can reconstruct their state.
+        let mut objective_log = self.restored_objectives.clone();
+        objective_log.extend(self.history.iter().map(|h| (h.epoch as u64, h.objective)));
         let write = || -> anyhow::Result<()> {
             let mut f = std::io::BufWriter::new(
                 std::fs::File::create(&tmp)
                     .map_err(|e| anyhow::anyhow!("create {}: {e}", tmp.display()))?,
             );
-            self.trainer.save_checkpoint(&mut f)?;
+            self.trainer.save_checkpoint_with(&mut f, &objective_log)?;
             use std::io::Write;
             f.flush()?;
             // fsync before the rename: otherwise a power loss can persist
@@ -360,11 +472,11 @@ impl EpochHook for CheckpointEvery {
 /// least `min_rel_improvement` (relative) for `patience` consecutive
 /// epochs. A no-op when `train.compute_objective` is off.
 ///
-/// Hook state is in-memory only: checkpoints persist model state, not
-/// hooks, so a resumed run restarts plateau tracking from scratch. The
-/// bitwise resume ≡ uninterrupted contract covers the training state
-/// (tables, epoch counter, per-epoch stats); where a run *stops* under
-/// early stopping can differ across an interruption.
+/// Plateau state survives checkpoint/resume: checkpoints persist the
+/// per-epoch objective log, and on resume the hook replays it (via
+/// [`EpochHook::on_resume`]) to reconstruct `best`/`epochs_since_best`
+/// exactly — a resumed run stops at the same epoch as an uninterrupted
+/// one (`tests/session_resume.rs`).
 pub struct EarlyStopOnPlateau {
     patience: usize,
     min_rel_improvement: f64,
@@ -381,6 +493,21 @@ impl EarlyStopOnPlateau {
             best: f64::INFINITY,
             epochs_since_best: 0,
             warned: false,
+        }
+    }
+
+    /// Fold one epoch's objective into the plateau state; `true` when the
+    /// plateau has lasted `patience` epochs (the stop condition). Shared
+    /// by the live path and the resume replay, so both walk the exact
+    /// same state machine.
+    fn observe(&mut self, obj: f64) -> bool {
+        if !self.best.is_finite() || obj < self.best * (1.0 - self.min_rel_improvement) {
+            self.best = obj;
+            self.epochs_since_best = 0;
+            false
+        } else {
+            self.epochs_since_best += 1;
+            self.epochs_since_best >= self.patience
         }
     }
 }
@@ -400,22 +527,35 @@ impl EpochHook for EarlyStopOnPlateau {
             }
             return Ok(HookAction::Continue);
         };
-        if !self.best.is_finite() || obj < self.best * (1.0 - self.min_rel_improvement) {
-            self.best = obj;
-            self.epochs_since_best = 0;
-        } else {
-            self.epochs_since_best += 1;
-            if self.epochs_since_best >= self.patience {
-                crate::log_info!(
-                    "early stop @ epoch {}: objective plateau ({} epochs without {}% improvement)",
-                    stats.epoch,
-                    self.patience,
-                    self.min_rel_improvement * 100.0
-                );
-                return Ok(HookAction::Stop);
-            }
+        if self.observe(obj) {
+            crate::log_info!(
+                "early stop @ epoch {}: objective plateau ({} epochs without {}% improvement)",
+                stats.epoch,
+                self.patience,
+                self.min_rel_improvement * 100.0
+            );
+            return Ok(HookAction::Stop);
         }
         Ok(HookAction::Continue)
+    }
+
+    fn on_resume(&mut self, prior: &[ObjectiveLogEntry]) -> HookAction {
+        // Replay the pre-checkpoint objectives through the same state
+        // machine. If the plateau was already reached at the checkpoint
+        // epoch (a `--checkpoint-every 1` checkpoint is written *before*
+        // this hook fires in the same epoch), the resumed session must
+        // stop right away, exactly like the uninterrupted run did.
+        let mut stop = false;
+        for &(_, obj) in prior {
+            if let Some(obj) = obj {
+                stop = self.observe(obj) || stop;
+            }
+        }
+        if stop {
+            HookAction::Stop
+        } else {
+            HookAction::Continue
+        }
     }
 }
 

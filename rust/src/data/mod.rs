@@ -13,14 +13,23 @@
 //!   `Coordinator` used to hard-code (paper §5).
 //! * [`InMemorySource`] — an already-built [`Csr`], for library users and
 //!   tests.
-//! * [`EdgeListSource`] — a file loader: either a whitespace-separated
-//!   text edge list (`src dst [weight]`, `#` comments) or the binary
-//!   `ALXCSR01` format `alx generate --out` writes (sniffed by magic).
+//! * [`EdgeListSource`] — a file loader: a whitespace-separated text edge
+//!   list (`src dst [weight]`, `#` comments, streamed line by line) or
+//!   the binary `ALXCSR01`/`ALXCSR02` formats (sniffed by magic).
+//! * [`StreamingSource`] — the streaming path: reads `ALXCSR02` chunks
+//!   through a bounded-memory cursor and assembles per-shard CSRs (and
+//!   their transposes) directly, so the *monolithic* matrix never exists
+//!   and ingestion staging is bounded by the chunk size. The sharded
+//!   train matrix + transpose (~2× nnz) still reside in RAM — spilling
+//!   those resident shards is the next scale step (ROADMAP).
 
 use crate::config::AlxConfig;
-use crate::sparse::Csr;
+use crate::sparse::{
+    ChunkedReader, Csr, RowDisposition, ShardedCsr, ShardedCsrBuilder, SplitPlan, TestRow,
+    ALXCSR02_MAGIC,
+};
 use crate::webgraph::{generate, Variant, VariantSpec};
-use std::io::Read;
+use std::io::{BufRead, Read};
 use std::path::PathBuf;
 
 /// Generator provenance of a synthetic WebGraph dataset — everything from
@@ -52,6 +61,44 @@ impl Dataset {
     pub fn from_matrix(name: impl Into<String>, matrix: Csr) -> Dataset {
         Dataset { name: name.into(), matrix, graph: None }
     }
+
+    /// The dataset's shape and provenance, without the matrix itself.
+    pub fn info(&self) -> DatasetInfo {
+        DatasetInfo {
+            name: self.name.clone(),
+            rows: self.matrix.rows,
+            cols: self.matrix.cols,
+            nnz: self.matrix.nnz() as u64,
+            graph: self.graph.clone(),
+        }
+    }
+}
+
+/// Shape and provenance of a loaded dataset — what a
+/// [`crate::coordinator::TrainSession`] keeps after the matrix itself has
+/// been moved into sharded training storage.
+#[derive(Clone, Debug)]
+pub struct DatasetInfo {
+    /// Human-readable provenance ("WebGraph-in-dense", a file path, ...).
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: u64,
+    /// Generator metadata when the source is synthetic WebGraph.
+    pub graph: Option<GraphMeta>,
+}
+
+/// Accounting of a streaming ingestion run.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    /// Chunks decoded from the `ALXCSR02` stream.
+    pub chunks: u64,
+    /// Largest per-chunk allocation the cursor needed, in bytes — the
+    /// actual ingestion working set (bounded by chunk size, not matrix
+    /// size).
+    pub peak_chunk_bytes: u64,
+    /// The configured ingest budget in bytes (0 = unbounded).
+    pub budget_bytes: u64,
 }
 
 /// Something that can produce a [`Dataset`] — decouples acquisition from
@@ -148,9 +195,19 @@ impl EdgeListSource {
     /// line, `#` comments, blank lines ignored. Dimensions are inferred as
     /// `max id + 1` per side; the weight defaults to 1.0.
     pub fn parse_text(text: &str) -> anyhow::Result<Csr> {
+        Self::parse_lines(text.lines().map(|l| Ok(l.to_string())))
+    }
+
+    /// Streaming form of [`EdgeListSource::parse_text`]: consumes lines as
+    /// they arrive (e.g. from [`BufRead::lines`]), so the raw file bytes
+    /// are never buffered whole — only the parsed triplets are held.
+    pub fn parse_lines(
+        lines: impl Iterator<Item = std::io::Result<String>>,
+    ) -> anyhow::Result<Csr> {
         let mut triplets: Vec<(u32, u32, f32)> = Vec::new();
         let (mut rows, mut cols) = (0usize, 0usize);
-        for (lineno, raw) in text.lines().enumerate() {
+        for (lineno, raw) in lines.enumerate() {
+            let raw = raw.map_err(|e| anyhow::anyhow!("line {}: read error: {e}", lineno + 1))?;
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
                 continue;
@@ -205,23 +262,31 @@ impl DataSource for EdgeListSource {
     }
 
     fn load(&self) -> anyhow::Result<Dataset> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(&self.path)
-                .map_err(|e| anyhow::anyhow!("open {}: {e}", self.path.display()))?,
-        );
+        let file = std::fs::File::open(&self.path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", self.path.display()))?;
+        // Only trust the length of regular files: a FIFO / process
+        // substitution reports len 0 and must keep the unbounded path.
+        let file_len = file.metadata().ok().filter(|m| m.is_file()).map(|m| m.len());
+        let mut f = std::io::BufReader::new(file);
         // Sniff the binary magic; anything else is treated as text.
         let mut head = Vec::with_capacity(8);
         std::io::Read::by_ref(&mut f).take(8).read_to_end(&mut head)?;
         let matrix = if head == b"ALXCSR01" {
-            Csr::read_from(&mut head.as_slice().chain(f))
+            // The known stream length bounds every allocation up front.
+            Csr::read_from_limited(&mut head.as_slice().chain(f), file_len)
+                .map_err(|e| anyhow::anyhow!("read {}: {e}", self.path.display()))?
+        } else if head == ALXCSR02_MAGIC {
+            drop(f);
+            ChunkedReader::open(&self.path, 0)
+                .and_then(|r| r.read_all())
                 .map_err(|e| anyhow::anyhow!("read {}: {e}", self.path.display()))?
         } else {
-            let mut rest = Vec::new();
-            f.read_to_end(&mut rest)?;
-            head.extend_from_slice(&rest);
-            let text = String::from_utf8(head)
-                .map_err(|_| anyhow::anyhow!("{}: neither ALXCSR01 nor utf-8 text", self.path.display()))?;
-            Self::parse_text(&text)?
+            // Text: stream line by line — the raw bytes are never held
+            // whole, halving peak load memory vs. read-then-parse. (The
+            // chain of the sniffed head and the BufReader is itself
+            // BufRead — no second buffer layer.)
+            Self::parse_lines(head.as_slice().chain(f).lines())
+                .map_err(|e| anyhow::anyhow!("parse {}: {e}", self.path.display()))?
         };
         crate::log_info!(
             "loaded {}: {}x{}, {} edges",
@@ -231,6 +296,104 @@ impl DataSource for EdgeListSource {
             matrix.nnz()
         );
         Ok(Dataset::from_matrix(self.name(), matrix))
+    }
+}
+
+/// The streaming ingestion path: stream an `ALXCSR02` file through a
+/// bounded-memory cursor, apply the strong-generalization split row by
+/// row, and assemble per-shard CSRs (and their transposes) directly — the
+/// monolithic matrix (and the in-memory path's transient copies: raw file
+/// bytes, unsplit matrix, split scratch) never exist. Resident memory is
+/// the sharded train matrix + transpose the trainer needs anyway.
+///
+/// This deliberately does **not** implement [`DataSource`]: that trait's
+/// contract is "materialize a [`Dataset`]", which is exactly what
+/// streaming avoids. [`crate::coordinator::TrainSession::from_streaming`]
+/// builds on this.
+#[derive(Clone, Debug)]
+pub struct StreamingSource {
+    pub path: PathBuf,
+    /// Max bytes one chunk may need during ingestion (0 = unbounded).
+    pub budget_bytes: u64,
+}
+
+/// What streaming ingestion produces: everything a trainer needs, plus
+/// the ingestion accounting.
+pub struct StreamedSplit {
+    pub info: DatasetInfo,
+    pub train: ShardedCsr,
+    pub train_t: ShardedCsr,
+    pub test: Vec<TestRow>,
+    pub ingest: IngestReport,
+}
+
+impl StreamingSource {
+    pub fn new(path: impl Into<PathBuf>, budget_bytes: u64) -> StreamingSource {
+        StreamingSource { path: path.into(), budget_bytes }
+    }
+
+    /// Stream, split and shard in one pass. The split decisions are
+    /// bitwise identical to the in-memory
+    /// [`crate::sparse::split_strong_generalization`] on the same matrix,
+    /// so a streaming run trains to exactly the same tables.
+    pub fn load_split(
+        &self,
+        num_shards: usize,
+        train_frac: f64,
+        holdout_frac: f64,
+        seed: u64,
+    ) -> anyhow::Result<StreamedSplit> {
+        let mut reader = ChunkedReader::open(&self.path, self.budget_bytes)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", self.path.display()))?;
+        let header = *reader.header();
+        let mut plan = SplitPlan::new(header.rows, train_frac, holdout_frac, seed);
+        let mut builder = ShardedCsrBuilder::new(header.rows, header.cols, num_shards);
+        let mut test = Vec::new();
+        while let Some(chunk) = reader
+            .next_chunk()
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", self.path.display()))?
+        {
+            for i in 0..chunk.row_count() {
+                let (r, idx, val) = chunk.row(i);
+                match plan.dispose(r, idx, val) {
+                    RowDisposition::Train => builder.push_row(idx, val),
+                    RowDisposition::Test(tr) => {
+                        test.push(tr);
+                        builder.push_empty();
+                    }
+                    RowDisposition::Skip => builder.push_empty(),
+                }
+            }
+        }
+        let train = builder.finish();
+        let train_t = train.transpose(num_shards);
+        let ingest = IngestReport {
+            chunks: reader.chunks_read(),
+            peak_chunk_bytes: reader.peak_chunk_bytes(),
+            budget_bytes: self.budget_bytes,
+        };
+        crate::log_info!(
+            "streamed {}: {}x{}, {} edges in {} chunks (peak chunk {} bytes)",
+            self.path.display(),
+            header.rows,
+            header.cols,
+            header.nnz,
+            ingest.chunks,
+            ingest.peak_chunk_bytes
+        );
+        Ok(StreamedSplit {
+            info: DatasetInfo {
+                name: self.path.display().to_string(),
+                rows: header.rows,
+                cols: header.cols,
+                nnz: header.nnz,
+                graph: None,
+            },
+            train,
+            train_t,
+            test,
+            ingest,
+        })
     }
 }
 
@@ -286,6 +449,25 @@ mod tests {
         }
         let ds = EdgeListSource::new(&path).load().unwrap();
         assert_eq!(ds.matrix, m);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn chunked_binary_file_roundtrips_via_magic_sniff() {
+        let m = Csr::from_coo(5, 5, &[(0, 1, 1.0), (2, 0, 4.0), (4, 3, 2.0)]);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("alx_data_test_{}.csr02", std::process::id()));
+        {
+            let f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+            crate::sparse::write_chunked(&m, f, 2).unwrap();
+        }
+        let ds = EdgeListSource::new(&path).load().unwrap();
+        assert_eq!(ds.matrix, m);
+        // The streaming source sees the same shape through its cursor.
+        let s = StreamingSource::new(&path, 0).load_split(2, 1.0, 0.25, 7).unwrap();
+        assert_eq!((s.info.rows, s.info.cols, s.info.nnz), (5, 5, 3));
+        assert_eq!(s.train.to_csr(), m); // train_frac = 1.0: no holdout
+        assert!(s.ingest.chunks > 0);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -13,7 +13,7 @@
 //! per-source-row statistics — in the XLA engine this is a one-hot matmul
 //! so the shapes stay static.
 
-use crate::sparse::Csr;
+use crate::sparse::{Csr, RowMatrix};
 
 /// A fixed-shape batch of dense rows (one SPMD step's input).
 #[derive(Clone, Debug, PartialEq)]
@@ -80,10 +80,13 @@ impl DenseBatcher {
     ///
     /// A sparse row is never split across batches, so every batch's
     /// segment-sum is complete and the solve for that row is exact.
-    pub fn batch_rows_of<'a>(
+    ///
+    /// Generic over [`RowMatrix`], so the same batching runs over a
+    /// monolithic [`Csr`] or a [`crate::sparse::ShardedCsr`].
+    pub fn batch_rows_of<M: RowMatrix + ?Sized>(
         &self,
-        matrix: &'a Csr,
-        row_ids: &'a [u32],
+        matrix: &M,
+        row_ids: &[u32],
     ) -> Vec<DenseBatch> {
         let mut out = Vec::new();
         let mut cur = self.empty_batch();

@@ -52,11 +52,14 @@ pub mod prelude {
         CheckpointEvery, Coordinator, EarlyStopOnPlateau, EpochHook, EvalEvery, HookAction,
         RunReport, TrainSession,
     };
-    pub use crate::data::{DataSource, Dataset, EdgeListSource, InMemorySource, WebGraphSource};
+    pub use crate::data::{
+        DataSource, Dataset, DatasetInfo, EdgeListSource, InMemorySource, IngestReport,
+        StreamingSource, WebGraphSource,
+    };
     pub use crate::densebatch::{DenseBatch, DenseBatcher};
     pub use crate::eval::{recall_at_k, EvalConfig, RecallReport};
     pub use crate::linalg::Mat;
-    pub use crate::sparse::Csr;
+    pub use crate::sparse::{Csr, RowMatrix, ShardedCsr};
     pub use crate::topo::Topology;
     pub use crate::webgraph::{Variant, VariantSpec};
 }

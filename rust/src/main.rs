@@ -90,6 +90,9 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("data-seed", "dataset.seed"),
         ("source", "data.source"),
         ("data", "data.path"),
+        ("stream", "data.streaming"),
+        ("ingest-budget-mb", "data.ingest_budget_mb"),
+        ("chunk-rows", "data.chunk_rows"),
         ("checkpoint-every", "session.checkpoint_every"),
         ("eval-every", "session.eval_every"),
         ("early-stop", "session.early_stop_patience"),
@@ -132,18 +135,108 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         g.filtered_nodes
     );
     if let Some(path) = args.get("out") {
+        let format = args.get("format").unwrap_or("csr02");
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        g.adjacency.write_to(&mut f)?;
-        println!("wrote {path}");
+        match format {
+            // The chunked format streams back through `alx train --stream`.
+            "csr02" => alx::sparse::write_chunked(&g.adjacency, &mut f, cfg.chunk_rows)?,
+            "csr01" => g.adjacency.write_to(&mut f)?,
+            other => anyhow::bail!("--format {other}: expected csr02|csr01"),
+        }
+        use std::io::Write;
+        f.flush()?;
+        println!("wrote {path} ({format})");
     }
+    Ok(())
+}
+
+/// Convert any supported input (text edge list, `ALXCSR01`, `ALXCSR02`)
+/// to the chunked `ALXCSR02` format. `ALXCSR02` inputs are re-chunked
+/// stream-to-stream in bounded memory; the other formats are loaded whole
+/// first (they are monolithic on disk by definition).
+fn cmd_convert(args: &Args) -> anyhow::Result<()> {
+    let cfg = resolve_config(args)?;
+    let input = args
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("convert needs --data <input file>"))?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("convert needs --out <output file>"))?;
+    anyhow::ensure!(input != out, "--data and --out must differ");
+    let chunk_rows = cfg.chunk_rows;
+
+    // Sniff the magic to pick the path.
+    let mut head = [0u8; 8];
+    {
+        use std::io::Read;
+        let mut f = std::fs::File::open(input)
+            .map_err(|e| anyhow::anyhow!("open {input}: {e}"))?;
+        let n = f.read(&mut head)?;
+        if n < 8 {
+            head = [0u8; 8]; // too short for any binary magic: treat as text
+        }
+    }
+    // Write to a sibling temp file, then rename: `--data` and `--out`
+    // naming the same file through different spellings (relative vs
+    // absolute, symlinks, `dir/../`) must never truncate the input
+    // before it has been read.
+    let tmp = format!("{out}.tmp.{}", std::process::id());
+    let convert = || -> anyhow::Result<(usize, usize, u64, u64)> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        let dims = if &head == alx::sparse::ALXCSR02_MAGIC {
+            // Stream-to-stream re-chunk: one input + one output chunk.
+            let mut r = alx::sparse::ChunkedReader::open(input, 0)
+                .map_err(|e| anyhow::anyhow!("read {input}: {e}"))?;
+            let h = *r.header();
+            let mut cw =
+                alx::sparse::ChunkedWriter::new(&mut w, h.rows, h.cols, h.nnz, chunk_rows)?;
+            while let Some(chunk) =
+                r.next_chunk().map_err(|e| anyhow::anyhow!("read {input}: {e}"))?
+            {
+                for i in 0..chunk.row_count() {
+                    let (_, idx, val) = chunk.row(i);
+                    cw.push_row(idx, val)?;
+                }
+            }
+            cw.finish()?;
+            (h.rows, h.cols, h.nnz, (h.rows as u64).div_ceil(chunk_rows as u64))
+        } else {
+            use alx::data::DataSource;
+            let ds = alx::data::EdgeListSource::new(input).load()?;
+            let m = &ds.matrix;
+            alx::sparse::write_chunked(m, &mut w, chunk_rows)?;
+            let chunks = (m.rows as u64).div_ceil(chunk_rows as u64);
+            (m.rows, m.cols, m.nnz() as u64, chunks)
+        };
+        use std::io::Write;
+        w.flush()?;
+        Ok(dims)
+    };
+    let (rows, cols, nnz, chunks) = match convert() {
+        Ok(dims) => dims,
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+    };
+    std::fs::rename(&tmp, out)
+        .map_err(|e| anyhow::anyhow!("rename {tmp} -> {out}: {e}"))?;
+    println!(
+        "converted {input} -> {out}: {rows}x{cols}, {nnz} entries, {chunks} chunks \
+         of {chunk_rows} rows (ALXCSR02)"
+    );
     Ok(())
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = resolve_config(args)?;
-    let dataset_desc = match cfg.data_source.as_str() {
-        "webgraph" => format!("{} scale={}", cfg.variant.name(), cfg.scale),
-        _ => format!("{}:{}", cfg.data_source, cfg.data_path),
+    let dataset_desc = if cfg.data_streaming {
+        format!("streaming:{}", cfg.data_path)
+    } else {
+        match cfg.data_source.as_str() {
+            "webgraph" => format!("{} scale={}", cfg.variant.name(), cfg.scale),
+            _ => format!("{}:{}", cfg.data_source, cfg.data_path),
+        }
     };
     println!(
         "training {dataset_desc} d={} epochs={} λ={:.0e} α={:.0e} solver={} precision={} engine={} cores={}",
@@ -205,6 +298,20 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if session.stopped() {
         println!("(stopped early: objective plateau)");
+    }
+    if let Some(ing) = &report.ingest {
+        let budget = match ing.budget_bytes {
+            0 => "unbounded".to_string(),
+            b => human_bytes(b),
+        };
+        println!(
+            "\nstreaming ingest: {} chunks, peak chunk {} (budget {budget})",
+            ing.chunks,
+            human_bytes(ing.peak_chunk_bytes),
+        );
+    }
+    if report.peak_rss_bytes > 0 {
+        println!("peak RSS: {}", human_bytes(report.peak_rss_bytes));
     }
     println!("\nprofiler breakdown:\n{}", session.trainer.profiler.report());
     Ok(())
@@ -330,9 +437,12 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: alx <generate|train|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
+        "usage: alx <generate|convert|train|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
          train flags: --source webgraph|edge-list --data <file> --resume <ckpt>\n\
+                      --stream --ingest-budget-mb <MiB> (out-of-core ALXCSR02 ingestion)\n\
                       --checkpoint <path> --checkpoint-every <k> --eval-every <k> --early-stop <k>\n\
+         convert:     --data <in: text|ALXCSR01|ALXCSR02> --out <file.alxcsr02> [--chunk-rows <n>]\n\
+         generate:    --out <file> [--format csr02|csr01] [--chunk-rows <n>]\n\
          see the CLI cheatsheet in README.md"
     );
     std::process::exit(2)
@@ -348,6 +458,7 @@ fn main() -> anyhow::Result<()> {
     let _ = &args.positional;
     match cmd.as_str() {
         "generate" => cmd_generate(&args),
+        "convert" => cmd_convert(&args),
         "train" => cmd_train(&args),
         "table1" => cmd_table1(&args),
         "table2" => cmd_table2(&args),

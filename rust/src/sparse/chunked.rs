@@ -1,0 +1,591 @@
+//! `ALXCSR02` — the chunked, streamable on-disk CSR format.
+//!
+//! `ALXCSR01` stores the whole matrix as three monolithic arrays, so a
+//! reader must materialize all of it before the first shard can exist —
+//! which caps dataset size at a multiple of host RAM. `ALXCSR02` instead
+//! stores contiguous **row-range chunks**, each self-describing, so a
+//! bounded-memory cursor ([`ChunkedReader`]) can hand rows to the
+//! shard-as-you-read ingestion pipeline one chunk at a time.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! "ALXCSR02"                         8 bytes
+//! rows u64 | cols u64 | nnz u64 | num_chunks u64
+//! per chunk:
+//!   "CH02"                           4 bytes
+//!   row_start u64 | row_count u64 | chunk_nnz u64
+//!   row_lens  u32 × row_count
+//!   indices   u32 × chunk_nnz       (sorted strictly ascending per row)
+//!   values    f32 × chunk_nnz
+//! ```
+//!
+//! Chunks cover `[0, rows)` contiguously in order. Every field is
+//! validated on read: the header against the exact stream length, chunk
+//! headers against the running row/nnz totals, `row_lens` against
+//! `chunk_nnz`, and every column index against `cols` — so a corrupt or
+//! hostile file fails with `InvalidData` before any allocation larger
+//! than one chunk.
+
+use super::csr::{io, Csr};
+use std::io::{BufReader, Read, Result, Write};
+use std::path::Path;
+
+/// File magic of the chunked format.
+pub const ALXCSR02_MAGIC: &[u8; 8] = b"ALXCSR02";
+const CHUNK_MAGIC: &[u8; 4] = b"CH02";
+/// Fixed bytes: file header, and per-chunk header.
+const HEADER_BYTES: u64 = 8 + 4 * 8;
+const CHUNK_HEADER_BYTES: u64 = 4 + 3 * 8;
+
+/// Default rows per chunk for writers (`data.chunk_rows`).
+pub const DEFAULT_CHUNK_ROWS: usize = 1 << 16;
+
+/// Validated `ALXCSR02` file header.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkedHeader {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: u64,
+    pub num_chunks: u64,
+}
+
+/// One decoded row-range chunk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrChunk {
+    /// Global id of the first row in this chunk.
+    pub row_start: usize,
+    /// Chunk-local row pointers, length `row_count + 1`.
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrChunk {
+    pub fn row_count(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Row `i` of the chunk as `(global_row_id, indices, values)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (usize, &[u32], &[f32]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (self.row_start + i, &self.indices[lo..hi], &self.values[lo..hi])
+    }
+}
+
+/// Bounded-memory cursor over an `ALXCSR02` stream: holds at most one
+/// chunk's arrays at a time and enforces an optional ingest budget on the
+/// per-chunk allocation.
+pub struct ChunkedReader<R: Read> {
+    r: R,
+    header: ChunkedHeader,
+    next_row: usize,
+    nnz_seen: u64,
+    chunks_seen: u64,
+    /// Max bytes one chunk's arrays may need; 0 = unbounded.
+    budget_bytes: u64,
+    peak_chunk_bytes: u64,
+}
+
+impl ChunkedReader<BufReader<std::fs::File>> {
+    /// Open a chunked file; the header is validated against the exact
+    /// file length before this returns.
+    pub fn open(path: impl AsRef<Path>, budget_bytes: u64) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let len = f.metadata()?.len();
+        Self::new(BufReader::new(f), len, budget_bytes)
+    }
+}
+
+impl<R: Read> ChunkedReader<R> {
+    /// Wrap a raw stream of exactly `stream_len` bytes (counting the
+    /// magic). Reads and validates the header.
+    pub fn new(mut r: R, stream_len: u64, budget_bytes: u64) -> Result<Self> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != ALXCSR02_MAGIC {
+            return Err(io::bad("bad magic (expected ALXCSR02)"));
+        }
+        let mut b8 = [0u8; 8];
+        let mut read_u64 = |r: &mut R| -> Result<u64> {
+            r.read_exact(&mut b8)?;
+            Ok(u64::from_le_bytes(b8))
+        };
+        let rows64 = read_u64(&mut r)?;
+        let cols64 = read_u64(&mut r)?;
+        let nnz = read_u64(&mut r)?;
+        let num_chunks = read_u64(&mut r)?;
+        if cols64 > u32::MAX as u64 + 1 {
+            return Err(io::bad(format!("cols {cols64} exceeds the u32 index space")));
+        }
+        if rows64 > u32::MAX as u64 {
+            return Err(io::bad(format!("rows {rows64} exceeds the u32 index space")));
+        }
+        if (rows64 == 0) != (num_chunks == 0) {
+            return Err(io::bad("empty matrix must have zero chunks (and vice versa)"));
+        }
+        if num_chunks > rows64 {
+            return Err(io::bad(format!(
+                "{num_chunks} chunks for {rows64} rows (chunks cannot be empty)"
+            )));
+        }
+        // Exact size: header + per-chunk headers + one u32 per row +
+        // (u32 + f32) per stored entry.
+        let expect = HEADER_BYTES as u128
+            + num_chunks as u128 * CHUNK_HEADER_BYTES as u128
+            + rows64 as u128 * 4
+            + nnz as u128 * 8;
+        if expect != stream_len as u128 {
+            return Err(io::bad(format!(
+                "header claims {rows64} rows / {nnz} nnz / {num_chunks} chunks \
+                 ({expect} bytes) but the stream is {stream_len} bytes"
+            )));
+        }
+        let rows = usize::try_from(rows64).map_err(|_| io::bad("rows exceeds usize"))?;
+        let cols = usize::try_from(cols64).map_err(|_| io::bad("cols exceeds usize"))?;
+        usize::try_from(nnz).map_err(|_| io::bad("nnz exceeds usize"))?;
+        Ok(ChunkedReader {
+            r,
+            header: ChunkedHeader { rows, cols, nnz, num_chunks },
+            next_row: 0,
+            nnz_seen: 0,
+            chunks_seen: 0,
+            budget_bytes,
+            peak_chunk_bytes: 0,
+        })
+    }
+
+    pub fn header(&self) -> &ChunkedHeader {
+        &self.header
+    }
+
+    /// Chunks decoded so far.
+    pub fn chunks_read(&self) -> u64 {
+        self.chunks_seen
+    }
+
+    /// Largest per-chunk array allocation seen so far, in bytes — the
+    /// ingestion working set this cursor actually needed.
+    pub fn peak_chunk_bytes(&self) -> u64 {
+        self.peak_chunk_bytes
+    }
+
+    /// Decode the next chunk, or `None` after the last one (at which
+    /// point the row and nnz totals are checked against the header).
+    pub fn next_chunk(&mut self) -> Result<Option<CsrChunk>> {
+        if self.chunks_seen == self.header.num_chunks {
+            if self.next_row != self.header.rows {
+                return Err(io::bad(format!(
+                    "chunks cover {} of {} rows",
+                    self.next_row, self.header.rows
+                )));
+            }
+            if self.nnz_seen != self.header.nnz {
+                return Err(io::bad(format!(
+                    "chunks hold {} of {} stored entries",
+                    self.nnz_seen, self.header.nnz
+                )));
+            }
+            return Ok(None);
+        }
+        let mut magic = [0u8; 4];
+        self.r.read_exact(&mut magic)?;
+        if &magic != CHUNK_MAGIC {
+            return Err(io::bad(format!("bad chunk magic at row {}", self.next_row)));
+        }
+        let mut b8 = [0u8; 8];
+        let mut read_u64 = |r: &mut R| -> Result<u64> {
+            r.read_exact(&mut b8)?;
+            Ok(u64::from_le_bytes(b8))
+        };
+        let row_start = read_u64(&mut self.r)?;
+        let row_count = read_u64(&mut self.r)?;
+        let chunk_nnz = read_u64(&mut self.r)?;
+        if row_start != self.next_row as u64 {
+            return Err(io::bad(format!(
+                "chunk starts at row {row_start}, expected {}",
+                self.next_row
+            )));
+        }
+        let in_range = match row_start.checked_add(row_count) {
+            Some(end) => row_count > 0 && end <= self.header.rows as u64,
+            None => false,
+        };
+        if !in_range {
+            return Err(io::bad(format!(
+                "chunk row range [{row_start}, +{row_count}) outside [0, {})",
+                self.header.rows
+            )));
+        }
+        if chunk_nnz > self.header.nnz - self.nnz_seen {
+            return Err(io::bad(format!(
+                "chunk claims {chunk_nnz} entries but only {} remain of the header total",
+                self.header.nnz - self.nnz_seen
+            )));
+        }
+        // Both counts are now bounded by the length-validated header, so
+        // these allocations are safe; the budget additionally caps them.
+        // Decoded working set: `indptr` is usize (8 B per row + 1), plus
+        // u32 indices and f32 values per stored entry.
+        let chunk_bytes = (row_count + 1) * 8 + chunk_nnz * 8;
+        if self.budget_bytes > 0 && chunk_bytes > self.budget_bytes {
+            return Err(io::bad(format!(
+                "chunk at row {row_start} needs {chunk_bytes} bytes but the ingest \
+                 budget is {} — rewrite the file with smaller chunks (alx convert \
+                 --chunk-rows) or raise data.ingest_budget_mb",
+                self.budget_bytes
+            )));
+        }
+        self.peak_chunk_bytes = self.peak_chunk_bytes.max(chunk_bytes);
+        let row_count = row_count as usize;
+        let chunk_nnz = chunk_nnz as usize;
+
+        let mut indptr: Vec<usize> = Vec::with_capacity(row_count + 1);
+        indptr.push(0);
+        let mut total = 0usize;
+        io::read_u32s(&mut self.r, row_count, |len| {
+            total += len as usize;
+            if total > chunk_nnz {
+                return Err(io::bad("row lengths exceed the chunk's nnz"));
+            }
+            indptr.push(total);
+            Ok(())
+        })?;
+        if total != chunk_nnz {
+            return Err(io::bad(format!(
+                "row lengths sum to {total}, chunk header claims {chunk_nnz}"
+            )));
+        }
+        let cols = self.header.cols as u64;
+        let mut indices: Vec<u32> = Vec::with_capacity(chunk_nnz);
+        io::read_u32s(&mut self.r, chunk_nnz, |i| {
+            if i as u64 >= cols {
+                return Err(io::bad(format!(
+                    "column index {i} out of range (cols = {cols})"
+                )));
+            }
+            indices.push(i);
+            Ok(())
+        })?;
+        // Per-row strict ordering — the Csr invariant the trainer assumes.
+        for w in indptr.windows(2) {
+            let row = &indices[w[0]..w[1]];
+            if row.windows(2).any(|p| p[0] >= p[1]) {
+                return Err(io::bad("row indices not strictly ascending"));
+            }
+        }
+        let mut values: Vec<f32> = Vec::with_capacity(chunk_nnz);
+        io::read_f32s(&mut self.r, chunk_nnz, |v| {
+            values.push(v);
+            Ok(())
+        })?;
+
+        let row_start = self.next_row;
+        self.next_row += row_count;
+        self.nnz_seen += chunk_nnz as u64;
+        self.chunks_seen += 1;
+        Ok(Some(CsrChunk { row_start, indptr, indices, values }))
+    }
+
+    /// Materialize the whole stream as one [`Csr`] (the non-streaming
+    /// compat path used by [`crate::data::EdgeListSource`]).
+    pub fn read_all(mut self) -> Result<Csr> {
+        let (rows, cols, nnz) = (self.header.rows, self.header.cols, self.header.nnz);
+        let nnz = usize::try_from(nnz).map_err(|_| io::bad("nnz exceeds usize"))?;
+        let mut indptr: Vec<usize> = Vec::with_capacity(rows + 1);
+        indptr.push(0);
+        let mut indices: Vec<u32> = Vec::with_capacity(nnz);
+        let mut values: Vec<f32> = Vec::with_capacity(nnz);
+        while let Some(chunk) = self.next_chunk()? {
+            let base = indices.len();
+            indptr.extend(chunk.indptr[1..].iter().map(|&p| base + p));
+            indices.extend_from_slice(&chunk.indices);
+            values.extend_from_slice(&chunk.values);
+        }
+        Ok(Csr { rows, cols, indptr, indices, values })
+    }
+}
+
+/// Streaming `ALXCSR02` writer: rows are pushed in order and flushed as
+/// row-range chunks of `chunk_rows` rows, so the writer never holds more
+/// than one chunk.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+    rows: usize,
+    cols: usize,
+    nnz: u64,
+    chunk_rows: usize,
+    next_row: usize,
+    written_nnz: u64,
+    chunks_written: u64,
+    expected_chunks: u64,
+    buf_lens: Vec<u32>,
+    buf_indices: Vec<u32>,
+    buf_values: Vec<f32>,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Start a file for a `rows × cols` matrix holding exactly `nnz`
+    /// stored entries (the totals are part of the header and verified at
+    /// [`ChunkedWriter::finish`]).
+    pub fn new(mut w: W, rows: usize, cols: usize, nnz: u64, chunk_rows: usize) -> Result<Self> {
+        if chunk_rows == 0 {
+            return Err(io::bad("chunk_rows must be >= 1"));
+        }
+        if cols as u64 > u32::MAX as u64 + 1 || rows as u64 > u32::MAX as u64 {
+            return Err(io::bad("matrix dimensions exceed the u32 index space"));
+        }
+        let expected_chunks = (rows as u64).div_ceil(chunk_rows as u64);
+        w.write_all(ALXCSR02_MAGIC)?;
+        for v in [rows as u64, cols as u64, nnz, expected_chunks] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(ChunkedWriter {
+            w,
+            rows,
+            cols,
+            nnz,
+            chunk_rows,
+            next_row: 0,
+            written_nnz: 0,
+            chunks_written: 0,
+            expected_chunks,
+            buf_lens: Vec::with_capacity(chunk_rows),
+            buf_indices: Vec::new(),
+            buf_values: Vec::new(),
+        })
+    }
+
+    /// Append the next row (rows must arrive in order, exactly `rows` of
+    /// them). Indices must be strictly ascending and `< cols`.
+    pub fn push_row(&mut self, indices: &[u32], values: &[f32]) -> Result<()> {
+        if self.next_row >= self.rows {
+            return Err(io::bad(format!("push_row beyond the declared {} rows", self.rows)));
+        }
+        if indices.len() != values.len() {
+            return Err(io::bad("indices/values length mismatch"));
+        }
+        let mut prev: Option<u32> = None;
+        for &c in indices {
+            if c as u64 >= self.cols as u64 {
+                return Err(io::bad(format!(
+                    "column index {c} out of range (cols = {})",
+                    self.cols
+                )));
+            }
+            if let Some(p) = prev {
+                if c <= p {
+                    return Err(io::bad("row indices must be strictly ascending"));
+                }
+            }
+            prev = Some(c);
+        }
+        self.buf_lens.push(indices.len() as u32);
+        self.buf_indices.extend_from_slice(indices);
+        self.buf_values.extend_from_slice(values);
+        self.next_row += 1;
+        if self.buf_lens.len() == self.chunk_rows {
+            self.flush_chunk()?;
+        }
+        Ok(())
+    }
+
+    fn flush_chunk(&mut self) -> Result<()> {
+        let row_count = self.buf_lens.len();
+        if row_count == 0 {
+            return Ok(());
+        }
+        let chunk_nnz = self.buf_indices.len() as u64;
+        let row_start = (self.next_row - row_count) as u64;
+        self.w.write_all(CHUNK_MAGIC)?;
+        for v in [row_start, row_count as u64, chunk_nnz] {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        io::write_u32s(&mut self.w, &self.buf_lens)?;
+        io::write_u32s(&mut self.w, &self.buf_indices)?;
+        io::write_f32s(&mut self.w, &self.buf_values)?;
+        self.written_nnz += chunk_nnz;
+        self.chunks_written += 1;
+        self.buf_lens.clear();
+        self.buf_indices.clear();
+        self.buf_values.clear();
+        Ok(())
+    }
+
+    /// Flush the tail chunk and verify the declared totals; returns the
+    /// inner writer.
+    pub fn finish(mut self) -> Result<W> {
+        self.flush_chunk()?;
+        if self.next_row != self.rows {
+            return Err(io::bad(format!(
+                "wrote {} of the declared {} rows",
+                self.next_row, self.rows
+            )));
+        }
+        if self.written_nnz != self.nnz {
+            return Err(io::bad(format!(
+                "wrote {} of the declared {} entries",
+                self.written_nnz, self.nnz
+            )));
+        }
+        if self.chunks_written != self.expected_chunks {
+            return Err(io::bad(format!(
+                "wrote {} chunks, header declared {}",
+                self.chunks_written, self.expected_chunks
+            )));
+        }
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Write a whole [`Csr`] in the chunked format.
+pub fn write_chunked(m: &Csr, w: impl Write, chunk_rows: usize) -> Result<()> {
+    let mut cw = ChunkedWriter::new(w, m.rows, m.cols, m.nnz() as u64, chunk_rows)?;
+    for r in 0..m.rows {
+        cw.push_row(m.row_indices(r), m.row_values(r))?;
+    }
+    cw.finish()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn sample(rows: usize, cols: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut t = Vec::new();
+        for r in 0..rows as u32 {
+            let len = rng.range(0, 7); // empty rows included
+            let mut seen = std::collections::HashSet::new();
+            while seen.len() < len {
+                seen.insert(rng.range(0, cols) as u32);
+            }
+            for c in seen {
+                t.push((r, c, (r + c) as f32 * 0.5 + 0.25));
+            }
+        }
+        Csr::from_coo(rows, cols, &t)
+    }
+
+    fn encode(m: &Csr, chunk_rows: usize) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_chunked(m, &mut buf, chunk_rows).unwrap();
+        buf
+    }
+
+    fn decode(buf: &[u8], budget: u64) -> std::io::Result<Csr> {
+        ChunkedReader::new(buf, buf.len() as u64, budget)?.read_all()
+    }
+
+    #[test]
+    fn roundtrips_across_chunk_sizes() {
+        let m = sample(57, 23, 1);
+        for chunk_rows in [1usize, 2, 7, 13, 57, 64, 1000] {
+            let buf = encode(&m, chunk_rows);
+            let m2 = decode(&buf, 0).unwrap();
+            assert_eq!(m, m2, "chunk_rows = {chunk_rows}");
+        }
+    }
+
+    #[test]
+    fn empty_matrix_roundtrips() {
+        let m = Csr::from_coo(0, 0, &[]);
+        let buf = encode(&m, 8);
+        let m2 = decode(&buf, 0).unwrap();
+        assert_eq!(m2.rows, 0);
+        assert_eq!(m2.nnz(), 0);
+    }
+
+    #[test]
+    fn header_is_validated_against_stream_length() {
+        let m = sample(20, 10, 2);
+        let mut buf = encode(&m, 8);
+        // Inflate the declared nnz: exact-size check must fail.
+        let nnz_off = 8 + 16;
+        let bad = (m.nnz() as u64 + 1).to_le_bytes();
+        buf[nnz_off..nnz_off + 8].copy_from_slice(&bad);
+        assert!(decode(&buf, 0).is_err());
+    }
+
+    #[test]
+    fn truncation_at_any_byte_errors() {
+        let m = sample(19, 11, 3);
+        let buf = encode(&m, 5);
+        for cut in 0..buf.len() {
+            assert!(
+                ChunkedReader::new(&buf[..cut], cut as u64, 0)
+                    .and_then(|r| r.read_all())
+                    .is_err(),
+                "truncation at byte {cut}/{} accepted",
+                buf.len()
+            );
+        }
+    }
+
+    #[test]
+    fn budget_bounds_chunk_allocation() {
+        let m = sample(64, 16, 4);
+        // One big chunk: needs (rows+1)*8 indptr + nnz*8 bytes at once.
+        let buf = encode(&m, 1024);
+        let need = (64 + 1) * 8 + m.nnz() as u64 * 8;
+        assert!(decode(&buf, need).is_ok());
+        let err = decode(&buf, need / 2).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+        // Small chunks fit the same budget.
+        let buf = encode(&m, 4);
+        assert!(decode(&buf, need / 2).is_ok());
+    }
+
+    #[test]
+    fn reader_tracks_peak_chunk_bytes() {
+        let m = sample(40, 12, 5);
+        let buf = encode(&m, 10);
+        let mut r = ChunkedReader::new(&buf[..], buf.len() as u64, 0).unwrap();
+        let mut max_seen = 0u64;
+        while let Some(c) = r.next_chunk().unwrap() {
+            max_seen = max_seen.max(((c.row_count() + 1) * 8 + c.nnz() * 8) as u64);
+        }
+        assert_eq!(r.peak_chunk_bytes(), max_seen);
+        assert!(r.peak_chunk_bytes() < m.memory_bytes());
+    }
+
+    #[test]
+    fn writer_rejects_inconsistent_totals() {
+        // Fewer rows than declared.
+        let mut cw = ChunkedWriter::new(Vec::new(), 3, 4, 2, 2).unwrap();
+        cw.push_row(&[1, 2], &[1.0, 1.0]).unwrap();
+        assert!(cw.finish().is_err());
+        // Unsorted row.
+        let mut cw = ChunkedWriter::new(Vec::new(), 1, 4, 2, 2).unwrap();
+        assert!(cw.push_row(&[2, 1], &[1.0, 1.0]).is_err());
+        // Out-of-range column.
+        let mut cw = ChunkedWriter::new(Vec::new(), 1, 4, 1, 2).unwrap();
+        assert!(cw.push_row(&[9], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn chunk_rows_iterate_globally() {
+        let m = sample(23, 9, 6);
+        let buf = encode(&m, 4);
+        let mut r = ChunkedReader::new(&buf[..], buf.len() as u64, 0).unwrap();
+        let mut next = 0usize;
+        while let Some(chunk) = r.next_chunk().unwrap() {
+            for i in 0..chunk.row_count() {
+                let (g, idx, val) = chunk.row(i);
+                assert_eq!(g, next);
+                assert_eq!(idx, m.row_indices(g));
+                assert_eq!(val, m.row_values(g));
+                next += 1;
+            }
+        }
+        assert_eq!(next, m.rows);
+    }
+}

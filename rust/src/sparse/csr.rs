@@ -6,6 +6,19 @@
 //! column-major pass for the item side, so [`Csr::transpose`] is a core
 //! operation (counting sort, O(nnz)).
 
+/// Row-major read access to a sparse matrix — the minimal surface the
+/// dense batcher, feeder pipeline and objective pass need. Implemented by
+/// the monolithic [`Csr`] and by [`super::ShardedCsr`], so the trainer can
+/// run over either storage layout.
+pub trait RowMatrix {
+    /// Length of row `r`.
+    fn row_len(&self, r: usize) -> usize;
+    /// Column indices of row `r` (sorted ascending).
+    fn row_indices(&self, r: usize) -> &[u32];
+    /// Values of row `r`.
+    fn row_values(&self, r: usize) -> &[f32];
+}
+
 /// CSR sparse matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
@@ -128,60 +141,282 @@ impl Csr {
         (0..self.rows).map(|r| self.row_len(r) as f64).collect()
     }
 
-    /// Serialize to a simple little-endian binary format.
+    /// Serialize to a simple little-endian binary format (`ALXCSR01`).
+    /// Arrays are written in bulk blocks, not element by element — this is
+    /// the epoch-0 load/save time for file-backed runs.
     pub fn write_to(&self, w: &mut impl std::io::Write) -> std::io::Result<()> {
         w.write_all(b"ALXCSR01")?;
         for v in [self.rows as u64, self.cols as u64, self.nnz() as u64] {
             w.write_all(&v.to_le_bytes())?;
         }
-        for &p in &self.indptr {
-            w.write_all(&(p as u64).to_le_bytes())?;
-        }
-        for &i in &self.indices {
-            w.write_all(&i.to_le_bytes())?;
-        }
-        for &v in &self.values {
-            w.write_all(&v.to_le_bytes())?;
-        }
+        io::write_u64s(w, self.indptr.iter().map(|&p| p as u64))?;
+        io::write_u32s(w, &self.indices)?;
+        io::write_f32s(w, &self.values)?;
         Ok(())
     }
 
-    /// Deserialize the [`Csr::write_to`] format.
+    /// Deserialize the [`Csr::write_to`] format from an unbounded stream.
+    ///
+    /// Allocations grow with the bytes actually read (never with the
+    /// untrusted header alone), and the structural invariants are checked:
+    /// `indptr` monotone with `indptr[0] == 0` and `indptr[rows] == nnz`,
+    /// every column index `< cols`. A corrupt or truncated file yields
+    /// `InvalidData`/`UnexpectedEof`, never a panic or an OOM allocation.
     pub fn read_from(r: &mut impl std::io::Read) -> std::io::Result<Csr> {
+        Self::read_from_limited(r, None)
+    }
+
+    /// [`Csr::read_from`] with a known stream length (in bytes, counting
+    /// the magic). The header is validated against it up front, so a lying
+    /// header fails before any large allocation happens.
+    pub fn read_from_limited(
+        r: &mut impl std::io::Read,
+        stream_len: Option<u64>,
+    ) -> std::io::Result<Csr> {
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
         if &magic != b"ALXCSR01" {
-            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+            return Err(io::bad("bad magic (expected ALXCSR01)"));
         }
         let mut u64buf = [0u8; 8];
         let mut read_u64 = |r: &mut dyn std::io::Read| -> std::io::Result<u64> {
             r.read_exact(&mut u64buf)?;
             Ok(u64::from_le_bytes(u64buf))
         };
-        let rows = read_u64(r)? as usize;
-        let cols = read_u64(r)? as usize;
-        let nnz = read_u64(r)? as usize;
-        let mut indptr = Vec::with_capacity(rows + 1);
-        for _ in 0..=rows {
-            indptr.push(read_u64(r)? as usize);
+        let rows64 = read_u64(r)?;
+        let cols64 = read_u64(r)?;
+        let nnz64 = read_u64(r)?;
+        if cols64 > u32::MAX as u64 + 1 {
+            return Err(io::bad(format!("cols {cols64} exceeds the u32 index space")));
         }
-        let mut indices = vec![0u32; nnz];
-        let mut buf4 = [0u8; 4];
-        for i in indices.iter_mut() {
-            r.read_exact(&mut buf4)?;
-            *i = u32::from_le_bytes(buf4);
+        // Exact body size implied by the header; with a known stream
+        // length this rejects oversized rows/nnz before any allocation.
+        let body = (rows64 as u128 + 1) * 8 + nnz64 as u128 * 8;
+        if let Some(len) = stream_len {
+            let have = (len as u128).saturating_sub(32);
+            if body > have {
+                return Err(io::bad(format!(
+                    "header claims {rows64} rows / {nnz64} nnz ({body} body bytes) \
+                     but only {have} bytes remain in the stream"
+                )));
+            }
         }
-        let mut values = vec![0.0f32; nnz];
-        for v in values.iter_mut() {
-            r.read_exact(&mut buf4)?;
-            *v = f32::from_le_bytes(buf4);
+        let rows = usize::try_from(rows64).map_err(|_| io::bad("rows exceeds usize"))?;
+        let cols = usize::try_from(cols64).map_err(|_| io::bad("cols exceeds usize"))?;
+        let nnz = usize::try_from(nnz64).map_err(|_| io::bad("nnz exceeds usize"))?;
+        rows.checked_add(1).ok_or_else(|| io::bad("rows exceeds usize"))?;
+
+        // indptr: stream in blocks, validating monotonicity as it arrives.
+        let bounded = stream_len.is_some();
+        let mut indptr: Vec<usize> = io::alloc_guarded(rows + 1, bounded)?;
+        let mut prev = 0u64;
+        io::read_u64s(r, rows + 1, |p| {
+            if indptr.is_empty() && p != 0 {
+                return Err(io::bad("indptr[0] != 0"));
+            }
+            if p < prev {
+                return Err(io::bad("non-monotonic indptr"));
+            }
+            if p > nnz64 {
+                return Err(io::bad(format!("indptr entry {p} exceeds nnz {nnz64}")));
+            }
+            prev = p;
+            indptr.push(p as usize);
+            Ok(())
+        })?;
+        if indptr[rows] != nnz {
+            return Err(io::bad(format!(
+                "indptr[rows] = {} but header claims nnz = {nnz}",
+                indptr[rows]
+            )));
         }
+
+        let mut indices: Vec<u32> = io::alloc_guarded(nnz, bounded)?;
+        io::read_u32s(r, nnz, |i| {
+            if i as u64 >= cols64 {
+                return Err(io::bad(format!("column index {i} out of range (cols = {cols})")));
+            }
+            indices.push(i);
+            Ok(())
+        })?;
+        let mut values: Vec<f32> = io::alloc_guarded(nnz, bounded)?;
+        io::read_f32s(r, nnz, |v| {
+            values.push(v);
+            Ok(())
+        })?;
         Ok(Csr { rows, cols, indptr, indices, values })
     }
 
     /// Memory footprint of the stored arrays in bytes.
     pub fn memory_bytes(&self) -> u64 {
         (self.indptr.len() * 8 + self.indices.len() * 4 + self.values.len() * 4) as u64
+    }
+}
+
+impl RowMatrix for Csr {
+    #[inline]
+    fn row_len(&self, r: usize) -> usize {
+        Csr::row_len(self, r)
+    }
+
+    #[inline]
+    fn row_indices(&self, r: usize) -> &[u32] {
+        Csr::row_indices(self, r)
+    }
+
+    #[inline]
+    fn row_values(&self, r: usize) -> &[f32] {
+        Csr::row_values(self, r)
+    }
+}
+
+impl<M: RowMatrix + ?Sized> RowMatrix for &M {
+    #[inline]
+    fn row_len(&self, r: usize) -> usize {
+        (**self).row_len(r)
+    }
+
+    #[inline]
+    fn row_indices(&self, r: usize) -> &[u32] {
+        (**self).row_indices(r)
+    }
+
+    #[inline]
+    fn row_values(&self, r: usize) -> &[f32] {
+        (**self).row_values(r)
+    }
+}
+
+impl<M: RowMatrix + ?Sized> RowMatrix for std::sync::Arc<M> {
+    #[inline]
+    fn row_len(&self, r: usize) -> usize {
+        (**self).row_len(r)
+    }
+
+    #[inline]
+    fn row_indices(&self, r: usize) -> &[u32] {
+        (**self).row_indices(r)
+    }
+
+    #[inline]
+    fn row_values(&self, r: usize) -> &[f32] {
+        (**self).row_values(r)
+    }
+}
+
+/// Bulk little-endian array IO shared by the `ALXCSR01` and `ALXCSR02`
+/// codecs: fixed-size staging blocks instead of per-element `read_exact`/
+/// `write_all` calls, and allocation guards for untrusted element counts.
+pub(crate) mod io {
+    use std::io::{Read, Result, Write};
+
+    /// Elements staged per IO block (64 Ki elements ≈ 256-512 KiB).
+    const BLOCK: usize = 64 * 1024;
+
+    pub(crate) fn bad(msg: impl Into<String>) -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+    }
+
+    /// A vector for `n` untrusted elements: preallocate only when the count
+    /// was validated against the stream length; otherwise start at one
+    /// block and let growth track the bytes actually read.
+    pub(crate) fn alloc_guarded<T>(n: usize, trusted: bool) -> Result<Vec<T>> {
+        Ok(Vec::with_capacity(if trusted { n } else { n.min(BLOCK) }))
+    }
+
+    /// Shared staging loop for 4-byte elements (u32 and bit-cast f32).
+    fn write_u32_stream(
+        w: &mut impl Write,
+        xs: impl Iterator<Item = u32>,
+    ) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::with_capacity(BLOCK * 4);
+        for x in xs {
+            buf.extend_from_slice(&x.to_le_bytes());
+            if buf.len() >= BLOCK * 4 {
+                w.write_all(&buf)?;
+                buf.clear();
+            }
+        }
+        if !buf.is_empty() {
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub(crate) fn write_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+        write_u32_stream(w, xs.iter().copied())
+    }
+
+    pub(crate) fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+        // f32::to_le_bytes is the LE encoding of the IEEE bit pattern, so
+        // the bit-cast delegation is exact (mirrors `read_f32s`).
+        write_u32_stream(w, xs.iter().map(|x| x.to_bits()))
+    }
+
+    pub(crate) fn write_u64s(
+        w: &mut impl Write,
+        xs: impl Iterator<Item = u64>,
+    ) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::with_capacity(BLOCK * 8);
+        for x in xs {
+            buf.extend_from_slice(&x.to_le_bytes());
+            if buf.len() >= BLOCK * 8 {
+                w.write_all(&buf)?;
+                buf.clear();
+            }
+        }
+        if !buf.is_empty() {
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub(crate) fn read_u32s(
+        r: &mut impl Read,
+        n: usize,
+        mut sink: impl FnMut(u32) -> Result<()>,
+    ) -> Result<()> {
+        let mut byte_buf = vec![0u8; BLOCK.min(n.max(1)) * 4];
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = remaining.min(BLOCK);
+            let buf = &mut byte_buf[..take * 4];
+            r.read_exact(buf)?;
+            for b in buf.chunks_exact(4) {
+                sink(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))?;
+            }
+            remaining -= take;
+        }
+        Ok(())
+    }
+
+    pub(crate) fn read_f32s(
+        r: &mut impl Read,
+        n: usize,
+        mut sink: impl FnMut(f32) -> Result<()>,
+    ) -> Result<()> {
+        read_u32s(r, n, |bits| sink(f32::from_bits(bits)))
+    }
+
+    pub(crate) fn read_u64s(
+        r: &mut impl Read,
+        n: usize,
+        mut sink: impl FnMut(u64) -> Result<()>,
+    ) -> Result<()> {
+        let mut byte_buf = vec![0u8; BLOCK.min(n.max(1)) * 8];
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = remaining.min(BLOCK);
+            let buf = &mut byte_buf[..take * 8];
+            r.read_exact(buf)?;
+            for b in buf.chunks_exact(8) {
+                sink(u64::from_le_bytes([
+                    b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                ]))?;
+            }
+            remaining -= take;
+        }
+        Ok(())
     }
 }
 
@@ -254,6 +489,71 @@ mod tests {
     fn io_rejects_bad_magic() {
         let buf = b"NOTMAGIC".to_vec();
         assert!(Csr::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn io_roundtrip_with_known_length() {
+        let m = sample();
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        let m2 = Csr::read_from_limited(&mut &buf[..], Some(buf.len() as u64)).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn io_rejects_oversized_header_against_stream_length() {
+        // A header claiming a multi-GB body must fail the length check
+        // before any allocation, not OOM.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"ALXCSR01");
+        buf.extend_from_slice(&(1u64 << 40).to_le_bytes()); // rows
+        buf.extend_from_slice(&8u64.to_le_bytes()); // cols
+        buf.extend_from_slice(&(1u64 << 50).to_le_bytes()); // nnz
+        let len = buf.len() as u64;
+        let err = Csr::read_from_limited(&mut &buf[..], Some(len)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        // Unbounded streams fail on EOF instead, still without a huge
+        // upfront allocation.
+        assert!(Csr::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn io_rejects_non_monotonic_indptr() {
+        let m = sample();
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        // indptr starts at byte 32; swap two entries to break monotonicity.
+        let a = 32 + 8; // indptr[1]
+        let b = 32 + 3 * 8; // indptr[3]
+        for k in 0..8 {
+            buf.swap(a + k, b + k);
+        }
+        let err = Csr::read_from(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+    }
+
+    #[test]
+    fn io_rejects_out_of_range_column() {
+        let m = sample();
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        // First index lives right after the indptr block.
+        let idx0 = 32 + (m.rows + 1) * 8;
+        buf[idx0..idx0 + 4].copy_from_slice(&(m.cols as u32 + 7).to_le_bytes());
+        let err = Csr::read_from(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+    }
+
+    #[test]
+    fn io_rejects_indptr_nnz_mismatch() {
+        let m = sample();
+        let mut buf = Vec::new();
+        m.write_to(&mut buf).unwrap();
+        // Inflate the final indptr entry past the header nnz.
+        let last = 32 + m.rows * 8;
+        buf[last..last + 8].copy_from_slice(&(m.nnz() as u64 + 3).to_le_bytes());
+        let err = Csr::read_from(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
     }
 
     #[test]

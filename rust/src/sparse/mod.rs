@@ -1,8 +1,20 @@
-//! Sparse matrix substrate: CSR storage, transpose, and the paper's
-//! strong-generalization train/test split (§5).
+//! Sparse matrix substrate: CSR storage (monolithic and row-sharded), the
+//! chunked `ALXCSR02` on-disk format with its bounded-memory cursor, the
+//! transpose, and the paper's strong-generalization train/test split (§5)
+//! in both in-memory and streaming forms.
 
+pub mod chunked;
 pub mod csr;
+pub mod shards;
 pub mod split;
 
-pub use csr::Csr;
-pub use split::{split_strong_generalization, Split, TestRow};
+pub use chunked::{
+    write_chunked, ChunkedHeader, ChunkedReader, ChunkedWriter, CsrChunk, ALXCSR02_MAGIC,
+    DEFAULT_CHUNK_ROWS,
+};
+pub use csr::{Csr, RowMatrix};
+pub use shards::{ShardedCsr, ShardedCsrBuilder};
+pub use split::{
+    split_strong_generalization, split_to_shards, RowDisposition, ShardedSplit, Split,
+    SplitPlan, TestRow,
+};

@@ -1,0 +1,357 @@
+//! Row-sharded CSR storage — the matrix-side twin of
+//! [`crate::sharding::ShardedTable`].
+//!
+//! The trainer's shard pass μ only ever reads the training-matrix rows in
+//! shard μ's row range (scatters are shard-local, paper Fig. 2), so the
+//! matrix never needs to exist as one monolithic allocation: a
+//! [`ShardedCsr`] stores one contiguous row-range piece per shard, and a
+//! [`ShardedCsrBuilder`] assembles those pieces row by row — which is what
+//! lets the streaming ingestion path (`ALXCSR02` chunks → split → shards)
+//! run without ever materializing the full matrix.
+//!
+//! Row accessors take **global** row ids, so batching, the objective pass
+//! and the feeder pipeline are oblivious to the layout.
+
+use super::csr::{Csr, RowMatrix};
+
+/// A CSR matrix stored as contiguous row-range pieces. Piece `p` holds
+/// rows `[p·per, min((p+1)·per, rows))` with `per = ceil(rows / pieces)`
+/// — the same uniform layout as [`crate::sharding::ShardedTable`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardedCsr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Rows per piece (the last piece may be short or empty).
+    per: usize,
+    pieces: Vec<Csr>,
+    nnz: usize,
+}
+
+impl ShardedCsr {
+    /// Rows-per-piece for a uniform partition (shared with the builder).
+    fn per_for(rows: usize, num_pieces: usize) -> usize {
+        rows.div_ceil(num_pieces.max(1)).max(1)
+    }
+
+    /// Copy a monolithic [`Csr`] into `num_pieces` row-range pieces.
+    pub fn from_csr(m: &Csr, num_pieces: usize) -> ShardedCsr {
+        let mut b = ShardedCsrBuilder::new(m.rows, m.cols, num_pieces);
+        for r in 0..m.rows {
+            b.push_row(m.row_indices(r), m.row_values(r));
+        }
+        b.finish()
+    }
+
+    pub fn num_pieces(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Global row range `[start, end)` of piece `p`.
+    pub fn piece_range(&self, p: usize) -> (usize, usize) {
+        let start = (p * self.per).min(self.rows);
+        let end = ((p + 1) * self.per).min(self.rows);
+        (start, end)
+    }
+
+    /// The piece holding global row `r`, and `r`'s piece-local index.
+    #[inline]
+    fn locate(&self, r: usize) -> (usize, usize) {
+        debug_assert!(r < self.rows);
+        let p = (r / self.per).min(self.pieces.len() - 1);
+        (p, r - p * self.per)
+    }
+
+    /// Column indices of global row `r`.
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        let (p, local) = self.locate(r);
+        self.pieces[p].row_indices(local)
+    }
+
+    /// Values of global row `r`.
+    #[inline]
+    pub fn row_values(&self, r: usize) -> &[f32] {
+        let (p, local) = self.locate(r);
+        self.pieces[p].row_values(local)
+    }
+
+    /// Length of global row `r`.
+    #[inline]
+    pub fn row_len(&self, r: usize) -> usize {
+        let (p, local) = self.locate(r);
+        self.pieces[p].row_len(local)
+    }
+
+    /// Memory footprint of the stored arrays in bytes.
+    pub fn memory_bytes(&self) -> u64 {
+        self.pieces.iter().map(|p| p.memory_bytes()).sum()
+    }
+
+    /// Transpose into `num_pieces` column-range pieces via counting sort —
+    /// O(nnz) time, and the only scratch beyond the output is the O(cols)
+    /// per-column cursor table (never a full monolithic copy).
+    pub fn transpose(&self, num_pieces: usize) -> ShardedCsr {
+        assert!(self.rows <= u32::MAX as usize, "row ids must fit u32");
+        let t_rows = self.cols;
+        let per = Self::per_for(t_rows, num_pieces);
+
+        // Count entries per transpose row (= per source column).
+        let mut counts = vec![0usize; t_rows];
+        for piece in &self.pieces {
+            for &c in &piece.indices {
+                counts[c as usize] += 1;
+            }
+        }
+
+        // Allocate each piece exactly, with local indptr from the counts.
+        let mut pieces: Vec<Csr> = Vec::with_capacity(num_pieces.max(1));
+        for p in 0..num_pieces.max(1) {
+            let start = (p * per).min(t_rows);
+            let end = ((p + 1) * per).min(t_rows);
+            let mut indptr = Vec::with_capacity(end - start + 1);
+            indptr.push(0usize);
+            let mut total = 0usize;
+            for c in start..end {
+                total += counts[c];
+                indptr.push(total);
+            }
+            pieces.push(Csr {
+                rows: end - start,
+                cols: self.rows,
+                indptr,
+                indices: vec![0u32; total],
+                values: vec![0.0f32; total],
+            });
+        }
+
+        // Scatter pass in ascending source-row order, so each transpose
+        // row ends up sorted by source row — same result as
+        // [`Csr::transpose`].
+        let mut cursor = counts; // reuse as per-column write cursors
+        for c in cursor.iter_mut() {
+            *c = 0;
+        }
+        for r in 0..self.rows {
+            let idx = self.row_indices(r);
+            let val = self.row_values(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                let c = c as usize;
+                let p = (c / per).min(pieces.len() - 1);
+                let local = c - p * per;
+                let piece = &mut pieces[p];
+                let off = piece.indptr[local] + cursor[c];
+                piece.indices[off] = r as u32;
+                piece.values[off] = v;
+                cursor[c] += 1;
+            }
+        }
+
+        ShardedCsr { rows: t_rows, cols: self.rows, per, pieces, nnz: self.nnz }
+    }
+
+    /// Concatenate the pieces back into one monolithic [`Csr`]
+    /// (tests/debugging; defeats the purpose on large matrices).
+    pub fn to_csr(&self) -> Csr {
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::with_capacity(self.nnz);
+        let mut values = Vec::with_capacity(self.nnz);
+        for piece in &self.pieces {
+            let base = indices.len();
+            indptr.extend(piece.indptr[1..].iter().map(|&p| base + p));
+            indices.extend_from_slice(&piece.indices);
+            values.extend_from_slice(&piece.values);
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+}
+
+impl RowMatrix for ShardedCsr {
+    #[inline]
+    fn row_len(&self, r: usize) -> usize {
+        ShardedCsr::row_len(self, r)
+    }
+
+    #[inline]
+    fn row_indices(&self, r: usize) -> &[u32] {
+        ShardedCsr::row_indices(self, r)
+    }
+
+    #[inline]
+    fn row_values(&self, r: usize) -> &[f32] {
+        ShardedCsr::row_values(self, r)
+    }
+}
+
+/// Assembles a [`ShardedCsr`] from rows arriving in ascending order — the
+/// sink of the streaming ingestion path. Memory grows only with the rows
+/// pushed so far; there is no monolithic intermediate.
+pub struct ShardedCsrBuilder {
+    rows: usize,
+    cols: usize,
+    per: usize,
+    num_pieces: usize,
+    next_row: usize,
+    nnz: usize,
+    pieces: Vec<Csr>,
+}
+
+impl ShardedCsrBuilder {
+    pub fn new(rows: usize, cols: usize, num_pieces: usize) -> ShardedCsrBuilder {
+        assert!(rows <= u32::MAX as usize, "row ids must fit u32");
+        let num_pieces = num_pieces.max(1);
+        let per = ShardedCsr::per_for(rows, num_pieces);
+        let pieces = (0..num_pieces)
+            .map(|p| {
+                let start = (p * per).min(rows);
+                let end = ((p + 1) * per).min(rows);
+                let mut indptr = Vec::with_capacity(end - start + 1);
+                indptr.push(0usize);
+                Csr { rows: end - start, cols, indptr, indices: Vec::new(), values: Vec::new() }
+            })
+            .collect();
+        ShardedCsrBuilder { rows, cols, per, num_pieces, next_row: 0, nnz: 0, pieces }
+    }
+
+    /// Rows appended so far.
+    pub fn rows_pushed(&self) -> usize {
+        self.next_row
+    }
+
+    /// Append the next row (global id `rows_pushed()`); `indices` must be
+    /// strictly ascending and `< cols` (the [`Csr`] invariant).
+    pub fn push_row(&mut self, indices: &[u32], values: &[f32]) {
+        assert!(self.next_row < self.rows, "pushed more than {} rows", self.rows);
+        assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "row not sorted");
+        debug_assert!(indices.iter().all(|&c| (c as usize) < self.cols), "index out of range");
+        let p = (self.next_row / self.per).min(self.num_pieces - 1);
+        let piece = &mut self.pieces[p];
+        piece.indices.extend_from_slice(indices);
+        piece.values.extend_from_slice(values);
+        piece.indptr.push(piece.indices.len());
+        self.next_row += 1;
+        self.nnz += indices.len();
+    }
+
+    /// Append an empty row (held-out test rows stay in the id space).
+    pub fn push_empty(&mut self) {
+        self.push_row(&[], &[]);
+    }
+
+    pub fn finish(self) -> ShardedCsr {
+        assert_eq!(self.next_row, self.rows, "builder got fewer rows than declared");
+        ShardedCsr {
+            rows: self.rows,
+            cols: self.cols,
+            per: self.per,
+            pieces: self.pieces,
+            nnz: self.nnz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn sample(rows: usize, cols: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut t = Vec::new();
+        for r in 0..rows as u32 {
+            let len = rng.range(0, 6);
+            let mut seen = std::collections::HashSet::new();
+            while seen.len() < len {
+                seen.insert(rng.range(0, cols) as u32);
+            }
+            for c in seen {
+                t.push((r, c, (r as f32) + (c as f32) * 0.1));
+            }
+        }
+        Csr::from_coo(rows, cols, &t)
+    }
+
+    #[test]
+    fn from_csr_preserves_every_row() {
+        let m = sample(41, 17, 1);
+        for pieces in [1usize, 2, 3, 8, 41, 64] {
+            let s = ShardedCsr::from_csr(&m, pieces);
+            assert_eq!(s.rows, m.rows);
+            assert_eq!(s.nnz(), m.nnz());
+            for r in 0..m.rows {
+                assert_eq!(s.row_indices(r), m.row_indices(r), "pieces={pieces} row={r}");
+                assert_eq!(s.row_values(r), m.row_values(r));
+                assert_eq!(s.row_len(r), m.row_len(r));
+            }
+            assert_eq!(s.to_csr(), m);
+        }
+    }
+
+    #[test]
+    fn transpose_matches_monolithic_transpose() {
+        let m = sample(29, 13, 2);
+        let t_ref = m.transpose();
+        for pieces in [1usize, 2, 5, 13, 29] {
+            let s = ShardedCsr::from_csr(&m, pieces);
+            let t = s.transpose(pieces);
+            assert_eq!(t.rows, t_ref.rows);
+            assert_eq!(t.cols, t_ref.cols);
+            assert_eq!(t.to_csr(), t_ref, "pieces={pieces}");
+        }
+    }
+
+    #[test]
+    fn piece_ranges_partition_rows() {
+        for (rows, pieces) in [(10usize, 3usize), (7, 7), (5, 8), (100, 1), (1, 4)] {
+            let s = ShardedCsr::from_csr(&sample(rows, 6, 3), pieces);
+            let mut prev = 0usize;
+            let mut total = 0usize;
+            for p in 0..s.num_pieces() {
+                let (start, end) = s.piece_range(p);
+                assert_eq!(start, prev.min(rows));
+                assert!(end >= start);
+                prev = end;
+                total += end - start;
+            }
+            assert_eq!(total, rows, "rows={rows} pieces={pieces}");
+        }
+    }
+
+    #[test]
+    fn builder_matches_from_csr_and_tracks_empties() {
+        let m = sample(23, 9, 4);
+        let mut b = ShardedCsrBuilder::new(m.rows, m.cols, 4);
+        for r in 0..m.rows {
+            if m.row_len(r) == 0 {
+                b.push_empty();
+            } else {
+                b.push_row(m.row_indices(r), m.row_values(r));
+            }
+        }
+        let s = b.finish();
+        assert_eq!(s.to_csr(), m);
+        assert_eq!(s.memory_bytes(), ShardedCsr::from_csr(&m, 4).memory_bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer rows")]
+    fn builder_rejects_short_input() {
+        let b = ShardedCsrBuilder::new(5, 3, 2);
+        b.finish();
+    }
+
+    #[test]
+    fn empty_matrix_shards() {
+        let m = Csr::from_coo(3, 3, &[]);
+        let s = ShardedCsr::from_csr(&m, 2);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.transpose(2).nnz(), 0);
+        assert_eq!(s.to_csr(), m);
+    }
+}

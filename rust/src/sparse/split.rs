@@ -8,6 +8,7 @@
 //! generalize to unseen users (Marlin's "strong generalization" protocol).
 
 use super::csr::Csr;
+use super::shards::{ShardedCsr, ShardedCsrBuilder};
 use crate::util::Pcg64;
 
 /// One test row: its history (observed outlinks used for fold-in) and the
@@ -28,46 +29,77 @@ pub struct Split {
     pub test: Vec<TestRow>,
 }
 
-/// Perform the strong-generalization split.
-///
-/// * `train_frac` — fraction of rows kept fully in training (paper: 0.9).
-/// * `holdout_frac` — fraction of a test row's outlinks held out (paper: 0.25).
-pub fn split_strong_generalization(
-    full: &Csr,
-    train_frac: f64,
+/// What the split decides about one row.
+#[derive(Clone, Debug)]
+pub enum RowDisposition {
+    /// Training row: keep every link in the training matrix.
+    Train,
+    /// Test row: empty in the training matrix, evaluated via its
+    /// history/holdout partition.
+    Test(TestRow),
+    /// Unevaluable row (empty, or a single-link test row): empty in the
+    /// training matrix and absent from the test set.
+    Skip,
+}
+
+/// The streaming form of the strong-generalization split: all random
+/// decisions are a function of the **row count and seed** alone plus each
+/// row's links as it arrives, so the split can run over a chunked stream
+/// without a full matrix in memory. Rows must be disposed in ascending
+/// order, exactly once each; the RNG consumption pattern is identical to
+/// the classic [`split_strong_generalization`], so both paths produce
+/// bitwise-identical splits.
+pub struct SplitPlan {
+    is_test: Vec<bool>,
+    rng: Pcg64,
     holdout_frac: f64,
-    seed: u64,
-) -> Split {
-    assert!((0.0..=1.0).contains(&train_frac));
-    assert!((0.0..=1.0).contains(&holdout_frac));
-    let mut rng = Pcg64::new(seed);
-    let mut rows: Vec<u32> = (0..full.rows as u32).collect();
-    rng.shuffle(&mut rows);
-    let n_train = (full.rows as f64 * train_frac).round() as usize;
-    let mut is_test = vec![false; full.rows];
-    for &r in &rows[n_train..] {
-        is_test[r as usize] = true;
+    next_row: usize,
+}
+
+impl SplitPlan {
+    /// * `train_frac` — fraction of rows kept fully in training (paper: 0.9).
+    /// * `holdout_frac` — fraction of a test row's outlinks held out
+    ///   (paper: 0.25).
+    pub fn new(rows: usize, train_frac: f64, holdout_frac: f64, seed: u64) -> SplitPlan {
+        assert!((0.0..=1.0).contains(&train_frac));
+        assert!((0.0..=1.0).contains(&holdout_frac));
+        let mut rng = Pcg64::new(seed);
+        let mut row_ids: Vec<u32> = (0..rows as u32).collect();
+        rng.shuffle(&mut row_ids);
+        let n_train = (rows as f64 * train_frac).round() as usize;
+        let mut is_test = vec![false; rows];
+        for &r in &row_ids[n_train..] {
+            is_test[r as usize] = true;
+        }
+        SplitPlan { is_test, rng, holdout_frac, next_row: 0 }
     }
 
-    let mut triplets: Vec<(u32, u32, f32)> = Vec::with_capacity(full.nnz());
-    let mut test = Vec::new();
-    for r in 0..full.rows {
-        let idx = full.row_indices(r);
-        let val = full.row_values(r);
-        if !is_test[r] {
-            for (&c, &v) in idx.iter().zip(val) {
-                triplets.push((r as u32, c, v));
-            }
-            continue;
+    pub fn rows(&self) -> usize {
+        self.is_test.len()
+    }
+
+    /// Whether row `r` was assigned to the test side (independent of its
+    /// links — single-link test rows still end up skipped).
+    pub fn is_test_row(&self, r: usize) -> bool {
+        self.is_test[r]
+    }
+
+    /// Decide row `r` given its links. Must be called for every row in
+    /// ascending order (the per-row RNG stream depends on it).
+    pub fn dispose(&mut self, r: usize, idx: &[u32], val: &[f32]) -> RowDisposition {
+        assert_eq!(r, self.next_row, "rows must be disposed in ascending order");
+        self.next_row += 1;
+        if !self.is_test[r] {
+            return RowDisposition::Train;
         }
         if idx.is_empty() {
-            continue;
+            return RowDisposition::Skip;
         }
         // Hold out a random 25% (at least one if the row is non-trivial,
         // but always keep at least one history link for fold-in).
         let mut order: Vec<usize> = (0..idx.len()).collect();
-        rng.shuffle(&mut order);
-        let mut n_hold = (idx.len() as f64 * holdout_frac).round() as usize;
+        self.rng.shuffle(&mut order);
+        let mut n_hold = (idx.len() as f64 * self.holdout_frac).round() as usize;
         n_hold = n_hold.clamp(usize::from(idx.len() >= 2), idx.len().saturating_sub(1));
         let mut history = Vec::with_capacity(idx.len() - n_hold);
         let mut holdout = Vec::with_capacity(n_hold);
@@ -79,13 +111,78 @@ pub fn split_strong_generalization(
             }
         }
         if holdout.is_empty() {
-            continue; // single-link rows cannot be evaluated
+            return RowDisposition::Skip; // single-link rows cannot be evaluated
         }
         holdout.sort_unstable();
-        test.push(TestRow { row: r as u32, history, holdout });
+        RowDisposition::Test(TestRow { row: r as u32, history, holdout })
     }
+}
 
-    Split { train: Csr::from_coo(full.rows, full.cols, &triplets), test }
+/// Perform the strong-generalization split over an in-memory matrix.
+///
+/// * `train_frac` — fraction of rows kept fully in training (paper: 0.9).
+/// * `holdout_frac` — fraction of a test row's outlinks held out (paper: 0.25).
+pub fn split_strong_generalization(
+    full: &Csr,
+    train_frac: f64,
+    holdout_frac: f64,
+    seed: u64,
+) -> Split {
+    let mut plan = SplitPlan::new(full.rows, train_frac, holdout_frac, seed);
+    let mut indptr = Vec::with_capacity(full.rows + 1);
+    indptr.push(0usize);
+    let mut indices = Vec::with_capacity(full.nnz());
+    let mut values = Vec::with_capacity(full.nnz());
+    let mut test = Vec::new();
+    for r in 0..full.rows {
+        match plan.dispose(r, full.row_indices(r), full.row_values(r)) {
+            RowDisposition::Train => {
+                indices.extend_from_slice(full.row_indices(r));
+                values.extend_from_slice(full.row_values(r));
+            }
+            RowDisposition::Test(tr) => test.push(tr),
+            RowDisposition::Skip => {}
+        }
+        indptr.push(indices.len());
+    }
+    let train = Csr { rows: full.rows, cols: full.cols, indptr, indices, values };
+    Split { train, test }
+}
+
+/// The sharded form of [`Split`]: the training matrix and its transpose as
+/// row-/column-range shards, ready for [`crate::als::Trainer::from_sharded`].
+pub struct ShardedSplit {
+    pub train: ShardedCsr,
+    pub train_t: ShardedCsr,
+    pub test: Vec<TestRow>,
+}
+
+/// Split an in-memory matrix straight into per-shard CSRs (and their
+/// transposes) — the same decisions as [`split_strong_generalization`]
+/// (bitwise-identical content) without the monolithic intermediate copy.
+pub fn split_to_shards(
+    full: &Csr,
+    num_shards: usize,
+    train_frac: f64,
+    holdout_frac: f64,
+    seed: u64,
+) -> ShardedSplit {
+    let mut plan = SplitPlan::new(full.rows, train_frac, holdout_frac, seed);
+    let mut builder = ShardedCsrBuilder::new(full.rows, full.cols, num_shards);
+    let mut test = Vec::new();
+    for r in 0..full.rows {
+        match plan.dispose(r, full.row_indices(r), full.row_values(r)) {
+            RowDisposition::Train => builder.push_row(full.row_indices(r), full.row_values(r)),
+            RowDisposition::Test(tr) => {
+                test.push(tr);
+                builder.push_empty();
+            }
+            RowDisposition::Skip => builder.push_empty(),
+        }
+    }
+    let train = builder.finish();
+    let train_t = train.transpose(num_shards);
+    ShardedSplit { train, train_t, test }
 }
 
 #[cfg(test)]
@@ -147,6 +244,33 @@ mod tests {
         let b = split_strong_generalization(&g, 0.9, 0.25, 8);
         assert_eq!(a.train, b.train);
         assert_eq!(a.test.len(), b.test.len());
+    }
+
+    #[test]
+    fn sharded_split_is_bitwise_identical_to_classic() {
+        let g = dense_graph(120, 60, 6, 11);
+        let classic = split_strong_generalization(&g, 0.9, 0.25, 12);
+        for shards in [1usize, 3, 8] {
+            let sharded = split_to_shards(&g, shards, 0.9, 0.25, 12);
+            assert_eq!(sharded.train.to_csr(), classic.train, "shards={shards}");
+            assert_eq!(sharded.train_t.to_csr(), classic.train.transpose());
+            assert_eq!(sharded.test.len(), classic.test.len());
+            for (a, b) in sharded.test.iter().zip(&classic.test) {
+                assert_eq!(a.row, b.row);
+                assert_eq!(a.history, b.history);
+                assert_eq!(a.holdout, b.holdout);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_requires_ascending_rows() {
+        let mut plan = SplitPlan::new(5, 0.9, 0.25, 1);
+        let _ = plan.dispose(0, &[], &[]);
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.dispose(2, &[], &[])
+        }));
+        assert!(out.is_err(), "out-of-order dispose must panic");
     }
 
     #[test]

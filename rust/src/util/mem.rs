@@ -1,0 +1,33 @@
+//! Process-memory introspection for the ingestion/perf accounting in
+//! [`crate::coordinator::RunReport`].
+
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). Returns 0 on platforms without procfs — callers
+/// treat 0 as "unavailable".
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb = rest.trim().trim_end_matches("kB").trim();
+            return kb.parse::<u64>().unwrap_or(0) * 1024;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_rss_is_sane() {
+        let rss = peak_rss_bytes();
+        // On Linux this must be nonzero and at least a few hundred KiB;
+        // elsewhere 0 is the documented "unavailable" value.
+        if cfg!(target_os = "linux") {
+            assert!(rss > 100 * 1024, "peak RSS {rss} implausibly small");
+        }
+    }
+}

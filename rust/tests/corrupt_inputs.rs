@@ -1,0 +1,197 @@
+//! Hostile-input hardening: corrupt, truncated and lying binary files
+//! must surface as `Err` — never a panic, and never an allocation larger
+//! than what the stream length actually supports.
+
+use alx::sparse::{write_chunked, ChunkedReader, Csr};
+use alx::util::Pcg64;
+
+fn sample_matrix(rows: usize, cols: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut t = Vec::new();
+    for r in 0..rows as u32 {
+        let len = rng.range(0, 8);
+        let mut seen = std::collections::HashSet::new();
+        while seen.len() < len {
+            seen.insert(rng.range(0, cols) as u32);
+        }
+        for c in seen {
+            t.push((r, c, (r as f32 + 1.0) * 0.5));
+        }
+    }
+    Csr::from_coo(rows, cols, &t)
+}
+
+fn csr01_bytes(m: &Csr) -> Vec<u8> {
+    let mut buf = Vec::new();
+    m.write_to(&mut buf).unwrap();
+    buf
+}
+
+fn csr02_bytes(m: &Csr, chunk_rows: usize) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_chunked(m, &mut buf, chunk_rows).unwrap();
+    buf
+}
+
+fn read_csr02(buf: &[u8]) -> std::io::Result<Csr> {
+    ChunkedReader::new(buf, buf.len() as u64, 0)?.read_all()
+}
+
+// ---------------------------------------------------------------- ALXCSR01
+
+#[test]
+fn csr01_truncation_at_every_byte_is_an_error() {
+    let m = sample_matrix(13, 9, 1);
+    let buf = csr01_bytes(&m);
+    // Every prefix — which includes every section boundary (magic, header,
+    // indptr, indices, values) — must fail cleanly.
+    for cut in 0..buf.len() {
+        let with_len = Csr::read_from_limited(&mut &buf[..cut], Some(cut as u64));
+        assert!(with_len.is_err(), "bounded read accepted truncation at {cut}");
+        let unbounded = Csr::read_from(&mut &buf[..cut]);
+        assert!(unbounded.is_err(), "unbounded read accepted truncation at {cut}");
+    }
+    // The untruncated buffer still loads both ways.
+    assert_eq!(Csr::read_from(&mut &buf[..]).unwrap(), m);
+    assert_eq!(Csr::read_from_limited(&mut &buf[..], Some(buf.len() as u64)).unwrap(), m);
+}
+
+#[test]
+fn csr01_oversized_nnz_header_fails_before_allocating() {
+    // Header claims ~10^15 entries; the stream has 6 bytes of body. The
+    // bounded path must reject on the length check; the unbounded path
+    // must hit EOF after at most one staging block.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"ALXCSR01");
+    buf.extend_from_slice(&4u64.to_le_bytes()); // rows
+    buf.extend_from_slice(&4u64.to_le_bytes()); // cols
+    buf.extend_from_slice(&(1u64 << 50).to_le_bytes()); // nnz
+    buf.extend_from_slice(&[0u8; 6]);
+    let err = Csr::read_from_limited(&mut &buf[..], Some(buf.len() as u64)).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+    assert!(Csr::read_from(&mut &buf[..]).is_err());
+}
+
+#[test]
+fn csr01_oversized_rows_header_fails_before_allocating() {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"ALXCSR01");
+    buf.extend_from_slice(&u64::MAX.to_le_bytes()); // rows: absurd
+    buf.extend_from_slice(&4u64.to_le_bytes()); // cols
+    buf.extend_from_slice(&0u64.to_le_bytes()); // nnz
+    assert!(Csr::read_from_limited(&mut &buf[..], Some(buf.len() as u64)).is_err());
+    assert!(Csr::read_from(&mut &buf[..]).is_err());
+}
+
+#[test]
+fn csr01_non_monotonic_indptr_rejected() {
+    // Handcrafted 2x2 matrix with indptr [0, 2, 1]: entry 2 drops below
+    // its predecessor while the final value still "exists", so only the
+    // monotonicity check can catch it. Body is sized so the length check
+    // passes.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"ALXCSR01");
+    for v in [2u64, 2, 2] {
+        buf.extend_from_slice(&v.to_le_bytes()); // rows, cols, nnz
+    }
+    for v in [0u64, 2, 1] {
+        buf.extend_from_slice(&v.to_le_bytes()); // non-monotonic indptr
+    }
+    buf.extend_from_slice(&0u32.to_le_bytes()); // indices
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    buf.extend_from_slice(&1.0f32.to_le_bytes()); // values
+    buf.extend_from_slice(&1.0f32.to_le_bytes());
+    for stream_len in [None, Some(buf.len() as u64)] {
+        let err = Csr::read_from_limited(&mut &buf[..], stream_len).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert!(err.to_string().contains("monotonic"), "{err}");
+    }
+}
+
+#[test]
+fn csr01_out_of_range_column_rejected() {
+    let m = sample_matrix(13, 9, 3);
+    assert!(m.nnz() > 0);
+    let mut buf = csr01_bytes(&m);
+    let idx0 = 32 + (m.rows + 1) * 8;
+    buf[idx0..idx0 + 4].copy_from_slice(&1_000_000u32.to_le_bytes());
+    let err = Csr::read_from(&mut &buf[..]).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+}
+
+// ---------------------------------------------------------------- ALXCSR02
+
+#[test]
+fn csr02_chunk_boundary_fuzz_roundtrip() {
+    // Round-trip across chunk sizes that hit every boundary alignment
+    // (1-row chunks, sizes that divide rows, sizes that do not, one chunk).
+    let m = sample_matrix(37, 17, 4);
+    for chunk_rows in 1..=40 {
+        let buf = csr02_bytes(&m, chunk_rows);
+        let m2 = read_csr02(&buf).unwrap();
+        assert_eq!(m, m2, "chunk_rows = {chunk_rows}");
+    }
+}
+
+#[test]
+fn csr02_truncation_at_every_byte_is_an_error() {
+    let m = sample_matrix(21, 13, 5);
+    let buf = csr02_bytes(&m, 6);
+    for cut in 0..buf.len() {
+        assert!(
+            ChunkedReader::new(&buf[..cut], cut as u64, 0)
+                .and_then(|r| r.read_all())
+                .is_err(),
+            "truncation at byte {cut}/{} accepted",
+            buf.len()
+        );
+    }
+}
+
+#[test]
+fn csr02_single_byte_corruption_never_panics() {
+    // Flip one byte at every position. Header/chunk-structure flips must
+    // error; flips inside the values payload may legally decode to other
+    // floats, but nothing may panic and a successful decode must keep the
+    // validated shape.
+    let m = sample_matrix(17, 7, 6);
+    let clean = csr02_bytes(&m, 5);
+    for pos in 0..clean.len() {
+        let mut buf = clean.clone();
+        buf[pos] ^= 0x5a;
+        match read_csr02(&buf) {
+            Err(_) => {}
+            Ok(m2) => {
+                // The decode may legally succeed (e.g. a flipped value
+                // byte), but the structural invariants must hold.
+                assert_eq!(m2.indptr.len(), m2.rows + 1, "byte {pos}");
+                assert_eq!(*m2.indptr.last().unwrap(), m2.nnz(), "byte {pos}");
+                assert!(
+                    m2.indices.iter().all(|&c| (c as usize) < m2.cols),
+                    "byte {pos}: out-of-range column survived"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn csr02_lying_chunk_nnz_rejected() {
+    let m = sample_matrix(12, 8, 7);
+    let mut buf = csr02_bytes(&m, 12); // single chunk
+    // chunk_nnz lives after file header (40) + chunk magic (4) + row_start
+    // (8) + row_count (8).
+    let off = 40 + 4 + 16;
+    buf[off..off + 8].copy_from_slice(&(m.nnz() as u64 + 5).to_le_bytes());
+    assert!(read_csr02(&buf).is_err());
+}
+
+#[test]
+fn csr02_budget_violation_is_an_error_not_an_allocation() {
+    let m = sample_matrix(48, 16, 8);
+    let buf = csr02_bytes(&m, 48); // one big chunk
+    let err = ChunkedReader::new(&buf[..], buf.len() as u64, 64)
+        .and_then(|mut r| r.next_chunk().map(|_| ()))
+        .unwrap_err();
+    assert!(err.to_string().contains("budget"), "{err}");
+}

@@ -7,7 +7,7 @@
 
 use alx::als::{EpochStats, PrecisionPolicy, TrainConfig};
 use alx::config::AlxConfig;
-use alx::coordinator::TrainSession;
+use alx::coordinator::{EarlyStopOnPlateau, TrainSession};
 use alx::data::InMemorySource;
 use alx::sparse::Csr;
 use alx::util::Pcg64;
@@ -170,6 +170,86 @@ fn resume_across_thread_counts_matches() {
     let (w_full, h_full, _) = run_uninterrupted(6, 1, PrecisionPolicy::F32);
     assert_eq!(w_full, resumed.trainer.w.to_dense().data);
     assert_eq!(h_full, resumed.trainer.h.to_dense().data);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn early_stop_state_survives_resume() {
+    // An EarlyStopOnPlateau demanding absurd 90% per-epoch improvement
+    // plateaus immediately: epoch 1 sets `best`, epochs 2..=1+patience
+    // fail to improve, so the run stops at epoch 1 + patience. A run
+    // interrupted before that point must stop at the SAME epoch after
+    // resume — the checkpoint's objective log reconstructs the hook state.
+    const PATIENCE: usize = 3;
+    let stop_epoch = 1 + PATIENCE;
+    let path = tmp_path("early_stop");
+
+    let uninterrupted = {
+        let mut s = TrainSession::new(&source(), cfg(50, 1, PrecisionPolicy::F32)).unwrap();
+        s.add_hook(Box::new(EarlyStopOnPlateau::new(PATIENCE, 0.9)));
+        s.run().unwrap();
+        assert!(s.stopped(), "plateau must trigger");
+        s.trainer.current_epoch()
+    };
+    assert_eq!(uninterrupted, stop_epoch);
+
+    // Interrupt after epoch 2 — mid-plateau, so a hook that restarted
+    // from scratch would stop 2 epochs late.
+    {
+        let mut s = TrainSession::new(&source(), cfg(50, 1, PrecisionPolicy::F32)).unwrap();
+        s.add_hook(Box::new(EarlyStopOnPlateau::new(PATIENCE, 0.9)));
+        s.step().unwrap();
+        s.step().unwrap();
+        s.checkpoint(&path).unwrap();
+    }
+    let mut resumed = TrainSession::resume_with(
+        &path,
+        &source(),
+        cfg(50, 1, PrecisionPolicy::F32),
+        None,
+    )
+    .unwrap();
+    resumed.add_hook(Box::new(EarlyStopOnPlateau::new(PATIENCE, 0.9)));
+    resumed.run().unwrap();
+    assert!(resumed.stopped(), "resumed run must still plateau");
+    assert_eq!(
+        resumed.trainer.current_epoch(),
+        stop_epoch,
+        "resumed run stopped at a different epoch than the uninterrupted one"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn early_stop_checkpoint_written_at_stop_epoch_resumes_stopped() {
+    // `--checkpoint-every 1` writes the checkpoint *before* the early-stop
+    // hook fires in the same epoch, so a checkpoint can exist for the very
+    // epoch the run stopped at. Resuming it must come up already stopped —
+    // not train one extra epoch past the uninterrupted run.
+    let path = tmp_path("early_stop_at_stop");
+    let stop_epoch = {
+        let mut s = TrainSession::new(&source(), cfg(50, 1, PrecisionPolicy::F32)).unwrap();
+        s.add_hook(Box::new(EarlyStopOnPlateau::new(2, 0.9)));
+        s.run().unwrap();
+        assert!(s.stopped());
+        s.checkpoint(&path).unwrap(); // state as of the stop epoch
+        s.trainer.current_epoch()
+    };
+    let mut resumed = TrainSession::resume_with(
+        &path,
+        &source(),
+        cfg(50, 1, PrecisionPolicy::F32),
+        None,
+    )
+    .unwrap();
+    resumed.add_hook(Box::new(EarlyStopOnPlateau::new(2, 0.9)));
+    assert!(resumed.stopped(), "replaying a completed plateau must stop the session");
+    resumed.run().unwrap();
+    assert_eq!(
+        resumed.trainer.current_epoch(),
+        stop_epoch,
+        "resumed-from-stop-epoch session trained extra epochs"
+    );
     let _ = std::fs::remove_file(&path);
 }
 
