@@ -10,7 +10,12 @@
 //! `(epoch, objective)` sequence of every epoch up to the checkpoint — so
 //! session hooks with cross-epoch state (early stopping) can reconstruct
 //! their exact state on resume and a resumed run stops at the same epoch
-//! as an uninterrupted one.
+//! as an uninterrupted one. A trailing, self-describing `RCLG` section
+//! (after the tables) carries the **recall log** the eval-metric early
+//! stopper replays the same way; files without it — everything written
+//! before the section existed — load with an empty recall log, and old
+//! readers ignored trailing bytes, so the format stays compatible in both
+//! directions without a magic bump.
 
 use crate::sharding::{ShardedTable, Storage};
 use std::io::{Read, Write};
@@ -77,13 +82,21 @@ fn read_table(
 /// One persisted epoch record: `(epoch, objective)`.
 pub type ObjectiveLogEntry = (u64, Option<f64>);
 
-/// Save a checkpoint of both tables plus the objective log.
+/// One persisted eval record: `(epoch, K, Recall@K)` — what
+/// [`crate::coordinator::EarlyStopOnRecall`] replays on resume.
+pub type RecallLogEntry = (u64, u32, f64);
+
+/// Magic of the trailing recall-log section (after both tables).
+const RECALL_SECTION_MAGIC: &[u8; 4] = b"RCLG";
+
+/// Save a checkpoint of both tables plus the objective and recall logs.
 pub fn save(
     w: &mut impl Write,
     meta: &CheckpointMeta,
     users: &ShardedTable,
     items: &ShardedTable,
     objective_log: &[ObjectiveLogEntry],
+    recall_log: &[RecallLogEntry],
 ) -> std::io::Result<()> {
     w.write_all(b"ALXCKPT2")?;
     w.write_all(&meta.epoch.to_le_bytes())?;
@@ -99,17 +112,31 @@ pub fn save(
     }
     write_table(w, users)?;
     write_table(w, items)?;
+    w.write_all(RECALL_SECTION_MAGIC)?;
+    w.write_all(&(recall_log.len() as u64).to_le_bytes())?;
+    for &(epoch, k, recall) in recall_log {
+        w.write_all(&epoch.to_le_bytes())?;
+        w.write_all(&k.to_le_bytes())?;
+        w.write_all(&recall.to_bits().to_le_bytes())?;
+    }
     Ok(())
+}
+
+/// A fully restored checkpoint.
+pub struct LoadedCheckpoint {
+    pub meta: CheckpointMeta,
+    pub users: ShardedTable,
+    pub items: ShardedTable,
+    pub objective_log: Vec<ObjectiveLogEntry>,
+    pub recall_log: Vec<RecallLogEntry>,
 }
 
 /// Load a checkpoint; tables are resharded onto `num_shards` cores (the
 /// slice size may differ between save and resume — uniform sharding makes
 /// relayout trivial). Accepts both `ALXCKPT2` and the legacy `ALXCKPT1`
-/// layout (which carries an empty objective log).
-pub fn load(
-    r: &mut impl Read,
-    num_shards: usize,
-) -> std::io::Result<(CheckpointMeta, ShardedTable, ShardedTable, Vec<ObjectiveLogEntry>)> {
+/// layout (which carries an empty objective log), with or without the
+/// trailing recall section.
+pub fn load(r: &mut impl Read, num_shards: usize) -> std::io::Result<LoadedCheckpoint> {
     let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
@@ -156,23 +183,67 @@ pub fn load(
     }
     let users = read_table(r, users_n as usize, dim as usize, num_shards, storage)?;
     let items = read_table(r, items_n as usize, dim as usize, num_shards, storage)?;
-    Ok((meta, users, items, objective_log))
+    // Trailing recall section: absent in legacy files (EOF right after the
+    // tables → empty log); when present it must parse completely, so a
+    // truncated section is an error rather than silently shorter state.
+    let mut recall_log = Vec::new();
+    let mut tag = [0u8; 4];
+    match read_exact_or_eof(r, &mut tag)? {
+        0 => {}
+        n if n == tag.len() && &tag == RECALL_SECTION_MAGIC => {
+            let mut b4 = [0u8; 4];
+            r.read_exact(&mut b8)?;
+            let count = u64::from_le_bytes(b8);
+            for _ in 0..count {
+                r.read_exact(&mut b8)?;
+                let epoch = u64::from_le_bytes(b8);
+                r.read_exact(&mut b4)?;
+                let k = u32::from_le_bytes(b4);
+                r.read_exact(&mut b8)?;
+                recall_log.push((epoch, k, f64::from_bits(u64::from_le_bytes(b8))));
+            }
+        }
+        _ => return Err(bad("trailing garbage after the embedding tables")),
+    }
+    Ok(LoadedCheckpoint { meta, users, items, objective_log, recall_log })
+}
+
+/// Fill `buf` completely, or return 0 if the stream ended exactly at its
+/// start; a partial fill is an `UnexpectedEof` error.
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(0);
+            }
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "truncated trailing section",
+            ));
+        }
+        filled += n;
+    }
+    Ok(filled)
 }
 
 impl super::Trainer {
-    /// Write a checkpoint of the current model state (no objective log —
-    /// the trainer does not track per-epoch history; sessions use
+    /// Write a checkpoint of the current model state (no objective/recall
+    /// logs — the trainer does not track per-epoch history; sessions use
     /// [`super::Trainer::save_checkpoint_with`]).
     pub fn save_checkpoint(&self, w: &mut impl Write) -> std::io::Result<()> {
-        self.save_checkpoint_with(w, &[])
+        self.save_checkpoint_with(w, &[], &[])
     }
 
     /// Write a checkpoint of the current model state plus the session's
-    /// objective log (for hook-state reconstruction on resume).
+    /// objective and recall logs (for hook-state reconstruction on
+    /// resume).
     pub fn save_checkpoint_with(
         &self,
         w: &mut impl Write,
         objective_log: &[ObjectiveLogEntry],
+        recall_log: &[RecallLogEntry],
     ) -> std::io::Result<()> {
         let meta = CheckpointMeta {
             epoch: self.current_epoch() as u64,
@@ -181,18 +252,19 @@ impl super::Trainer {
             items: self.h.rows as u64,
             storage_bf16: self.cfg.precision.storage() == Storage::Bf16,
         };
-        save(w, &meta, &self.w, &self.h, objective_log)
+        save(w, &meta, &self.w, &self.h, objective_log, recall_log)
     }
 
     /// Restore tables (and the epoch counter) from a checkpoint, returning
-    /// the persisted objective log. The checkpoint must match the
-    /// trainer's dim, matrix shape and storage precision; the shard count
-    /// may differ (uniform resharding).
+    /// the persisted objective and recall logs. The checkpoint must match
+    /// the trainer's dim, matrix shape and storage precision; the shard
+    /// count may differ (uniform resharding).
     pub fn load_checkpoint(
         &mut self,
         r: &mut impl Read,
-    ) -> anyhow::Result<Vec<ObjectiveLogEntry>> {
-        let (meta, users, items, objective_log) = load(r, self.topo.num_cores)?;
+    ) -> anyhow::Result<(Vec<ObjectiveLogEntry>, Vec<RecallLogEntry>)> {
+        let LoadedCheckpoint { meta, users, items, objective_log, recall_log } =
+            load(r, self.topo.num_cores)?;
         anyhow::ensure!(
             meta.dim as usize == self.cfg.dim,
             "checkpoint dim mismatch: checkpoint has d={}, config wants d={}",
@@ -218,7 +290,7 @@ impl super::Trainer {
         self.w = users;
         self.h = items;
         self.set_epoch(meta.epoch as usize);
-        Ok(objective_log)
+        Ok((objective_log, recall_log))
     }
 }
 
@@ -238,12 +310,13 @@ mod tests {
         let h = table(31, 4, 3, Storage::Bf16, 2);
         let meta = CheckpointMeta { epoch: 5, dim: 4, users: 23, items: 31, storage_bf16: true };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[]).unwrap();
-        let (m2, u2, h2, log) = load(&mut &buf[..], 3).unwrap();
-        assert!(log.is_empty());
-        assert_eq!(meta, m2);
-        assert!(u2.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
-        assert!(h2.to_dense().max_abs_diff(&h.to_dense()) == 0.0);
+        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
+        let ck = load(&mut &buf[..], 3).unwrap();
+        assert!(ck.objective_log.is_empty());
+        assert!(ck.recall_log.is_empty());
+        assert_eq!(meta, ck.meta);
+        assert!(ck.users.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
+        assert!(ck.items.to_dense().max_abs_diff(&h.to_dense()) == 0.0);
     }
 
     #[test]
@@ -252,11 +325,11 @@ mod tests {
         let h = table(40, 6, 8, Storage::F32, 4);
         let meta = CheckpointMeta { epoch: 1, dim: 6, users: 40, items: 40, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
         // Resume on a 3-core slice.
-        let (_, u2, _, _) = load(&mut &buf[..], 3).unwrap();
-        assert_eq!(u2.num_shards(), 3);
-        assert!(u2.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
+        let ck = load(&mut &buf[..], 3).unwrap();
+        assert_eq!(ck.users.num_shards(), 3);
+        assert!(ck.users.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
     }
 
     #[test]
@@ -265,11 +338,11 @@ mod tests {
         let h = table(19, 5, 2, Storage::F32, 22);
         let meta = CheckpointMeta { epoch: 9, dim: 5, users: 17, items: 19, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[]).unwrap();
-        let (m2, u2, h2, _) = load(&mut &buf[..], 2).unwrap();
-        assert_eq!(meta, m2);
-        assert!(u2.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
-        assert!(h2.to_dense().max_abs_diff(&h.to_dense()) == 0.0);
+        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
+        let ck = load(&mut &buf[..], 2).unwrap();
+        assert_eq!(meta, ck.meta);
+        assert!(ck.users.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
+        assert!(ck.items.to_dense().max_abs_diff(&h.to_dense()) == 0.0);
     }
 
     #[test]
@@ -284,10 +357,12 @@ mod tests {
         let h = table(7, 3, 2, Storage::F32, 42);
         let meta = CheckpointMeta { epoch: 3, dim: 3, users: 9, items: 7, storage_bf16: false };
         let log = vec![(1u64, Some(123.456f64)), (2, None), (3, Some(f64::MIN_POSITIVE))];
+        let recalls = vec![(1u64, 20u32, 0.125f64), (3, 50, f64::MIN_POSITIVE)];
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &log).unwrap();
-        let (_, _, _, log2) = load(&mut &buf[..], 2).unwrap();
-        assert_eq!(log, log2);
+        save(&mut buf, &meta, &u, &h, &log, &recalls).unwrap();
+        let ck = load(&mut &buf[..], 2).unwrap();
+        assert_eq!(log, ck.objective_log);
+        assert_eq!(recalls, ck.recall_log);
     }
 
     #[test]
@@ -296,7 +371,7 @@ mod tests {
         let h = table(4, 2, 1, Storage::F32, 44);
         let meta = CheckpointMeta { epoch: 1, dim: 2, users: 4, items: 4, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[(1, Some(1.0))]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[(1, Some(1.0))], &[]).unwrap();
         // Corrupt the log length (offset: 8 magic + 29 meta) to a huge value.
         buf[37..45].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(load(&mut &buf[..], 1).is_err());
@@ -308,17 +383,19 @@ mod tests {
         let h = table(5, 3, 2, Storage::F32, 46);
         let meta = CheckpointMeta { epoch: 2, dim: 3, users: 6, items: 5, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[]).unwrap();
-        // Rewrite as the v1 layout: old magic, no log-length field.
+        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
+        // Rewrite as the v1 layout: old magic, no log-length field, and no
+        // trailing recall section (12 bytes: "RCLG" + empty count).
         let mut v1 = Vec::new();
         v1.extend_from_slice(b"ALXCKPT1");
         v1.extend_from_slice(&buf[8..37]); // meta
-        v1.extend_from_slice(&buf[45..]); // tables (skip the empty log len)
-        let (m2, u2, h2, log) = load(&mut &v1[..], 2).unwrap();
-        assert_eq!(m2, meta);
-        assert!(log.is_empty());
-        assert_eq!(u2.to_dense().data, u.to_dense().data);
-        assert_eq!(h2.to_dense().data, h.to_dense().data);
+        v1.extend_from_slice(&buf[45..buf.len() - 12]); // tables only
+        let ck = load(&mut &v1[..], 2).unwrap();
+        assert_eq!(ck.meta, meta);
+        assert!(ck.objective_log.is_empty());
+        assert!(ck.recall_log.is_empty());
+        assert_eq!(ck.users.to_dense().data, u.to_dense().data);
+        assert_eq!(ck.items.to_dense().data, h.to_dense().data);
     }
 
     #[test]
@@ -327,10 +404,11 @@ mod tests {
         let h = table(5, 3, 2, Storage::Bf16, 32);
         let meta = CheckpointMeta { epoch: 2, dim: 3, users: 6, items: 5, storage_bf16: true };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[]).unwrap();
-        // Truncations inside the magic, the header, and each table payload
-        // must all surface as errors, never as silently-short tables.
-        for cut in [4, 12, 30, buf.len() / 2, buf.len() - 1] {
+        save(&mut buf, &meta, &u, &h, &[], &[(1, 20, 0.5)]).unwrap();
+        // Truncations inside the magic, the header, each table payload and
+        // the trailing recall section must all surface as errors, never as
+        // silently-short state.
+        for cut in [4, 12, 30, buf.len() / 2, buf.len() - 30, buf.len() - 1] {
             assert!(cut < buf.len(), "test cut {cut} out of range");
             assert!(
                 load(&mut &buf[..cut], 2).is_err(),

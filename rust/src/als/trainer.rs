@@ -24,7 +24,7 @@ use crate::coordinator::pipeline::{BatchFeeder, BoundedQueue, CloseGuard};
 use crate::densebatch::DenseBatcher;
 use crate::linalg::{Mat, SolveOptions, SolverKind};
 use crate::sharding::{ShardViewMut, ShardedTable};
-use crate::sparse::{Csr, ShardedCsr};
+use crate::sparse::{Csr, PieceRows, ShardedCsr, ShardedMatrix, SpillStats};
 use crate::topo::Topology;
 use crate::util::threads;
 use crate::util::timer::{Profiler, Timer};
@@ -116,11 +116,12 @@ pub struct EpochStats {
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub topo: Topology,
-    /// Training matrix (users × items) in row-sharded storage; shared with
-    /// the feeder threads.
-    train: Arc<ShardedCsr>,
+    /// Training matrix (users × items) in row-sharded storage — resident
+    /// ([`ShardedCsr`]) or demand-paged out of an `ALXBANK01` bank
+    /// ([`crate::sparse::MmapBank`]); shared with the feeder threads.
+    train: Arc<dyn ShardedMatrix>,
     /// Its transpose (items × users) for the item pass.
-    train_t: Arc<ShardedCsr>,
+    train_t: Arc<dyn ShardedMatrix>,
     /// User embedding table W, sharded over the slice.
     pub w: ShardedTable,
     /// Item embedding table H, sharded over the slice.
@@ -166,33 +167,45 @@ impl Trainer {
 
     /// Build a trainer over pre-sharded training data: the matrix and its
     /// transpose as row-range shards — what the streaming ingestion path
-    /// produces without ever materializing the full matrix.
+    /// produces without ever materializing the full matrix. Any
+    /// [`ShardedMatrix`] backend works: a resident [`ShardedCsr`] or the
+    /// spill mode's demand-paged bank storage; training is bitwise
+    /// identical either way.
     pub fn from_sharded(
-        train: Arc<ShardedCsr>,
-        train_t: Arc<ShardedCsr>,
+        train: Arc<dyn ShardedMatrix>,
+        train_t: Arc<dyn ShardedMatrix>,
         cfg: TrainConfig,
         topo: Topology,
         engine: Box<dyn SolveEngine>,
     ) -> anyhow::Result<Trainer> {
         anyhow::ensure!(cfg.dim > 0 && cfg.batch_rows > 0 && cfg.batch_width > 0);
-        anyhow::ensure!(train.rows > 0 && train.cols > 0, "empty training matrix");
+        anyhow::ensure!(train.rows() > 0 && train.cols() > 0, "empty training matrix");
         anyhow::ensure!(
-            train_t.rows == train.cols
-                && train_t.cols == train.rows
+            train_t.rows() == train.cols()
+                && train_t.cols() == train.rows()
                 && train_t.nnz() == train.nnz(),
             "train_t is not the transpose of train ({}x{}/{} vs {}x{}/{})",
-            train_t.rows,
-            train_t.cols,
+            train_t.rows(),
+            train_t.cols(),
             train_t.nnz(),
-            train.rows,
-            train.cols,
+            train.rows(),
+            train.cols(),
             train.nnz(),
+        );
+        // Matrix pieces and table shards must share the uniform partition:
+        // shard pass μ feeds exactly matrix piece μ.
+        anyhow::ensure!(
+            train.num_pieces() == topo.num_cores && train_t.num_pieces() == topo.num_cores,
+            "matrix sharding ({}/{} pieces) must match the {}-core slice",
+            train.num_pieces(),
+            train_t.num_pieces(),
+            topo.num_cores,
         );
         let mut rng = Pcg64::new(cfg.seed);
         let storage = cfg.precision.storage();
         let m = topo.num_cores;
-        let w = ShardedTable::randn(train.rows, cfg.dim, m, storage, &mut rng);
-        let h = ShardedTable::randn(train.cols, cfg.dim, m, storage, &mut rng);
+        let w = ShardedTable::randn(train.rows(), cfg.dim, m, storage, &mut rng);
+        let h = ShardedTable::randn(train.cols(), cfg.dim, m, storage, &mut rng);
 
         // Capacity check: the slice must hold both tables plus the runtime
         // working set (Fig. 6 floors).
@@ -243,13 +256,16 @@ impl Trainer {
     /// SPMD: core μ processes the rows of its own shard of `target`, so
     /// scatters stay shard-local exactly as in Fig. 2's layout — which is
     /// what lets every shard pass run concurrently on its own worker.
+    /// Matrix pieces materialize per shard pass; on a spilled backend a
+    /// worker prefetches the next unclaimed shard while it solves its own,
+    /// so the demand-paged load hides behind compute.
     fn pass(
         engine: &dyn SolveEngine,
         batcher: &DenseBatcher,
         profiler: &Arc<Profiler>,
         comm: &CommStats,
         cfg: &TrainConfig,
-        matrix: &Arc<ShardedCsr>,
+        matrix: &Arc<dyn ShardedMatrix>,
         target: &mut ShardedTable,
         fixed: &ShardedTable,
         gramian: &Mat,
@@ -257,10 +273,11 @@ impl Trainer {
         let num_shards = target.num_shards();
         let dim = target.dim;
         let elem_bytes = target.storage().elem_bytes();
-        let views: Vec<ShardViewMut<'_>> = target
+        let views: Vec<(usize, ShardViewMut<'_>)> = target
             .shard_views_mut()
             .into_iter()
-            .filter(|v| !v.range().is_empty())
+            .enumerate()
+            .filter(|(_, v)| !v.range().is_empty())
             .collect();
         // The thread budget caps concurrent shard passes (a 256-core
         // simulated slice on a 8-thread host runs 8 shards at a time, not
@@ -268,6 +285,13 @@ impl Trainer {
         // timing-dependent but irrelevant: shards are disjoint.
         let shard_workers =
             threads::resolve_workers(cfg.threads).min(views.len()).max(1);
+        // When shards outnumber workers 2:1, cross-shard parallelism
+        // already saturates the budget and the near-free scatter stage
+        // folds into the solve worker (one thread fewer per shard, same
+        // writes in the same per-shard order — bitwise identical either
+        // way). The dedicated scatter thread only pays off when a worker
+        // owns one long shard pass.
+        let inline_scatter = views.len() >= 2 * shard_workers;
         let pool = std::sync::Mutex::new(views);
         let results: Vec<anyhow::Result<()>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..shard_workers)
@@ -275,11 +299,21 @@ impl Trainer {
                     let pool = &pool;
                     scope.spawn(move || -> anyhow::Result<()> {
                         loop {
-                            let view = pool.lock().unwrap().pop();
-                            let Some(view) = view else { return Ok(()) };
+                            let (claimed, next) = {
+                                let mut pool = pool.lock().unwrap();
+                                let claimed = pool.pop();
+                                let next = pool.last().map(|(p, _)| *p);
+                                (claimed, next)
+                            };
+                            let Some((piece, view)) = claimed else { return Ok(()) };
+                            // Stage the next unclaimed shard while this
+                            // one computes (no-op on resident storage).
+                            if let Some(next) = next {
+                                matrix.prefetch(next);
+                            }
                             Self::shard_pass(
-                                engine, batcher, profiler, comm, cfg, matrix, view, fixed,
-                                gramian, dim, elem_bytes, num_shards,
+                                engine, batcher, profiler, comm, cfg, matrix, piece, view,
+                                fixed, gramian, dim, elem_bytes, num_shards, inline_scatter,
                             )?;
                         }
                     })
@@ -296,36 +330,63 @@ impl Trainer {
         Ok(())
     }
 
-    /// One shard's pass, run as a three-stage pipeline over consecutive
-    /// batches: the feeder thread batches (host work, Fig. 1), this worker
-    /// runs the fused gather+statistics+solve, and a double-buffered
-    /// scatter thread writes solutions back — batch k+1 batches while k
-    /// solves and k-1 scatters. Batch order is fixed by the feeder and
-    /// scattered rows are disjoint, so the result does not depend on
-    /// stage timing.
+    /// One shard's pass, run as a pipeline over consecutive batches: the
+    /// feeder thread materializes the shard's matrix piece (a demand-page
+    /// fault on spilled storage) and batches it (host work, Fig. 1), this
+    /// worker runs the fused gather+statistics+solve, and solutions write
+    /// back either through a double-buffered scatter thread or — when
+    /// shard passes already saturate the worker budget — inline after each
+    /// solve. Batch order is fixed by the feeder and scattered rows are
+    /// disjoint, so the result depends on neither stage timing nor the
+    /// scatter placement.
     fn shard_pass(
         engine: &dyn SolveEngine,
         batcher: &DenseBatcher,
         profiler: &Arc<Profiler>,
         comm: &CommStats,
         cfg: &TrainConfig,
-        matrix: &Arc<ShardedCsr>,
+        matrix: &Arc<dyn ShardedMatrix>,
+        piece: usize,
         view: ShardViewMut<'_>,
         fixed: &ShardedTable,
         gramian: &Mat,
         dim: usize,
         elem_bytes: u64,
         num_shards: usize,
+        inline_scatter: bool,
     ) -> anyhow::Result<()> {
         let range = view.range();
+        debug_assert_eq!(matrix.piece_range(piece), (range.start, range.end));
         let rows: Vec<u32> = (range.start as u32..range.end as u32).collect();
+        // The feeder batches out of a lazily materialized piece view, so a
+        // spilled shard faults in on the feeder's background thread and
+        // the load overlaps the consumer's previous solves.
+        let source = Arc::new(PieceRows::new(Arc::clone(matrix), piece));
         let feeder = BatchFeeder::start_profiled(
-            Arc::clone(matrix),
+            source,
             rows,
             batcher.clone(),
             cfg.feed_depth,
             Some(Arc::clone(profiler)),
         );
+        if inline_scatter {
+            let mut view = view;
+            while let Some(batch) = feeder.next() {
+                record_gather_traffic(fixed, batch.items.len(), comm);
+                let sols = profiler.time("solve", || {
+                    engine.solve_batch_fused(&batch, fixed, gramian, cfg.lambda, cfg.alpha)
+                })?;
+                record_scatter_traffic(
+                    batch.segment_rows.len(),
+                    dim,
+                    elem_bytes,
+                    num_shards,
+                    comm,
+                );
+                profiler.time("sharded_scatter", || view.scatter(&batch.segment_rows, &sols));
+            }
+            return Ok(());
+        }
         let scatter_q: BoundedQueue<(Vec<u32>, Mat)> = BoundedQueue::new(2);
         std::thread::scope(|scope| {
             let qref = &scatter_q;
@@ -444,32 +505,48 @@ impl Trainer {
     /// `Σ ŷ² = ⟨WᵀW, HᵀH⟩_F`, costing O((|U|+|I|)d²) instead of O(|U||I|d).
     ///
     /// Computed entirely from shard-local partials — neither table is ever
-    /// materialized dense. The observed term reads rows straight out of
-    /// the sharded storage (widened to f32 exactly like a gather), and the
+    /// materialized dense. The observed term reads rows piece by piece out
+    /// of the sharded storage (widened to f32 exactly like a gather; a
+    /// spilled piece faults in through the residency cache), and the
     /// gramians are per-shard partials summed in fixed shard order, so the
-    /// value is bitwise identical for every worker count.
+    /// value is bitwise identical for every worker count and storage
+    /// backend.
     pub fn objective(&self) -> f64 {
-        let train = self.train.as_ref();
+        let train = &self.train;
         let (w, h) = (&self.w, &self.h);
         let d = self.cfg.dim;
         // Fixed-size row chunks (NOT per-worker chunks): the f64 grouping
         // is a function of the data alone, so the sum is bitwise identical
         // for every worker count, while the partials vector stays small.
         const OBJ_CHUNK_ROWS: usize = 1024;
-        let n_chunks = train.rows.div_ceil(OBJ_CHUNK_ROWS);
+        let n_chunks = train.rows().div_ceil(OBJ_CHUNK_ROWS);
         let workers = threads::resolve_workers(self.cfg.threads);
         let partials = threads::parallel_map_indexed_with(workers, n_chunks, |c| {
             let lo = c * OBJ_CHUNK_ROWS;
-            let hi = (lo + OBJ_CHUNK_ROWS).min(train.rows);
+            let hi = (lo + OBJ_CHUNK_ROWS).min(train.rows());
             let mut wrow = vec![0.0f32; d];
             let mut hrow = vec![0.0f32; d];
             let mut obs = 0.0f64;
+            // Materialize matrix pieces as the row cursor crosses their
+            // boundaries; each worker holds one piece handle at a time.
+            let mut cur: Option<(Arc<Csr>, usize, usize)> = None; // piece, base, end
             for r in lo..hi {
-                if train.row_len(r) == 0 {
+                let stale = match &cur {
+                    Some((_, _, end)) => r >= *end,
+                    None => true,
+                };
+                if stale {
+                    let p = train.piece_of(r);
+                    let (base, end) = train.piece_range(p);
+                    cur = Some((train.piece(p), base, end));
+                }
+                let (piece, base, _) = cur.as_ref().expect("piece materialized");
+                let local = r - *base;
+                if piece.row_len(local) == 0 {
                     continue;
                 }
                 w.read_row(r, &mut wrow);
-                for (&col, &y) in train.row_indices(r).iter().zip(train.row_values(r)) {
+                for (&col, &y) in piece.row_indices(local).iter().zip(piece.row_values(local)) {
                     h.read_row(col as usize, &mut hrow);
                     let pred = crate::linalg::mat::dot(&wrow, &hrow);
                     let e = (y - pred) as f64;
@@ -541,7 +618,7 @@ impl Trainer {
     pub fn simulated_epoch_seconds(&self) -> f64 {
         let w = crate::topo::Workload {
             nnz: self.train.nnz() as u64,
-            rows_plus_cols: (self.train.rows + self.train.cols) as u64,
+            rows_plus_cols: (self.train.rows() + self.train.cols()) as u64,
             dim: self.cfg.dim,
             elem_bytes: self.cfg.precision.storage().elem_bytes(),
             batch_rows: self.cfg.batch_rows,
@@ -559,9 +636,10 @@ impl Trainer {
         self.epoch = epoch;
     }
 
-    /// The (row-sharded) training matrix.
-    pub fn train_matrix(&self) -> &ShardedCsr {
-        self.train.as_ref()
+    /// Combined residency/fault accounting of the training matrix and its
+    /// transpose (all-zero for fully resident storage).
+    pub fn spill_stats(&self) -> SpillStats {
+        self.train.spill_stats().merged(&self.train_t.spill_stats())
     }
 }
 

@@ -118,6 +118,17 @@ pub struct AlxConfig {
     /// Rows per chunk for `ALXCSR02` writers (`alx generate --out`,
     /// `alx convert`).
     pub chunk_rows: usize,
+    /// Spill the resident train/transpose shards into `ALXBANK01` banks
+    /// and train demand-paged, so steady-state memory is bounded by
+    /// `resident_shards` instead of the matrix.
+    pub data_spill: bool,
+    /// Base directory for the spill banks (empty = the system temp dir);
+    /// every session writes into its own unique subdirectory and removes
+    /// it on drop.
+    pub spill_dir: String,
+    /// Decoded shards the residency cache keeps per bank in spill mode
+    /// (the train matrix and its transpose each hold this many).
+    pub resident_shards: usize,
     /// Simulated TPU cores.
     pub cores: usize,
     /// Training hyper-parameters.
@@ -135,6 +146,14 @@ pub struct AlxConfig {
     pub eval_every: usize,
     /// Session hook: early-stop after this many plateau epochs (0 = off).
     pub early_stop_patience: usize,
+    /// Session hook: early-stop on a Recall@K plateau, keyed to this K
+    /// (0 = off).
+    pub early_stop_recall_k: usize,
+    /// Evals without Recall@K improvement before the recall early stop
+    /// fires.
+    pub early_stop_recall_patience: usize,
+    /// Evaluate for the recall early stop every k epochs.
+    pub early_stop_recall_every: usize,
     /// Where periodic/final checkpoints are written.
     pub checkpoint_path: String,
 }
@@ -150,6 +169,9 @@ impl Default for AlxConfig {
             data_streaming: false,
             ingest_budget_mb: 0,
             chunk_rows: crate::sparse::DEFAULT_CHUNK_ROWS,
+            data_spill: false,
+            spill_dir: String::new(),
+            resident_shards: 2,
             cores: 8,
             train: TrainConfig::default(),
             engine: "native".to_string(),
@@ -158,6 +180,9 @@ impl Default for AlxConfig {
             checkpoint_every: 0,
             eval_every: 0,
             early_stop_patience: 0,
+            early_stop_recall_k: 0,
+            early_stop_recall_patience: 2,
+            early_stop_recall_every: 1,
             checkpoint_path: "alx.ckpt".to_string(),
         }
     }
@@ -199,6 +224,16 @@ impl AlxConfig {
         if let Some(v) = kv.get_usize("data.chunk_rows")? {
             anyhow::ensure!(v >= 1, "data.chunk_rows must be >= 1");
             cfg.chunk_rows = v;
+        }
+        if let Some(v) = kv.get_bool("data.spill")? {
+            cfg.data_spill = v;
+        }
+        if let Some(v) = kv.get("data.spill_dir") {
+            cfg.spill_dir = v.to_string();
+        }
+        if let Some(v) = kv.get_usize("data.resident_shards")? {
+            anyhow::ensure!(v >= 1, "data.resident_shards must be >= 1");
+            cfg.resident_shards = v;
         }
         if let Some(v) = kv.get_usize("topology.cores")? {
             anyhow::ensure!(v >= 1, "topology.cores must be >= 1");
@@ -264,6 +299,17 @@ impl AlxConfig {
         }
         if let Some(v) = kv.get_usize("session.early_stop_patience")? {
             cfg.early_stop_patience = v; // 0 = off
+        }
+        if let Some(v) = kv.get_usize("session.early_stop_recall_k")? {
+            cfg.early_stop_recall_k = v; // 0 = off
+        }
+        if let Some(v) = kv.get_usize("session.early_stop_recall_patience")? {
+            anyhow::ensure!(v >= 1, "session.early_stop_recall_patience must be >= 1");
+            cfg.early_stop_recall_patience = v;
+        }
+        if let Some(v) = kv.get_usize("session.early_stop_recall_every")? {
+            anyhow::ensure!(v >= 1, "session.early_stop_recall_every must be >= 1");
+            cfg.early_stop_recall_every = v;
         }
         if let Some(v) = kv.get("session.checkpoint_path") {
             anyhow::ensure!(!v.is_empty(), "session.checkpoint_path must be non-empty");
@@ -337,11 +383,17 @@ path = "edges.txt"
 streaming = true
 ingest_budget_mb = 64
 chunk_rows = 4096
+spill = true
+spill_dir = "/tmp/banks"
+resident_shards = 3
 
 [session]
 checkpoint_every = 2
 eval_every = 4
 early_stop_patience = 3
+early_stop_recall_k = 20
+early_stop_recall_patience = 4
+early_stop_recall_every = 2
 checkpoint_path = "run.ckpt"
 "#,
         )
@@ -352,9 +404,15 @@ checkpoint_path = "run.ckpt"
         assert!(cfg.data_streaming);
         assert_eq!(cfg.ingest_budget_mb, 64);
         assert_eq!(cfg.chunk_rows, 4096);
+        assert!(cfg.data_spill);
+        assert_eq!(cfg.spill_dir, "/tmp/banks");
+        assert_eq!(cfg.resident_shards, 3);
         assert_eq!(cfg.checkpoint_every, 2);
         assert_eq!(cfg.eval_every, 4);
         assert_eq!(cfg.early_stop_patience, 3);
+        assert_eq!(cfg.early_stop_recall_k, 20);
+        assert_eq!(cfg.early_stop_recall_patience, 4);
+        assert_eq!(cfg.early_stop_recall_every, 2);
         assert_eq!(cfg.checkpoint_path, "run.ckpt");
     }
 
@@ -368,8 +426,18 @@ checkpoint_path = "run.ckpt"
         assert!(!cfg.data_streaming);
         assert_eq!(cfg.ingest_budget_mb, 0);
         assert_eq!(cfg.chunk_rows, crate::sparse::DEFAULT_CHUNK_ROWS);
+        assert!(!cfg.data_spill);
+        assert!(cfg.spill_dir.is_empty());
+        assert_eq!(cfg.resident_shards, 2);
+        assert_eq!(cfg.early_stop_recall_k, 0);
         let mut bad = KvConfig::default();
         bad.set("data.chunk_rows", "0");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        let mut bad = KvConfig::default();
+        bad.set("data.resident_shards", "0");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        let mut bad = KvConfig::default();
+        bad.set("session.early_stop_recall_every", "0");
         assert!(AlxConfig::from_kv(&bad).is_err());
     }
 

@@ -19,13 +19,15 @@ pub mod session;
 pub use grid::{grid_search, GridPoint, GridSpec};
 pub use pipeline::{BatchFeeder, BoundedQueue, CloseGuard, FEED_CHUNK_ROWS};
 pub use session::{
-    CheckpointEvery, EarlyStopOnPlateau, EpochHook, EvalEvery, HookAction, TrainSession,
+    CheckpointEvery, EarlyStopOnPlateau, EarlyStopOnRecall, EpochHook, EvalEvery, HookAction,
+    TrainSession,
 };
 
 use crate::als::SolveEngine;
 use crate::config::AlxConfig;
 use crate::data::{DataSource, IngestReport, WebGraphSource};
 use crate::eval::{EvalConfig, RecallReport};
+use crate::sparse::SpillStats;
 use crate::webgraph::GeneratedGraph;
 
 /// End-of-run report.
@@ -41,6 +43,9 @@ pub struct RunReport {
     pub peak_rss_bytes: u64,
     /// Streaming-ingestion accounting (None for in-memory sources).
     pub ingest: Option<IngestReport>,
+    /// Spilled-shard accounting — bank bytes, shard faults, prefetch hits
+    /// (None when the matrices are fully resident).
+    pub spill: Option<SpillStats>,
 }
 
 /// Compat shim: the classic WebGraph job driver. Wraps a [`TrainSession`]

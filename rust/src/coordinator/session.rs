@@ -18,13 +18,14 @@
 //! `--checkpoint-every` and `--eval-every` straight onto this API.
 
 use super::RunReport;
-use crate::als::{EpochStats, ObjectiveLogEntry, SolveEngine, Trainer};
+use crate::als::{EpochStats, ObjectiveLogEntry, RecallLogEntry, SolveEngine, Trainer};
 use crate::config::AlxConfig;
 use crate::data::{
-    source_from_config, DataSource, Dataset, DatasetInfo, IngestReport, StreamingSource,
+    source_from_config, spill_to_banks, DataSource, Dataset, DatasetInfo, IngestReport,
+    StreamingSource,
 };
 use crate::eval::{evaluate, EvalConfig, RecallReport};
-use crate::sparse::{split_to_shards, ShardedCsr, TestRow};
+use crate::sparse::{split_to_shards, ShardedMatrix, TestRow};
 use crate::topo::Topology;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -58,6 +59,13 @@ pub trait EpochHook {
     fn on_resume(&mut self, _prior: &[ObjectiveLogEntry]) -> HookAction {
         HookAction::Continue
     }
+
+    /// The eval-metric twin of [`EpochHook::on_resume`]: `prior` is the
+    /// persisted `(epoch, K, Recall@K)` log. [`EarlyStopOnRecall`] replays
+    /// it to reconstruct its plateau state. Default: no-op, continue.
+    fn on_resume_recalls(&mut self, _prior: &[RecallLogEntry]) -> HookAction {
+        HookAction::Continue
+    }
 }
 
 /// A training job with step-wise control: dataset + held-out test rows +
@@ -83,6 +91,27 @@ pub struct TrainSession {
     /// fresh sessions); replayed into hooks as they are installed and
     /// persisted back out by [`TrainSession::checkpoint`].
     restored_objectives: Vec<ObjectiveLogEntry>,
+    /// `(epoch, K, recall)` log restored from a checkpoint; the recall
+    /// twin of `restored_objectives`.
+    restored_recalls: Vec<RecallLogEntry>,
+    /// Recall evals recorded by [`EarlyStopOnRecall`] this session
+    /// (persisted by [`TrainSession::checkpoint`] for resume replay).
+    recall_log: Vec<RecallLogEntry>,
+    /// Scratch directory holding this session's spill banks (removed on
+    /// drop; `None` when fully resident).
+    spill_scratch: Option<PathBuf>,
+}
+
+impl Drop for TrainSession {
+    fn drop(&mut self) {
+        // The spill banks are per-session scratch (resolve_spill_dir hands
+        // every session a unique directory, even under a user-set
+        // `data.spill_dir` base). Unlinking while the trainer still holds
+        // the maps is fine on unix: the inodes live until unmapped.
+        if let Some(dir) = self.spill_scratch.take() {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
 }
 
 impl TrainSession {
@@ -132,7 +161,10 @@ impl TrainSession {
 
     /// Build a session over an already-loaded [`Dataset`]. The matrix is
     /// split and moved into sharded training storage; the session keeps
-    /// only its [`DatasetInfo`].
+    /// only its [`DatasetInfo`]. With `[data] spill`, the shards (and
+    /// their transposes) are written to `ALXBANK01` banks and reopened
+    /// demand-paged, so steady-state training memory is bounded by
+    /// `data.resident_shards` instead of the matrix.
     pub fn from_dataset(
         dataset: Dataset,
         cfg: AlxConfig,
@@ -142,14 +174,33 @@ impl TrainSession {
         let sharded =
             split_to_shards(&dataset.matrix, cfg.cores, 0.9, 0.25, cfg.data_seed ^ 0x9);
         drop(dataset); // the monolithic matrix is no longer needed
-        Self::assemble(info, sharded.train, sharded.train_t, sharded.test, None, cfg, engine)
+        if cfg.data_spill {
+            let dir = Self::resolve_spill_dir(&cfg);
+            let (train, train_t) =
+                spill_to_banks(sharded.train, sharded.train_t, &dir, cfg.resident_shards)?;
+            let (train, train_t) = (Arc::new(train), Arc::new(train_t));
+            let mut s = Self::assemble(info, train, train_t, sharded.test, None, cfg, engine)?;
+            s.spill_scratch = Some(dir);
+            return Ok(s);
+        }
+        Self::assemble(
+            info,
+            Arc::new(sharded.train),
+            Arc::new(sharded.train_t),
+            sharded.test,
+            None,
+            cfg,
+            engine,
+        )
     }
 
     /// Build a session by streaming an `ALXCSR02` file: chunks flow
     /// through a bounded-memory cursor straight into per-shard CSRs, so
     /// peak ingestion memory is bounded by the chunk size, not the matrix
     /// size. Training is bitwise identical to the in-memory path on the
-    /// same data.
+    /// same data. With `[data] spill`, shards are written straight into
+    /// banks as they complete — the full matrix never exists in RAM at
+    /// any point of the run.
     pub fn from_streaming(
         path: impl AsRef<Path>,
         cfg: AlxConfig,
@@ -157,16 +208,53 @@ impl TrainSession {
     ) -> anyhow::Result<TrainSession> {
         let budget = (cfg.ingest_budget_mb as u64) << 20;
         let source = StreamingSource::new(path.as_ref(), budget);
+        if cfg.data_spill {
+            let dir = Self::resolve_spill_dir(&cfg);
+            let s = source.load_split_spilled(
+                cfg.cores,
+                0.9,
+                0.25,
+                cfg.data_seed ^ 0x9,
+                &dir,
+                cfg.resident_shards,
+            )?;
+            let (train, train_t) = (Arc::new(s.train), Arc::new(s.train_t));
+            let mut session =
+                Self::assemble(s.info, train, train_t, s.test, Some(s.ingest), cfg, engine)?;
+            session.spill_scratch = Some(dir);
+            return Ok(session);
+        }
         let s = source.load_split(cfg.cores, 0.9, 0.25, cfg.data_seed ^ 0x9)?;
-        Self::assemble(s.info, s.train, s.train_t, s.test, Some(s.ingest), cfg, engine)
+        let (train, train_t) = (Arc::new(s.train), Arc::new(s.train_t));
+        Self::assemble(s.info, train, train_t, s.test, Some(s.ingest), cfg, engine)
+    }
+
+    /// Where this session's spill banks live: a fresh scratch directory —
+    /// unique per process *and* per session — under `data.spill_dir` when
+    /// set, else under the system temp dir. Uniqueness is load-bearing:
+    /// bank files are truncated on create, so two sessions (concurrent
+    /// runs, or sequential sessions in one process) must never share a
+    /// directory while one still has its banks mapped. The directory is
+    /// removed when the session drops.
+    fn resolve_spill_dir(cfg: &AlxConfig) -> PathBuf {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let base = if cfg.spill_dir.is_empty() {
+            std::env::temp_dir()
+        } else {
+            PathBuf::from(&cfg.spill_dir)
+        };
+        base.join(format!("alx_spill_{}_{}", std::process::id(), seq))
     }
 
     /// Shared tail of every constructor: resolve the engine, build the
-    /// trainer over the sharded matrix, assemble the session.
+    /// trainer over the sharded matrix (resident or bank-backed), assemble
+    /// the session.
     fn assemble(
         info: DatasetInfo,
-        train: ShardedCsr,
-        train_t: ShardedCsr,
+        train: Arc<dyn ShardedMatrix>,
+        train_t: Arc<dyn ShardedMatrix>,
         test: Vec<TestRow>,
         ingest: Option<IngestReport>,
         cfg: AlxConfig,
@@ -188,13 +276,7 @@ impl TrainSession {
                 _ => Trainer::default_engine(&cfg.train, &topo),
             },
         };
-        let trainer = Trainer::from_sharded(
-            Arc::new(train),
-            Arc::new(train_t),
-            cfg.train.clone(),
-            topo,
-            engine,
-        )?;
+        let trainer = Trainer::from_sharded(train, train_t, cfg.train.clone(), topo, engine)?;
         Ok(TrainSession {
             cfg,
             dataset: info,
@@ -206,6 +288,9 @@ impl TrainSession {
             hooks: Vec::new(),
             stopped: false,
             restored_objectives: Vec::new(),
+            restored_recalls: Vec::new(),
+            recall_log: Vec::new(),
+            spill_scratch: None,
         })
     }
 
@@ -239,7 +324,9 @@ impl TrainSession {
             std::fs::File::open(path)
                 .map_err(|e| anyhow::anyhow!("open checkpoint {}: {e}", path.display()))?,
         );
-        self.restored_objectives = self.trainer.load_checkpoint(&mut f)?;
+        let (objectives, recalls) = self.trainer.load_checkpoint(&mut f)?;
+        self.restored_objectives = objectives;
+        self.restored_recalls = recalls;
         crate::log_info!(
             "resumed {} from {} at epoch {}",
             self.dataset.name,
@@ -250,9 +337,25 @@ impl TrainSession {
     }
 
     /// Install the hooks the `[session]` config keys ask for.
+    ///
+    /// Order matters for one pair: [`EarlyStopOnRecall`] must run
+    /// **before** [`CheckpointEvery`], so a checkpoint written at a
+    /// recall-eval epoch already contains that epoch's recall-log entry
+    /// and a resumed run replays to exactly the same state as the
+    /// uninterrupted one. (The objective log has no such constraint —
+    /// `step` records it before any hook fires.) Code registering these
+    /// hooks by hand should keep the same order.
     pub fn install_config_hooks(&mut self) {
         if self.cfg.eval_every > 0 {
             self.add_hook(Box::new(EvalEvery::new(self.cfg.eval_every)));
+        }
+        if self.cfg.early_stop_recall_k > 0 {
+            self.add_hook(Box::new(EarlyStopOnRecall::new(
+                self.cfg.early_stop_recall_k,
+                self.cfg.early_stop_recall_every,
+                self.cfg.early_stop_recall_patience,
+                1e-4,
+            )));
         }
         if self.cfg.checkpoint_every > 0 {
             self.add_hook(Box::new(CheckpointEvery::new(
@@ -275,6 +378,11 @@ impl TrainSession {
     pub fn add_hook(&mut self, mut hook: Box<dyn EpochHook>) {
         if !self.restored_objectives.is_empty()
             && hook.on_resume(&self.restored_objectives) == HookAction::Stop
+        {
+            self.stopped = true;
+        }
+        if !self.restored_recalls.is_empty()
+            && hook.on_resume_recalls(&self.restored_recalls) == HookAction::Stop
         {
             self.stopped = true;
         }
@@ -346,6 +454,9 @@ impl TrainSession {
         let epoch_seconds_mean =
             history.iter().map(|h| h.seconds).sum::<f64>() / history.len().max(1) as f64;
         let comm = history.last().map(|h| h.comm_bytes).unwrap_or(0);
+        // Spill accounting: present exactly when the matrices live in
+        // banks (bank_bytes is 0 for fully resident storage).
+        let spill = Some(self.trainer.spill_stats()).filter(|s| s.bank_bytes > 0);
         Ok(RunReport {
             epoch_seconds_mean,
             simulated_epoch_seconds: self.trainer.simulated_epoch_seconds(),
@@ -354,6 +465,7 @@ impl TrainSession {
             recalls,
             peak_rss_bytes: crate::util::mem::peak_rss_bytes(),
             ingest: self.ingest.clone(),
+            spill,
         })
     }
 
@@ -380,16 +492,19 @@ impl TrainSession {
         // degrade to last-rename-wins instead of interleaving one file.
         let tmp =
             PathBuf::from(format!("{}.tmp.{}", path.display(), std::process::id()));
-        // Persist the full (epoch, objective) sequence — pre-resume epochs
-        // plus this session's own — so hooks can reconstruct their state.
+        // Persist the full (epoch, objective) and (epoch, K, recall)
+        // sequences — pre-resume epochs plus this session's own — so hooks
+        // can reconstruct their state.
         let mut objective_log = self.restored_objectives.clone();
         objective_log.extend(self.history.iter().map(|h| (h.epoch as u64, h.objective)));
+        let mut recall_log = self.restored_recalls.clone();
+        recall_log.extend(self.recall_log.iter().copied());
         let write = || -> anyhow::Result<()> {
             let mut f = std::io::BufWriter::new(
                 std::fs::File::create(&tmp)
                     .map_err(|e| anyhow::anyhow!("create {}: {e}", tmp.display()))?,
             );
-            self.trainer.save_checkpoint_with(&mut f, &objective_log)?;
+            self.trainer.save_checkpoint_with(&mut f, &objective_log, &recall_log)?;
             use std::io::Write;
             f.flush()?;
             // fsync before the rename: otherwise a power loss can persist
@@ -559,6 +674,118 @@ impl EpochHook for EarlyStopOnPlateau {
     }
 }
 
+/// Built-in hook: evaluate Recall@`k` every `every` epochs and stop when
+/// it has not improved by at least `min_delta` (absolute) for `patience`
+/// consecutive evals — the *eval-metric* early stopper, for runs where
+/// the training objective keeps creeping down long after the retrieval
+/// quality has saturated.
+///
+/// Each eval is recorded in the session's recall log, which checkpoints
+/// persist (the `RCLG` section of `ALXCKPT2`) and resume replays through
+/// [`EpochHook::on_resume_recalls`] — so a resumed run stops at exactly
+/// the epoch the uninterrupted one would have, like
+/// [`EarlyStopOnPlateau`].
+pub struct EarlyStopOnRecall {
+    k: usize,
+    every: usize,
+    patience: usize,
+    min_delta: f64,
+    best: f64,
+    evals_since_best: usize,
+    warned: bool,
+}
+
+impl EarlyStopOnRecall {
+    pub fn new(k: usize, every: usize, patience: usize, min_delta: f64) -> EarlyStopOnRecall {
+        EarlyStopOnRecall {
+            k,
+            every: every.max(1),
+            patience: patience.max(1),
+            min_delta,
+            best: f64::NEG_INFINITY,
+            evals_since_best: 0,
+            warned: false,
+        }
+    }
+
+    /// Fold one eval's Recall@K into the plateau state; `true` when the
+    /// metric has stalled for `patience` evals. Shared by the live path
+    /// and the resume replay, so both walk the same state machine.
+    fn observe(&mut self, recall: f64) -> bool {
+        if !self.best.is_finite() || recall > self.best + self.min_delta {
+            self.best = recall;
+            self.evals_since_best = 0;
+            false
+        } else {
+            self.evals_since_best += 1;
+            self.evals_since_best >= self.patience
+        }
+    }
+}
+
+impl EpochHook for EarlyStopOnRecall {
+    fn after_epoch(
+        &mut self,
+        session: &mut TrainSession,
+        stats: &EpochStats,
+    ) -> anyhow::Result<HookAction> {
+        if stats.epoch % self.every != 0 {
+            return Ok(HookAction::Continue);
+        }
+        // Reuse an eval another hook (EvalEvery) already ran this epoch —
+        // the exact top-k pass is the expensive part of a large run.
+        let recalls = match session.eval_log.last() {
+            Some((epoch, recalls)) if *epoch == stats.epoch => recalls.clone(),
+            _ => {
+                let recalls = session.evaluate()?;
+                session.eval_log.push((stats.epoch, recalls.clone()));
+                recalls
+            }
+        };
+        let Some(r) = recalls.iter().find(|r| r.k == self.k) else {
+            if !self.warned {
+                crate::log_warn!(
+                    "recall early-stop hook inactive: eval does not report Recall@{}",
+                    self.k
+                );
+                self.warned = true;
+            }
+            return Ok(HookAction::Continue);
+        };
+        let recall = r.recall;
+        // The persisted recall log resume replays from.
+        session.recall_log.push((stats.epoch as u64, self.k as u32, recall));
+        if self.observe(recall) {
+            crate::log_info!(
+                "early stop @ epoch {}: Recall@{} plateau ({} evals without +{} improvement)",
+                stats.epoch,
+                self.k,
+                self.patience,
+                self.min_delta
+            );
+            return Ok(HookAction::Stop);
+        }
+        Ok(HookAction::Continue)
+    }
+
+    fn on_resume_recalls(&mut self, prior: &[RecallLogEntry]) -> HookAction {
+        // Replay only the evals this hook's K produced, in order; if the
+        // plateau was already reached at the checkpoint epoch, stop the
+        // resumed session before it trains a single extra epoch.
+        let mut stop = false;
+        for &(_, k, recall) in prior {
+            if k as usize == self.k {
+                stop = self.observe(recall) || stop;
+            }
+        }
+        if stop {
+            HookAction::Stop
+        } else {
+            HookAction::Continue
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -693,6 +920,70 @@ mod tests {
         s.run().unwrap();
         assert_eq!(s.eval_log().len(), 1);
         assert!(path.exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recall_early_stop_halts_on_plateau() {
+        let mut s = tiny_session(50);
+        // Demand an impossible +1.0 recall improvement: the first eval
+        // sets the best, every later one counts toward the plateau.
+        s.add_hook(Box::new(EarlyStopOnRecall::new(20, 1, 2, 1.0)));
+        let report = s.run().unwrap();
+        assert!(s.stopped());
+        assert_eq!(report.history.len(), 3, "first eval + 2 plateau evals");
+        // Its evals land in the session eval log too.
+        assert_eq!(s.eval_log().len(), 3);
+        assert_eq!(s.recall_log.len(), 3);
+    }
+
+    #[test]
+    fn recall_early_stop_state_survives_resume() {
+        let path = tmp_path("recall_resume");
+        let hook = || Box::new(EarlyStopOnRecall::new(20, 1, 2, 1.0));
+        // Uninterrupted reference run.
+        let mut full = tiny_session(50);
+        full.add_hook(hook());
+        full.run().unwrap();
+        let stop_epoch = full.trainer.current_epoch();
+
+        // Interrupted run: checkpoint after epoch 1 (hook already fired).
+        let mut first = tiny_session(50);
+        first.add_hook(hook());
+        first.step().unwrap();
+        first.checkpoint(&path).unwrap();
+        drop(first);
+
+        let source = InMemorySource::new("community", community_matrix(60, 40, 3));
+        let mut resumed = TrainSession::resume_with(&path, &source, tiny_cfg(50), None).unwrap();
+        resumed.add_hook(hook());
+        assert!(!resumed.stopped(), "one eval is no plateau yet");
+        resumed.run().unwrap();
+        assert_eq!(resumed.trainer.current_epoch(), stop_epoch);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recall_stop_epoch_checkpoint_resumes_stopped() {
+        // EarlyStopOnRecall registered before CheckpointEvery (the
+        // documented — and config-driven — order): the checkpoint written
+        // in the stop epoch already holds that epoch's recall entry, so
+        // the resumed session replays to Stop before training a single
+        // extra epoch.
+        let path = tmp_path("recall_stop_ckpt");
+        let mut s = tiny_session(50);
+        s.add_hook(Box::new(EarlyStopOnRecall::new(20, 1, 2, 1.0)));
+        s.add_hook(Box::new(CheckpointEvery::new(1, &path)));
+        s.run().unwrap();
+        let stop_epoch = s.trainer.current_epoch();
+        drop(s);
+
+        let source = InMemorySource::new("community", community_matrix(60, 40, 3));
+        let mut resumed = TrainSession::resume_with(&path, &source, tiny_cfg(50), None).unwrap();
+        resumed.add_hook(Box::new(EarlyStopOnRecall::new(20, 1, 2, 1.0)));
+        assert_eq!(resumed.trainer.current_epoch(), stop_epoch);
+        assert!(resumed.stopped(), "stop-epoch checkpoint must resume stopped");
+        assert!(resumed.step().is_err());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -19,18 +19,19 @@
 //! * [`StreamingSource`] — the streaming path: reads `ALXCSR02` chunks
 //!   through a bounded-memory cursor and assembles per-shard CSRs (and
 //!   their transposes) directly, so the *monolithic* matrix never exists
-//!   and ingestion staging is bounded by the chunk size. The sharded
-//!   train matrix + transpose (~2× nnz) still reside in RAM — spilling
-//!   those resident shards is the next scale step (ROADMAP).
+//!   and ingestion staging is bounded by the chunk size. With
+//!   [`StreamingSource::load_split_spilled`] the shards stream straight
+//!   into `ALXBANK01` banks and train demand-paged, so even the sharded
+//!   matrix + transpose never reside in RAM at once.
 
 use crate::config::AlxConfig;
 use crate::sparse::{
-    ChunkedReader, Csr, RowDisposition, ShardedCsr, ShardedCsrBuilder, SplitPlan, TestRow,
-    ALXCSR02_MAGIC,
+    ChunkedReader, Csr, CsrBank, CsrStorage, InMemory, MmapBank, RowDisposition, ShardedCsr,
+    ShardedCsrBuilder, SplitPlan, TestRow, ALXCSR02_MAGIC,
 };
 use crate::webgraph::{generate, Variant, VariantSpec};
 use std::io::{BufRead, Read};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// Generator provenance of a synthetic WebGraph dataset — everything from
 /// [`crate::webgraph::GeneratedGraph`] *except* the adjacency matrix,
@@ -304,7 +305,9 @@ impl DataSource for EdgeListSource {
 /// row, and assemble per-shard CSRs (and their transposes) directly — the
 /// monolithic matrix (and the in-memory path's transient copies: raw file
 /// bytes, unsplit matrix, split scratch) never exist. Resident memory is
-/// the sharded train matrix + transpose the trainer needs anyway.
+/// the sharded train matrix + transpose the trainer needs anyway — or,
+/// with [`StreamingSource::load_split_spilled`], just the shard under
+/// construction plus the residency cache.
 ///
 /// This deliberately does **not** implement [`DataSource`]: that trait's
 /// contract is "materialize a [`Dataset`]", which is exactly what
@@ -318,11 +321,13 @@ pub struct StreamingSource {
 }
 
 /// What streaming ingestion produces: everything a trainer needs, plus
-/// the ingestion accounting.
-pub struct StreamedSplit {
+/// the ingestion accounting. The storage backend says where the shards
+/// ended up: resident ([`InMemory`], the default) or demand-paged out of
+/// `ALXBANK01` banks ([`MmapBank`], the spill path).
+pub struct StreamedSplit<S: CsrStorage = InMemory> {
     pub info: DatasetInfo,
-    pub train: ShardedCsr,
-    pub train_t: ShardedCsr,
+    pub train: ShardedCsr<S>,
+    pub train_t: ShardedCsr<S>,
     pub test: Vec<TestRow>,
     pub ingest: IngestReport,
 }
@@ -395,6 +400,130 @@ impl StreamingSource {
             ingest,
         })
     }
+
+    /// The fully out-of-core form of [`StreamingSource::load_split`]:
+    /// identical split decisions (bitwise-identical training), but the
+    /// per-shard CSRs stream straight into `ALXBANK01` banks as they
+    /// complete and are reopened demand-paged, so the full matrix never
+    /// exists in RAM at any point — peak ingestion memory is one chunk
+    /// plus one shard under construction, and steady-state training
+    /// memory is `resident_shards` decoded shards per bank.
+    ///
+    /// Writes `train.alxbank` and `train_t.alxbank` into `spill_dir` (the
+    /// transpose is derived from the train bank in O(cols) + one shard of
+    /// scratch, at the cost of one scan of the mapped bank per transpose
+    /// shard).
+    pub fn load_split_spilled(
+        &self,
+        num_shards: usize,
+        train_frac: f64,
+        holdout_frac: f64,
+        seed: u64,
+        spill_dir: &Path,
+        resident_shards: usize,
+    ) -> anyhow::Result<StreamedSplit<MmapBank>> {
+        std::fs::create_dir_all(spill_dir)
+            .map_err(|e| anyhow::anyhow!("create spill dir {}: {e}", spill_dir.display()))?;
+        let train_path = spill_dir.join("train.alxbank");
+        let train_t_path = spill_dir.join("train_t.alxbank");
+
+        let mut reader = ChunkedReader::open(&self.path, self.budget_bytes)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", self.path.display()))?;
+        let header = *reader.header();
+        let mut plan = SplitPlan::new(header.rows, train_frac, holdout_frac, seed);
+        let mut builder = ShardedCsrBuilder::new(header.rows, header.cols, num_shards);
+        builder
+            .spill_to(&train_path)
+            .map_err(|e| anyhow::anyhow!("spill to {}: {e}", train_path.display()))?;
+        let mut test = Vec::new();
+        while let Some(chunk) = reader
+            .next_chunk()
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", self.path.display()))?
+        {
+            for i in 0..chunk.row_count() {
+                let (r, idx, val) = chunk.row(i);
+                match plan.dispose(r, idx, val) {
+                    RowDisposition::Train => builder.push_row(idx, val),
+                    RowDisposition::Test(tr) => {
+                        test.push(tr);
+                        builder.push_empty();
+                    }
+                    RowDisposition::Skip => builder.push_empty(),
+                }
+            }
+        }
+        builder
+            .finish_spilled()
+            .map_err(|e| anyhow::anyhow!("finish bank {}: {e}", train_path.display()))?;
+
+        // Derive the transpose bank from the (validated) train bank.
+        let bank = CsrBank::open(&train_path)
+            .map_err(|e| anyhow::anyhow!("reopen bank {}: {e}", train_path.display()))?;
+        bank.write_transpose_bank(&train_t_path, num_shards)
+            .map_err(|e| anyhow::anyhow!("transpose bank {}: {e}", train_t_path.display()))?;
+        drop(bank);
+
+        let train = ShardedCsr::open_bank(&train_path, resident_shards)
+            .map_err(|e| anyhow::anyhow!("open bank {}: {e}", train_path.display()))?;
+        let train_t = ShardedCsr::open_bank(&train_t_path, resident_shards)
+            .map_err(|e| anyhow::anyhow!("open bank {}: {e}", train_t_path.display()))?;
+        let ingest = IngestReport {
+            chunks: reader.chunks_read(),
+            peak_chunk_bytes: reader.peak_chunk_bytes(),
+            budget_bytes: self.budget_bytes,
+        };
+        crate::log_info!(
+            "streamed {} into spill banks at {}: {}x{}, {} edges, {} resident shards",
+            self.path.display(),
+            spill_dir.display(),
+            header.rows,
+            header.cols,
+            header.nnz,
+            resident_shards
+        );
+        Ok(StreamedSplit {
+            info: DatasetInfo {
+                name: self.path.display().to_string(),
+                rows: header.rows,
+                cols: header.cols,
+                nnz: header.nnz,
+                graph: None,
+            },
+            train,
+            train_t,
+            test,
+            ingest,
+        })
+    }
+}
+
+/// Spill an already-built sharded pair into `ALXBANK01` banks under `dir`
+/// and reopen both demand-paged with a residency cap of `resident_shards`
+/// decoded shards each — how a non-streaming session enters spill mode
+/// after the split.
+pub fn spill_to_banks(
+    train: ShardedCsr,
+    train_t: ShardedCsr,
+    dir: &Path,
+    resident_shards: usize,
+) -> anyhow::Result<(ShardedCsr<MmapBank>, ShardedCsr<MmapBank>)> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("create spill dir {}: {e}", dir.display()))?;
+    let train_path = dir.join("train.alxbank");
+    let train_t_path = dir.join("train_t.alxbank");
+    train
+        .spill_to_bank(&train_path)
+        .map_err(|e| anyhow::anyhow!("spill {}: {e}", train_path.display()))?;
+    drop(train); // free the resident copy before mapping the bank
+    train_t
+        .spill_to_bank(&train_t_path)
+        .map_err(|e| anyhow::anyhow!("spill {}: {e}", train_t_path.display()))?;
+    drop(train_t);
+    let train = ShardedCsr::open_bank(&train_path, resident_shards)
+        .map_err(|e| anyhow::anyhow!("open bank {}: {e}", train_path.display()))?;
+    let train_t = ShardedCsr::open_bank(&train_t_path, resident_shards)
+        .map_err(|e| anyhow::anyhow!("open bank {}: {e}", train_t_path.display()))?;
+    Ok((train, train_t))
 }
 
 /// Build the [`DataSource`] a resolved config's `[data]` section names.
@@ -469,6 +598,36 @@ mod tests {
         assert_eq!(s.train.to_csr(), m); // train_frac = 1.0: no holdout
         assert!(s.ingest.chunks > 0);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn spilled_load_split_matches_resident_split() {
+        let triplets: Vec<(u32, u32, f32)> =
+            (0..12u32).flat_map(|r| [(r, r % 8, 1.0), (r, (r + 3) % 8, 2.0)]).collect();
+        let m = Csr::from_coo(12, 8, &triplets);
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let path = dir.join(format!("alx_data_spill_{pid}.csr02"));
+        let spill_dir = dir.join(format!("alx_data_spill_{pid}.banks"));
+        {
+            let f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+            crate::sparse::write_chunked(&m, f, 3).unwrap();
+        }
+        let src = StreamingSource::new(&path, 0);
+        let resident = src.load_split(3, 0.9, 0.25, 11).unwrap();
+        let spilled = src.load_split_spilled(3, 0.9, 0.25, 11, &spill_dir, 2).unwrap();
+        assert_eq!(spilled.train.rows, resident.train.rows);
+        assert_eq!(spilled.train.nnz(), resident.train.nnz());
+        for p in 0..3 {
+            assert_eq!(spilled.train.piece(p), resident.train.piece(p), "train piece {p}");
+            assert_eq!(spilled.train_t.piece(p), resident.train_t.piece(p), "t piece {p}");
+        }
+        assert_eq!(spilled.test.len(), resident.test.len());
+        for (a, b) in spilled.test.iter().zip(&resident.test) {
+            assert_eq!((a.row, &a.history, &a.holdout), (b.row, &b.history, &b.holdout));
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir_all(&spill_dir);
     }
 
     #[test]

@@ -49,8 +49,8 @@ pub mod prelude {
     pub use crate::als::{EpochStats, PrecisionPolicy, SolverKind, TrainConfig, Trainer};
     pub use crate::config::AlxConfig;
     pub use crate::coordinator::{
-        CheckpointEvery, Coordinator, EarlyStopOnPlateau, EpochHook, EvalEvery, HookAction,
-        RunReport, TrainSession,
+        CheckpointEvery, Coordinator, EarlyStopOnPlateau, EarlyStopOnRecall, EpochHook,
+        EvalEvery, HookAction, RunReport, TrainSession,
     };
     pub use crate::data::{
         DataSource, Dataset, DatasetInfo, EdgeListSource, InMemorySource, IngestReport,
@@ -59,7 +59,7 @@ pub mod prelude {
     pub use crate::densebatch::{DenseBatch, DenseBatcher};
     pub use crate::eval::{recall_at_k, EvalConfig, RecallReport};
     pub use crate::linalg::Mat;
-    pub use crate::sparse::{Csr, RowMatrix, ShardedCsr};
+    pub use crate::sparse::{Csr, CsrStorage, MmapBank, RowMatrix, ShardedCsr, SpillStats};
     pub use crate::topo::Topology;
     pub use crate::webgraph::{Variant, VariantSpec};
 }

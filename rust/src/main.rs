@@ -4,8 +4,10 @@
 //!
 //! ```text
 //! alx generate  --variant in-dense --scale 0.01        # build a dataset
+//! alx bank      --data g.alxcsr02 --out g.alxbank      # shard-major bank
 //! alx train     [--config cfg.toml] [--key value ...]  # train + eval
 //! alx train     --source edge-list --data edges.txt    # train on a file
+//! alx train     --stream --spill --data g.alxcsr02     # out-of-core end to end
 //! alx train     --checkpoint-every 4 --eval-every 2    # session hooks
 //! alx train     --resume run.ckpt                      # continue a run
 //! alx table1    --scale 0.001                          # Table 1 stats
@@ -93,9 +95,15 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("stream", "data.streaming"),
         ("ingest-budget-mb", "data.ingest_budget_mb"),
         ("chunk-rows", "data.chunk_rows"),
+        ("spill", "data.spill"),
+        ("spill-dir", "data.spill_dir"),
+        ("resident-shards", "data.resident_shards"),
         ("checkpoint-every", "session.checkpoint_every"),
         ("eval-every", "session.eval_every"),
         ("early-stop", "session.early_stop_patience"),
+        ("early-stop-recall", "session.early_stop_recall_k"),
+        ("early-stop-recall-patience", "session.early_stop_recall_patience"),
+        ("early-stop-recall-every", "session.early_stop_recall_every"),
         ("checkpoint", "session.checkpoint_path"),
         ("cores", "topology.cores"),
         ("dim", "train.dim"),
@@ -228,9 +236,70 @@ fn cmd_convert(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Convert an `ALXCSR02` stream into a shard-major `ALXBANK01` bank
+/// (optionally its transpose bank too) without ever materializing the
+/// matrix: rows flow chunk by chunk into a spilling shard builder, which
+/// writes each shard out the moment it completes.
+fn cmd_bank(args: &Args) -> anyhow::Result<()> {
+    let cfg = resolve_config(args)?;
+    let input = args
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("bank needs --data <input file.alxcsr02>"))?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("bank needs --out <output file.alxbank>"))?;
+    anyhow::ensure!(input != out, "--data and --out must differ");
+    let shards = args.get_or("shards", cfg.cores)?;
+    anyhow::ensure!(shards >= 1, "--shards must be >= 1");
+
+    let budget = (cfg.ingest_budget_mb as u64) << 20;
+    let mut r = alx::sparse::ChunkedReader::open(input, budget)
+        .map_err(|e| anyhow::anyhow!("read {input}: {e}"))?;
+    let h = *r.header();
+    // Write to a sibling temp file, then rename (same crash/self-overwrite
+    // discipline as `alx convert`).
+    let tmp = format!("{out}.tmp.{}", std::process::id());
+    let mut build = || -> anyhow::Result<()> {
+        let mut b = alx::sparse::ShardedCsrBuilder::new(h.rows, h.cols, shards);
+        b.spill_to(&tmp)?;
+        while let Some(chunk) =
+            r.next_chunk().map_err(|e| anyhow::anyhow!("read {input}: {e}"))?
+        {
+            for i in 0..chunk.row_count() {
+                let (_, idx, val) = chunk.row(i);
+                b.push_row(idx, val);
+            }
+        }
+        b.finish_spilled()?;
+        Ok(())
+    };
+    if let Err(e) = build() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, out).map_err(|e| anyhow::anyhow!("rename {tmp} -> {out}: {e}"))?;
+    println!(
+        "banked {input} -> {out}: {}x{}, {} entries, {shards} shards (ALXBANK01)",
+        h.rows, h.cols, h.nnz
+    );
+    if let Some(tout) = args.get("transpose-out") {
+        anyhow::ensure!(tout != out && tout != input, "--transpose-out must be a new file");
+        let ttmp = format!("{tout}.tmp.{}", std::process::id());
+        let bank = alx::sparse::CsrBank::open(out)?;
+        if let Err(e) = bank.write_transpose_bank(&ttmp, shards) {
+            let _ = std::fs::remove_file(&ttmp);
+            return Err(e.into());
+        }
+        std::fs::rename(&ttmp, tout)
+            .map_err(|e| anyhow::anyhow!("rename {ttmp} -> {tout}: {e}"))?;
+        println!("transpose bank -> {tout}");
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = resolve_config(args)?;
-    let dataset_desc = if cfg.data_streaming {
+    let mut dataset_desc = if cfg.data_streaming {
         format!("streaming:{}", cfg.data_path)
     } else {
         match cfg.data_source.as_str() {
@@ -238,6 +307,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             _ => format!("{}:{}", cfg.data_source, cfg.data_path),
         }
     };
+    if cfg.data_spill {
+        dataset_desc.push_str(&format!(" [spill, resident_shards={}]", cfg.resident_shards));
+    }
     println!(
         "training {dataset_desc} d={} epochs={} λ={:.0e} α={:.0e} solver={} precision={} engine={} cores={}",
         cfg.train.dim,
@@ -308,6 +380,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             "\nstreaming ingest: {} chunks, peak chunk {} (budget {budget})",
             ing.chunks,
             human_bytes(ing.peak_chunk_bytes),
+        );
+    }
+    if let Some(sp) = &report.spill {
+        println!(
+            "spilled shards: banks {}, {} shard faults, {} prefetch hits ({:.0}% hit rate), \
+             {} prefetches",
+            human_bytes(sp.bank_bytes),
+            sp.shard_faults,
+            sp.prefetch_hits,
+            100.0 * sp.hit_rate(),
+            sp.prefetches,
         );
     }
     if report.peak_rss_bytes > 0 {
@@ -437,11 +520,14 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: alx <generate|convert|train|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
+        "usage: alx <generate|convert|bank|train|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
          train flags: --source webgraph|edge-list --data <file> --resume <ckpt>\n\
                       --stream --ingest-budget-mb <MiB> (out-of-core ALXCSR02 ingestion)\n\
+                      --spill --spill-dir <dir> --resident-shards <n> (demand-paged shard banks)\n\
                       --checkpoint <path> --checkpoint-every <k> --eval-every <k> --early-stop <k>\n\
+                      --early-stop-recall <K> (stop on a Recall@K plateau)\n\
          convert:     --data <in: text|ALXCSR01|ALXCSR02> --out <file.alxcsr02> [--chunk-rows <n>]\n\
+         bank:        --data <file.alxcsr02> --out <file.alxbank> [--shards <n>] [--transpose-out <f>]\n\
          generate:    --out <file> [--format csr02|csr01] [--chunk-rows <n>]\n\
          see the CLI cheatsheet in README.md"
     );
@@ -459,6 +545,7 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "generate" => cmd_generate(&args),
         "convert" => cmd_convert(&args),
+        "bank" => cmd_bank(&args),
         "train" => cmd_train(&args),
         "table1" => cmd_table1(&args),
         "table2" => cmd_table2(&args),

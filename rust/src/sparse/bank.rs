@@ -1,0 +1,555 @@
+//! `ALXBANK01` — the shard-major on-disk bank behind spilled training.
+//!
+//! `ALXCSR02` solved out-of-core *ingestion* (row-range chunks, read
+//! once, front to back). Training has a different access pattern: each
+//! shard pass needs one whole shard (and later its transpose shard)
+//! resident, over and over, epoch after epoch. A bank therefore stores
+//! the matrix **shard-major**: one self-contained CSR segment per shard,
+//! with a validated directory of per-shard offsets and nnz, so a single
+//! shard can be faulted in without touching the rest of the file.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! "ALXBANK01" + 7 zero bytes          16 bytes
+//! rows u64 | cols u64 | nnz u64 | num_shards u64
+//! directory, num_shards entries:
+//!   seg_offset u64 | seg_rows u64 | seg_nnz u64
+//! per shard segment (back to back, in shard order):
+//!   indptr  u64 × (seg_rows + 1)     (shard-local, indptr[0] == 0)
+//!   indices u32 × seg_nnz            (sorted strictly ascending per row)
+//!   values  f32 × seg_nnz
+//! ```
+//!
+//! Shard `p` holds global rows `[p·per, min((p+1)·per, rows))` with
+//! `per = ceil(rows / num_shards)` — the exact uniform partition of
+//! [`super::ShardedCsr`] and [`crate::sharding::ShardedTable`], so bank
+//! shard `p` is table shard `p`'s input.
+//!
+//! [`CsrBank::open`] memory-maps the file and validates **everything** up
+//! front — header against the exact file length, the directory against
+//! the canonical layout, every segment's `indptr` monotonicity and every
+//! column index — so a corrupt or lying file fails with `InvalidData`
+//! before any shard-sized allocation, and a successfully opened bank can
+//! be decoded infallibly for the rest of the run.
+
+use super::csr::{io, Csr};
+use crate::util::mmap::Mmap;
+use std::io::{Result, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// File magic of the bank format (padded to 16 bytes in the header).
+pub const ALXBANK01_MAGIC: &[u8; 9] = b"ALXBANK01";
+const MAGIC_BYTES: usize = 16;
+/// Magic + rows/cols/nnz/num_shards.
+const HEADER_BYTES: usize = MAGIC_BYTES + 4 * 8;
+const DIR_ENTRY_BYTES: usize = 3 * 8;
+
+/// Rows-per-shard of the uniform partition every bank uses (shared with
+/// [`super::ShardedCsr`]).
+pub(crate) fn per_for(rows: usize, num_shards: usize) -> usize {
+    rows.div_ceil(num_shards.max(1)).max(1)
+}
+
+fn shard_range(rows: usize, per: usize, p: usize) -> (usize, usize) {
+    ((p * per).min(rows), ((p + 1) * per).min(rows))
+}
+
+/// Byte size of one shard segment.
+fn segment_bytes(rows: usize, nnz: usize) -> u128 {
+    (rows as u128 + 1) * 8 + nnz as u128 * 8
+}
+
+/// Writes an `ALXBANK01` file: shards are appended in order (each one a
+/// complete shard-local [`Csr`]), and [`BankWriter::finish`] backpatches
+/// the totals and the directory. Streaming writers (the spill ingestion
+/// path) therefore never hold more than the shard currently being built.
+pub struct BankWriter<W: Write + Seek> {
+    w: W,
+    rows: usize,
+    cols: usize,
+    num_shards: usize,
+    per: usize,
+    next_shard: usize,
+    nnz: u64,
+    /// (offset, rows, nnz) per written shard.
+    dir: Vec<(u64, u64, u64)>,
+    offset: u64,
+}
+
+impl<W: Write + Seek> BankWriter<W> {
+    /// Start a bank for a `rows × cols` matrix in `num_shards` uniform
+    /// row-range shards. Writes a placeholder header immediately.
+    pub fn create(mut w: W, rows: usize, cols: usize, num_shards: usize) -> Result<Self> {
+        if num_shards == 0 {
+            return Err(io::bad("bank needs at least one shard"));
+        }
+        if cols as u64 > u32::MAX as u64 + 1 || rows as u64 > u32::MAX as u64 {
+            return Err(io::bad("matrix dimensions exceed the u32 index space"));
+        }
+        let mut header = vec![0u8; HEADER_BYTES + num_shards * DIR_ENTRY_BYTES];
+        header[..ALXBANK01_MAGIC.len()].copy_from_slice(ALXBANK01_MAGIC);
+        // rows/cols are final; nnz and the directory are backpatched.
+        header[MAGIC_BYTES..MAGIC_BYTES + 8].copy_from_slice(&(rows as u64).to_le_bytes());
+        header[MAGIC_BYTES + 8..MAGIC_BYTES + 16].copy_from_slice(&(cols as u64).to_le_bytes());
+        header[MAGIC_BYTES + 24..MAGIC_BYTES + 32]
+            .copy_from_slice(&(num_shards as u64).to_le_bytes());
+        w.write_all(&header)?;
+        Ok(BankWriter {
+            w,
+            rows,
+            cols,
+            num_shards,
+            per: per_for(rows, num_shards),
+            next_shard: 0,
+            nnz: 0,
+            dir: Vec::with_capacity(num_shards),
+            offset: header.len() as u64,
+        })
+    }
+
+    /// Shards written so far.
+    pub fn shards_written(&self) -> usize {
+        self.next_shard
+    }
+
+    /// Append the next shard (shard-local row ids). Its row count must
+    /// match the uniform partition's range for that shard.
+    pub fn write_shard(&mut self, shard: &Csr) -> Result<()> {
+        if self.next_shard >= self.num_shards {
+            return Err(io::bad(format!(
+                "bank already holds the declared {} shards",
+                self.num_shards
+            )));
+        }
+        let (start, end) = shard_range(self.rows, self.per, self.next_shard);
+        if shard.rows != end - start {
+            return Err(io::bad(format!(
+                "shard {} has {} rows, the uniform partition wants {}",
+                self.next_shard,
+                shard.rows,
+                end - start
+            )));
+        }
+        if shard.cols != self.cols {
+            return Err(io::bad(format!(
+                "shard {} has {} cols, the bank is {}-wide",
+                self.next_shard, shard.cols, self.cols
+            )));
+        }
+        io::write_u64s(&mut self.w, shard.indptr.iter().map(|&p| p as u64))?;
+        io::write_u32s(&mut self.w, &shard.indices)?;
+        io::write_f32s(&mut self.w, &shard.values)?;
+        let nnz = shard.nnz() as u64;
+        self.dir.push((self.offset, shard.rows as u64, nnz));
+        self.offset += segment_bytes(shard.rows, shard.nnz()) as u64;
+        self.nnz += nnz;
+        self.next_shard += 1;
+        Ok(())
+    }
+
+    /// Verify every shard arrived, backpatch the totals and the
+    /// directory, flush, and return the inner writer.
+    pub fn finish(mut self) -> Result<W> {
+        if self.next_shard != self.num_shards {
+            return Err(io::bad(format!(
+                "bank got {} of the declared {} shards",
+                self.next_shard, self.num_shards
+            )));
+        }
+        self.w.flush()?;
+        self.w.seek(SeekFrom::Start(MAGIC_BYTES as u64 + 16))?;
+        self.w.write_all(&self.nnz.to_le_bytes())?;
+        self.w.seek(SeekFrom::Start(HEADER_BYTES as u64))?;
+        let mut dir = Vec::with_capacity(self.dir.len() * DIR_ENTRY_BYTES);
+        for &(off, rows, nnz) in &self.dir {
+            dir.extend_from_slice(&off.to_le_bytes());
+            dir.extend_from_slice(&rows.to_le_bytes());
+            dir.extend_from_slice(&nnz.to_le_bytes());
+        }
+        self.w.write_all(&dir)?;
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// One directory entry of an opened bank.
+#[derive(Clone, Copy, Debug)]
+struct Segment {
+    offset: usize,
+    rows: usize,
+    nnz: usize,
+}
+
+/// A validated, memory-mapped `ALXBANK01` file. Shards decode into owned
+/// [`Csr`]s on demand ([`CsrBank::load_shard`]); the map itself stays
+/// page-cache-resident only where touched.
+#[derive(Debug)]
+pub struct CsrBank {
+    map: Mmap,
+    pub rows: usize,
+    pub cols: usize,
+    nnz: u64,
+    per: usize,
+    dir: Vec<Segment>,
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+impl CsrBank {
+    /// Open and fully validate a bank file. Every structural invariant is
+    /// checked here (exact file size, canonical segment offsets, `indptr`
+    /// monotonicity, column ranges), so later decodes cannot fail.
+    pub fn open(path: impl AsRef<Path>) -> Result<CsrBank> {
+        let f = std::fs::File::open(path)?;
+        let map = Mmap::map(&f)?;
+        Self::from_map(map)
+    }
+
+    fn from_map(map: Mmap) -> Result<CsrBank> {
+        let b = map.bytes();
+        if b.len() < HEADER_BYTES {
+            return Err(io::bad("file too short for an ALXBANK01 header"));
+        }
+        if &b[..ALXBANK01_MAGIC.len()] != ALXBANK01_MAGIC
+            || b[ALXBANK01_MAGIC.len()..MAGIC_BYTES].iter().any(|&x| x != 0)
+        {
+            return Err(io::bad("bad magic (expected ALXBANK01)"));
+        }
+        let rows64 = u64_at(b, MAGIC_BYTES);
+        let cols64 = u64_at(b, MAGIC_BYTES + 8);
+        let nnz = u64_at(b, MAGIC_BYTES + 16);
+        let shards64 = u64_at(b, MAGIC_BYTES + 24);
+        if rows64 > u32::MAX as u64 {
+            return Err(io::bad(format!("rows {rows64} exceeds the u32 index space")));
+        }
+        if cols64 > u32::MAX as u64 + 1 {
+            return Err(io::bad(format!("cols {cols64} exceeds the u32 index space")));
+        }
+        if shards64 == 0 {
+            return Err(io::bad("bank declares zero shards"));
+        }
+        // The directory must fit in the file before it is allocated, so a
+        // lying shard count cannot force an oversized allocation.
+        let dir_end = HEADER_BYTES as u128 + shards64 as u128 * DIR_ENTRY_BYTES as u128;
+        if dir_end > b.len() as u128 {
+            return Err(io::bad(format!(
+                "directory for {shards64} shards does not fit the {}-byte file",
+                b.len()
+            )));
+        }
+        let rows = rows64 as usize;
+        let cols = cols64 as usize;
+        let num_shards = shards64 as usize;
+        let per = per_for(rows, num_shards);
+
+        // Directory: offsets must follow the canonical back-to-back layout
+        // and the per-shard rows must match the uniform partition.
+        let mut dir = Vec::with_capacity(num_shards);
+        let mut expect_off = dir_end;
+        let mut total_nnz = 0u64;
+        for p in 0..num_shards {
+            let e = HEADER_BYTES + p * DIR_ENTRY_BYTES;
+            let off = u64_at(b, e);
+            let seg_rows = u64_at(b, e + 8);
+            let seg_nnz = u64_at(b, e + 16);
+            let (start, end) = shard_range(rows, per, p);
+            if seg_rows != (end - start) as u64 {
+                return Err(io::bad(format!(
+                    "shard {p} directory claims {seg_rows} rows, the uniform \
+                     partition of {rows} rows over {num_shards} shards wants {}",
+                    end - start
+                )));
+            }
+            if off as u128 != expect_off {
+                return Err(io::bad(format!(
+                    "shard {p} offset {off} breaks the canonical layout (expected {expect_off})"
+                )));
+            }
+            total_nnz = total_nnz
+                .checked_add(seg_nnz)
+                .ok_or_else(|| io::bad("shard nnz totals overflow"))?;
+            // u128 arithmetic: a lying nnz must fail the bound below, not
+            // wrap a narrower integer first.
+            expect_off += (seg_rows as u128 + 1) * 8 + seg_nnz as u128 * 8;
+            if expect_off > b.len() as u128 {
+                return Err(io::bad(format!(
+                    "shard {p} segment runs past the end of the {}-byte file",
+                    b.len()
+                )));
+            }
+            dir.push(Segment {
+                offset: off as usize,
+                rows: seg_rows as usize,
+                nnz: seg_nnz as usize,
+            });
+        }
+        if total_nnz != nnz {
+            return Err(io::bad(format!(
+                "directory shards hold {total_nnz} entries, header claims {nnz}"
+            )));
+        }
+        if expect_off != b.len() as u128 {
+            return Err(io::bad(format!(
+                "bank should be {expect_off} bytes, file is {}",
+                b.len()
+            )));
+        }
+
+        // Content validation: indptr monotone and exact, every column in
+        // range — the same bar as `Csr::read_from`, paid once at open.
+        for (p, seg) in dir.iter().enumerate() {
+            let mut prev = 0u64;
+            for i in 0..=seg.rows {
+                let v = u64_at(b, seg.offset + i * 8);
+                if (i == 0 && v != 0) || v < prev || v > seg.nnz as u64 {
+                    return Err(io::bad(format!("shard {p}: corrupt indptr at row {i}")));
+                }
+                prev = v;
+            }
+            if prev != seg.nnz as u64 {
+                return Err(io::bad(format!(
+                    "shard {p}: indptr ends at {prev}, directory claims {} entries",
+                    seg.nnz
+                )));
+            }
+            let idx_off = seg.offset + (seg.rows + 1) * 8;
+            for (i, c) in b[idx_off..idx_off + seg.nnz * 4].chunks_exact(4).enumerate() {
+                let c = u32::from_le_bytes(c.try_into().unwrap());
+                if c as u64 >= cols as u64 {
+                    return Err(io::bad(format!(
+                        "shard {p}: column index {c} out of range at entry {i} (cols = {cols})"
+                    )));
+                }
+            }
+        }
+        Ok(CsrBank { map, rows, cols, nnz, per, dir })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.dir.len()
+    }
+
+    pub fn nnz(&self) -> u64 {
+        self.nnz
+    }
+
+    /// Bytes of the on-disk bank file.
+    pub fn file_bytes(&self) -> u64 {
+        self.map.len() as u64
+    }
+
+    /// Global row range `[start, end)` of shard `p`.
+    pub fn shard_range(&self, p: usize) -> (usize, usize) {
+        shard_range(self.rows, self.per, p)
+    }
+
+    pub(crate) fn per(&self) -> usize {
+        self.per
+    }
+
+    /// Decode shard `p` into an owned shard-local [`Csr`]. Infallible
+    /// after the full validation [`CsrBank::open`] performed — this is
+    /// the "shard fault" cost of the demand-paged path.
+    pub fn load_shard(&self, p: usize) -> Csr {
+        let seg = self.dir[p];
+        let b = self.map.bytes();
+        let mut indptr = Vec::with_capacity(seg.rows + 1);
+        for i in 0..=seg.rows {
+            indptr.push(u64_at(b, seg.offset + i * 8) as usize);
+        }
+        let idx_off = seg.offset + (seg.rows + 1) * 8;
+        let indices: Vec<u32> = b[idx_off..idx_off + seg.nnz * 4]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let val_off = idx_off + seg.nnz * 4;
+        let values: Vec<f32> = b[val_off..val_off + seg.nnz * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Csr { rows: seg.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    /// Write this bank's transpose as another bank of `num_pieces`
+    /// column-range shards, one transpose shard resident at a time.
+    ///
+    /// Entries scatter in ascending global source-row order, so each
+    /// transpose row is sorted by source row — bitwise identical to
+    /// [`super::ShardedCsr::transpose`] on the same matrix. Peak memory
+    /// is O(cols) counts + one source shard + the transpose shard under
+    /// construction, at the cost of `num_pieces` scans over the mapped
+    /// source bank (sequential page-cache reads).
+    pub fn write_transpose_bank(&self, path: impl AsRef<Path>, num_pieces: usize) -> Result<()> {
+        let t_rows = self.cols;
+        let num_pieces = num_pieces.max(1);
+        let t_per = per_for(t_rows, num_pieces);
+
+        // Counting pass: entries per transpose row (= per source column).
+        let mut counts = vec![0u64; t_rows];
+        for p in 0..self.num_shards() {
+            let s = self.load_shard(p);
+            for &c in &s.indices {
+                counts[c as usize] += 1;
+            }
+        }
+
+        let f = std::fs::File::create(path)?;
+        let mut w = BankWriter::create(std::io::BufWriter::new(f), t_rows, self.rows, num_pieces)?;
+        for tp in 0..num_pieces {
+            let (c0, c1) = shard_range(t_rows, t_per, tp);
+            let mut indptr = Vec::with_capacity(c1 - c0 + 1);
+            indptr.push(0usize);
+            let mut total = 0usize;
+            for c in c0..c1 {
+                total += counts[c] as usize;
+                indptr.push(total);
+            }
+            let mut indices = vec![0u32; total];
+            let mut values = vec![0.0f32; total];
+            let mut cursor = vec![0usize; c1 - c0];
+            for p in 0..self.num_shards() {
+                let s = self.load_shard(p);
+                let base = self.shard_range(p).0;
+                for r in 0..s.rows {
+                    for (&c, &v) in s.row_indices(r).iter().zip(s.row_values(r)) {
+                        let c = c as usize;
+                        if c < c0 || c >= c1 {
+                            continue;
+                        }
+                        let local = c - c0;
+                        let off = indptr[local] + cursor[local];
+                        indices[off] = (base + r) as u32;
+                        values[off] = v;
+                        cursor[local] += 1;
+                    }
+                }
+            }
+            let piece = Csr { rows: c1 - c0, cols: self.rows, indptr, indices, values };
+            w.write_shard(&piece)?;
+        }
+        let mut inner = w.finish()?;
+        inner.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::ShardedCsr;
+    use crate::util::Pcg64;
+
+    fn sample(rows: usize, cols: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut t = Vec::new();
+        for r in 0..rows as u32 {
+            let len = rng.range(0, 7);
+            let mut seen = std::collections::HashSet::new();
+            while seen.len() < len {
+                seen.insert(rng.range(0, cols) as u32);
+            }
+            for c in seen {
+                t.push((r, c, (r + 2 * c) as f32 * 0.25));
+            }
+        }
+        Csr::from_coo(rows, cols, &t)
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("alx_bank_{}_{}.alxbank", tag, std::process::id()))
+    }
+
+    fn write_bank(m: &Csr, shards: usize, tag: &str) -> std::path::PathBuf {
+        let path = tmp(tag);
+        let s = ShardedCsr::from_csr(m, shards);
+        s.spill_to_bank(&path).unwrap();
+        path
+    }
+
+    #[test]
+    fn bank_roundtrips_every_shard() {
+        let m = sample(41, 17, 1);
+        for shards in [1usize, 2, 3, 8, 41, 64] {
+            let path = write_bank(&m, shards, &format!("rt{shards}"));
+            let bank = CsrBank::open(&path).unwrap();
+            assert_eq!(bank.rows, m.rows);
+            assert_eq!(bank.cols, m.cols);
+            assert_eq!(bank.nnz(), m.nnz() as u64);
+            assert_eq!(bank.num_shards(), shards);
+            let reference = ShardedCsr::from_csr(&m, shards);
+            for p in 0..shards {
+                assert_eq!(bank.shard_range(p), reference.piece_range(p));
+                let loaded = bank.load_shard(p);
+                assert_eq!(&loaded, reference.piece(p).as_ref(), "shard {p}/{shards}");
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn transpose_bank_matches_in_memory_transpose() {
+        let m = sample(29, 13, 2);
+        for shards in [1usize, 2, 5, 13] {
+            let path = write_bank(&m, shards, &format!("t{shards}"));
+            let tpath = tmp(&format!("tt{shards}"));
+            let bank = CsrBank::open(&path).unwrap();
+            bank.write_transpose_bank(&tpath, shards).unwrap();
+            let tbank = CsrBank::open(&tpath).unwrap();
+            let t_ref = ShardedCsr::from_csr(&m, shards).transpose(shards);
+            assert_eq!(tbank.rows, t_ref.rows);
+            assert_eq!(tbank.nnz(), t_ref.nnz() as u64);
+            for p in 0..shards {
+                assert_eq!(
+                    &tbank.load_shard(p),
+                    t_ref.piece(p).as_ref(),
+                    "transpose shard {p}/{shards}"
+                );
+            }
+            let _ = std::fs::remove_file(&path);
+            let _ = std::fs::remove_file(&tpath);
+        }
+    }
+
+    #[test]
+    fn writer_rejects_wrong_shard_shapes() {
+        let m = sample(10, 6, 3);
+        let s = ShardedCsr::from_csr(&m, 2);
+        // Too few shards at finish.
+        let mut w =
+            BankWriter::create(std::io::Cursor::new(Vec::new()), m.rows, m.cols, 2).unwrap();
+        w.write_shard(s.piece(0).as_ref()).unwrap();
+        assert!(w.finish().is_err());
+        // Wrong row count for the partition.
+        let mut w =
+            BankWriter::create(std::io::Cursor::new(Vec::new()), m.rows, m.cols, 2).unwrap();
+        assert!(w.write_shard(s.piece(1).as_ref()).is_err());
+        // Too many shards.
+        let mut w =
+            BankWriter::create(std::io::Cursor::new(Vec::new()), m.rows, m.cols, 1).unwrap();
+        w.write_shard(&m).unwrap();
+        assert!(w.write_shard(&m).is_err());
+    }
+
+    #[test]
+    fn empty_matrix_banks() {
+        let m = Csr::from_coo(3, 3, &[]);
+        let path = write_bank(&m, 2, "empty");
+        let bank = CsrBank::open(&path).unwrap();
+        assert_eq!(bank.nnz(), 0);
+        assert_eq!(bank.load_shard(0).nnz(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_and_short_files() {
+        let path = tmp("badmagic");
+        std::fs::write(&path, b"NOTABANKXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXX").unwrap();
+        assert!(CsrBank::open(&path).is_err());
+        std::fs::write(&path, b"ALXBANK01").unwrap();
+        assert!(CsrBank::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,13 +1,18 @@
-//! Sparse matrix substrate: CSR storage (monolithic and row-sharded), the
-//! chunked `ALXCSR02` on-disk format with its bounded-memory cursor, the
-//! transpose, and the paper's strong-generalization train/test split (§5)
-//! in both in-memory and streaming forms.
+//! Sparse matrix substrate: CSR storage (monolithic and row-sharded, with
+//! pluggable in-memory or mmap-backed shard banks), the chunked `ALXCSR02`
+//! on-disk format with its bounded-memory cursor, the shard-major
+//! `ALXBANK01` bank format behind spilled training, the transpose, and the
+//! paper's strong-generalization train/test split (§5) in both in-memory
+//! and streaming forms.
 
+pub mod bank;
 pub mod chunked;
 pub mod csr;
 pub mod shards;
 pub mod split;
+pub mod storage;
 
+pub use bank::{BankWriter, CsrBank, ALXBANK01_MAGIC};
 pub use chunked::{
     write_chunked, ChunkedHeader, ChunkedReader, ChunkedWriter, CsrChunk, ALXCSR02_MAGIC,
     DEFAULT_CHUNK_ROWS,
@@ -18,3 +23,4 @@ pub use split::{
     split_strong_generalization, split_to_shards, RowDisposition, ShardedSplit, Split,
     SplitPlan, TestRow,
 };
+pub use storage::{CsrStorage, InMemory, MmapBank, PieceRows, ShardedMatrix, SpillStats};

@@ -9,41 +9,38 @@
 //! lets the streaming ingestion path (`ALXCSR02` chunks → split → shards)
 //! run without ever materializing the full matrix.
 //!
-//! Row accessors take **global** row ids, so batching, the objective pass
-//! and the feeder pipeline are oblivious to the layout.
+//! *Where* the pieces live is pluggable ([`super::CsrStorage`]): the
+//! default [`InMemory`] backend keeps every piece resident (row accessors
+//! take **global** row ids, so batching, the objective pass and the
+//! feeder pipeline are oblivious to the layout), while the
+//! [`super::MmapBank`] backend demand-pages pieces out of an on-disk
+//! `ALXBANK01` bank so steady-state memory is bounded by the residency
+//! cap instead of the matrix. The builder can spill completed pieces to a
+//! bank as they fill ([`ShardedCsrBuilder::spill_to`]), which keeps even
+//! *construction* memory at one piece.
 
+use super::bank::{per_for, BankWriter, CsrBank};
 use super::csr::{Csr, RowMatrix};
+use super::storage::{CsrStorage, InMemory, MmapBank, ShardedMatrix, SpillStats};
+use std::path::Path;
+use std::sync::Arc;
 
 /// A CSR matrix stored as contiguous row-range pieces. Piece `p` holds
 /// rows `[p·per, min((p+1)·per, rows))` with `per = ceil(rows / pieces)`
 /// — the same uniform layout as [`crate::sharding::ShardedTable`].
 #[derive(Clone, Debug, PartialEq)]
-pub struct ShardedCsr {
+pub struct ShardedCsr<S: CsrStorage = InMemory> {
     pub rows: usize,
     pub cols: usize,
     /// Rows per piece (the last piece may be short or empty).
     per: usize,
-    pieces: Vec<Csr>,
     nnz: usize,
+    store: S,
 }
 
-impl ShardedCsr {
-    /// Rows-per-piece for a uniform partition (shared with the builder).
-    fn per_for(rows: usize, num_pieces: usize) -> usize {
-        rows.div_ceil(num_pieces.max(1)).max(1)
-    }
-
-    /// Copy a monolithic [`Csr`] into `num_pieces` row-range pieces.
-    pub fn from_csr(m: &Csr, num_pieces: usize) -> ShardedCsr {
-        let mut b = ShardedCsrBuilder::new(m.rows, m.cols, num_pieces);
-        for r in 0..m.rows {
-            b.push_row(m.row_indices(r), m.row_values(r));
-        }
-        b.finish()
-    }
-
+impl<S: CsrStorage> ShardedCsr<S> {
     pub fn num_pieces(&self) -> usize {
-        self.pieces.len()
+        self.store.num_pieces()
     }
 
     /// Number of stored entries.
@@ -58,11 +55,80 @@ impl ShardedCsr {
         (start, end)
     }
 
+    /// Materialized handle to piece `p` (a free clone on the in-memory
+    /// backend; a residency-cache lookup or shard fault on a spilled one).
+    pub fn piece(&self, p: usize) -> Arc<Csr> {
+        self.store.piece(p)
+    }
+
+    /// Bytes currently resident in host memory (the whole matrix for
+    /// [`InMemory`]; at most the residency cap for a spilled backend).
+    pub fn memory_bytes(&self) -> u64 {
+        self.store.resident_bytes()
+    }
+}
+
+impl<S: CsrStorage> ShardedMatrix for ShardedCsr<S> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn num_pieces(&self) -> usize {
+        self.store.num_pieces()
+    }
+
+    fn piece_range(&self, p: usize) -> (usize, usize) {
+        let start = (p * self.per).min(self.rows);
+        let end = ((p + 1) * self.per).min(self.rows);
+        (start, end)
+    }
+
+    #[inline]
+    fn piece_of(&self, r: usize) -> usize {
+        debug_assert!(r < self.rows);
+        (r / self.per).min(self.store.num_pieces() - 1)
+    }
+
+    fn piece(&self, p: usize) -> Arc<Csr> {
+        self.store.piece(p)
+    }
+
+    fn prefetch(&self, p: usize) {
+        self.store.prefetch(p);
+    }
+
+    fn spill_stats(&self) -> SpillStats {
+        self.store.spill_stats()
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.store.resident_bytes()
+    }
+}
+
+impl ShardedCsr {
+    /// Copy a monolithic [`Csr`] into `num_pieces` row-range pieces.
+    pub fn from_csr(m: &Csr, num_pieces: usize) -> ShardedCsr {
+        let mut b = ShardedCsrBuilder::new(m.rows, m.cols, num_pieces);
+        for r in 0..m.rows {
+            b.push_row(m.row_indices(r), m.row_values(r));
+        }
+        b.finish()
+    }
+
     /// The piece holding global row `r`, and `r`'s piece-local index.
     #[inline]
     fn locate(&self, r: usize) -> (usize, usize) {
         debug_assert!(r < self.rows);
-        let p = (r / self.per).min(self.pieces.len() - 1);
+        let p = (r / self.per).min(self.store.pieces.len() - 1);
         (p, r - p * self.per)
     }
 
@@ -70,26 +136,21 @@ impl ShardedCsr {
     #[inline]
     pub fn row_indices(&self, r: usize) -> &[u32] {
         let (p, local) = self.locate(r);
-        self.pieces[p].row_indices(local)
+        self.store.pieces[p].row_indices(local)
     }
 
     /// Values of global row `r`.
     #[inline]
     pub fn row_values(&self, r: usize) -> &[f32] {
         let (p, local) = self.locate(r);
-        self.pieces[p].row_values(local)
+        self.store.pieces[p].row_values(local)
     }
 
     /// Length of global row `r`.
     #[inline]
     pub fn row_len(&self, r: usize) -> usize {
         let (p, local) = self.locate(r);
-        self.pieces[p].row_len(local)
-    }
-
-    /// Memory footprint of the stored arrays in bytes.
-    pub fn memory_bytes(&self) -> u64 {
-        self.pieces.iter().map(|p| p.memory_bytes()).sum()
+        self.store.pieces[p].row_len(local)
     }
 
     /// Transpose into `num_pieces` column-range pieces via counting sort —
@@ -98,11 +159,11 @@ impl ShardedCsr {
     pub fn transpose(&self, num_pieces: usize) -> ShardedCsr {
         assert!(self.rows <= u32::MAX as usize, "row ids must fit u32");
         let t_rows = self.cols;
-        let per = Self::per_for(t_rows, num_pieces);
+        let per = per_for(t_rows, num_pieces);
 
         // Count entries per transpose row (= per source column).
         let mut counts = vec![0usize; t_rows];
-        for piece in &self.pieces {
+        for piece in &self.store.pieces {
             for &c in &piece.indices {
                 counts[c as usize] += 1;
             }
@@ -151,7 +212,13 @@ impl ShardedCsr {
             }
         }
 
-        ShardedCsr { rows: t_rows, cols: self.rows, per, pieces, nnz: self.nnz }
+        ShardedCsr {
+            rows: t_rows,
+            cols: self.rows,
+            per,
+            nnz: self.nnz,
+            store: InMemory::new(pieces),
+        }
     }
 
     /// Concatenate the pieces back into one monolithic [`Csr`]
@@ -161,13 +228,55 @@ impl ShardedCsr {
         indptr.push(0usize);
         let mut indices = Vec::with_capacity(self.nnz);
         let mut values = Vec::with_capacity(self.nnz);
-        for piece in &self.pieces {
+        for piece in &self.store.pieces {
             let base = indices.len();
             indptr.extend(piece.indptr[1..].iter().map(|&p| base + p));
             indices.extend_from_slice(&piece.indices);
             values.extend_from_slice(&piece.values);
         }
         Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    /// Write every piece into an `ALXBANK01` bank at `path` (the resident
+    /// counterpart of the builder's streaming
+    /// [`ShardedCsrBuilder::spill_to`] — used to spill an already-built
+    /// matrix before dropping it).
+    pub fn spill_to_bank(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        let w = std::io::BufWriter::new(f);
+        let mut w = BankWriter::create(w, self.rows, self.cols, self.num_pieces())?;
+        for piece in &self.store.pieces {
+            w.write_shard(piece)?;
+        }
+        w.finish()?;
+        Ok(())
+    }
+}
+
+impl ShardedCsr<MmapBank> {
+    /// Open an `ALXBANK01` bank as a demand-paged sharded matrix with a
+    /// residency cap of `resident_shards` decoded pieces. The file is
+    /// fully validated before this returns.
+    pub fn open_bank(
+        path: impl AsRef<Path>,
+        resident_shards: usize,
+    ) -> std::io::Result<ShardedCsr<MmapBank>> {
+        let bank = CsrBank::open(path)?;
+        let nnz = usize::try_from(bank.nnz()).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "bank nnz exceeds usize")
+        })?;
+        Ok(ShardedCsr {
+            rows: bank.rows,
+            cols: bank.cols,
+            per: bank.per(),
+            nnz,
+            store: MmapBank::new(bank, resident_shards),
+        })
+    }
+
+    /// The demand-paged storage backend (residency/fault accounting).
+    pub fn storage(&self) -> &MmapBank {
+        &self.store
     }
 }
 
@@ -190,7 +299,10 @@ impl RowMatrix for ShardedCsr {
 
 /// Assembles a [`ShardedCsr`] from rows arriving in ascending order — the
 /// sink of the streaming ingestion path. Memory grows only with the rows
-/// pushed so far; there is no monolithic intermediate.
+/// pushed so far; there is no monolithic intermediate. With
+/// [`ShardedCsrBuilder::spill_to`], completed pieces are flushed straight
+/// into an on-disk bank and freed, so peak memory is **one piece** and the
+/// full matrix never exists in RAM at all.
 pub struct ShardedCsrBuilder {
     rows: usize,
     cols: usize,
@@ -199,13 +311,15 @@ pub struct ShardedCsrBuilder {
     next_row: usize,
     nnz: usize,
     pieces: Vec<Csr>,
+    spill: Option<BankWriter<std::io::BufWriter<std::fs::File>>>,
+    spill_err: Option<std::io::Error>,
 }
 
 impl ShardedCsrBuilder {
     pub fn new(rows: usize, cols: usize, num_pieces: usize) -> ShardedCsrBuilder {
         assert!(rows <= u32::MAX as usize, "row ids must fit u32");
         let num_pieces = num_pieces.max(1);
-        let per = ShardedCsr::per_for(rows, num_pieces);
+        let per = per_for(rows, num_pieces);
         let pieces = (0..num_pieces)
             .map(|p| {
                 let start = (p * per).min(rows);
@@ -215,7 +329,39 @@ impl ShardedCsrBuilder {
                 Csr { rows: end - start, cols, indptr, indices: Vec::new(), values: Vec::new() }
             })
             .collect();
-        ShardedCsrBuilder { rows, cols, per, num_pieces, next_row: 0, nnz: 0, pieces }
+        ShardedCsrBuilder {
+            rows,
+            cols,
+            per,
+            num_pieces,
+            next_row: 0,
+            nnz: 0,
+            pieces,
+            spill: None,
+            spill_err: None,
+        }
+    }
+
+    /// Redirect the builder into an on-disk `ALXBANK01` bank at `path`:
+    /// from now on every piece is written out the moment its last row
+    /// arrives and its memory is freed, so the builder never holds more
+    /// than the piece currently filling. Must be called before the first
+    /// row; finish with [`ShardedCsrBuilder::finish_spilled`].
+    pub fn spill_to(&mut self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if self.next_row != 0 || self.spill.is_some() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "spill_to must be called on a fresh builder",
+            ));
+        }
+        let f = std::fs::File::create(path)?;
+        self.spill = Some(BankWriter::create(
+            std::io::BufWriter::new(f),
+            self.rows,
+            self.cols,
+            self.num_pieces,
+        )?);
+        Ok(())
     }
 
     /// Rows appended so far.
@@ -237,6 +383,14 @@ impl ShardedCsrBuilder {
         piece.indptr.push(piece.indices.len());
         self.next_row += 1;
         self.nnz += indices.len();
+        // In spill mode, a piece is complete exactly when the cursor hits
+        // its end row — flush it to the bank and free its arrays.
+        if self.spill.is_some() {
+            let end = ((p + 1) * self.per).min(self.rows);
+            if self.next_row == end {
+                self.flush_piece(p);
+            }
+        }
     }
 
     /// Append an empty row (held-out test rows stay in the id space).
@@ -244,15 +398,71 @@ impl ShardedCsrBuilder {
         self.push_row(&[], &[]);
     }
 
+    /// Write piece `p` to the spill bank and free its memory. IO errors
+    /// are remembered and surfaced by `finish_spilled` (the piece memory
+    /// is freed either way, so a failing disk cannot also OOM the host).
+    fn flush_piece(&mut self, p: usize) {
+        let stub = Csr {
+            rows: 0,
+            cols: self.cols,
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+        };
+        let piece = std::mem::replace(&mut self.pieces[p], stub);
+        if self.spill_err.is_some() {
+            return;
+        }
+        if let Some(w) = self.spill.as_mut() {
+            if let Err(e) = w.write_shard(&piece) {
+                self.spill_err = Some(e);
+            }
+        }
+    }
+
     pub fn finish(self) -> ShardedCsr {
+        assert!(
+            self.spill.is_none() && self.spill_err.is_none(),
+            "a spilling builder must use finish_spilled"
+        );
         assert_eq!(self.next_row, self.rows, "builder got fewer rows than declared");
         ShardedCsr {
             rows: self.rows,
             cols: self.cols,
             per: self.per,
-            pieces: self.pieces,
             nnz: self.nnz,
+            store: InMemory::new(self.pieces),
         }
+    }
+
+    /// Flush the remaining (empty-tail) pieces, finalize the bank header,
+    /// and return total stored entries. The bank is then ready for
+    /// [`ShardedCsr::open_bank`].
+    pub fn finish_spilled(mut self) -> std::io::Result<usize> {
+        if self.spill.is_none() && self.spill_err.is_none() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "finish_spilled needs a prior spill_to",
+            ));
+        }
+        if self.next_row != self.rows {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("builder got {} of the declared {} rows", self.next_row, self.rows),
+            ));
+        }
+        // Pieces past the last data row (rows < pieces·per) never see a
+        // cursor hit their end; flush them as the empty shards they are.
+        let flushed = self.spill.as_ref().map(|w| w.shards_written()).unwrap_or(0);
+        for p in flushed..self.num_pieces {
+            self.flush_piece(p);
+        }
+        if let Some(e) = self.spill_err.take() {
+            return Err(e);
+        }
+        let w = self.spill.take().expect("spill writer present");
+        w.finish()?;
+        Ok(self.nnz)
     }
 }
 
@@ -353,5 +563,62 @@ mod tests {
         assert_eq!(s.nnz(), 0);
         assert_eq!(s.transpose(2).nnz(), 0);
         assert_eq!(s.to_csr(), m);
+    }
+
+    fn bank_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("alx_shards_{}_{}.alxbank", tag, std::process::id()))
+    }
+
+    #[test]
+    fn spilling_builder_produces_the_in_memory_bank() {
+        let m = sample(37, 11, 7);
+        for pieces in [1usize, 3, 5, 37, 50] {
+            let path = bank_path(&format!("spillb{pieces}"));
+            let mut b = ShardedCsrBuilder::new(m.rows, m.cols, pieces);
+            b.spill_to(&path).unwrap();
+            for r in 0..m.rows {
+                b.push_row(m.row_indices(r), m.row_values(r));
+            }
+            assert_eq!(b.finish_spilled().unwrap(), m.nnz());
+            let paged = ShardedCsr::open_bank(&path, 2).unwrap();
+            let resident = ShardedCsr::from_csr(&m, pieces);
+            assert_eq!(paged.rows, resident.rows);
+            assert_eq!(paged.nnz(), resident.nnz());
+            assert_eq!(paged.num_pieces(), resident.num_pieces());
+            for p in 0..resident.num_pieces() {
+                assert_eq!(paged.piece(p), resident.piece(p), "pieces={pieces} p={p}");
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn spilling_builder_frees_completed_pieces() {
+        let m = sample(64, 9, 8);
+        let path = bank_path("free");
+        let mut b = ShardedCsrBuilder::new(m.rows, m.cols, 8);
+        b.spill_to(&path).unwrap();
+        for r in 0..m.rows {
+            b.push_row(m.row_indices(r), m.row_values(r));
+            // Every piece except the one currently filling must be empty.
+            let filling = (r / 8).min(7);
+            for (p, piece) in b.pieces.iter().enumerate() {
+                if p != filling {
+                    assert!(
+                        piece.indices.is_empty(),
+                        "piece {p} still resident while filling {filling}"
+                    );
+                }
+            }
+        }
+        b.finish_spilled().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn spill_to_rejects_started_builders() {
+        let mut b = ShardedCsrBuilder::new(4, 3, 2);
+        b.push_row(&[1], &[1.0]);
+        assert!(b.spill_to(bank_path("started")).is_err());
     }
 }

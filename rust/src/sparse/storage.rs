@@ -1,0 +1,466 @@
+//! Pluggable shard storage behind [`super::ShardedCsr`].
+//!
+//! The trainer only ever touches the training matrix one shard at a time
+//! (shard pass μ reads matrix shard μ; the objective walks shards in
+//! order), so where the shards *live* is a storage policy, not a trainer
+//! concern. A [`CsrStorage`] backend hands out materialized shards as
+//! `Arc<Csr>` handles:
+//!
+//! * [`InMemory`] — every shard resident, handles are free clones. The
+//!   default; exactly the pre-spill behaviour.
+//! * [`MmapBank`] — shards live in a memory-mapped `ALXBANK01` file and
+//!   materialize on demand through a small residency manager: an LRU of
+//!   at most `resident_shards` decoded shards plus background prefetch of
+//!   the shard the trainer will claim next. Steady-state memory is
+//!   bounded by the residency cap, not the matrix.
+//!
+//! Backends are *storage* only: a shard's decoded bytes are identical
+//! whichever backend serves it, which is what makes spilled training
+//! bitwise identical to resident training.
+
+use super::bank::CsrBank;
+use super::csr::{Csr, RowMatrix};
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Residency/fault accounting of a storage backend (all zero for fully
+/// resident backends).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Synchronous shard loads: the consumer had to wait for the decode.
+    pub shard_faults: u64,
+    /// Shard requests served from the residency cache (typically because
+    /// a prefetch had already staged the shard).
+    pub prefetch_hits: u64,
+    /// Prefetches issued to the background loader.
+    pub prefetches: u64,
+    /// Bytes of the on-disk bank backing this storage.
+    pub bank_bytes: u64,
+}
+
+impl SpillStats {
+    /// Fraction of shard requests that did not fault (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.shard_faults + self.prefetch_hits;
+        if total == 0 {
+            return 0.0;
+        }
+        self.prefetch_hits as f64 / total as f64
+    }
+
+    /// Field-wise sum (to combine the train and transpose banks).
+    pub fn merged(&self, other: &SpillStats) -> SpillStats {
+        SpillStats {
+            shard_faults: self.shard_faults + other.shard_faults,
+            prefetch_hits: self.prefetch_hits + other.prefetch_hits,
+            prefetches: self.prefetches + other.prefetches,
+            bank_bytes: self.bank_bytes + other.bank_bytes,
+        }
+    }
+}
+
+/// Where the row-range shards of a [`super::ShardedCsr`] live.
+pub trait CsrStorage: Send + Sync + 'static {
+    fn num_pieces(&self) -> usize;
+
+    /// A materialized handle to piece `p`. Cheap for resident backends;
+    /// may fault the shard in from disk for spilled ones. The returned
+    /// data is identical across backends and calls.
+    fn piece(&self, p: usize) -> Arc<Csr>;
+
+    /// Hint that piece `p` will be requested soon (no-op by default).
+    fn prefetch(&self, _p: usize) {}
+
+    /// Residency/fault accounting.
+    fn spill_stats(&self) -> SpillStats {
+        SpillStats::default()
+    }
+
+    /// Bytes currently resident in host memory.
+    fn resident_bytes(&self) -> u64;
+}
+
+/// The default backend: every shard resident, shared via `Arc`.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct InMemory {
+    pub(crate) pieces: Vec<Arc<Csr>>,
+}
+
+impl InMemory {
+    pub fn new(pieces: Vec<Csr>) -> InMemory {
+        InMemory { pieces: pieces.into_iter().map(Arc::new).collect() }
+    }
+}
+
+impl CsrStorage for InMemory {
+    fn num_pieces(&self) -> usize {
+        self.pieces.len()
+    }
+
+    fn piece(&self, p: usize) -> Arc<Csr> {
+        Arc::clone(&self.pieces[p])
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.pieces.iter().map(|p| p.memory_bytes()).sum()
+    }
+}
+
+/// LRU residency state of an [`MmapBank`]: front = most recently used.
+struct Residency {
+    resident: VecDeque<(usize, Arc<Csr>)>,
+    loading: HashSet<usize>,
+}
+
+struct BankShared {
+    bank: CsrBank,
+    cap: usize,
+    state: Mutex<Residency>,
+    loaded: Condvar,
+    faults: AtomicU64,
+    hits: AtomicU64,
+    prefetches: AtomicU64,
+}
+
+impl BankShared {
+    /// Insert a freshly decoded shard at the MRU position and evict past
+    /// the cap. Evicted handles still in use elsewhere stay alive until
+    /// their last `Arc` drops — eviction never invalidates a consumer.
+    fn insert(&self, p: usize, csr: Arc<Csr>) {
+        let mut g = self.state.lock().unwrap();
+        g.loading.remove(&p);
+        if !g.resident.iter().any(|(q, _)| *q == p) {
+            g.resident.push_front((p, csr));
+            while g.resident.len() > self.cap {
+                g.resident.pop_back();
+            }
+        }
+        self.loaded.notify_all();
+    }
+}
+
+/// Clears a piece's in-flight `loading` mark when dropped. Every loader
+/// (synchronous fault or prefetch thread) holds one across the decode, so
+/// a panic mid-decode wakes the waiters instead of wedging them on the
+/// condvar forever — they retry (and surface the underlying failure on
+/// their own thread) rather than hang the epoch. The successful path's
+/// `insert` already removed the mark; the second removal is a no-op.
+struct LoadingGuard<'a> {
+    shared: &'a BankShared,
+    p: usize,
+}
+
+impl Drop for LoadingGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = self.shared.state.lock().unwrap();
+        g.loading.remove(&self.p);
+        drop(g);
+        self.shared.loaded.notify_all();
+    }
+}
+
+/// Demand-paged storage over a memory-mapped `ALXBANK01` bank.
+#[derive(Clone)]
+pub struct MmapBank {
+    shared: Arc<BankShared>,
+}
+
+impl MmapBank {
+    /// Wrap an opened bank with a residency cap of `resident_shards`
+    /// decoded shards (clamped to at least 1).
+    pub fn new(bank: CsrBank, resident_shards: usize) -> MmapBank {
+        MmapBank {
+            shared: Arc::new(BankShared {
+                bank,
+                cap: resident_shards.max(1),
+                state: Mutex::new(Residency {
+                    resident: VecDeque::new(),
+                    loading: HashSet::new(),
+                }),
+                loaded: Condvar::new(),
+                faults: AtomicU64::new(0),
+                hits: AtomicU64::new(0),
+                prefetches: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn bank(&self) -> &CsrBank {
+        &self.shared.bank
+    }
+
+    /// Max decoded shards resident at once.
+    pub fn resident_cap(&self) -> usize {
+        self.shared.cap
+    }
+}
+
+impl std::fmt::Debug for MmapBank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapBank")
+            .field("shards", &self.shared.bank.num_shards())
+            .field("cap", &self.shared.cap)
+            .finish()
+    }
+}
+
+impl CsrStorage for MmapBank {
+    fn num_pieces(&self) -> usize {
+        self.shared.bank.num_shards()
+    }
+
+    fn piece(&self, p: usize) -> Arc<Csr> {
+        let s = &*self.shared;
+        let mut g = s.state.lock().unwrap();
+        loop {
+            if let Some(pos) = g.resident.iter().position(|(q, _)| *q == p) {
+                let entry = g.resident.remove(pos).unwrap();
+                let csr = Arc::clone(&entry.1);
+                g.resident.push_front(entry);
+                s.hits.fetch_add(1, Ordering::Relaxed);
+                return csr;
+            }
+            if g.loading.contains(&p) {
+                // A prefetch (or another consumer) is already decoding it.
+                g = s.loaded.wait(g).unwrap();
+                continue;
+            }
+            // Fault: decode synchronously on this thread.
+            g.loading.insert(p);
+            drop(g);
+            let guard = LoadingGuard { shared: s, p };
+            let csr = Arc::new(s.bank.load_shard(p));
+            s.faults.fetch_add(1, Ordering::Relaxed);
+            s.insert(p, Arc::clone(&csr));
+            drop(guard);
+            return csr;
+        }
+    }
+
+    fn prefetch(&self, p: usize) {
+        let s = &*self.shared;
+        {
+            let mut g = s.state.lock().unwrap();
+            if g.loading.contains(&p) || g.resident.iter().any(|(q, _)| *q == p) {
+                return;
+            }
+            g.loading.insert(p);
+        }
+        s.prefetches.fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::clone(&self.shared);
+        std::thread::spawn(move || {
+            let guard = LoadingGuard { shared: &shared, p };
+            let csr = Arc::new(shared.bank.load_shard(p));
+            shared.insert(p, csr);
+            drop(guard);
+        });
+    }
+
+    fn spill_stats(&self) -> SpillStats {
+        let s = &*self.shared;
+        SpillStats {
+            shard_faults: s.faults.load(Ordering::Relaxed),
+            prefetch_hits: s.hits.load(Ordering::Relaxed),
+            prefetches: s.prefetches.load(Ordering::Relaxed),
+            bank_bytes: s.bank.file_bytes(),
+        }
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        let g = self.shared.state.lock().unwrap();
+        g.resident.iter().map(|(_, c)| c.memory_bytes()).sum()
+    }
+}
+
+/// Object-safe view of a sharded matrix for the trainer: shape plus
+/// demand-paged shard access. Implemented by [`super::ShardedCsr`] over
+/// every [`CsrStorage`] backend, so the trainer is oblivious to whether
+/// the matrix is resident or spilled.
+pub trait ShardedMatrix: Send + Sync {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn nnz(&self) -> usize;
+    fn num_pieces(&self) -> usize;
+    /// Global row range `[start, end)` of piece `p`.
+    fn piece_range(&self, p: usize) -> (usize, usize);
+    /// The piece holding global row `r`.
+    fn piece_of(&self, r: usize) -> usize;
+    /// Materialized handle to piece `p`.
+    fn piece(&self, p: usize) -> Arc<Csr>;
+    /// Hint that piece `p` will be requested soon.
+    fn prefetch(&self, p: usize);
+    fn spill_stats(&self) -> SpillStats;
+    fn resident_bytes(&self) -> u64;
+}
+
+/// Lazily materialized view of one piece, addressed by **global** row id
+/// — the [`RowMatrix`] the feeder pipeline batches from. The shard is
+/// faulted in on first row access, i.e. on the feeder's background
+/// thread, so a demand-paged load overlaps the consumer's solve of the
+/// previous shard instead of stalling it.
+pub struct PieceRows {
+    matrix: Arc<dyn ShardedMatrix>,
+    p: usize,
+    base: usize,
+    piece: OnceLock<Arc<Csr>>,
+}
+
+impl PieceRows {
+    pub fn new(matrix: Arc<dyn ShardedMatrix>, p: usize) -> PieceRows {
+        let base = matrix.piece_range(p).0;
+        PieceRows { matrix, p, base, piece: OnceLock::new() }
+    }
+
+    #[inline]
+    fn piece(&self) -> &Csr {
+        self.piece.get_or_init(|| self.matrix.piece(self.p)).as_ref()
+    }
+}
+
+impl RowMatrix for PieceRows {
+    #[inline]
+    fn row_len(&self, r: usize) -> usize {
+        self.piece().row_len(r - self.base)
+    }
+
+    #[inline]
+    fn row_indices(&self, r: usize) -> &[u32] {
+        self.piece().row_indices(r - self.base)
+    }
+
+    #[inline]
+    fn row_values(&self, r: usize) -> &[f32] {
+        self.piece().row_values(r - self.base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ShardedCsr;
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn sample(rows: usize, cols: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut t = Vec::new();
+        for r in 0..rows as u32 {
+            let len = rng.range(1, 6);
+            let mut seen = std::collections::HashSet::new();
+            while seen.len() < len {
+                seen.insert(rng.range(0, cols) as u32);
+            }
+            for c in seen {
+                t.push((r, c, (r + c) as f32));
+            }
+        }
+        Csr::from_coo(rows, cols, &t)
+    }
+
+    fn bank_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("alx_storage_{}_{}.alxbank", tag, std::process::id()))
+    }
+
+    #[test]
+    fn mmap_bank_serves_identical_pieces() {
+        let m = sample(40, 12, 1);
+        let resident = ShardedCsr::from_csr(&m, 5);
+        let path = bank_path("ident");
+        resident.spill_to_bank(&path).unwrap();
+        let paged = MmapBank::new(CsrBank::open(&path).unwrap(), 2);
+        for p in 0..5 {
+            assert_eq!(paged.piece(p), resident.piece(p), "piece {p}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn lru_evicts_past_the_cap_and_counts_faults() {
+        let m = sample(60, 10, 2);
+        let resident = ShardedCsr::from_csr(&m, 6);
+        let path = bank_path("lru");
+        resident.spill_to_bank(&path).unwrap();
+        let paged = MmapBank::new(CsrBank::open(&path).unwrap(), 2);
+        // Cold pass: every piece faults, residency never exceeds the cap.
+        for p in 0..6 {
+            let _ = paged.piece(p);
+            let g = paged.shared.state.lock().unwrap();
+            assert!(g.resident.len() <= 2);
+        }
+        let s = paged.spill_stats();
+        assert_eq!(s.shard_faults, 6);
+        assert_eq!(s.prefetch_hits, 0);
+        // Re-touching the MRU piece hits.
+        let _ = paged.piece(5);
+        assert_eq!(paged.spill_stats().prefetch_hits, 1);
+        // An evicted piece faults again.
+        let _ = paged.piece(0);
+        assert_eq!(paged.spill_stats().shard_faults, 7);
+        assert!(s.bank_bytes > 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn prefetch_stages_a_piece_for_a_hit() {
+        let m = sample(30, 8, 3);
+        let resident = ShardedCsr::from_csr(&m, 3);
+        let path = bank_path("prefetch");
+        resident.spill_to_bank(&path).unwrap();
+        let paged = MmapBank::new(CsrBank::open(&path).unwrap(), 2);
+        paged.prefetch(1);
+        // piece() must return the staged (or in-flight) shard without a
+        // second decode racing the prefetch.
+        let got = paged.piece(1);
+        assert_eq!(got, resident.piece(1));
+        let s = paged.spill_stats();
+        assert_eq!(s.prefetches, 1);
+        assert_eq!(s.shard_faults + s.prefetch_hits, 1);
+        // Idempotent while resident or loading.
+        paged.prefetch(1);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(paged.spill_stats().prefetches <= 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn concurrent_piece_calls_agree() {
+        let m = sample(80, 16, 4);
+        let resident = ShardedCsr::from_csr(&m, 8);
+        let path = bank_path("concurrent");
+        resident.spill_to_bank(&path).unwrap();
+        let paged = Arc::new(MmapBank::new(CsrBank::open(&path).unwrap(), 2));
+        let handles: Vec<_> = (0..4)
+            .map(|w| {
+                let paged = Arc::clone(&paged);
+                std::thread::spawn(move || {
+                    for round in 0..3 {
+                        for p in 0..8 {
+                            let piece = paged.piece((p + w) % 8);
+                            assert!(piece.rows > 0 || piece.nnz() == 0, "round {round}");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for p in 0..8 {
+            assert_eq!(paged.piece(p), resident.piece(p));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn piece_rows_addresses_globally() {
+        let m = sample(20, 9, 5);
+        let sharded = Arc::new(ShardedCsr::from_csr(&m, 4));
+        let view = PieceRows::new(sharded.clone() as Arc<dyn ShardedMatrix>, 2);
+        let (start, end) = sharded.piece_range(2);
+        for r in start..end {
+            assert_eq!(view.row_indices(r), m.row_indices(r));
+            assert_eq!(view.row_values(r), m.row_values(r));
+            assert_eq!(view.row_len(r), m.row_len(r));
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Read-only memory mapping for the `ALXBANK01` shard banks.
+//!
+//! The build environment is offline (no `memmap2`), so the unix mapping is
+//! a minimal FFI binding to `mmap`/`munmap` — std already links libc, no
+//! new dependency is introduced. Non-unix platforms fall back to reading
+//! the file into an owned buffer, which keeps the API total at the cost of
+//! residency (the fallback is a correctness path, not a scale path).
+
+use std::fs::File;
+use std::io::{Error, ErrorKind, Result};
+
+/// An immutable byte view of a whole file. On unix this is a shared
+/// read-only mapping: pages are faulted in on access and reclaimable by
+/// the OS, so a mapped bank does not count against the process's working
+/// set until (and only while) its pages are touched.
+pub struct Mmap {
+    #[cfg(unix)]
+    ptr: *mut core::ffi::c_void,
+    #[cfg(not(unix))]
+    buf: Vec<u8>,
+    len: usize,
+}
+
+// The mapping is read-only for its whole lifetime, so concurrent access
+// from many threads is safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+#[cfg(unix)]
+mod sys {
+    use core::ffi::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+impl Mmap {
+    /// Map `file` read-only in its entirety. Zero-length files map to an
+    /// empty view (POSIX rejects `len == 0` mappings).
+    #[cfg(unix)]
+    pub fn map(file: &File) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len)
+            .map_err(|_| Error::new(ErrorKind::InvalidData, "file exceeds the address space"))?;
+        if len == 0 {
+            return Ok(Mmap { ptr: core::ptr::null_mut(), len: 0 });
+        }
+        // SAFETY: a fresh private read-only mapping of a file we hold open;
+        // the pointer is owned by this Mmap and unmapped exactly once.
+        let ptr = unsafe {
+            sys::mmap(
+                core::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(Error::last_os_error());
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    /// Portable fallback: read the whole file into memory.
+    #[cfg(not(unix))]
+    pub fn map(file: &File) -> Result<Mmap> {
+        use std::io::Read;
+        let mut buf = Vec::new();
+        let mut f = file;
+        f.read_to_end(&mut buf)?;
+        let len = buf.len();
+        Ok(Mmap { buf, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[cfg(unix)]
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr/len come from a successful mmap that lives as long
+        // as self; the mapping is never written.
+        unsafe { core::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    #[cfg(not(unix))]
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.bytes()
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len).finish()
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: exact pointer/length pair returned by mmap.
+            unsafe {
+                sys::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let path =
+            std::env::temp_dir().join(format!("alx_mmap_{}_{}.bin", tag, std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(bytes).unwrap();
+        f.flush().unwrap();
+        path
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let path = tmp("contents", &data);
+        let m = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(&m[..], &data[..]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let path = tmp("empty", &[]);
+        let m = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), &[] as &[u8]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let data = vec![7u8; 4096];
+        let path = tmp("threads", &data);
+        let m = std::sync::Arc::new(Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || m.iter().map(|&b| b as u64).sum::<u64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

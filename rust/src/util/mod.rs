@@ -7,6 +7,7 @@
 pub mod bf16;
 pub mod logger;
 pub mod mem;
+pub mod mmap;
 pub mod rng;
 pub mod stats;
 pub mod threads;

@@ -1,8 +1,10 @@
 //! Hostile-input hardening: corrupt, truncated and lying binary files
 //! must surface as `Err` — never a panic, and never an allocation larger
-//! than what the stream length actually supports.
+//! than what the stream length actually supports. Covers all three
+//! on-disk formats: `ALXCSR01`, `ALXCSR02` and the shard-major
+//! `ALXBANK01` bank.
 
-use alx::sparse::{write_chunked, ChunkedReader, Csr};
+use alx::sparse::{write_chunked, ChunkedReader, Csr, CsrBank, ShardedCsr};
 use alx::util::Pcg64;
 
 fn sample_matrix(rows: usize, cols: usize, seed: u64) -> Csr {
@@ -194,4 +196,111 @@ fn csr02_budget_violation_is_an_error_not_an_allocation() {
         .and_then(|mut r| r.next_chunk().map(|_| ()))
         .unwrap_err();
     assert!(err.to_string().contains("budget"), "{err}");
+}
+
+// --------------------------------------------------------------- ALXBANK01
+
+/// Write a valid bank for `m` and return its raw bytes (via a scratch
+/// file — banks are opened by mmap, not from a stream).
+fn bank_bytes(m: &Csr, shards: usize, tag: &str) -> Vec<u8> {
+    let path = bank_scratch(tag);
+    ShardedCsr::from_csr(m, shards).spill_to_bank(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+fn bank_scratch(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("alx_corrupt_bank_{}_{}.alxbank", tag, std::process::id()))
+}
+
+/// `CsrBank::open` on a raw byte image (round-tripped through a file).
+fn open_bank(bytes: &[u8], tag: &str) -> std::io::Result<CsrBank> {
+    let path = bank_scratch(tag);
+    std::fs::write(&path, bytes).unwrap();
+    let out = CsrBank::open(&path);
+    let _ = std::fs::remove_file(&path);
+    out
+}
+
+#[test]
+fn bank_roundtrips_clean() {
+    let m = sample_matrix(33, 14, 20);
+    let bytes = bank_bytes(&m, 5, "clean");
+    let bank = open_bank(&bytes, "clean").unwrap();
+    let reference = ShardedCsr::from_csr(&m, 5);
+    for p in 0..5 {
+        assert_eq!(&bank.load_shard(p), reference.piece(p).as_ref());
+    }
+}
+
+#[test]
+fn bank_truncation_at_every_byte_is_an_error() {
+    let m = sample_matrix(21, 9, 21);
+    let bytes = bank_bytes(&m, 4, "trunc");
+    for cut in 0..bytes.len() {
+        assert!(
+            open_bank(&bytes[..cut], "trunc_cut").is_err(),
+            "truncation at byte {cut}/{} accepted",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn bank_lying_header_fails_before_allocating() {
+    let m = sample_matrix(16, 8, 22);
+    let clean = bank_bytes(&m, 4, "lying");
+    // A shard count in the billions must fail the directory-fits-the-file
+    // check, not allocate a billion-entry directory.
+    let mut buf = clean.clone();
+    buf[40..48].copy_from_slice(&(1u64 << 40).to_le_bytes()); // num_shards
+    assert!(open_bank(&buf, "lying_shards").is_err());
+    // Oversized nnz: the directory totals no longer match.
+    let mut buf = clean.clone();
+    buf[32..40].copy_from_slice(&(1u64 << 50).to_le_bytes()); // nnz
+    assert!(open_bank(&buf, "lying_nnz").is_err());
+    // Oversized rows: the uniform partition no longer matches the
+    // directory's per-shard row counts.
+    let mut buf = clean.clone();
+    buf[16..24].copy_from_slice(&(m.rows as u64 * 1000).to_le_bytes()); // rows
+    assert!(open_bank(&buf, "lying_rows").is_err());
+}
+
+#[test]
+fn bank_corrupt_shard_offsets_rejected() {
+    let m = sample_matrix(16, 8, 23);
+    let clean = bank_bytes(&m, 4, "offsets");
+    // Directory entry 1 starts at byte 48 + 24; shift its offset.
+    let off_pos = 48 + 24;
+    let good = u64::from_le_bytes(clean[off_pos..off_pos + 8].try_into().unwrap());
+    for bad in [0u64, good + 8, good.wrapping_sub(8), u64::MAX] {
+        let mut buf = clean.clone();
+        buf[off_pos..off_pos + 8].copy_from_slice(&bad.to_le_bytes());
+        assert!(open_bank(&buf, "offsets_bad").is_err(), "offset {bad} accepted");
+    }
+}
+
+#[test]
+fn bank_single_byte_corruption_never_panics() {
+    // Flip one byte at every position: structural corruption must error at
+    // open; flips confined to the values payload may legally decode, but
+    // the decoded shards must still satisfy every CSR invariant.
+    let m = sample_matrix(15, 7, 24);
+    let clean = bank_bytes(&m, 3, "flip");
+    for pos in 0..clean.len() {
+        let mut buf = clean.clone();
+        buf[pos] ^= 0x5a;
+        if let Ok(bank) = open_bank(&buf, "flip_one") {
+            for p in 0..bank.num_shards() {
+                let s = bank.load_shard(p);
+                assert_eq!(s.indptr.len(), s.rows + 1, "byte {pos}");
+                assert_eq!(*s.indptr.last().unwrap(), s.nnz(), "byte {pos}");
+                assert!(
+                    s.indices.iter().all(|&c| (c as usize) < s.cols),
+                    "byte {pos}: out-of-range column survived"
+                );
+            }
+        }
+    }
 }

@@ -1,0 +1,200 @@
+//! The spilled-training contract: a session whose train/transpose shards
+//! live in mmap-backed `ALXBANK01` banks (demand-paged through the LRU
+//! residency manager, with background prefetch) trains **bitwise
+//! identically** to the fully resident path — same objective history,
+//! same final tables, same recalls — at every thread count, including
+//! across a checkpoint/resume, while a run over the residency budget
+//! reports nonzero shard faults and prefetch hits.
+
+use alx::als::{EpochStats, TrainConfig};
+use alx::config::AlxConfig;
+use alx::coordinator::TrainSession;
+use alx::data::InMemorySource;
+use alx::prelude::*;
+use alx::util::Pcg64;
+use std::path::PathBuf;
+
+fn community_matrix(users: usize, items: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut t = Vec::new();
+    for u in 0..users as u32 {
+        let comm = (u as usize) % 2;
+        for _ in 0..6 {
+            let item = if rng.next_f64() < 0.9 {
+                comm * (items / 2) + rng.range(0, items / 2)
+            } else {
+                rng.range(0, items)
+            };
+            t.push((u, item as u32, 1.0));
+        }
+    }
+    Csr::from_coo(users, items, &t)
+}
+
+fn cfg(epochs: usize, threads: usize, spill: bool) -> AlxConfig {
+    AlxConfig {
+        cores: 8,
+        data_spill: spill,
+        resident_shards: 2,
+        train: TrainConfig {
+            dim: 8,
+            epochs,
+            lambda: 0.05,
+            alpha: 0.01,
+            batch_rows: 16,
+            batch_width: 4,
+            threads,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("alx_spill_eq_{}_{}", tag, std::process::id()))
+}
+
+/// Timing-free fingerprint of an epoch.
+fn fingerprint(h: &EpochStats) -> (usize, Option<u64>, u64) {
+    (h.epoch, h.objective.map(f64::to_bits), h.comm_bytes)
+}
+
+type RunFingerprint =
+    (Vec<(usize, Option<u64>, u64)>, Vec<f32>, Vec<f32>, Vec<(usize, u64)>);
+
+fn run(mut s: TrainSession) -> (RunFingerprint, RunReport) {
+    let report = s.run().unwrap();
+    let recalls: Vec<(usize, u64)> =
+        report.recalls.iter().map(|r| (r.k, r.recall.to_bits())).collect();
+    (
+        (
+            report.history.iter().map(fingerprint).collect(),
+            s.trainer.w.to_dense().data,
+            s.trainer.h.to_dense().data,
+            recalls,
+        ),
+        report,
+    )
+}
+
+#[test]
+fn spilled_run_is_bitwise_identical_to_resident() {
+    let m = community_matrix(80, 48, 3);
+    for threads in [1usize, 4] {
+        let resident = {
+            let source = InMemorySource::new("community", m.clone());
+            TrainSession::new(&source, cfg(3, threads, false)).unwrap()
+        };
+        let (fp_resident, rep_resident) = run(resident);
+        assert!(rep_resident.spill.is_none(), "resident run must not report spill");
+
+        let spilled = {
+            let mut c = cfg(3, threads, true);
+            c.spill_dir = tmp(&format!("bitwise_t{threads}")).display().to_string();
+            let source = InMemorySource::new("community", m.clone());
+            TrainSession::new(&source, c).unwrap()
+        };
+        let (fp_spilled, rep_spilled) = run(spilled);
+        assert_eq!(fp_spilled.0, fp_resident.0, "objective history differs (threads={threads})");
+        assert_eq!(fp_spilled.1, fp_resident.1, "W differs (threads={threads})");
+        assert_eq!(fp_spilled.2, fp_resident.2, "H differs (threads={threads})");
+        assert_eq!(fp_spilled.3, fp_resident.3, "recalls differ (threads={threads})");
+        let sp = rep_spilled.spill.expect("spilled run must report spill accounting");
+        assert!(sp.bank_bytes > 0);
+        let _ = std::fs::remove_dir_all(tmp(&format!("bitwise_t{threads}")));
+    }
+}
+
+#[test]
+fn spill_over_resident_budget_faults_and_prefetches() {
+    // 8 shards per bank, residency cap 2: a 3-epoch run must fault shards
+    // back in every pass and serve others from the prefetch cache.
+    let m = community_matrix(120, 64, 5);
+    let dir = tmp("budget");
+    let mut c = cfg(3, 4, true);
+    c.spill_dir = dir.display().to_string();
+    let source = InMemorySource::new("community", m.clone());
+    let (_, report) = run(TrainSession::new(&source, c).unwrap());
+    let sp = report.spill.expect("spill accounting");
+    assert!(sp.shard_faults > 0, "over-budget run must fault: {sp:?}");
+    assert!(sp.prefetch_hits > 0, "prefetch must land hits: {sp:?}");
+    assert!(sp.prefetches > 0, "workers must issue prefetches: {sp:?}");
+    // The two banks together hold the train matrix twice over (matrix +
+    // transpose), so their bytes are on the order of the matrix itself.
+    assert!(sp.bank_bytes >= m.memory_bytes() / 2, "{sp:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spilled_checkpoint_resume_is_bitwise() {
+    let m = community_matrix(80, 48, 7);
+    let dir_a = tmp("resume_full");
+    let dir_b = tmp("resume_cut");
+    let ckpt = tmp("resume.ckpt");
+    let make = |dir: &PathBuf, threads: usize| {
+        let mut c = cfg(4, threads, true);
+        c.spill_dir = dir.display().to_string();
+        let source = InMemorySource::new("community", m.clone());
+        TrainSession::new(&source, c).unwrap()
+    };
+
+    let mut full = make(&dir_a, 4);
+    while full.remaining_epochs() > 0 {
+        full.step().unwrap();
+    }
+
+    // Interrupted at epoch 2, resumed in a fresh session (threads 1, so
+    // the equivalence also crosses thread counts and spill dirs).
+    {
+        let mut s = make(&dir_b, 4);
+        s.step().unwrap();
+        s.step().unwrap();
+        s.checkpoint(&ckpt).unwrap();
+    }
+    let source = InMemorySource::new("community", m.clone());
+    let mut c = cfg(4, 1, true);
+    c.spill_dir = dir_b.display().to_string();
+    let mut resumed = TrainSession::resume_with(&ckpt, &source, c, None).unwrap();
+    assert_eq!(resumed.trainer.current_epoch(), 2);
+    while resumed.remaining_epochs() > 0 {
+        resumed.step().unwrap();
+    }
+    assert_eq!(full.trainer.w.to_dense().data, resumed.trainer.w.to_dense().data);
+    assert_eq!(full.trainer.h.to_dense().data, resumed.trainer.h.to_dense().data);
+    let _ = std::fs::remove_file(&ckpt);
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn streaming_plus_spill_trains_without_the_matrix_ever_resident() {
+    // The full out-of-core composition: ALXCSR02 chunks stream through
+    // the split into a spilling builder (banks written as shards
+    // complete), then train demand-paged — bitwise identical to the
+    // resident in-memory session on the same data.
+    let m = community_matrix(80, 48, 9);
+    let csr02 = tmp("stream.csr02");
+    let dir = tmp("stream_banks");
+    {
+        let f = std::io::BufWriter::new(std::fs::File::create(&csr02).unwrap());
+        alx::sparse::write_chunked(&m, f, 16).unwrap();
+    }
+    let resident = {
+        let source = InMemorySource::new("community", m.clone());
+        TrainSession::new(&source, cfg(2, 4, false)).unwrap()
+    };
+    let (fp_resident, _) = run(resident);
+
+    let mut c = cfg(2, 4, true);
+    c.spill_dir = dir.display().to_string();
+    let spilled = TrainSession::from_streaming(&csr02, c, None).unwrap();
+    assert!(spilled.ingest.is_some(), "streaming session must report ingestion");
+    let (fp_spilled, report) = run(spilled);
+    assert_eq!(fp_spilled.0, fp_resident.0, "objective history differs");
+    assert_eq!(fp_spilled.1, fp_resident.1, "W differs");
+    assert_eq!(fp_spilled.2, fp_resident.2, "H differs");
+    assert_eq!(fp_spilled.3, fp_resident.3, "recalls differ");
+    assert!(report.spill.is_some());
+    let _ = std::fs::remove_file(&csr02);
+    let _ = std::fs::remove_dir_all(&dir);
+}
