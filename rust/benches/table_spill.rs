@@ -1,0 +1,137 @@
+//! Spilled-model training — the out-of-core model-residency measurement.
+//!
+//! Proves the acceptance bar for the table-spill tentpole: a model
+//! sharded 4× over the table-residency budget (8 shards per table,
+//! `resident_table_shards = 2`) trains end-to-end out of read-write
+//! mapped `ALXTAB01` banks with a bitwise identical objective, and
+//! reports the demand-paging traffic (table-shard faults, prefetch
+//! hits) plus the resident-vs-spilled epoch time and footprint.
+//!
+//! ```bash
+//! cargo bench --bench table_spill
+//! ```
+//! Record the printed table in EXPERIMENTS.md §Perf. Note on RSS: both
+//! runs share this process and `VmHWM` is a high-water mark, so the
+//! spilled-model run executes *first*; its peak is the honest spilled
+//! figure (the generator's transient is reported separately). For a
+//! clean-process demonstration use the CI smoke:
+//! `alx generate --out g.csr02` then
+//! `alx train --stream --spill --spill-model`.
+
+use alx::config::AlxConfig;
+use alx::coordinator::TrainSession;
+use alx::data::InMemorySource;
+use alx::prelude::*;
+use alx::util::{mem, Pcg64, Timer};
+
+fn build_matrix(users: usize, items: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut t = Vec::new();
+    for u in 0..users as u32 {
+        for _ in 0..per_row {
+            t.push((u, rng.next_zipf(items, 1.1) as u32, 1.0f32));
+        }
+    }
+    Csr::from_coo(users, items, &t)
+}
+
+fn session_cfg(spill_model: bool) -> AlxConfig {
+    AlxConfig {
+        cores: 8,
+        model_spill: spill_model,
+        resident_table_shards: 2,
+        train: TrainConfig {
+            dim: 32,
+            epochs: 1,
+            lambda: 1e-3,
+            alpha: 1e-4,
+            batch_rows: 64,
+            batch_width: 8,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    }
+}
+
+fn main() {
+    let m = build_matrix(30_000, 15_000, 12, 7);
+    let gen_rss = mem::peak_rss_bytes();
+    // W + H at bf16 (the Mixed default): rows × dim × 2 per side.
+    let table_bytes = (m.rows as u64 + m.cols as u64) * 32 * 2;
+    println!(
+        "table_spill: {}x{}, {} nnz; model = {} of tables (8 shards/table, \
+         resident_table_shards = 2)",
+        m.rows,
+        m.cols,
+        m.nnz(),
+        human(table_bytes)
+    );
+    println!("peak RSS after generation (pre-training transient): {}", human(gen_rss));
+
+    // --- spilled-model run FIRST (VmHWM is monotone in-process) ---------
+    let spill_dir =
+        std::env::temp_dir().join(format!("alx_table_spill_bench_{}", std::process::id()));
+    let mut cfg = session_cfg(true);
+    cfg.model_spill_dir = spill_dir.display().to_string();
+    let t = Timer::start();
+    let source = InMemorySource::new("bench", m.clone());
+    let mut s_spill = TrainSession::new(&source, cfg).unwrap();
+    let spill_build_s = t.elapsed_secs();
+    let spill_stats = s_spill.step().unwrap();
+    let spill_epoch_s = spill_stats.seconds;
+    let obj_spill = spill_stats.objective.unwrap();
+    let table = s_spill.trainer.table_spill_stats();
+    let spill_rss = mem::peak_rss_bytes();
+    drop(s_spill);
+
+    // --- resident reference --------------------------------------------
+    let t = Timer::start();
+    let source = InMemorySource::new("bench", m.clone());
+    let mut s_res = TrainSession::new(&source, session_cfg(false)).unwrap();
+    let res_build_s = t.elapsed_secs();
+    let res_stats = s_res.step().unwrap();
+    let res_epoch_s = res_stats.seconds;
+    let obj_res = res_stats.objective.unwrap();
+    let res_rss = mem::peak_rss_bytes();
+    drop(s_res);
+
+    assert_eq!(
+        obj_spill.to_bits(),
+        obj_res.to_bits(),
+        "spilled-model epoch objective must be bitwise identical"
+    );
+    assert!(table.shard_faults > 0, "over-budget run must fault table shards: {table:?}");
+    assert!(table.prefetch_hits > 0, "residency cache must land hits: {table:?}");
+
+    println!("epoch-1 objective: {obj_spill:.4} (bitwise identical spilled vs resident)");
+    println!(
+        "table banks      : {} on disk; residency cap 2 of 8 shards per table",
+        human(table.bank_bytes)
+    );
+    println!(
+        "paging traffic   : {} table-shard faults, {} prefetch hits ({:.0}% hit rate), \
+         {} prefetches",
+        table.shard_faults,
+        table.prefetch_hits,
+        100.0 * table.hit_rate(),
+        table.prefetches,
+    );
+    println!(
+        "epoch wall clock : spilled {spill_epoch_s:.3}s vs resident {res_epoch_s:.3}s \
+         ({:.2}x overhead)",
+        spill_epoch_s / res_epoch_s.max(1e-9)
+    );
+    println!("session build    : spilled {spill_build_s:.3}s vs resident {res_build_s:.3}s");
+    println!(
+        "peak RSS         : after spilled run {}, after resident run {} (tables {})",
+        human(spill_rss),
+        human(res_rss),
+        human(table_bytes)
+    );
+
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}
+
+fn human(b: u64) -> String {
+    alx::util::stats::human_bytes(b)
+}

@@ -6,6 +6,12 @@
 //! verify the topology/config at load time. Format: a single little-endian
 //! binary file, `ALXCKPT2` magic (the `ALXCKPT1` layout is still read).
 //!
+//! Tables are serialized and restored **shard-streaming** in both modes:
+//! one shard's payload is encoded (or checked out, filled and written
+//! back) at a time, so checkpointing or resuming a spilled, bank-backed
+//! model never materializes a full table in host RAM — resume simply
+//! re-attaches to the `ALXTAB01` banks.
+//!
 //! `ALXCKPT2` additionally persists the per-epoch **objective log** — the
 //! `(epoch, objective)` sequence of every epoch up to the checkpoint — so
 //! session hooks with cross-epoch state (early stopping) can reconstruct
@@ -17,7 +23,7 @@
 //! readers ignored trailing bytes, so the format stays compatible in both
 //! directions without a magic bump.
 
-use crate::sharding::{ShardedTable, Storage};
+use crate::sharding::{ShardData, ShardedTable, Storage};
 use std::io::{Read, Write};
 
 /// Checkpoint header metadata.
@@ -30,53 +36,63 @@ pub struct CheckpointMeta {
     pub storage_bf16: bool,
 }
 
+/// Serialize a table shard-streaming: one shard's raw payload is encoded
+/// and written at a time (one residency handle on a spilled table, one
+/// bulk `write_all` per shard instead of a call per element). Shards are
+/// contiguous global row ranges, so the byte stream is the same
+/// row-major element sequence the format has always used.
 fn write_table(w: &mut impl Write, t: &ShardedTable) -> std::io::Result<()> {
-    let mut row = vec![0.0f32; t.dim];
-    for r in 0..t.rows {
-        t.read_row(r, &mut row);
-        match t.storage() {
-            Storage::Bf16 => {
-                for &x in &row {
-                    w.write_all(&crate::util::bf16::Bf16::from_f32(x).0.to_le_bytes())?;
+    let mut buf: Vec<u8> = Vec::new();
+    for s in 0..t.num_shards() {
+        t.with_shard_data(s, |data| {
+            buf.clear();
+            match data {
+                ShardData::Bf16(v) => {
+                    buf.reserve(v.len() * 2);
+                    for &x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                ShardData::F32(v) => {
+                    buf.reserve(v.len() * 4);
+                    for &x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
                 }
             }
-            Storage::F32 => {
-                for &x in &row {
-                    w.write_all(&x.to_le_bytes())?;
-                }
-            }
-        }
+        });
+        w.write_all(&buf)?;
     }
     Ok(())
 }
 
-fn read_table(
-    r: &mut impl Read,
-    rows: usize,
-    dim: usize,
-    num_shards: usize,
-    storage: Storage,
-) -> std::io::Result<ShardedTable> {
-    let mut t = ShardedTable::zeros(rows, dim, num_shards, storage);
-    let mut row = vec![0.0f32; dim];
-    let mut b2 = [0u8; 2];
-    let mut b4 = [0u8; 4];
-    for i in 0..rows {
-        for x in row.iter_mut() {
-            *x = match storage {
-                Storage::Bf16 => {
-                    r.read_exact(&mut b2)?;
-                    crate::util::bf16::Bf16(u16::from_le_bytes(b2)).to_f32()
+/// Fill `t`'s rows from `r`'s row-major element payload, shard-streaming:
+/// each shard is read in one bulk `read_exact` and stored wholesale, so
+/// restoring into a spilled table re-attaches to its bank one shard at a
+/// time and never materializes the full table. The caller must have
+/// verified that the stream's precision matches `t.storage()`.
+fn read_table_into(r: &mut impl Read, t: &mut ShardedTable) -> std::io::Result<()> {
+    let dim = t.dim;
+    let elem = t.storage().elem_bytes() as usize;
+    let mut buf: Vec<u8> = Vec::new();
+    for s in 0..t.num_shards() {
+        let rows = t.range(s).len();
+        buf.resize(rows * dim * elem, 0);
+        r.read_exact(&mut buf)?;
+        t.update_shard(s, |data| match data {
+            ShardData::Bf16(v) => {
+                for (x, c) in v.iter_mut().zip(buf.chunks_exact(2)) {
+                    *x = u16::from_le_bytes(c.try_into().unwrap());
                 }
-                Storage::F32 => {
-                    r.read_exact(&mut b4)?;
-                    f32::from_le_bytes(b4)
+            }
+            ShardData::F32(v) => {
+                for (x, c) in v.iter_mut().zip(buf.chunks_exact(4)) {
+                    *x = f32::from_le_bytes(c.try_into().unwrap());
                 }
-            };
-        }
-        t.write_row(i, &row);
+            }
+        });
     }
-    Ok(t)
+    Ok(())
 }
 
 /// One persisted epoch record: `(epoch, objective)`.
@@ -131,12 +147,11 @@ pub struct LoadedCheckpoint {
     pub recall_log: Vec<RecallLogEntry>,
 }
 
-/// Load a checkpoint; tables are resharded onto `num_shards` cores (the
-/// slice size may differ between save and resume — uniform sharding makes
-/// relayout trivial). Accepts both `ALXCKPT2` and the legacy `ALXCKPT1`
-/// layout (which carries an empty objective log), with or without the
-/// trailing recall section.
-pub fn load(r: &mut impl Read, num_shards: usize) -> std::io::Result<LoadedCheckpoint> {
+/// Parse the magic, meta header and objective log — everything before
+/// the table payloads. Shared by [`load`] (fresh tables) and the
+/// trainer's in-place restore, which must validate the meta *before* the
+/// tables stream in.
+fn read_header(r: &mut impl Read) -> std::io::Result<(CheckpointMeta, Vec<ObjectiveLogEntry>)> {
     let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
@@ -158,7 +173,6 @@ pub fn load(r: &mut impl Read, num_shards: usize) -> std::io::Result<LoadedCheck
     let items_n = u64::from_le_bytes(b8);
     r.read_exact(&mut b1)?;
     let storage_bf16 = b1[0] != 0;
-    let storage = if storage_bf16 { Storage::Bf16 } else { Storage::F32 };
     let meta = CheckpointMeta { epoch, dim, users: users_n, items: items_n, storage_bf16 };
     let mut objective_log = Vec::new();
     if v2 {
@@ -181,16 +195,21 @@ pub fn load(r: &mut impl Read, num_shards: usize) -> std::io::Result<LoadedCheck
             objective_log.push((e, has.then_some(f64::from_bits(bits))));
         }
     }
-    let users = read_table(r, users_n as usize, dim as usize, num_shards, storage)?;
-    let items = read_table(r, items_n as usize, dim as usize, num_shards, storage)?;
-    // Trailing recall section: absent in legacy files (EOF right after the
-    // tables → empty log); when present it must parse completely, so a
-    // truncated section is an error rather than silently shorter state.
+    Ok((meta, objective_log))
+}
+
+/// Parse the trailing recall section (after both tables): absent in
+/// legacy files (EOF right after the tables → empty log); when present
+/// it must parse completely, so a truncated section is an error rather
+/// than silently shorter state.
+fn read_recall_section(r: &mut impl Read) -> std::io::Result<Vec<RecallLogEntry>> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
     let mut recall_log = Vec::new();
     let mut tag = [0u8; 4];
     match read_exact_or_eof(r, &mut tag)? {
         0 => {}
         n if n == tag.len() && &tag == RECALL_SECTION_MAGIC => {
+            let mut b8 = [0u8; 8];
             let mut b4 = [0u8; 4];
             r.read_exact(&mut b8)?;
             let count = u64::from_le_bytes(b8);
@@ -205,6 +224,27 @@ pub fn load(r: &mut impl Read, num_shards: usize) -> std::io::Result<LoadedCheck
         }
         _ => return Err(bad("trailing garbage after the embedding tables")),
     }
+    Ok(recall_log)
+}
+
+/// Load a checkpoint into fresh resident tables; they are resharded onto
+/// `num_shards` cores (the slice size may differ between save and resume
+/// — uniform sharding makes relayout trivial). Accepts both `ALXCKPT2`
+/// and the legacy `ALXCKPT1` layout (which carries an empty objective
+/// log), with or without the trailing recall section. A trainer resuming
+/// in place — including onto spilled, bank-backed tables — goes through
+/// [`crate::als::Trainer::load_checkpoint`] instead, which streams the
+/// payloads shard by shard into its existing storage.
+pub fn load(r: &mut impl Read, num_shards: usize) -> std::io::Result<LoadedCheckpoint> {
+    let (meta, objective_log) = read_header(r)?;
+    let storage = if meta.storage_bf16 { Storage::Bf16 } else { Storage::F32 };
+    let mut users =
+        ShardedTable::zeros(meta.users as usize, meta.dim as usize, num_shards, storage);
+    let mut items =
+        ShardedTable::zeros(meta.items as usize, meta.dim as usize, num_shards, storage);
+    read_table_into(r, &mut users)?;
+    read_table_into(r, &mut items)?;
+    let recall_log = read_recall_section(r)?;
     Ok(LoadedCheckpoint { meta, users, items, objective_log, recall_log })
 }
 
@@ -258,13 +298,21 @@ impl super::Trainer {
     /// Restore tables (and the epoch counter) from a checkpoint, returning
     /// the persisted objective and recall logs. The checkpoint must match
     /// the trainer's dim, matrix shape and storage precision; the shard
-    /// count may differ (uniform resharding).
+    /// count may differ (uniform resharding). The payloads stream shard
+    /// by shard **into the trainer's existing storage**: a spilled model
+    /// re-attaches to its `ALXTAB01` banks (each shard checked out,
+    /// filled, written back) and the full tables are never materialized.
+    ///
+    /// Error contract: restore is *not* transactional — a checkpoint that
+    /// fails mid-payload (truncation, IO error) leaves the tables
+    /// partially overwritten. Callers must treat an `Err` as fatal for
+    /// this trainer (rebuild the session / retry from construction), which
+    /// is exactly what `TrainSession::resume` does.
     pub fn load_checkpoint(
         &mut self,
         r: &mut impl Read,
     ) -> anyhow::Result<(Vec<ObjectiveLogEntry>, Vec<RecallLogEntry>)> {
-        let LoadedCheckpoint { meta, users, items, objective_log, recall_log } =
-            load(r, self.topo.num_cores)?;
+        let (meta, objective_log) = read_header(r)?;
         anyhow::ensure!(
             meta.dim as usize == self.cfg.dim,
             "checkpoint dim mismatch: checkpoint has d={}, config wants d={}",
@@ -287,8 +335,9 @@ impl super::Trainer {
             self.cfg.precision.name(),
             if want_bf16 { "bf16" } else { "f32" }
         );
-        self.w = users;
-        self.h = items;
+        read_table_into(r, &mut self.w)?;
+        read_table_into(r, &mut self.h)?;
+        let recall_log = read_recall_section(r)?;
         self.set_epoch(meta.epoch as usize);
         Ok((objective_log, recall_log))
     }
@@ -343,6 +392,30 @@ mod tests {
         assert_eq!(meta, ck.meta);
         assert!(ck.users.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
         assert!(ck.items.to_dense().max_abs_diff(&h.to_dense()) == 0.0);
+    }
+
+    #[test]
+    fn spilled_tables_checkpoint_bytes_match_resident() {
+        let u = table(23, 4, 3, Storage::Bf16, 51);
+        let h = table(31, 4, 3, Storage::Bf16, 52);
+        let dir = std::env::temp_dir().join(format!("alx_ckpt_spill_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let up = dir.join("u.alxtab");
+        let hp = dir.join("h.alxtab");
+        u.spill_to_bank(&up).unwrap();
+        h.spill_to_bank(&hp).unwrap();
+        let pu = ShardedTable::open_bank(&up, 1).unwrap();
+        let ph = ShardedTable::open_bank(&hp, 1).unwrap();
+        let meta = CheckpointMeta { epoch: 5, dim: 4, users: 23, items: 31, storage_bf16: true };
+        let mut resident = Vec::new();
+        save(&mut resident, &meta, &u, &h, &[], &[]).unwrap();
+        let mut spilled = Vec::new();
+        save(&mut spilled, &meta, &pu, &ph, &[], &[]).unwrap();
+        assert_eq!(resident, spilled, "checkpoint bytes must not depend on table storage");
+        let ck = load(&mut &spilled[..], 3).unwrap();
+        assert_eq!(ck.users.to_dense().data, u.to_dense().data);
+        assert_eq!(ck.items.to_dense().data, h.to_dense().data);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

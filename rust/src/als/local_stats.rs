@@ -18,6 +18,12 @@ use crate::sparse::Csr;
 /// One pass over `matrix`'s rows (solving into `target`) using the
 /// local-statistics strategy. Returns nothing; `target` is updated and the
 /// collective traffic is accounted in `stats`.
+///
+/// Storage note: reads and scatters go through the tables' public
+/// row-level API, so any [`TableStorage`](crate::sharding::TableStorage)
+/// backend works — but the per-round `scatter` checks a spilled shard out
+/// and back per row, so run this strategy on resident tables (it is an
+/// ablation path, not the production epoch).
 pub fn local_stats_pass(
     matrix: &Csr,
     target: &mut ShardedTable,

@@ -54,7 +54,10 @@ impl SlotRows for Mat {
 }
 
 /// Fused-gather source: slot embeddings read directly from the fixed table
-/// (bf16 widened exactly as `sharded_gather` would).
+/// (bf16 widened exactly as `sharded_gather` would). On a spilled model
+/// each read borrows a lazily materialized slice out of the table's
+/// residency cache — the decoded bits are identical to resident storage,
+/// so the accumulated statistics are too.
 pub struct TableSlots<'a>(pub &'a ShardedTable);
 
 impl SlotRows for TableSlots<'_> {

@@ -17,9 +17,7 @@
 
 use super::engine::{NativeEngine, SolveEngine};
 use super::PrecisionPolicy;
-use crate::collectives::{
-    all_reduce_gramian, record_gather_traffic, record_scatter_traffic, CommStats,
-};
+use crate::collectives::{record_gather_traffic, record_scatter_traffic, CommStats};
 use crate::coordinator::pipeline::{BatchFeeder, BoundedQueue, CloseGuard};
 use crate::densebatch::DenseBatcher;
 use crate::linalg::{Mat, SolveOptions, SolverKind};
@@ -29,6 +27,7 @@ use crate::topo::Topology;
 use crate::util::threads;
 use crate::util::timer::{Profiler, Timer};
 use crate::util::Pcg64;
+use std::path::Path;
 use std::sync::Arc;
 
 /// Training hyper-parameters and engine knobs.
@@ -122,9 +121,13 @@ pub struct Trainer {
     train: Arc<dyn ShardedMatrix>,
     /// Its transpose (items × users) for the item pass.
     train_t: Arc<dyn ShardedMatrix>,
-    /// User embedding table W, sharded over the slice.
+    /// User embedding table W, sharded over the slice — resident by
+    /// default, or demand-paged out of an `ALXTAB01` bank after
+    /// [`Trainer::spill_tables`]; training is bitwise identical either
+    /// way.
     pub w: ShardedTable,
-    /// Item embedding table H, sharded over the slice.
+    /// Item embedding table H, sharded over the slice (same storage
+    /// policy as `w`).
     pub h: ShardedTable,
     batcher: DenseBatcher,
     engine: Box<dyn SolveEngine>,
@@ -178,6 +181,37 @@ impl Trainer {
         topo: Topology,
         engine: Box<dyn SolveEngine>,
     ) -> anyhow::Result<Trainer> {
+        Self::build(train, train_t, cfg, topo, engine, None)
+    }
+
+    /// [`Trainer::from_sharded`] with the embedding tables initialized
+    /// **straight into** `ALXTAB01` banks under `dir` (`w.alxtab` /
+    /// `h.alxtab`) and attached demand-paged with a residency cap of
+    /// `resident_table_shards` decoded shards per table. Peak table
+    /// memory during construction is one shard — a model that never fits
+    /// in host RAM can still start training — and the init bits are
+    /// identical to the resident construction, so training is bitwise
+    /// equivalent.
+    pub fn from_sharded_spilled(
+        train: Arc<dyn ShardedMatrix>,
+        train_t: Arc<dyn ShardedMatrix>,
+        cfg: TrainConfig,
+        topo: Topology,
+        engine: Box<dyn SolveEngine>,
+        dir: &Path,
+        resident_table_shards: usize,
+    ) -> anyhow::Result<Trainer> {
+        Self::build(train, train_t, cfg, topo, engine, Some((dir, resident_table_shards)))
+    }
+
+    fn build(
+        train: Arc<dyn ShardedMatrix>,
+        train_t: Arc<dyn ShardedMatrix>,
+        cfg: TrainConfig,
+        topo: Topology,
+        engine: Box<dyn SolveEngine>,
+        table_spill: Option<(&Path, usize)>,
+    ) -> anyhow::Result<Trainer> {
         anyhow::ensure!(cfg.dim > 0 && cfg.batch_rows > 0 && cfg.batch_width > 0);
         anyhow::ensure!(train.rows() > 0 && train.cols() > 0, "empty training matrix");
         anyhow::ensure!(
@@ -201,16 +235,15 @@ impl Trainer {
             train_t.num_pieces(),
             topo.num_cores,
         );
-        let mut rng = Pcg64::new(cfg.seed);
         let storage = cfg.precision.storage();
-        let m = topo.num_cores;
-        let w = ShardedTable::randn(train.rows(), cfg.dim, m, storage, &mut rng);
-        let h = ShardedTable::randn(train.cols(), cfg.dim, m, storage, &mut rng);
 
-        // Capacity check: the slice must hold both tables plus the runtime
-        // working set (Fig. 6 floors).
-        let table_bytes = ((w.memory_bytes() + h.memory_bytes()) as f64
-            * topo.core.working_set_overhead) as u64;
+        // Capacity check first, from the shapes alone: the slice must
+        // hold both tables plus the runtime working set (Fig. 6 floors),
+        // and an over-HBM config must fail before any table — resident
+        // or bank — is built.
+        let raw_table_bytes =
+            (train.rows() + train.cols()) as u64 * cfg.dim as u64 * storage.elem_bytes();
+        let table_bytes = (raw_table_bytes as f64 * topo.core.working_set_overhead) as u64;
         let capacity = topo.total_usable_hbm();
         anyhow::ensure!(
             table_bytes <= capacity,
@@ -221,6 +254,43 @@ impl Trainer {
             crate::util::stats::human_bytes(capacity),
             Topology::min_cores_for(table_bytes, &topo.core),
         );
+
+        let mut rng = Pcg64::new(cfg.seed);
+        let m = topo.num_cores;
+        let (w, h) = match table_spill {
+            None => (
+                ShardedTable::randn(train.rows(), cfg.dim, m, storage, &mut rng),
+                ShardedTable::randn(train.cols(), cfg.dim, m, storage, &mut rng),
+            ),
+            Some((dir, cap)) => {
+                std::fs::create_dir_all(dir).map_err(|e| {
+                    anyhow::anyhow!("create model spill dir {}: {e}", dir.display())
+                })?;
+                let wp = dir.join("w.alxtab");
+                let hp = dir.join("h.alxtab");
+                let w = ShardedTable::randn_spilled(
+                    train.rows(),
+                    cfg.dim,
+                    m,
+                    storage,
+                    &mut rng,
+                    &wp,
+                    cap,
+                )
+                .map_err(|e| anyhow::anyhow!("init table bank {}: {e}", wp.display()))?;
+                let h = ShardedTable::randn_spilled(
+                    train.cols(),
+                    cfg.dim,
+                    m,
+                    storage,
+                    &mut rng,
+                    &hp,
+                    cap,
+                )
+                .map_err(|e| anyhow::anyhow!("init table bank {}: {e}", hp.display()))?;
+                (w, h)
+            }
+        };
 
         Ok(Trainer {
             batcher: DenseBatcher::new(cfg.batch_rows, cfg.batch_width),
@@ -237,16 +307,22 @@ impl Trainer {
         })
     }
 
-    /// Global gramian of `table` via local gramians + all-reduce
-    /// (Algorithm 2 lines 5-6).
-    fn global_gramian(&self, table: &ShardedTable) -> Mat {
+    /// Global gramian of `table` via shard-local partials summed in
+    /// fixed shard order (Algorithm 2 lines 5-6) — the single streaming
+    /// path both the training pass (`comm = Some`, the all-reduce is
+    /// priced) and the objective (`comm = None`; a real pod computes it
+    /// from partials riding the epoch's existing all-reduce) go through.
+    /// Each shard's partial materializes one residency handle at a time,
+    /// so a spilled table's gramian never needs more than one decoded
+    /// shard per worker.
+    fn reduced_gramian(&self, table: &ShardedTable, comm: Option<&CommStats>) -> Mat {
         let workers = threads::resolve_workers(self.cfg.threads);
         let locals: Vec<Mat> = threads::parallel_map_indexed_with(
             workers,
             table.num_shards(),
             |s| table.local_gramian(s),
         );
-        all_reduce_gramian(&locals, &self.comm)
+        crate::collectives::reduce_gramians(&locals, comm)
     }
 
     /// One pass over one side (Algorithm 2 lines 7-20): solve every row of
@@ -299,15 +375,25 @@ impl Trainer {
                     let pool = &pool;
                     scope.spawn(move || -> anyhow::Result<()> {
                         loop {
-                            let (claimed, next) = {
+                            let (claimed, next, stage) = {
                                 let mut pool = pool.lock().unwrap();
                                 let claimed = pool.pop();
                                 let next = pool.last().map(|(p, _)| *p);
-                                (claimed, next)
+                                let stage = pool.last().and_then(|(_, v)| v.stage_handle());
+                                (claimed, next, stage)
                             };
                             let Some((piece, view)) = claimed else { return Ok(()) };
-                            // Stage the next unclaimed shard while this
-                            // one computes (no-op on resident storage).
+                            // Stage the next unclaimed shard — matrix
+                            // piece and (on a spilled model) the target
+                            // table shard — while this one computes.
+                            // Outside the claim lock: prefetch may spawn
+                            // a loader thread. Racing another worker's
+                            // claim of that shard is harmless (prefetch
+                            // dedups; the claimer's checkout waits for
+                            // or hits the staged decode).
+                            if let Some((store, shard)) = stage {
+                                store.prefetch(shard);
+                            }
                             if let Some(next) = next {
                                 matrix.prefetch(next);
                             }
@@ -437,7 +523,8 @@ impl Trainer {
         let comm_before = self.comm.total_bytes();
 
         // --- user pass: fix H, solve W ---------------------------------
-        let g_items = self.profiler.time("gramian", || self.global_gramian(&self.h));
+        let g_items =
+            self.profiler.time("gramian", || self.reduced_gramian(&self.h, Some(&self.comm)));
         Self::pass(
             self.engine.as_ref(),
             &self.batcher,
@@ -451,7 +538,8 @@ impl Trainer {
         )?;
 
         // --- item pass: fix W, solve H ----------------------------------
-        let g_users = self.profiler.time("gramian", || self.global_gramian(&self.w));
+        let g_users =
+            self.profiler.time("gramian", || self.reduced_gramian(&self.w, Some(&self.comm)));
         Self::pass(
             self.engine.as_ref(),
             &self.batcher,
@@ -556,8 +644,8 @@ impl Trainer {
             obs
         });
         let obs: f64 = partials.into_iter().sum();
-        let gw = self.gramian_from_shards(&self.w);
-        let gh = self.gramian_from_shards(&self.h);
+        let gw = self.reduced_gramian(&self.w, None);
+        let gh = self.reduced_gramian(&self.h, None);
         let all_pairs: f64 = gw
             .data
             .iter()
@@ -566,21 +654,6 @@ impl Trainer {
             .sum();
         obs + self.cfg.alpha as f64 * all_pairs
             + self.cfg.lambda as f64 * (self.w.fro_norm_sq() + self.h.fro_norm_sq())
-    }
-
-    /// Shard-local gramians summed in fixed shard order — the objective's
-    /// comm-free twin of [`Trainer::global_gramian`] (no collective is
-    /// priced, since a real pod computes the objective from partials that
-    /// ride the epoch's existing all-reduce). Shares the reduction
-    /// grouping via [`crate::collectives::sum_gramians`].
-    fn gramian_from_shards(&self, table: &ShardedTable) -> Mat {
-        let workers = threads::resolve_workers(self.cfg.threads);
-        let locals: Vec<Mat> = threads::parallel_map_indexed_with(
-            workers,
-            table.num_shards(),
-            |s| table.local_gramian(s),
-        );
-        crate::collectives::sum_gramians(&locals)
     }
 
     /// Fold a new row (user) into the embedding space via Eq. (4), given its
@@ -611,7 +684,51 @@ impl Trainer {
 
     /// Gramian of the item table (for fold-in / eval).
     pub fn item_gramian(&self) -> Mat {
-        self.global_gramian(&self.h)
+        self.reduced_gramian(&self.h, Some(&self.comm))
+    }
+
+    /// Move both embedding tables out of host RAM: spill W and H into
+    /// `ALXTAB01` banks under `dir` (`w.alxtab` / `h.alxtab`) and
+    /// reattach them demand-paged with a residency cap of
+    /// `resident_table_shards` decoded shards per table. Training is
+    /// bitwise identical afterwards — the banks persist the exact
+    /// element bits — and steady-state table memory is bounded by the
+    /// caps plus the shards checked out by active passes, not by
+    /// `rows × dim`.
+    pub fn spill_tables(&mut self, dir: &Path, resident_table_shards: usize) -> anyhow::Result<()> {
+        // Re-spilling would File::create (truncate) the very bank files
+        // the current tables are mapped over — refuse rather than SIGBUS.
+        anyhow::ensure!(
+            !self.w.is_spilled() && !self.h.is_spilled(),
+            "model tables are already spilled; spill_tables must be called once, on a \
+             resident model"
+        );
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("create model spill dir {}: {e}", dir.display()))?;
+        let wp = dir.join("w.alxtab");
+        let hp = dir.join("h.alxtab");
+        self.w
+            .spill_to_bank(&wp)
+            .map_err(|e| anyhow::anyhow!("spill table {}: {e}", wp.display()))?;
+        self.h
+            .spill_to_bank(&hp)
+            .map_err(|e| anyhow::anyhow!("spill table {}: {e}", hp.display()))?;
+        self.w = ShardedTable::open_bank(&wp, resident_table_shards)
+            .map_err(|e| anyhow::anyhow!("open table bank {}: {e}", wp.display()))?;
+        self.h = ShardedTable::open_bank(&hp, resident_table_shards)
+            .map_err(|e| anyhow::anyhow!("open table bank {}: {e}", hp.display()))?;
+        crate::log_info!(
+            "spilled model tables to {} ({} resident shards per table)",
+            dir.display(),
+            resident_table_shards
+        );
+        Ok(())
+    }
+
+    /// Combined residency/fault accounting of both embedding tables
+    /// (all-zero while the model is fully resident).
+    pub fn table_spill_stats(&self) -> SpillStats {
+        self.w.spill_stats().merged(&self.h.spill_stats())
     }
 
     /// Predicted epoch time on the simulated TPU slice (topo cost model).
@@ -779,6 +896,28 @@ mod tests {
         topo.core.hbm_bytes = 128; // tables need (10+10)·8·2 = 320 B
         let cfg = small_cfg();
         assert!(Trainer::new(&m, cfg, topo).is_err());
+    }
+
+    #[test]
+    fn spilled_tables_train_bitwise_identically() {
+        let m = community_matrix(40, 30, 21);
+        let cfg = small_cfg();
+        let mut resident = Trainer::new(&m, cfg.clone(), Topology::new(4)).unwrap();
+        let mut spilled = Trainer::new(&m, cfg, Topology::new(4)).unwrap();
+        let dir = std::env::temp_dir().join(format!("alx_trainer_spill_{}", std::process::id()));
+        spilled.spill_tables(&dir, 2).unwrap();
+        let h1 = resident.fit().unwrap();
+        let h2 = spilled.fit().unwrap();
+        let o1: Vec<u64> = h1.iter().map(|h| h.objective.unwrap().to_bits()).collect();
+        let o2: Vec<u64> = h2.iter().map(|h| h.objective.unwrap().to_bits()).collect();
+        assert_eq!(o1, o2, "objective history must be bitwise identical");
+        assert_eq!(resident.w.to_dense().data, spilled.w.to_dense().data);
+        assert_eq!(resident.h.to_dense().data, spilled.h.to_dense().data);
+        let ts = spilled.table_spill_stats();
+        assert!(ts.bank_bytes > 0);
+        assert!(ts.shard_faults > 0);
+        assert_eq!(resident.table_spill_stats(), SpillStats::default());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -135,8 +135,20 @@ pub fn sharded_scatter(table: &mut ShardedTable, ids: &[u32], rows: &Mat, stats:
 
 /// All-reduce-sum of per-shard gramians (Algorithm 2 line 6).
 pub fn all_reduce_gramian(locals: &[Mat], stats: &CommStats) -> Mat {
+    reduce_gramians(locals, Some(stats))
+}
+
+/// The single gramian-reduction path: fixed-shard-order sum, with the
+/// all-reduce priced when `stats` is given (the training pass) and
+/// comm-free when it is not (the objective — a real pod computes it from
+/// partials that ride the epoch's existing all-reduce). One entry point
+/// for both keeps the reduction grouping — part of the bitwise-
+/// determinism contract — impossible to change on one path only.
+pub fn reduce_gramians(locals: &[Mat], stats: Option<&CommStats>) -> Mat {
     let g = sum_gramians(locals);
-    stats.record_all_reduce((g.rows * g.cols * 4) as u64);
+    if let Some(stats) = stats {
+        stats.record_all_reduce((g.rows * g.cols * 4) as u64);
+    }
     g
 }
 

@@ -129,6 +129,18 @@ pub struct AlxConfig {
     /// Decoded shards the residency cache keeps per bank in spill mode
     /// (the train matrix and its transpose each hold this many).
     pub resident_shards: usize,
+    /// Spill the embedding tables (W and H) into `ALXTAB01` banks and
+    /// train demand-paged, so *model* size — rows × dim × precision —
+    /// escapes host RAM too (bitwise identical to resident training).
+    pub model_spill: bool,
+    /// Base directory for the model banks (empty = the session's spill
+    /// scratch dir when matrix spill is on, else the system temp dir);
+    /// every session writes into its own unique subdirectory and removes
+    /// it on drop.
+    pub model_spill_dir: String,
+    /// Decoded shards the residency cache keeps per embedding table in
+    /// spilled-model mode (W and H each hold this many).
+    pub resident_table_shards: usize,
     /// Simulated TPU cores.
     pub cores: usize,
     /// Training hyper-parameters.
@@ -172,6 +184,9 @@ impl Default for AlxConfig {
             data_spill: false,
             spill_dir: String::new(),
             resident_shards: 2,
+            model_spill: false,
+            model_spill_dir: String::new(),
+            resident_table_shards: 2,
             cores: 8,
             train: TrainConfig::default(),
             engine: "native".to_string(),
@@ -234,6 +249,16 @@ impl AlxConfig {
         if let Some(v) = kv.get_usize("data.resident_shards")? {
             anyhow::ensure!(v >= 1, "data.resident_shards must be >= 1");
             cfg.resident_shards = v;
+        }
+        if let Some(v) = kv.get_bool("model.spill")? {
+            cfg.model_spill = v;
+        }
+        if let Some(v) = kv.get("model.spill_dir") {
+            cfg.model_spill_dir = v.to_string();
+        }
+        if let Some(v) = kv.get_usize("model.resident_table_shards")? {
+            anyhow::ensure!(v >= 1, "model.resident_table_shards must be >= 1");
+            cfg.resident_table_shards = v;
         }
         if let Some(v) = kv.get_usize("topology.cores")? {
             anyhow::ensure!(v >= 1, "topology.cores must be >= 1");
@@ -387,6 +412,11 @@ spill = true
 spill_dir = "/tmp/banks"
 resident_shards = 3
 
+[model]
+spill = true
+spill_dir = "/tmp/tabs"
+resident_table_shards = 4
+
 [session]
 checkpoint_every = 2
 eval_every = 4
@@ -407,6 +437,9 @@ checkpoint_path = "run.ckpt"
         assert!(cfg.data_spill);
         assert_eq!(cfg.spill_dir, "/tmp/banks");
         assert_eq!(cfg.resident_shards, 3);
+        assert!(cfg.model_spill);
+        assert_eq!(cfg.model_spill_dir, "/tmp/tabs");
+        assert_eq!(cfg.resident_table_shards, 4);
         assert_eq!(cfg.checkpoint_every, 2);
         assert_eq!(cfg.eval_every, 4);
         assert_eq!(cfg.early_stop_patience, 3);
@@ -429,12 +462,18 @@ checkpoint_path = "run.ckpt"
         assert!(!cfg.data_spill);
         assert!(cfg.spill_dir.is_empty());
         assert_eq!(cfg.resident_shards, 2);
+        assert!(!cfg.model_spill);
+        assert!(cfg.model_spill_dir.is_empty());
+        assert_eq!(cfg.resident_table_shards, 2);
         assert_eq!(cfg.early_stop_recall_k, 0);
         let mut bad = KvConfig::default();
         bad.set("data.chunk_rows", "0");
         assert!(AlxConfig::from_kv(&bad).is_err());
         let mut bad = KvConfig::default();
         bad.set("data.resident_shards", "0");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        let mut bad = KvConfig::default();
+        bad.set("model.resident_table_shards", "0");
         assert!(AlxConfig::from_kv(&bad).is_err());
         let mut bad = KvConfig::default();
         bad.set("session.early_stop_recall_every", "0");

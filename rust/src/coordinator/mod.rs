@@ -46,6 +46,10 @@ pub struct RunReport {
     /// Spilled-shard accounting — bank bytes, shard faults, prefetch hits
     /// (None when the matrices are fully resident).
     pub spill: Option<SpillStats>,
+    /// Spilled-model accounting — table-bank bytes, table-shard faults,
+    /// prefetch hits for W + H combined (None when the model is fully
+    /// resident).
+    pub table_spill: Option<SpillStats>,
 }
 
 /// Compat shim: the classic WebGraph job driver. Wraps a [`TrainSession`]

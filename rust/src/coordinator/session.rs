@@ -97,18 +97,20 @@ pub struct TrainSession {
     /// Recall evals recorded by [`EarlyStopOnRecall`] this session
     /// (persisted by [`TrainSession::checkpoint`] for resume replay).
     recall_log: Vec<RecallLogEntry>,
-    /// Scratch directory holding this session's spill banks (removed on
-    /// drop; `None` when fully resident).
-    spill_scratch: Option<PathBuf>,
+    /// Scratch directories holding this session's spill banks — matrix
+    /// (`ALXBANK01`) and/or model (`ALXTAB01`); the two live apart when
+    /// `model.spill_dir` names its own base. Removed on drop; empty when
+    /// everything is resident.
+    spill_scratch: Vec<PathBuf>,
 }
 
 impl Drop for TrainSession {
     fn drop(&mut self) {
-        // The spill banks are per-session scratch (resolve_spill_dir hands
-        // every session a unique directory, even under a user-set
-        // `data.spill_dir` base). Unlinking while the trainer still holds
-        // the maps is fine on unix: the inodes live until unmapped.
-        if let Some(dir) = self.spill_scratch.take() {
+        // The spill banks are per-session scratch (resolve_scratch_dir
+        // hands every session a unique directory, even under a user-set
+        // base). Unlinking while the trainer still holds the maps is fine
+        // on unix: the inodes live until unmapped.
+        for dir in self.spill_scratch.drain(..) {
             let _ = std::fs::remove_dir_all(&dir);
         }
     }
@@ -164,7 +166,10 @@ impl TrainSession {
     /// only its [`DatasetInfo`]. With `[data] spill`, the shards (and
     /// their transposes) are written to `ALXBANK01` banks and reopened
     /// demand-paged, so steady-state training memory is bounded by
-    /// `data.resident_shards` instead of the matrix.
+    /// `data.resident_shards` instead of the matrix. `[model] spill`
+    /// additionally moves W and H into `ALXTAB01` banks (see
+    /// [`TrainSession::assemble`]'s tail), so neither the matrix nor the
+    /// model need fit in host RAM.
     pub fn from_dataset(
         dataset: Dataset,
         cfg: AlxConfig,
@@ -179,9 +184,16 @@ impl TrainSession {
             let (train, train_t) =
                 spill_to_banks(sharded.train, sharded.train_t, &dir, cfg.resident_shards)?;
             let (train, train_t) = (Arc::new(train), Arc::new(train_t));
-            let mut s = Self::assemble(info, train, train_t, sharded.test, None, cfg, engine)?;
-            s.spill_scratch = Some(dir);
-            return Ok(s);
+            return Self::assemble(
+                info,
+                train,
+                train_t,
+                sharded.test,
+                None,
+                cfg,
+                engine,
+                Some(dir),
+            );
         }
         Self::assemble(
             info,
@@ -191,6 +203,7 @@ impl TrainSession {
             None,
             cfg,
             engine,
+            None,
         )
     }
 
@@ -219,38 +232,49 @@ impl TrainSession {
                 cfg.resident_shards,
             )?;
             let (train, train_t) = (Arc::new(s.train), Arc::new(s.train_t));
-            let mut session =
-                Self::assemble(s.info, train, train_t, s.test, Some(s.ingest), cfg, engine)?;
-            session.spill_scratch = Some(dir);
-            return Ok(session);
+            return Self::assemble(
+                s.info,
+                train,
+                train_t,
+                s.test,
+                Some(s.ingest),
+                cfg,
+                engine,
+                Some(dir),
+            );
         }
         let s = source.load_split(cfg.cores, 0.9, 0.25, cfg.data_seed ^ 0x9)?;
         let (train, train_t) = (Arc::new(s.train), Arc::new(s.train_t));
-        Self::assemble(s.info, train, train_t, s.test, Some(s.ingest), cfg, engine)
+        Self::assemble(s.info, train, train_t, s.test, Some(s.ingest), cfg, engine, None)
     }
 
-    /// Where this session's spill banks live: a fresh scratch directory —
-    /// unique per process *and* per session — under `data.spill_dir` when
-    /// set, else under the system temp dir. Uniqueness is load-bearing:
-    /// bank files are truncated on create, so two sessions (concurrent
-    /// runs, or sequential sessions in one process) must never share a
-    /// directory while one still has its banks mapped. The directory is
-    /// removed when the session drops.
-    fn resolve_spill_dir(cfg: &AlxConfig) -> PathBuf {
+    /// A fresh scratch directory — unique per process *and* per session —
+    /// under `base` when set, else under the system temp dir. Uniqueness
+    /// is load-bearing: bank files are truncated on create, so two
+    /// sessions (concurrent runs, or sequential sessions in one process)
+    /// must never share a directory while one still has its banks mapped.
+    /// The directory is removed when the session drops.
+    fn resolve_scratch_dir(base: &str) -> PathBuf {
         use std::sync::atomic::{AtomicU64, Ordering};
         static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
         let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
-        let base = if cfg.spill_dir.is_empty() {
-            std::env::temp_dir()
-        } else {
-            PathBuf::from(&cfg.spill_dir)
-        };
+        let base = if base.is_empty() { std::env::temp_dir() } else { PathBuf::from(base) };
         base.join(format!("alx_spill_{}_{}", std::process::id(), seq))
     }
 
+    /// Where this session's matrix spill banks live (see
+    /// [`TrainSession::resolve_scratch_dir`]).
+    fn resolve_spill_dir(cfg: &AlxConfig) -> PathBuf {
+        Self::resolve_scratch_dir(&cfg.spill_dir)
+    }
+
     /// Shared tail of every constructor: resolve the engine, build the
-    /// trainer over the sharded matrix (resident or bank-backed), assemble
-    /// the session.
+    /// trainer over the sharded matrix (resident or bank-backed), spill
+    /// the model tables into `ALXTAB01` banks when `[model] spill` asks
+    /// for it (reusing the matrix scratch dir when there is one and
+    /// `model.spill_dir` does not name its own base, so
+    /// `--stream --spill --spill-model` keeps all of a session's banks
+    /// together by default), and assemble the session.
     fn assemble(
         info: DatasetInfo,
         train: Arc<dyn ShardedMatrix>,
@@ -259,6 +283,7 @@ impl TrainSession {
         ingest: Option<IngestReport>,
         cfg: AlxConfig,
         engine: Option<Box<dyn SolveEngine>>,
+        scratch: Option<PathBuf>,
     ) -> anyhow::Result<TrainSession> {
         let topo = Topology::new(cfg.cores);
         let engine: Box<dyn SolveEngine> = match engine {
@@ -276,7 +301,33 @@ impl TrainSession {
                 _ => Trainer::default_engine(&cfg.train, &topo),
             },
         };
-        let trainer = Trainer::from_sharded(train, train_t, cfg.train.clone(), topo, engine)?;
+        let mut scratch: Vec<PathBuf> = scratch.into_iter().collect();
+        let trainer = if cfg.model_spill {
+            // A user-set model.spill_dir always wins (W/H may need a
+            // bigger disk than the matrix banks); otherwise the model
+            // banks share the matrix scratch dir when there is one. The
+            // tables are initialized straight into the banks — peak
+            // table memory during construction is one shard.
+            let dir = match scratch.first() {
+                Some(dir) if cfg.model_spill_dir.is_empty() => dir.clone(),
+                _ => {
+                    let dir = Self::resolve_scratch_dir(&cfg.model_spill_dir);
+                    scratch.push(dir.clone());
+                    dir
+                }
+            };
+            Trainer::from_sharded_spilled(
+                train,
+                train_t,
+                cfg.train.clone(),
+                topo,
+                engine,
+                &dir,
+                cfg.resident_table_shards,
+            )?
+        } else {
+            Trainer::from_sharded(train, train_t, cfg.train.clone(), topo, engine)?
+        };
         Ok(TrainSession {
             cfg,
             dataset: info,
@@ -290,7 +341,7 @@ impl TrainSession {
             restored_objectives: Vec::new(),
             restored_recalls: Vec::new(),
             recall_log: Vec::new(),
-            spill_scratch: None,
+            spill_scratch: scratch,
         })
     }
 
@@ -454,9 +505,10 @@ impl TrainSession {
         let epoch_seconds_mean =
             history.iter().map(|h| h.seconds).sum::<f64>() / history.len().max(1) as f64;
         let comm = history.last().map(|h| h.comm_bytes).unwrap_or(0);
-        // Spill accounting: present exactly when the matrices live in
-        // banks (bank_bytes is 0 for fully resident storage).
+        // Spill accounting: present exactly when the matrices (resp. the
+        // model tables) live in banks (bank_bytes is 0 when resident).
         let spill = Some(self.trainer.spill_stats()).filter(|s| s.bank_bytes > 0);
+        let table_spill = Some(self.trainer.table_spill_stats()).filter(|s| s.bank_bytes > 0);
         Ok(RunReport {
             epoch_seconds_mean,
             simulated_epoch_seconds: self.trainer.simulated_epoch_seconds(),
@@ -466,6 +518,7 @@ impl TrainSession {
             peak_rss_bytes: crate::util::mem::peak_rss_bytes(),
             ingest: self.ingest.clone(),
             spill,
+            table_spill,
         })
     }
 

@@ -409,9 +409,12 @@ impl StreamingSource {
     /// plus one shard under construction, and steady-state training
     /// memory is `resident_shards` decoded shards per bank.
     ///
-    /// Writes `train.alxbank` and `train_t.alxbank` into `spill_dir` (the
-    /// transpose is derived from the train bank in O(cols) + one shard of
-    /// scratch, at the cost of one scan of the mapped bank per transpose
+    /// Writes `train.alxbank` and `train_t.alxbank` into `spill_dir`; the
+    /// transpose is derived from the train bank by a counting pass plus a
+    /// single-scan multi-writer scatter whose scratch is bounded by the
+    /// ingest budget (falling back to
+    /// [`crate::sparse::DEFAULT_TRANSPOSE_SCRATCH_BYTES`] when no budget
+    /// is set; a tight budget degrades toward one scan per transpose
     /// shard).
     pub fn load_split_spilled(
         &self,
@@ -456,10 +459,17 @@ impl StreamingSource {
             .finish_spilled()
             .map_err(|e| anyhow::anyhow!("finish bank {}: {e}", train_path.display()))?;
 
-        // Derive the transpose bank from the (validated) train bank.
+        // Derive the transpose bank from the (validated) train bank,
+        // with the multi-writer scatter scratch held to the same budget
+        // that bounds chunk staging. An unset budget must not unbound
+        // spill-mode memory, so it falls back to the bounded default.
+        let t_budget = match self.budget_bytes {
+            0 => crate::sparse::DEFAULT_TRANSPOSE_SCRATCH_BYTES,
+            b => b,
+        };
         let bank = CsrBank::open(&train_path)
             .map_err(|e| anyhow::anyhow!("reopen bank {}: {e}", train_path.display()))?;
-        bank.write_transpose_bank(&train_t_path, num_shards)
+        bank.write_transpose_bank_budgeted(&train_t_path, num_shards, t_budget)
             .map_err(|e| anyhow::anyhow!("transpose bank {}: {e}", train_t_path.display()))?;
         drop(bank);
 

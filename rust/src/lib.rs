@@ -59,6 +59,7 @@ pub mod prelude {
     pub use crate::densebatch::{DenseBatch, DenseBatcher};
     pub use crate::eval::{recall_at_k, EvalConfig, RecallReport};
     pub use crate::linalg::Mat;
+    pub use crate::sharding::{ShardedTable, Storage, TableStorage};
     pub use crate::sparse::{Csr, CsrStorage, MmapBank, RowMatrix, ShardedCsr, SpillStats};
     pub use crate::topo::Topology;
     pub use crate::webgraph::{Variant, VariantSpec};

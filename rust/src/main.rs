@@ -7,7 +7,8 @@
 //! alx bank      --data g.alxcsr02 --out g.alxbank      # shard-major bank
 //! alx train     [--config cfg.toml] [--key value ...]  # train + eval
 //! alx train     --source edge-list --data edges.txt    # train on a file
-//! alx train     --stream --spill --data g.alxcsr02     # out-of-core end to end
+//! alx train     --stream --spill --data g.alxcsr02     # out-of-core matrix
+//! alx train     --stream --spill --spill-model ...     # matrix AND model out of core
 //! alx train     --checkpoint-every 4 --eval-every 2    # session hooks
 //! alx train     --resume run.ckpt                      # continue a run
 //! alx table1    --scale 0.001                          # Table 1 stats
@@ -98,6 +99,9 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("spill", "data.spill"),
         ("spill-dir", "data.spill_dir"),
         ("resident-shards", "data.resident_shards"),
+        ("spill-model", "model.spill"),
+        ("model-spill-dir", "model.spill_dir"),
+        ("resident-table-shards", "model.resident_table_shards"),
         ("checkpoint-every", "session.checkpoint_every"),
         ("eval-every", "session.eval_every"),
         ("early-stop", "session.early_stop_patience"),
@@ -285,8 +289,14 @@ fn cmd_bank(args: &Args) -> anyhow::Result<()> {
     if let Some(tout) = args.get("transpose-out") {
         anyhow::ensure!(tout != out && tout != input, "--transpose-out must be a new file");
         let ttmp = format!("{tout}.tmp.{}", std::process::id());
+        // Bounded by --ingest-budget-mb, or the honest default when unset
+        // (an unbounded group would materialize the whole transpose).
+        let t_budget = match budget {
+            0 => alx::sparse::DEFAULT_TRANSPOSE_SCRATCH_BYTES,
+            b => b,
+        };
         let bank = alx::sparse::CsrBank::open(out)?;
-        if let Err(e) = bank.write_transpose_bank(&ttmp, shards) {
+        if let Err(e) = bank.write_transpose_bank_budgeted(&ttmp, shards, t_budget) {
             let _ = std::fs::remove_file(&ttmp);
             return Err(e.into());
         }
@@ -309,6 +319,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
     if cfg.data_spill {
         dataset_desc.push_str(&format!(" [spill, resident_shards={}]", cfg.resident_shards));
+    }
+    if cfg.model_spill {
+        dataset_desc.push_str(&format!(
+            " [spill-model, resident_table_shards={}]",
+            cfg.resident_table_shards
+        ));
     }
     println!(
         "training {dataset_desc} d={} epochs={} λ={:.0e} α={:.0e} solver={} precision={} engine={} cores={}",
@@ -391,6 +407,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             sp.prefetch_hits,
             100.0 * sp.hit_rate(),
             sp.prefetches,
+        );
+    }
+    if let Some(ts) = &report.table_spill {
+        println!(
+            "spilled model:  banks {}, {} table-shard faults, {} prefetch hits \
+             ({:.0}% hit rate), {} prefetches",
+            human_bytes(ts.bank_bytes),
+            ts.shard_faults,
+            ts.prefetch_hits,
+            100.0 * ts.hit_rate(),
+            ts.prefetches,
         );
     }
     if report.peak_rss_bytes > 0 {
@@ -524,6 +551,8 @@ fn usage() -> ! {
          train flags: --source webgraph|edge-list --data <file> --resume <ckpt>\n\
                       --stream --ingest-budget-mb <MiB> (out-of-core ALXCSR02 ingestion)\n\
                       --spill --spill-dir <dir> --resident-shards <n> (demand-paged shard banks)\n\
+                      --spill-model --resident-table-shards <n> (demand-paged W/H table banks;\n\
+                      with --stream --spill neither the matrix nor the model is ever RAM-resident)\n\
                       --checkpoint <path> --checkpoint-every <k> --eval-every <k> --early-stop <k>\n\
                       --early-stop-recall <K> (stop on a Recall@K plateau)\n\
          convert:     --data <in: text|ALXCSR01|ALXCSR02> --out <file.alxcsr02> [--chunk-rows <n>]\n\

@@ -1,0 +1,468 @@
+//! `ALXTAB01` — the shard-major on-disk embedding-table bank behind
+//! spilled models.
+//!
+//! `ALXBANK01` took the training *matrix* out of host RAM (PR 4); at
+//! WebGraph scale the term that actually dominates is the *model* —
+//! `rows × dim × precision` for each of W and H. A table bank stores one
+//! embedding table shard-major: a fixed-shape segment of raw bf16/f32
+//! elements per shard, with a validated directory of per-shard offsets,
+//! so a single shard's rows can be faulted in (and written back) without
+//! touching the rest of the file.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! "ALXTAB01" + 8 zero bytes            16 bytes
+//! rows u64 | dim u64 | num_shards u64 | elem_bytes u64 (2 = bf16, 4 = f32)
+//! directory, num_shards entries:
+//!   seg_offset u64 | seg_rows u64
+//! per shard segment (back to back, in shard order):
+//!   seg_rows × dim elements (u16 bf16 bits, or f32 bits)
+//! ```
+//!
+//! Shard `p` holds global rows `[p·per, min((p+1)·per, rows))` with
+//! `per = ceil(rows / num_shards)` — the exact uniform partition of
+//! [`super::ShardedTable`], so table-bank shard `p` is the scatter target
+//! of matrix shard pass `p`.
+//!
+//! [`TableBank::open`] memory-maps the file **read-write** (shards are
+//! written back in place after each pass through
+//! [`TableBank::store_shard`]) and validates the entire structure up
+//! front — header against the exact file length, every directory entry
+//! against the canonical layout — so a corrupt or lying file fails with
+//! `InvalidData` before any shard-sized allocation and decodes are
+//! infallible afterwards. Segment payloads are raw numeric bits; any bit
+//! pattern is a valid element, so there is no content validation to do.
+
+use super::{ShardData, Storage};
+use crate::sparse::bank::per_for;
+use crate::util::mmap::MmapMut;
+use std::io::{Result, Write};
+use std::path::Path;
+
+/// File magic of the table-bank format (padded to 16 bytes on disk).
+pub const ALXTAB01_MAGIC: &[u8; 8] = b"ALXTAB01";
+const MAGIC_BYTES: usize = 16;
+/// Magic + rows/dim/num_shards/elem_bytes.
+const HEADER_BYTES: usize = MAGIC_BYTES + 4 * 8;
+const DIR_ENTRY_BYTES: usize = 2 * 8;
+
+fn bad(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
+
+fn shard_range(rows: usize, per: usize, p: usize) -> (usize, usize) {
+    ((p * per).min(rows), ((p + 1) * per).min(rows))
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+/// Writes an `ALXTAB01` file. Every segment's shape is fixed by the
+/// header (uniform partition × dim × element size), so the header and the
+/// full directory are emitted up front and shards are appended in order —
+/// no backpatching, and a streaming writer never holds more than the
+/// shard currently being encoded.
+pub struct TableBankWriter<W: Write> {
+    w: W,
+    rows: usize,
+    dim: usize,
+    num_shards: usize,
+    per: usize,
+    storage: Storage,
+    next_shard: usize,
+}
+
+impl<W: Write> TableBankWriter<W> {
+    /// Start a bank for a `rows × dim` table in `num_shards` uniform
+    /// row-range shards of `storage`-precision elements. Writes the full
+    /// header and directory immediately.
+    pub fn create(
+        mut w: W,
+        rows: usize,
+        dim: usize,
+        num_shards: usize,
+        storage: Storage,
+    ) -> Result<Self> {
+        if num_shards == 0 {
+            return Err(bad("table bank needs at least one shard"));
+        }
+        if rows as u64 > u32::MAX as u64 {
+            return Err(bad("table rows exceed the u32 id space"));
+        }
+        if dim == 0 || dim as u64 > u32::MAX as u64 {
+            return Err(bad(format!("table dim {dim} out of range")));
+        }
+        let per = per_for(rows, num_shards);
+        let elem = storage.elem_bytes();
+        let mut header = vec![0u8; HEADER_BYTES + num_shards * DIR_ENTRY_BYTES];
+        header[..ALXTAB01_MAGIC.len()].copy_from_slice(ALXTAB01_MAGIC);
+        header[MAGIC_BYTES..MAGIC_BYTES + 8].copy_from_slice(&(rows as u64).to_le_bytes());
+        header[MAGIC_BYTES + 8..MAGIC_BYTES + 16].copy_from_slice(&(dim as u64).to_le_bytes());
+        header[MAGIC_BYTES + 16..MAGIC_BYTES + 24]
+            .copy_from_slice(&(num_shards as u64).to_le_bytes());
+        header[MAGIC_BYTES + 24..MAGIC_BYTES + 32].copy_from_slice(&elem.to_le_bytes());
+        let mut offset = header.len() as u64;
+        for p in 0..num_shards {
+            let (start, end) = shard_range(rows, per, p);
+            let e = HEADER_BYTES + p * DIR_ENTRY_BYTES;
+            header[e..e + 8].copy_from_slice(&offset.to_le_bytes());
+            header[e + 8..e + 16].copy_from_slice(&((end - start) as u64).to_le_bytes());
+            offset += (end - start) as u64 * dim as u64 * elem;
+        }
+        w.write_all(&header)?;
+        Ok(TableBankWriter { w, rows, dim, num_shards, per, storage, next_shard: 0 })
+    }
+
+    /// Append the next shard's payload. Its element type must match the
+    /// bank's storage and its length the uniform partition's row count.
+    pub fn write_shard(&mut self, data: &ShardData) -> Result<()> {
+        if self.next_shard >= self.num_shards {
+            return Err(bad(format!(
+                "table bank already holds the declared {} shards",
+                self.num_shards
+            )));
+        }
+        if data.storage() != self.storage {
+            return Err(bad(format!(
+                "shard {} is {:?}, the bank stores {:?}",
+                self.next_shard,
+                data.storage(),
+                self.storage
+            )));
+        }
+        let (start, end) = shard_range(self.rows, self.per, self.next_shard);
+        let want = (end - start) * self.dim;
+        if data.elems() != want {
+            return Err(bad(format!(
+                "shard {} has {} elements, the uniform partition wants {want}",
+                self.next_shard,
+                data.elems()
+            )));
+        }
+        let mut buf = Vec::with_capacity(want * self.storage.elem_bytes() as usize);
+        match data {
+            ShardData::Bf16(v) => {
+                for &x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            ShardData::F32(v) => {
+                for &x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        self.w.write_all(&buf)?;
+        self.next_shard += 1;
+        Ok(())
+    }
+
+    /// Verify every shard arrived, flush, and return the inner writer.
+    pub fn finish(mut self) -> Result<W> {
+        if self.next_shard != self.num_shards {
+            return Err(bad(format!(
+                "table bank got {} of the declared {} shards",
+                self.next_shard, self.num_shards
+            )));
+        }
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// A validated, read-write memory-mapped `ALXTAB01` file. Shards decode
+/// into owned [`ShardData`] on demand ([`TableBank::load_shard`]) and are
+/// written back in place ([`TableBank::store_shard`]); writes go through
+/// the shared mapping, so later loads — from this handle or a fresh open
+/// — see them.
+#[derive(Debug)]
+pub struct TableBank {
+    map: MmapMut,
+    pub rows: usize,
+    pub dim: usize,
+    storage: Storage,
+    per: usize,
+    num_shards: usize,
+}
+
+impl TableBank {
+    /// Open and fully validate a table bank. Every structural invariant
+    /// is checked here (exact file size, canonical directory), so later
+    /// decodes cannot fail.
+    pub fn open(path: impl AsRef<Path>) -> Result<TableBank> {
+        let f = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+        let map = MmapMut::map_mut(&f)?;
+        Self::from_map(map)
+    }
+
+    fn from_map(map: MmapMut) -> Result<TableBank> {
+        let b = map.bytes();
+        if b.len() < HEADER_BYTES {
+            return Err(bad("file too short for an ALXTAB01 header"));
+        }
+        if &b[..ALXTAB01_MAGIC.len()] != ALXTAB01_MAGIC
+            || b[ALXTAB01_MAGIC.len()..MAGIC_BYTES].iter().any(|&x| x != 0)
+        {
+            return Err(bad("bad magic (expected ALXTAB01)"));
+        }
+        let rows64 = u64_at(b, MAGIC_BYTES);
+        let dim64 = u64_at(b, MAGIC_BYTES + 8);
+        let shards64 = u64_at(b, MAGIC_BYTES + 16);
+        let elem64 = u64_at(b, MAGIC_BYTES + 24);
+        if rows64 > u32::MAX as u64 {
+            return Err(bad(format!("rows {rows64} exceeds the u32 id space")));
+        }
+        if dim64 == 0 || dim64 > u32::MAX as u64 {
+            return Err(bad(format!("dim {dim64} out of range")));
+        }
+        let storage = match elem64 {
+            2 => Storage::Bf16,
+            4 => Storage::F32,
+            other => return Err(bad(format!("element size {other} is neither bf16 nor f32"))),
+        };
+        if shards64 == 0 {
+            return Err(bad("table bank declares zero shards"));
+        }
+        // The directory must fit in the file before anything is sized
+        // from it, so a lying shard count cannot force an over-read.
+        let dir_end = HEADER_BYTES as u128 + shards64 as u128 * DIR_ENTRY_BYTES as u128;
+        if dir_end > b.len() as u128 {
+            return Err(bad(format!(
+                "directory for {shards64} shards does not fit the {}-byte file",
+                b.len()
+            )));
+        }
+        let rows = rows64 as usize;
+        let dim = dim64 as usize;
+        let num_shards = shards64 as usize;
+        let per = per_for(rows, num_shards);
+
+        // Directory: offsets must follow the canonical back-to-back
+        // layout and per-shard rows the uniform partition. u128
+        // arithmetic so lying fields fail the bounds, not wrap.
+        let mut expect_off = dir_end;
+        for p in 0..num_shards {
+            let e = HEADER_BYTES + p * DIR_ENTRY_BYTES;
+            let off = u64_at(b, e);
+            let seg_rows = u64_at(b, e + 8);
+            let (start, end) = shard_range(rows, per, p);
+            if seg_rows != (end - start) as u64 {
+                return Err(bad(format!(
+                    "shard {p} directory claims {seg_rows} rows, the uniform \
+                     partition of {rows} rows over {num_shards} shards wants {}",
+                    end - start
+                )));
+            }
+            if off as u128 != expect_off {
+                return Err(bad(format!(
+                    "shard {p} offset {off} breaks the canonical layout (expected {expect_off})"
+                )));
+            }
+            expect_off += seg_rows as u128 * dim as u128 * elem64 as u128;
+            if expect_off > b.len() as u128 {
+                return Err(bad(format!(
+                    "shard {p} segment runs past the end of the {}-byte file",
+                    b.len()
+                )));
+            }
+        }
+        if expect_off != b.len() as u128 {
+            return Err(bad(format!(
+                "table bank should be {expect_off} bytes, file is {}",
+                b.len()
+            )));
+        }
+        Ok(TableBank { map, rows, dim, storage, per, num_shards })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    pub fn storage(&self) -> Storage {
+        self.storage
+    }
+
+    /// Bytes of the on-disk bank file.
+    pub fn file_bytes(&self) -> u64 {
+        self.map.len() as u64
+    }
+
+    /// Global row range `[start, end)` of shard `p`.
+    pub fn shard_range(&self, p: usize) -> (usize, usize) {
+        shard_range(self.rows, self.per, p)
+    }
+
+    /// Byte offset of shard `p`'s segment.
+    fn seg_offset(&self, p: usize) -> usize {
+        let (start, _) = self.shard_range(p);
+        HEADER_BYTES
+            + self.num_shards * DIR_ENTRY_BYTES
+            + start * self.dim * self.storage.elem_bytes() as usize
+    }
+
+    /// Element count of shard `p`'s segment.
+    fn seg_elems(&self, p: usize) -> usize {
+        let (start, end) = self.shard_range(p);
+        (end - start) * self.dim
+    }
+
+    /// Decode shard `p` into owned [`ShardData`]. Infallible after the
+    /// validation [`TableBank::open`] performed — this is the "table
+    /// shard fault" cost of the demand-paged model path.
+    pub fn load_shard(&self, p: usize) -> ShardData {
+        let n = self.seg_elems(p);
+        let off = self.seg_offset(p);
+        let b = self.map.bytes();
+        match self.storage {
+            Storage::Bf16 => ShardData::Bf16(
+                b[off..off + n * 2]
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            Storage::F32 => ShardData::F32(
+                b[off..off + n * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Write shard `p`'s payload back in place (the write-back half of a
+    /// shard checkout). The data must match the bank's storage and the
+    /// shard's element count exactly.
+    pub fn store_shard(&mut self, p: usize, data: &ShardData) -> Result<()> {
+        let n = self.seg_elems(p);
+        if data.storage() != self.storage || data.elems() != n {
+            return Err(bad(format!(
+                "shard {p} write-back shape mismatch: got {} {:?} elements, bank wants {n} {:?}",
+                data.elems(),
+                data.storage(),
+                self.storage
+            )));
+        }
+        let off = self.seg_offset(p);
+        let elem = self.storage.elem_bytes() as usize;
+        let dst = &mut self.map.bytes_mut()[off..off + n * elem];
+        match data {
+            ShardData::Bf16(v) => {
+                for (c, x) in dst.chunks_exact_mut(2).zip(v) {
+                    c.copy_from_slice(&x.to_le_bytes());
+                }
+            }
+            ShardData::F32(v) => {
+                for (c, x) in dst.chunks_exact_mut(4).zip(v) {
+                    c.copy_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        self.map.flush_range(off, n * elem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sharding::ShardedTable;
+    use crate::util::Pcg64;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("alx_tab_{}_{}.alxtab", tag, std::process::id()))
+    }
+
+    fn write_bank(
+        rows: usize,
+        dim: usize,
+        shards: usize,
+        storage: Storage,
+        tag: &str,
+    ) -> (ShardedTable, std::path::PathBuf) {
+        let mut rng = Pcg64::new(rows as u64 ^ 0x7ab);
+        let t = ShardedTable::randn(rows, dim, shards, storage, &mut rng);
+        let path = tmp(tag);
+        t.spill_to_bank(&path).unwrap();
+        (t, path)
+    }
+
+    #[test]
+    fn bank_roundtrips_every_shard_both_storages() {
+        for storage in [Storage::F32, Storage::Bf16] {
+            for shards in [1usize, 2, 3, 7, 41] {
+                let tag = format!("rt{shards}{}", storage.elem_bytes());
+                let (t, path) = write_bank(41, 5, shards, storage, &tag);
+                let bank = TableBank::open(&path).unwrap();
+                assert_eq!(bank.rows, 41);
+                assert_eq!(bank.dim, 5);
+                assert_eq!(bank.num_shards(), shards);
+                assert_eq!(bank.storage(), storage);
+                for p in 0..shards {
+                    let r = t.range(p);
+                    assert_eq!(bank.shard_range(p), (r.start, r.end));
+                    let loaded = bank.load_shard(p);
+                    t.with_shard_data(p, |data| {
+                        assert_eq!(&loaded, data, "shard {p}/{shards} {storage:?}")
+                    });
+                }
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+
+    #[test]
+    fn store_shard_writes_through_to_fresh_opens() {
+        let (_, path) = write_bank(20, 3, 4, Storage::F32, "wt");
+        {
+            let mut bank = TableBank::open(&path).unwrap();
+            let mut data = bank.load_shard(1);
+            if let ShardData::F32(v) = &mut data {
+                for (i, x) in v.iter_mut().enumerate() {
+                    *x = i as f32 * 0.5;
+                }
+            }
+            bank.store_shard(1, &data).unwrap();
+            // The same handle sees the write.
+            assert_eq!(bank.load_shard(1), data);
+        }
+        // And so does a fresh open of the file.
+        let bank = TableBank::open(&path).unwrap();
+        if let ShardData::F32(v) = bank.load_shard(1) {
+            assert_eq!(v[2], 1.0);
+        } else {
+            panic!("expected f32 shard");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn writer_rejects_wrong_shapes() {
+        let buf = std::io::Cursor::new(Vec::new());
+        let mut w = TableBankWriter::create(buf, 10, 4, 2, Storage::F32).unwrap();
+        // Wrong length for the partition (shard 0 wants 5 rows × 4).
+        assert!(w.write_shard(&ShardData::F32(vec![0.0; 8])).is_err());
+        // Wrong element type.
+        assert!(w.write_shard(&ShardData::Bf16(vec![0; 20])).is_err());
+        // Correct shards, then one too many.
+        w.write_shard(&ShardData::F32(vec![0.0; 20])).unwrap();
+        w.write_shard(&ShardData::F32(vec![0.0; 20])).unwrap();
+        assert!(w.write_shard(&ShardData::F32(vec![0.0; 20])).is_err());
+        // Short banks fail at finish.
+        let buf = std::io::Cursor::new(Vec::new());
+        let mut w = TableBankWriter::create(buf, 10, 4, 2, Storage::F32).unwrap();
+        w.write_shard(&ShardData::F32(vec![0.0; 20])).unwrap();
+        assert!(w.finish().is_err());
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_and_short_files() {
+        let path = tmp("badmagic");
+        std::fs::write(&path, b"NOTATAB!XXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXXX").unwrap();
+        assert!(TableBank::open(&path).is_err());
+        std::fs::write(&path, b"ALXTAB01").unwrap();
+        assert!(TableBank::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

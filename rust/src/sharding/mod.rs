@@ -4,10 +4,29 @@
 //! one per TPU core, so the pod's combined HBM bounds the model size.
 //! Storage is bfloat16 (paper §4.4's memory/communication-halving choice)
 //! or f32 for the precision ablation.
+//!
+//! *Where* the shards live is pluggable ([`TableStorage`]): the default
+//! [`ResidentShards`] backend keeps every shard in host RAM (exactly the
+//! pre-spill behaviour), while [`PagedTable`] demand-pages shards out of
+//! a read-write-mapped `ALXTAB01` bank ([`bank::TableBank`]) with an LRU
+//! residency cap — so the *model*, not just the training matrix, can
+//! outgrow host RAM. Readers and the per-pass [`ShardViewMut`] scatter
+//! views borrow lazily materialized slices; on a paged backend a view
+//! checks its shard out on first write and writes the exact element bits
+//! back on drop, which keeps spilled-model training bitwise identical to
+//! resident.
+
+pub mod bank;
+pub mod storage;
+
+pub use bank::{TableBank, TableBankWriter, ALXTAB01_MAGIC};
+pub use storage::{PagedTable, ResidentShards, TableStorage};
 
 use crate::linalg::Mat;
+use crate::sparse::SpillStats;
 use crate::util::bf16::{self, Bf16};
 use crate::util::Pcg64;
+use std::path::Path;
 
 /// Element storage format of a sharded table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,11 +70,37 @@ impl ShardRange {
     }
 }
 
-/// Physical storage of one shard.
-#[derive(Clone, Debug)]
-enum ShardData {
+/// Physical payload of one shard: the raw element array in storage
+/// precision. This is the unit every [`TableStorage`] backend serves and
+/// the `ALXTAB01` bank persists — one decoded representation everywhere
+/// is what makes spilled and resident tables bitwise interchangeable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardData {
     Bf16(Vec<u16>),
     F32(Vec<f32>),
+}
+
+impl ShardData {
+    /// The element format this payload stores.
+    pub fn storage(&self) -> Storage {
+        match self {
+            ShardData::Bf16(_) => Storage::Bf16,
+            ShardData::F32(_) => Storage::F32,
+        }
+    }
+
+    /// Number of stored elements (`shard rows × dim`).
+    pub fn elems(&self) -> usize {
+        match self {
+            ShardData::Bf16(v) => v.len(),
+            ShardData::F32(v) => v.len(),
+        }
+    }
+
+    /// Bytes this payload occupies in host memory.
+    pub fn memory_bytes(&self) -> u64 {
+        self.elems() as u64 * self.storage().elem_bytes()
+    }
 }
 
 /// Write `src` into a shard at element offset `off`, rounding to the
@@ -73,14 +118,60 @@ fn write_row_data(data: &mut ShardData, off: usize, src: &[f32]) {
     }
 }
 
-/// An embedding table uniformly sharded over `num_shards` cores.
-#[derive(Clone, Debug)]
+/// One shard's random-normal payload (`elems` elements drawn from
+/// `srng`, rounded to the storage precision) — the shared generator of
+/// [`ShardedTable::randn`] and [`ShardedTable::randn_spilled`], so the
+/// resident and streamed-to-bank inits produce identical bits.
+fn randn_shard(elems: usize, storage: Storage, scale: f64, srng: &mut Pcg64) -> ShardData {
+    match storage {
+        Storage::Bf16 => ShardData::Bf16(
+            (0..elems).map(|_| Bf16::from_f32((srng.next_normal() * scale) as f32).0).collect(),
+        ),
+        Storage::F32 => {
+            ShardData::F32((0..elems).map(|_| (srng.next_normal() * scale) as f32).collect())
+        }
+    }
+}
+
+/// Read one row at element offset `off` into `out`, widened to f32 — the
+/// single decode path every reader (gathers, gramians, checkpoints)
+/// shares, whichever backend served the shard.
+#[inline]
+fn read_row_data(data: &ShardData, off: usize, out: &mut [f32]) {
+    match data {
+        ShardData::Bf16(v) => {
+            for (o, &b) in out.iter_mut().zip(&v[off..off + out.len()]) {
+                *o = Bf16(b).to_f32();
+            }
+        }
+        ShardData::F32(v) => out.copy_from_slice(&v[off..off + out.len()]),
+    }
+}
+
+/// An embedding table uniformly sharded over `num_shards` cores, stored
+/// behind a pluggable [`TableStorage`] backend (resident by default,
+/// demand-paged out of an `ALXTAB01` bank in spilled-model mode).
+#[derive(Debug)]
 pub struct ShardedTable {
     pub rows: usize,
     pub dim: usize,
     ranges: Vec<ShardRange>,
-    shards: Vec<ShardData>,
+    store: Box<dyn TableStorage>,
     storage: Storage,
+}
+
+impl Clone for ShardedTable {
+    fn clone(&self) -> ShardedTable {
+        // Cloning a paged table shares the underlying bank + residency
+        // manager (like cloning an `Arc`); cloning a resident one copies.
+        ShardedTable {
+            rows: self.rows,
+            dim: self.dim,
+            ranges: self.ranges.clone(),
+            store: self.store.clone_box(),
+            storage: self.storage,
+        }
+    }
 }
 
 impl ShardedTable {
@@ -93,7 +184,7 @@ impl ShardedTable {
             .collect()
     }
 
-    /// Create a zeroed table.
+    /// Create a zeroed table (resident storage).
     pub fn zeros(rows: usize, dim: usize, num_shards: usize, storage: Storage) -> ShardedTable {
         let ranges = Self::ranges_for(rows, num_shards);
         let shards = ranges
@@ -103,11 +194,12 @@ impl ShardedTable {
                 Storage::F32 => ShardData::F32(vec![0.0f32; r.len() * dim]),
             })
             .collect();
-        ShardedTable { rows, dim, ranges, shards, storage }
+        ShardedTable { rows, dim, ranges, store: Box::new(ResidentShards::new(shards)), storage }
     }
 
     /// Random-normal initialization scaled by `1/sqrt(d)` (the usual MF
-    /// init so initial scores are O(1)).
+    /// init so initial scores are O(1)). Builds resident storage;
+    /// [`ShardedTable::randn_spilled`] is the out-of-core twin.
     pub fn randn(
         rows: usize,
         dim: usize,
@@ -115,29 +207,49 @@ impl ShardedTable {
         storage: Storage,
         rng: &mut Pcg64,
     ) -> ShardedTable {
-        let mut t = Self::zeros(rows, dim, num_shards, storage);
+        let ranges = Self::ranges_for(rows, num_shards);
         let scale = 1.0 / (dim as f64).sqrt();
-        for s in 0..t.num_shards() {
+        let shards = ranges
+            .iter()
+            .map(|r| {
+                let mut srng = rng.split();
+                randn_shard(r.len() * dim, storage, scale, &mut srng)
+            })
+            .collect();
+        ShardedTable { rows, dim, ranges, store: Box::new(ResidentShards::new(shards)), storage }
+    }
+
+    /// [`ShardedTable::randn`] streamed straight into an `ALXTAB01` bank
+    /// at `path` and reopened demand-paged: peak init memory is **one
+    /// shard**, and the element bits are identical to building resident
+    /// and spilling (same per-shard rng splits, same rounding) — which
+    /// is what lets a model that never fits in host RAM start training.
+    pub fn randn_spilled(
+        rows: usize,
+        dim: usize,
+        num_shards: usize,
+        storage: Storage,
+        rng: &mut Pcg64,
+        path: &Path,
+        resident_table_shards: usize,
+    ) -> std::io::Result<ShardedTable> {
+        use std::io::Write;
+        let ranges = Self::ranges_for(rows, num_shards);
+        let scale = 1.0 / (dim as f64).sqrt();
+        let f = std::fs::File::create(path)?;
+        let mut w =
+            TableBankWriter::create(std::io::BufWriter::new(f), rows, dim, num_shards, storage)?;
+        for r in &ranges {
             let mut srng = rng.split();
-            let n = t.ranges[s].len() * dim;
-            match &mut t.shards[s] {
-                ShardData::Bf16(v) => {
-                    for x in v.iter_mut().take(n) {
-                        *x = Bf16::from_f32((srng.next_normal() * scale) as f32).0;
-                    }
-                }
-                ShardData::F32(v) => {
-                    for x in v.iter_mut().take(n) {
-                        *x = (srng.next_normal() * scale) as f32;
-                    }
-                }
-            }
+            w.write_shard(&randn_shard(r.len() * dim, storage, scale, &mut srng))?;
         }
-        t
+        let mut inner = w.finish()?;
+        inner.flush()?;
+        Self::open_bank(path, resident_table_shards)
     }
 
     pub fn num_shards(&self) -> usize {
-        self.shards.len()
+        self.ranges.len()
     }
 
     pub fn storage(&self) -> Storage {
@@ -161,40 +273,109 @@ impl ShardedTable {
         self.rows as u64 * self.dim as u64 * self.storage.elem_bytes()
     }
 
+    /// Run `f` over shard `s`'s raw payload — borrowed in place on a
+    /// resident backend, one residency handle (fault or cache hit) on a
+    /// paged one. The shard-streaming read path gramians, norms and
+    /// checkpoints use.
+    #[inline]
+    pub fn with_shard_data<R>(&self, s: usize, f: impl FnOnce(&ShardData) -> R) -> R {
+        if let Some(data) = self.store.resident(s) {
+            return f(data);
+        }
+        let handle = self.store.shard(s);
+        f(&handle)
+    }
+
+    /// Mutate shard `s` wholesale: in place on a resident backend, as a
+    /// checkout → edit → write-back cycle on a paged one. The closure
+    /// receives the shard's current contents. The shard-streaming write
+    /// path checkpoint restore uses.
+    pub fn update_shard<R>(&mut self, s: usize, f: impl FnOnce(&mut ShardData) -> R) -> R {
+        if let Some(shards) = self.store.resident_mut() {
+            return f(&mut shards[s]);
+        }
+        let mut data = self.store.checkout(s);
+        let r = f(&mut data);
+        self.store.checkin(s, data);
+        r
+    }
+
+    /// Hint that shard `s` is about to be read (background prefetch on
+    /// paged storage; no-op for resident shards).
+    pub fn prefetch_shard(&self, s: usize) {
+        self.store.prefetch(s);
+    }
+
+    /// Whether this table is demand-paged out of a bank (vs. fully
+    /// resident in host RAM).
+    pub fn is_spilled(&self) -> bool {
+        self.store.resident(0).is_none()
+    }
+
+    /// Residency/fault accounting (all zero for resident storage).
+    pub fn spill_stats(&self) -> SpillStats {
+        self.store.spill_stats()
+    }
+
+    /// Bytes of table data currently resident in host memory (the whole
+    /// table for resident storage; at most the residency cap for paged).
+    pub fn resident_bytes(&self) -> u64 {
+        self.store.resident_bytes()
+    }
+
     /// Read one row into `out` (widened to f32).
     #[inline]
     pub fn read_row(&self, row: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.dim);
         let s = self.shard_of(row);
         let off = (row - self.ranges[s].start) * self.dim;
-        match &self.shards[s] {
-            ShardData::Bf16(v) => {
-                for (o, &b) in out.iter_mut().zip(&v[off..off + self.dim]) {
-                    *o = Bf16(b).to_f32();
-                }
-            }
-            ShardData::F32(v) => out.copy_from_slice(&v[off..off + self.dim]),
-        }
+        self.with_shard_data(s, |data| read_row_data(data, off, out));
     }
 
-    /// Write one row (rounding to the storage precision).
+    /// Write one row (rounding to the storage precision). On paged
+    /// storage this checks the owning shard out and back in per call —
+    /// correct but slow; bulk writers should use
+    /// [`ShardedTable::update_shard`] or per-shard views instead.
     #[inline]
     pub fn write_row(&mut self, row: usize, data: &[f32]) {
         debug_assert_eq!(data.len(), self.dim);
         let s = self.shard_of(row);
         let off = (row - self.ranges[s].start) * self.dim;
-        write_row_data(&mut self.shards[s], off, data);
+        if let Some(shards) = self.store.resident_mut() {
+            write_row_data(&mut shards[s], off, data);
+            return;
+        }
+        let mut shard = self.store.checkout(s);
+        write_row_data(&mut shard, off, data);
+        self.store.checkin(s, shard);
     }
 
     /// Split the table into one mutable view per shard, so independent
     /// shard passes can scatter concurrently without locks (Fig. 2's
-    /// layout: core μ only ever writes its own shard).
+    /// layout: core μ only ever writes its own shard). On a paged
+    /// backend each view materializes its shard lazily — checked out on
+    /// the first write, written back through the bank when the view
+    /// drops — so creating the views never faults the whole table in.
     pub fn shard_views_mut(&mut self) -> Vec<ShardViewMut<'_>> {
         let dim = self.dim;
+        if self.store.resident_mut().is_some() {
+            let shards = self.store.resident_mut().expect("checked resident above");
+            return self
+                .ranges
+                .iter()
+                .zip(shards.iter_mut())
+                .map(|(&range, data)| ShardViewMut { range, dim, state: ViewState::Direct(data) })
+                .collect();
+        }
+        let store: &dyn TableStorage = &*self.store;
         self.ranges
             .iter()
-            .zip(self.shards.iter_mut())
-            .map(|(&range, data)| ShardViewMut { range, dim, data })
+            .enumerate()
+            .map(|(shard, &range)| ShardViewMut {
+                range,
+                dim,
+                state: ViewState::Paged { store, shard, data: None },
+            })
             .collect()
     }
 
@@ -219,24 +400,20 @@ impl ShardedTable {
     }
 
     /// Shard-local gramian `H_μᵀ H_μ` (Algorithm 2 line 5); the caller
-    /// all-reduce-sums these across shards (line 6).
+    /// all-reduce-sums these across shards (line 6). Streams through one
+    /// shard handle, so a paged table's gramian never needs more than
+    /// one shard resident per worker.
     pub fn local_gramian(&self, shard: usize) -> Mat {
         let d = self.dim;
         let n = self.ranges[shard].len();
         let mut g = Mat::zeros(d, d);
         let mut row = vec![0.0f32; d];
-        for r in 0..n {
-            let off = r * d;
-            match &self.shards[shard] {
-                ShardData::Bf16(v) => {
-                    for (o, &b) in row.iter_mut().zip(&v[off..off + d]) {
-                        *o = Bf16(b).to_f32();
-                    }
-                }
-                ShardData::F32(v) => row.copy_from_slice(&v[off..off + d]),
+        self.with_shard_data(shard, |data| {
+            for r in 0..n {
+                read_row_data(data, r * d, &mut row);
+                crate::linalg::mat::syrk_update(&mut g.data, &row, 1.0);
             }
-            crate::linalg::mat::syrk_update(&mut g.data, &row, 1.0);
-        }
+        });
         crate::linalg::mat::symmetrize_upper(&mut g.data, d);
         g
     }
@@ -253,10 +430,12 @@ impl ShardedTable {
     }
 
     /// Squared Frobenius norm (for the training objective's λ‖·‖² term).
+    /// Accumulated in fixed shard order into one f64, so the value is
+    /// bitwise identical across storage backends.
     pub fn fro_norm_sq(&self) -> f64 {
         let mut acc = 0.0f64;
         for s in 0..self.num_shards() {
-            match &self.shards[s] {
+            self.with_shard_data(s, |data| match data {
                 ShardData::Bf16(v) => {
                     for &b in v {
                         let x = Bf16(b).to_f32() as f64;
@@ -268,27 +447,93 @@ impl ShardedTable {
                         acc += (x as f64) * (x as f64);
                     }
                 }
-            }
+            });
         }
         acc
     }
 
     /// Raw f32 view of a shard (copies; used by the collectives emulation).
     pub fn shard_f32(&self, shard: usize) -> Vec<f32> {
-        match &self.shards[shard] {
+        self.with_shard_data(shard, |data| match data {
             ShardData::Bf16(v) => bf16::unpack(v),
             ShardData::F32(v) => v.clone(),
-        }
+        })
     }
+
+    /// Write every shard into an `ALXTAB01` bank at `path` — the spill
+    /// half of moving a model out of host RAM (reopen demand-paged with
+    /// [`ShardedTable::open_bank`]). Element bits are persisted exactly,
+    /// so a spilled table reads back bitwise identical.
+    pub fn spill_to_bank(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        use std::io::Write;
+        let f = std::fs::File::create(path)?;
+        let mut w = TableBankWriter::create(
+            std::io::BufWriter::new(f),
+            self.rows,
+            self.dim,
+            self.num_shards(),
+            self.storage,
+        )?;
+        for s in 0..self.num_shards() {
+            self.with_shard_data(s, |data| w.write_shard(data))?;
+        }
+        let mut inner = w.finish()?;
+        inner.flush()?;
+        Ok(())
+    }
+
+    /// Open an `ALXTAB01` bank as a demand-paged table with a residency
+    /// cap of `resident_table_shards` decoded shards. The file is fully
+    /// validated before this returns.
+    pub fn open_bank(
+        path: impl AsRef<Path>,
+        resident_table_shards: usize,
+    ) -> std::io::Result<ShardedTable> {
+        let bank = TableBank::open(path)?;
+        let rows = bank.rows;
+        let dim = bank.dim;
+        let storage = bank.storage();
+        let ranges = Self::ranges_for(rows, bank.num_shards());
+        Ok(ShardedTable {
+            rows,
+            dim,
+            ranges,
+            store: Box::new(PagedTable::new(bank, resident_table_shards)),
+            storage,
+        })
+    }
+}
+
+/// How a [`ShardViewMut`] reaches its shard: a direct borrow on resident
+/// storage, or a lazily checked-out owned copy on paged storage.
+enum ViewState<'a> {
+    Direct(&'a mut ShardData),
+    Paged { store: &'a dyn TableStorage, shard: usize, data: Option<ShardData> },
 }
 
 /// Mutable view of a single shard (from [`ShardedTable::shard_views_mut`]).
 /// Writes are restricted to the shard's own row range, which is what makes
-/// lock-free parallel shard passes safe.
+/// lock-free parallel shard passes safe. On paged storage the shard is
+/// checked out on the first write and written back when the view drops.
 pub struct ShardViewMut<'a> {
     range: ShardRange,
     dim: usize,
-    data: &'a mut ShardData,
+    state: ViewState<'a>,
+}
+
+impl<'a> ShardViewMut<'a> {
+    /// The paged-storage handle + shard id this view will check out on
+    /// its first write — `None` for resident shards or once the shard is
+    /// already materialized. Lets a scheduler stage the deduplicated
+    /// background prefetch (`store.prefetch(shard)`) *outside* whatever
+    /// lock guards the view itself: prefetch may spawn a thread, which
+    /// does not belong in a claim critical section.
+    pub fn stage_handle(&self) -> Option<(&'a dyn TableStorage, usize)> {
+        match &self.state {
+            ViewState::Paged { store, shard, data } if data.is_none() => Some((*store, *shard)),
+            _ => None,
+        }
+    }
 }
 
 impl ShardViewMut<'_> {
@@ -301,7 +546,14 @@ impl ShardViewMut<'_> {
     pub fn write_row(&mut self, row: usize, data: &[f32]) {
         assert!(self.range.contains(row), "row {row} outside shard {:?}", self.range);
         assert_eq!(data.len(), self.dim);
-        write_row_data(self.data, (row - self.range.start) * self.dim, data);
+        let off = (row - self.range.start) * self.dim;
+        match &mut self.state {
+            ViewState::Direct(shard) => write_row_data(shard, off, data),
+            ViewState::Paged { store, shard, data: buf } => {
+                let buf = buf.get_or_insert_with(|| store.checkout(*shard));
+                write_row_data(buf, off, data);
+            }
+        }
     }
 
     /// Scatter solved rows into this shard (overwrite semantics, same as
@@ -311,6 +563,16 @@ impl ShardViewMut<'_> {
         assert_eq!(rows.cols, self.dim);
         for (k, &id) in ids.iter().enumerate() {
             self.write_row(id as usize, rows.row(k));
+        }
+    }
+}
+
+impl Drop for ShardViewMut<'_> {
+    fn drop(&mut self) {
+        if let ViewState::Paged { store, shard, data } = &mut self.state {
+            if let Some(d) = data.take() {
+                store.checkin(*shard, d);
+            }
         }
     }
 }
@@ -446,5 +708,108 @@ mod tests {
         for r in 0..3 {
             assert!(t.range(t.shard_of(r)).contains(r));
         }
+    }
+
+    fn tab_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("alx_shtab_{}_{}.alxtab", tag, std::process::id()))
+    }
+
+    #[test]
+    fn spilled_table_roundtrips_bitwise() {
+        let mut rng = Pcg64::new(11);
+        for storage in [Storage::F32, Storage::Bf16] {
+            let t = ShardedTable::randn(53, 6, 5, storage, &mut rng);
+            let path = tab_path(&format!("rt{}", storage.elem_bytes()));
+            t.spill_to_bank(&path).unwrap();
+            let paged = ShardedTable::open_bank(&path, 2).unwrap();
+            assert_eq!(paged.rows, t.rows);
+            assert_eq!(paged.dim, t.dim);
+            assert_eq!(paged.num_shards(), t.num_shards());
+            assert_eq!(paged.storage(), t.storage());
+            assert_eq!(paged.to_dense().data, t.to_dense().data, "{storage:?}");
+            let s = paged.spill_stats();
+            assert!(s.bank_bytes > 0);
+            assert!(s.shard_faults > 0);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn randn_spilled_matches_resident_randn_bitwise() {
+        for storage in [Storage::F32, Storage::Bf16] {
+            let mut rng_a = Pcg64::new(23);
+            let mut rng_b = Pcg64::new(23);
+            let resident = ShardedTable::randn(41, 6, 5, storage, &mut rng_a);
+            let path = tab_path(&format!("rns{}", storage.elem_bytes()));
+            let spilled =
+                ShardedTable::randn_spilled(41, 6, 5, storage, &mut rng_b, &path, 2).unwrap();
+            assert_eq!(spilled.to_dense().data, resident.to_dense().data, "{storage:?}");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn paged_views_write_back_through_the_bank() {
+        let mut rng = Pcg64::new(13);
+        for storage in [Storage::F32, Storage::Bf16] {
+            let reference = ShardedTable::zeros(23, 5, 4, storage);
+            let path = tab_path(&format!("wb{}", storage.elem_bytes()));
+            reference.spill_to_bank(&path).unwrap();
+            let mut resident = ShardedTable::zeros(23, 5, 4, storage);
+            let mut paged = ShardedTable::open_bank(&path, 1).unwrap();
+            let data = Mat::randn(23, 5, 1.0, &mut rng);
+            // Write only every other row, so the write-back must merge
+            // with (not replace) the untouched rows.
+            for table in [&mut resident, &mut paged] {
+                for mut view in table.shard_views_mut() {
+                    let r = view.range();
+                    for id in (r.start..r.end).step_by(2) {
+                        view.write_row(id, data.row(id));
+                    }
+                }
+            }
+            assert_eq!(paged.to_dense().data, resident.to_dense().data, "{storage:?}");
+            // A fresh attach to the same bank sees the writes.
+            let reopened = ShardedTable::open_bank(&path, 2).unwrap();
+            assert_eq!(reopened.to_dense().data, resident.to_dense().data);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn paged_write_row_and_scatter_work() {
+        let t = ShardedTable::zeros(20, 3, 4, Storage::F32);
+        let path = tab_path("wr");
+        t.spill_to_bank(&path).unwrap();
+        let mut paged = ShardedTable::open_bank(&path, 1).unwrap();
+        paged.write_row(13, &[1.5, -2.25, 3.75]);
+        paged.scatter(&[2, 19], &Mat::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        let mut out = [0.0f32; 3];
+        paged.read_row(13, &mut out);
+        assert_eq!(out, [1.5, -2.25, 3.75]);
+        paged.read_row(19, &mut out);
+        assert_eq!(out, [4.0, 5.0, 6.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn paged_update_shard_streams() {
+        let mut rng = Pcg64::new(17);
+        let t = ShardedTable::randn(24, 4, 3, Storage::F32, &mut rng);
+        let path = tab_path("upd");
+        t.spill_to_bank(&path).unwrap();
+        let mut paged = ShardedTable::open_bank(&path, 1).unwrap();
+        for s in 0..paged.num_shards() {
+            paged.update_shard(s, |data| {
+                if let ShardData::F32(v) = data {
+                    for x in v.iter_mut() {
+                        *x *= 2.0;
+                    }
+                }
+            });
+        }
+        let want: Vec<f32> = t.to_dense().data.iter().map(|x| x * 2.0).collect();
+        assert_eq!(paged.to_dense().data, want);
+        let _ = std::fs::remove_file(&path);
     }
 }

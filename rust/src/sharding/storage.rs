@@ -1,0 +1,460 @@
+//! Pluggable shard storage behind [`super::ShardedTable`] — the
+//! table-side twin of [`crate::sparse::CsrStorage`].
+//!
+//! The ALS epoch touches the embedding tables one uniform shard at a
+//! time on the write side (shard pass μ scatters only into table shard
+//! μ, paper Fig. 2) and row-at-a-time on the read side (gathers,
+//! gramians, the objective), so where a table's shards *live* is a
+//! storage policy, not a trainer concern. A [`TableStorage`] backend
+//! hands out decoded shards:
+//!
+//! * [`ResidentShards`] — every shard a host-RAM `Vec`, borrowed
+//!   directly. The default; exactly the pre-spill behaviour, with zero
+//!   indirection on the fused-gather hot path.
+//! * [`PagedTable`] — shards live in a read-write-mapped `ALXTAB01` bank
+//!   and materialize on demand through a residency manager: an LRU of at
+//!   most `resident_table_shards` decoded shards plus deduplicated
+//!   background prefetch of the shard a pass is about to check out.
+//!   Mutation is checkout/checkin: a shard pass checks its shard out
+//!   once, scatters into the owned copy, and the check-in writes the
+//!   exact element bits back through the mapping — which is what keeps
+//!   spilled-model training bitwise identical to resident.
+//!
+//! Steady-state memory of a paged table is bounded by the residency cap
+//! plus the shards currently checked out by active passes (at most the
+//! shard-worker count), never by `rows × dim`.
+
+use super::bank::TableBank;
+use super::ShardData;
+use crate::sparse::SpillStats;
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Where the row-range shards of a [`super::ShardedTable`] live.
+///
+/// Contract: a backend is either *resident* (the `resident`/`resident_mut`
+/// accessors return `Some`, and the table mutates shards in place) or
+/// *paged* (they return `None`, and mutation goes through
+/// [`TableStorage::checkout`]/[`TableStorage::checkin`]). The decoded
+/// bytes of a shard are identical whichever backend serves them.
+pub trait TableStorage: Send + Sync + std::fmt::Debug {
+    fn num_shards(&self) -> usize;
+
+    /// Direct borrow of shard `s` for resident backends (`None` → read
+    /// through [`TableStorage::shard`] handles).
+    fn resident(&self, s: usize) -> Option<&ShardData>;
+
+    /// Direct mutable borrow of every shard for resident backends
+    /// (`None` → mutate through checkout/checkin).
+    fn resident_mut(&mut self) -> Option<&mut [ShardData]>;
+
+    /// Materialized handle to shard `s` (may fault it in from disk).
+    fn shard(&self, s: usize) -> Arc<ShardData>;
+
+    /// Hint that shard `s` will be requested soon (no-op by default).
+    fn prefetch(&self, _s: usize) {}
+
+    /// Check shard `s` out for mutation: its current contents, owned.
+    /// Resident backends never see this call (the table mutates their
+    /// shards in place through `resident_mut`).
+    fn checkout(&self, s: usize) -> ShardData;
+
+    /// Check a mutated shard back in (write-through for paged backends).
+    fn checkin(&self, s: usize, data: ShardData);
+
+    /// Residency/fault accounting (all zero for resident backends).
+    fn spill_stats(&self) -> SpillStats {
+        SpillStats::default()
+    }
+
+    /// Bytes currently resident in host memory.
+    fn resident_bytes(&self) -> u64;
+
+    fn clone_box(&self) -> Box<dyn TableStorage>;
+}
+
+/// The default backend: every shard resident in host RAM.
+#[derive(Clone, Debug, Default)]
+pub struct ResidentShards {
+    shards: Vec<ShardData>,
+}
+
+impl ResidentShards {
+    pub fn new(shards: Vec<ShardData>) -> ResidentShards {
+        ResidentShards { shards }
+    }
+}
+
+impl TableStorage for ResidentShards {
+    fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn resident(&self, s: usize) -> Option<&ShardData> {
+        Some(&self.shards[s])
+    }
+
+    fn resident_mut(&mut self) -> Option<&mut [ShardData]> {
+        Some(&mut self.shards)
+    }
+
+    fn shard(&self, s: usize) -> Arc<ShardData> {
+        // Cold path only — every reader prefers the `resident` borrow.
+        Arc::new(self.shards[s].clone())
+    }
+
+    fn checkout(&self, _s: usize) -> ShardData {
+        unreachable!("resident table shards mutate in place")
+    }
+
+    fn checkin(&self, _s: usize, _data: ShardData) {
+        unreachable!("resident table shards mutate in place")
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.shards.iter().map(|d| d.memory_bytes()).sum()
+    }
+
+    fn clone_box(&self) -> Box<dyn TableStorage> {
+        Box::new(self.clone())
+    }
+}
+
+/// LRU residency state of a [`PagedTable`]: front = most recently used.
+struct TableResidency {
+    resident: VecDeque<(usize, Arc<ShardData>)>,
+    loading: HashSet<usize>,
+}
+
+struct PagedShared {
+    /// The mapped bank. Behind a mutex because check-ins write through
+    /// the mapping; decodes and write-backs are short memcpy-speed
+    /// critical sections and never nest with the residency lock.
+    bank: Mutex<TableBank>,
+    cap: usize,
+    num_shards: usize,
+    file_bytes: u64,
+    state: Mutex<TableResidency>,
+    loaded: Condvar,
+    faults: AtomicU64,
+    hits: AtomicU64,
+    prefetches: AtomicU64,
+}
+
+impl PagedShared {
+    /// Insert a freshly decoded shard at the MRU position unless one is
+    /// already resident, and evict past the cap. Evicted handles still in
+    /// use elsewhere stay alive until their last `Arc` drops — eviction
+    /// never invalidates a reader.
+    fn insert_fresh(&self, p: usize, data: Arc<ShardData>) {
+        let mut g = self.state.lock().unwrap();
+        g.loading.remove(&p);
+        if !g.resident.iter().any(|(q, _)| *q == p) {
+            g.resident.push_front((p, data));
+            while g.resident.len() > self.cap {
+                g.resident.pop_back();
+            }
+        }
+        drop(g);
+        self.loaded.notify_all();
+    }
+
+    /// Insert a checked-in shard, *replacing* any stale resident copy —
+    /// after a write-back the cache must serve the new contents.
+    fn insert_replace(&self, p: usize, data: Arc<ShardData>) {
+        let mut g = self.state.lock().unwrap();
+        if let Some(pos) = g.resident.iter().position(|(q, _)| *q == p) {
+            g.resident.remove(pos);
+        }
+        g.resident.push_front((p, data));
+        while g.resident.len() > self.cap {
+            g.resident.pop_back();
+        }
+        drop(g);
+        self.loaded.notify_all();
+    }
+
+    /// Decode shard `p` from the mapped bank.
+    fn load(&self, p: usize) -> Arc<ShardData> {
+        let bank = self.bank.lock().unwrap();
+        Arc::new(bank.load_shard(p))
+    }
+}
+
+/// Clears a shard's in-flight `loading` mark when dropped, so a panic
+/// mid-decode wakes the condvar waiters instead of wedging them forever
+/// (they retry and surface the failure on their own thread). The
+/// successful path's insert already removed the mark; the second removal
+/// is a no-op.
+struct TableLoadingGuard<'a> {
+    shared: &'a PagedShared,
+    p: usize,
+}
+
+impl Drop for TableLoadingGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = self.shared.state.lock().unwrap();
+        g.loading.remove(&self.p);
+        drop(g);
+        self.shared.loaded.notify_all();
+    }
+}
+
+/// Demand-paged table storage over a read-write-mapped `ALXTAB01` bank.
+#[derive(Clone)]
+pub struct PagedTable {
+    shared: Arc<PagedShared>,
+}
+
+impl PagedTable {
+    /// Wrap an opened bank with a residency cap of `resident_table_shards`
+    /// decoded shards (clamped to at least 1).
+    pub fn new(bank: TableBank, resident_table_shards: usize) -> PagedTable {
+        let num_shards = bank.num_shards();
+        let file_bytes = bank.file_bytes();
+        PagedTable {
+            shared: Arc::new(PagedShared {
+                bank: Mutex::new(bank),
+                cap: resident_table_shards.max(1),
+                num_shards,
+                file_bytes,
+                state: Mutex::new(TableResidency {
+                    resident: VecDeque::new(),
+                    loading: HashSet::new(),
+                }),
+                loaded: Condvar::new(),
+                faults: AtomicU64::new(0),
+                hits: AtomicU64::new(0),
+                prefetches: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Max decoded shards resident at once.
+    pub fn resident_cap(&self) -> usize {
+        self.shared.cap
+    }
+}
+
+impl std::fmt::Debug for PagedTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedTable")
+            .field("shards", &self.shared.num_shards)
+            .field("cap", &self.shared.cap)
+            .finish()
+    }
+}
+
+impl TableStorage for PagedTable {
+    fn num_shards(&self) -> usize {
+        self.shared.num_shards
+    }
+
+    fn resident(&self, _s: usize) -> Option<&ShardData> {
+        None
+    }
+
+    fn resident_mut(&mut self) -> Option<&mut [ShardData]> {
+        None
+    }
+
+    fn shard(&self, p: usize) -> Arc<ShardData> {
+        let s = &*self.shared;
+        let mut g = s.state.lock().unwrap();
+        loop {
+            if let Some(pos) = g.resident.iter().position(|(q, _)| *q == p) {
+                let entry = g.resident.remove(pos).unwrap();
+                let data = Arc::clone(&entry.1);
+                g.resident.push_front(entry);
+                s.hits.fetch_add(1, Ordering::Relaxed);
+                return data;
+            }
+            if g.loading.contains(&p) {
+                // A prefetch (or another reader) is already decoding it.
+                g = s.loaded.wait(g).unwrap();
+                continue;
+            }
+            // Fault: decode synchronously on this thread.
+            g.loading.insert(p);
+            drop(g);
+            let guard = TableLoadingGuard { shared: s, p };
+            let data = s.load(p);
+            s.faults.fetch_add(1, Ordering::Relaxed);
+            s.insert_fresh(p, Arc::clone(&data));
+            drop(guard);
+            return data;
+        }
+    }
+
+    fn prefetch(&self, p: usize) {
+        let s = &*self.shared;
+        {
+            let mut g = s.state.lock().unwrap();
+            if g.loading.contains(&p) || g.resident.iter().any(|(q, _)| *q == p) {
+                return;
+            }
+            g.loading.insert(p);
+        }
+        s.prefetches.fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::clone(&self.shared);
+        std::thread::spawn(move || {
+            let guard = TableLoadingGuard { shared: &shared, p };
+            let data = shared.load(p);
+            shared.insert_fresh(p, data);
+            drop(guard);
+        });
+    }
+
+    fn checkout(&self, s: usize) -> ShardData {
+        // A checkout is a read (fault or hit) plus an owned copy the
+        // caller mutates; the matching checkin writes it back.
+        let handle = self.shard(s);
+        (*handle).clone()
+    }
+
+    fn checkin(&self, s: usize, data: ShardData) {
+        {
+            let mut bank = self.shared.bank.lock().unwrap();
+            // Shapes are fixed by construction; a write-back can only
+            // fail on the non-unix owned-buffer fallback's file IO, and
+            // silently dropping updates would corrupt training.
+            bank.store_shard(s, &data).expect("table bank write-back failed");
+        }
+        self.shared.insert_replace(s, Arc::new(data));
+    }
+
+    fn spill_stats(&self) -> SpillStats {
+        let s = &*self.shared;
+        SpillStats {
+            shard_faults: s.faults.load(Ordering::Relaxed),
+            prefetch_hits: s.hits.load(Ordering::Relaxed),
+            prefetches: s.prefetches.load(Ordering::Relaxed),
+            bank_bytes: s.file_bytes,
+        }
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        let g = self.shared.state.lock().unwrap();
+        g.resident.iter().map(|(_, d)| d.memory_bytes()).sum()
+    }
+
+    fn clone_box(&self) -> Box<dyn TableStorage> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ShardedTable, Storage};
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn tab_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("alx_tabstore_{}_{}.alxtab", tag, std::process::id()))
+    }
+
+    fn paged(rows: usize, shards: usize, cap: usize, tag: &str) -> (ShardedTable, PagedTable) {
+        let mut rng = Pcg64::new(7);
+        let t = ShardedTable::randn(rows, 4, shards, Storage::F32, &mut rng);
+        let path = tab_path(tag);
+        t.spill_to_bank(&path).unwrap();
+        let store = PagedTable::new(TableBank::open(&path).unwrap(), cap);
+        let _ = std::fs::remove_file(&path); // unix keeps the mapping alive
+        (t, store)
+    }
+
+    #[test]
+    fn paged_serves_identical_shards() {
+        let (t, store) = paged(40, 5, 2, "ident");
+        for p in 0..5 {
+            let got = store.shard(p);
+            t.with_shard_data(p, |want| assert_eq!(&*got, want, "shard {p}"));
+        }
+    }
+
+    #[test]
+    fn lru_evicts_past_the_cap_and_counts_faults() {
+        let (_, store) = paged(60, 6, 2, "lru");
+        for p in 0..6 {
+            let _ = store.shard(p);
+        }
+        let s = store.spill_stats();
+        assert_eq!(s.shard_faults, 6);
+        assert_eq!(s.prefetch_hits, 0);
+        assert!(s.bank_bytes > 0);
+        // Re-touching the MRU shard hits; an evicted one faults again.
+        let _ = store.shard(5);
+        assert_eq!(store.spill_stats().prefetch_hits, 1);
+        let _ = store.shard(0);
+        assert_eq!(store.spill_stats().shard_faults, 7);
+        assert!(store.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn prefetch_stages_a_shard_for_a_hit() {
+        let (t, store) = paged(30, 3, 2, "prefetch");
+        store.prefetch(1);
+        let got = store.shard(1);
+        t.with_shard_data(1, |want| assert_eq!(&*got, want));
+        let s = store.spill_stats();
+        assert_eq!(s.prefetches, 1);
+        assert_eq!(s.shard_faults + s.prefetch_hits, 1);
+        // Idempotent while resident or loading.
+        store.prefetch(1);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(store.spill_stats().prefetches <= 2);
+    }
+
+    #[test]
+    fn checkout_checkin_roundtrips_mutation() {
+        let (_, store) = paged(24, 4, 1, "rw");
+        let mut data = store.checkout(2);
+        if let ShardData::F32(v) = &mut data {
+            for x in v.iter_mut() {
+                *x = 9.25;
+            }
+        }
+        store.checkin(2, data);
+        // Served from cache...
+        if let ShardData::F32(v) = &*store.shard(2) {
+            assert!(v.iter().all(|&x| x == 9.25));
+        } else {
+            panic!("expected f32 shard");
+        }
+        // ...and from the bank after eviction.
+        let _ = store.shard(0);
+        let _ = store.shard(1);
+        if let ShardData::F32(v) = &*store.shard(2) {
+            assert!(v.iter().all(|&x| x == 9.25));
+        } else {
+            panic!("expected f32 shard");
+        }
+    }
+
+    #[test]
+    fn concurrent_readers_agree() {
+        let (t, store) = paged(80, 8, 2, "conc");
+        let store = Arc::new(store);
+        let handles: Vec<_> = (0..4)
+            .map(|w| {
+                let store = Arc::clone(&store);
+                std::thread::spawn(move || {
+                    for round in 0..3 {
+                        for p in 0..8 {
+                            let shard = store.shard((p + w) % 8);
+                            assert!(shard.elems() > 0, "round {round}");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for p in 0..8 {
+            let got = store.shard(p);
+            t.with_shard_data(p, |want| assert_eq!(&*got, want));
+        }
+    }
+}

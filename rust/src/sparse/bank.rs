@@ -45,6 +45,14 @@ const MAGIC_BYTES: usize = 16;
 const HEADER_BYTES: usize = MAGIC_BYTES + 4 * 8;
 const DIR_ENTRY_BYTES: usize = 3 * 8;
 
+/// Default scratch bound for the multi-writer transpose derivation
+/// ([`CsrBank::write_transpose_bank_budgeted`]) when the caller has no
+/// ingest budget configured: spill mode promises bounded memory, so an
+/// unset budget must not mean "materialize the whole transpose in one
+/// group" — 256 MiB still groups many transpose shards per scan on
+/// typical datasets while keeping the bound honest.
+pub const DEFAULT_TRANSPOSE_SCRATCH_BYTES: u64 = 256 << 20;
+
 /// Rows-per-shard of the uniform partition every bank uses (shared with
 /// [`super::ShardedCsr`]).
 pub(crate) fn per_for(rows: usize, num_shards: usize) -> usize {
@@ -373,62 +381,126 @@ impl CsrBank {
         Csr { rows: seg.rows, cols: self.cols, indptr, indices, values }
     }
 
+    /// Raw little-endian bytes of shard `p`'s column-index array — lets
+    /// the transpose derivation count entries per column straight off the
+    /// map, without decoding indptr/values into owned vectors.
+    fn shard_index_bytes(&self, p: usize) -> &[u8] {
+        let seg = self.dir[p];
+        let idx_off = seg.offset + (seg.rows + 1) * 8;
+        &self.map.bytes()[idx_off..idx_off + seg.nnz * 4]
+    }
+
     /// Write this bank's transpose as another bank of `num_pieces`
-    /// column-range shards, one transpose shard resident at a time.
+    /// column-range shards (unbounded scratch: every transpose shard is
+    /// built in one scatter scan). See
+    /// [`CsrBank::write_transpose_bank_budgeted`].
+    pub fn write_transpose_bank(&self, path: impl AsRef<Path>, num_pieces: usize) -> Result<()> {
+        self.write_transpose_bank_budgeted(path, num_pieces, 0)
+    }
+
+    /// Write this bank's transpose as another bank of `num_pieces`
+    /// column-range shards, as a counting pass plus a **single-scan
+    /// multi-writer scatter**: transpose shards are built in consecutive
+    /// groups whose combined scratch fits `budget_bytes` (0 = unbounded →
+    /// all shards in one group), each group filled by one scan of the
+    /// mapped source bank with one open segment per shard in the group. A
+    /// tight budget degrades toward the old shard-at-a-time derivation —
+    /// never below one shard per scan — so peak memory stays O(cols)
+    /// counts + one source shard + the budgeted group scratch.
     ///
     /// Entries scatter in ascending global source-row order, so each
-    /// transpose row is sorted by source row — bitwise identical to
-    /// [`super::ShardedCsr::transpose`] on the same matrix. Peak memory
-    /// is O(cols) counts + one source shard + the transpose shard under
-    /// construction, at the cost of `num_pieces` scans over the mapped
-    /// source bank (sequential page-cache reads).
-    pub fn write_transpose_bank(&self, path: impl AsRef<Path>, num_pieces: usize) -> Result<()> {
+    /// transpose row is sorted by source row; the output bytes are
+    /// identical for every budget, and identical to spilling
+    /// [`super::ShardedCsr::transpose`] of the same matrix.
+    pub fn write_transpose_bank_budgeted(
+        &self,
+        path: impl AsRef<Path>,
+        num_pieces: usize,
+        budget_bytes: u64,
+    ) -> Result<()> {
         let t_rows = self.cols;
         let num_pieces = num_pieces.max(1);
         let t_per = per_for(t_rows, num_pieces);
 
-        // Counting pass: entries per transpose row (= per source column).
+        // Counting pass: entries per transpose row (= per source column),
+        // read straight off the mapped index arrays.
         let mut counts = vec![0u64; t_rows];
         for p in 0..self.num_shards() {
-            let s = self.load_shard(p);
-            for &c in &s.indices {
-                counts[c as usize] += 1;
+            for c in self.shard_index_bytes(p).chunks_exact(4) {
+                counts[u32::from_le_bytes(c.try_into().unwrap()) as usize] += 1;
             }
         }
 
         let f = std::fs::File::create(path)?;
         let mut w = BankWriter::create(std::io::BufWriter::new(f), t_rows, self.rows, num_pieces)?;
-        for tp in 0..num_pieces {
-            let (c0, c1) = shard_range(t_rows, t_per, tp);
-            let mut indptr = Vec::with_capacity(c1 - c0 + 1);
-            indptr.push(0usize);
-            let mut total = 0usize;
-            for c in c0..c1 {
-                total += counts[c] as usize;
-                indptr.push(total);
+        let mut group_start = 0usize;
+        while group_start < num_pieces {
+            // Grow the group while its build scratch fits the budget
+            // (indptr + indices + values + cursors per shard).
+            let mut group_end = group_start;
+            let mut scratch = 0u128;
+            while group_end < num_pieces {
+                let (c0, c1) = shard_range(t_rows, t_per, group_end);
+                let nnz: u128 = counts[c0..c1].iter().map(|&c| c as u128).sum();
+                let piece_scratch = (c1 - c0 + 1) as u128 * 8 + nnz * 8 + (c1 - c0) as u128 * 8;
+                if group_end > group_start
+                    && budget_bytes > 0
+                    && scratch + piece_scratch > budget_bytes as u128
+                {
+                    break;
+                }
+                scratch += piece_scratch;
+                group_end += 1;
             }
-            let mut indices = vec![0u32; total];
-            let mut values = vec![0.0f32; total];
-            let mut cursor = vec![0usize; c1 - c0];
+            let g0 = shard_range(t_rows, t_per, group_start).0;
+            let g1 = shard_range(t_rows, t_per, group_end - 1).1;
+
+            // Open one segment per transpose shard in the group: exact
+            // local indptr from the counts, exactly-sized payloads.
+            let mut pieces: Vec<Csr> = Vec::with_capacity(group_end - group_start);
+            for tp in group_start..group_end {
+                let (c0, c1) = shard_range(t_rows, t_per, tp);
+                let mut indptr = Vec::with_capacity(c1 - c0 + 1);
+                indptr.push(0usize);
+                let mut total = 0usize;
+                for c in c0..c1 {
+                    total += counts[c] as usize;
+                    indptr.push(total);
+                }
+                pieces.push(Csr {
+                    rows: c1 - c0,
+                    cols: self.rows,
+                    indptr,
+                    indices: vec![0u32; total],
+                    values: vec![0.0f32; total],
+                });
+            }
+
+            // The group's single scatter scan over the source shards.
+            let mut cursor = vec![0usize; g1 - g0];
             for p in 0..self.num_shards() {
                 let s = self.load_shard(p);
                 let base = self.shard_range(p).0;
                 for r in 0..s.rows {
                     for (&c, &v) in s.row_indices(r).iter().zip(s.row_values(r)) {
                         let c = c as usize;
-                        if c < c0 || c >= c1 {
+                        if c < g0 || c >= g1 {
                             continue;
                         }
-                        let local = c - c0;
-                        let off = indptr[local] + cursor[local];
-                        indices[off] = (base + r) as u32;
-                        values[off] = v;
-                        cursor[local] += 1;
+                        let tp = (c / t_per).min(num_pieces - 1);
+                        let piece = &mut pieces[tp - group_start];
+                        let local = c - (tp * t_per).min(t_rows);
+                        let off = piece.indptr[local] + cursor[c - g0];
+                        piece.indices[off] = (base + r) as u32;
+                        piece.values[off] = v;
+                        cursor[c - g0] += 1;
                     }
                 }
             }
-            let piece = Csr { rows: c1 - c0, cols: self.rows, indptr, indices, values };
-            w.write_shard(&piece)?;
+            for piece in &pieces {
+                w.write_shard(piece)?;
+            }
+            group_start = group_end;
         }
         let mut inner = w.finish()?;
         inner.flush()?;
@@ -510,6 +582,33 @@ mod tests {
             }
             let _ = std::fs::remove_file(&path);
             let _ = std::fs::remove_file(&tpath);
+        }
+    }
+
+    #[test]
+    fn budgeted_transpose_is_byte_identical_for_every_budget() {
+        // The multi-writer scatter must produce exactly the bytes the
+        // old shard-at-a-time derivation did — which are exactly the
+        // bytes of spilling the in-memory transpose.
+        let m = sample(33, 19, 9);
+        for shards in [1usize, 3, 7] {
+            let path = write_bank(&m, shards, &format!("bt{shards}"));
+            let bank = CsrBank::open(&path).unwrap();
+            let ref_path = tmp(&format!("btref{shards}"));
+            ShardedCsr::from_csr(&m, shards).transpose(shards).spill_to_bank(&ref_path).unwrap();
+            let want = std::fs::read(&ref_path).unwrap();
+            // budget 0 = unbounded (single scan); 1 byte forces one shard
+            // per scan (the old behaviour); the middle sizes hit partial
+            // groupings.
+            for budget in [0u64, 1, 256, 1024, 1 << 20] {
+                let tpath = tmp(&format!("btout{shards}_{budget}"));
+                bank.write_transpose_bank_budgeted(&tpath, shards, budget).unwrap();
+                let got = std::fs::read(&tpath).unwrap();
+                assert_eq!(got, want, "shards={shards} budget={budget}");
+                let _ = std::fs::remove_file(&tpath);
+            }
+            let _ = std::fs::remove_file(&ref_path);
+            let _ = std::fs::remove_file(&path);
         }
     }
 

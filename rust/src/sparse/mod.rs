@@ -12,7 +12,7 @@ pub mod shards;
 pub mod split;
 pub mod storage;
 
-pub use bank::{BankWriter, CsrBank, ALXBANK01_MAGIC};
+pub use bank::{BankWriter, CsrBank, ALXBANK01_MAGIC, DEFAULT_TRANSPOSE_SCRATCH_BYTES};
 pub use chunked::{
     write_chunked, ChunkedHeader, ChunkedReader, ChunkedWriter, CsrChunk, ALXCSR02_MAGIC,
     DEFAULT_CHUNK_ROWS,

@@ -1,4 +1,7 @@
-//! Read-only memory mapping for the `ALXBANK01` shard banks.
+//! Memory mapping for the on-disk banks: read-only [`Mmap`] for the
+//! `ALXBANK01` matrix banks, shared read-write [`MmapMut`] for the
+//! `ALXTAB01` embedding-table banks (whose shards are written back in
+//! place after every pass).
 //!
 //! The build environment is offline (no `memmap2`), so the unix mapping is
 //! a minimal FFI binding to `mmap`/`munmap` — std already links libc, no
@@ -31,6 +34,8 @@ mod sys {
     use core::ffi::{c_int, c_void};
 
     pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
     pub const MAP_PRIVATE: c_int = 2;
 
     extern "C" {
@@ -137,6 +142,146 @@ impl Drop for Mmap {
     }
 }
 
+/// A shared read-write mapping of a whole file — the mutable counterpart
+/// of [`Mmap`], used by the `ALXTAB01` table banks whose shard segments
+/// are written back in place after each training pass.
+///
+/// On unix this is `MAP_SHARED` with `PROT_READ | PROT_WRITE`: writes
+/// through [`MmapMut::bytes_mut`] are immediately visible to subsequent
+/// reads of the same mapping (and of any later mapping of the file) and
+/// reach the backing file without an explicit flush. The non-unix
+/// fallback keeps an owned buffer and writes dirty ranges back through
+/// the file handle via [`MmapMut::flush_range`].
+pub struct MmapMut {
+    #[cfg(unix)]
+    ptr: *mut core::ffi::c_void,
+    #[cfg(not(unix))]
+    buf: Vec<u8>,
+    #[cfg(not(unix))]
+    file: File,
+    len: usize,
+}
+
+// The mapping is only written through `&mut self`, so exclusive access is
+// enforced by the borrow checker exactly as for an owned buffer.
+unsafe impl Send for MmapMut {}
+unsafe impl Sync for MmapMut {}
+
+impl MmapMut {
+    /// Map `file` read-write in its entirety (the file must be opened
+    /// with both read and write access). Zero-length files map to an
+    /// empty view.
+    #[cfg(unix)]
+    pub fn map_mut(file: &File) -> Result<MmapMut> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len)
+            .map_err(|_| Error::new(ErrorKind::InvalidData, "file exceeds the address space"))?;
+        if len == 0 {
+            return Ok(MmapMut { ptr: core::ptr::null_mut(), len: 0 });
+        }
+        // SAFETY: a fresh shared read-write mapping of a file we hold open;
+        // the pointer is owned by this MmapMut and unmapped exactly once.
+        let ptr = unsafe {
+            sys::mmap(
+                core::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(Error::last_os_error());
+        }
+        Ok(MmapMut { ptr, len })
+    }
+
+    /// Portable fallback: read the whole file into an owned buffer and
+    /// keep the handle for [`MmapMut::flush_range`] write-backs.
+    #[cfg(not(unix))]
+    pub fn map_mut(file: &File) -> Result<MmapMut> {
+        use std::io::Read;
+        let mut buf = Vec::new();
+        let mut f = file;
+        f.read_to_end(&mut buf)?;
+        let len = buf.len();
+        Ok(MmapMut { buf, file: file.try_clone()?, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[cfg(unix)]
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr/len come from a successful mmap that lives as long
+        // as self; writes require `&mut self`, so no alias can race this.
+        unsafe { core::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    #[cfg(not(unix))]
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    #[cfg(unix)]
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        if self.len == 0 {
+            return &mut [];
+        }
+        // SAFETY: exclusive borrow of a mapping writable by construction.
+        unsafe { core::slice::from_raw_parts_mut(self.ptr as *mut u8, self.len) }
+    }
+
+    #[cfg(not(unix))]
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.buf
+    }
+
+    /// Persist `[off, off + len)` to the backing file. A no-op on unix
+    /// (the shared mapping *is* the file); the owned-buffer fallback
+    /// writes the range back through the file handle.
+    #[cfg(unix)]
+    pub fn flush_range(&mut self, _off: usize, _len: usize) -> Result<()> {
+        Ok(())
+    }
+
+    #[cfg(not(unix))]
+    pub fn flush_range(&mut self, off: usize, len: usize) -> Result<()> {
+        use std::io::{Seek, SeekFrom, Write};
+        self.file.seek(SeekFrom::Start(off as u64))?;
+        self.file.write_all(&self.buf[off..off + len])?;
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for MmapMut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapMut").field("len", &self.len).finish()
+    }
+}
+
+#[cfg(unix)]
+impl Drop for MmapMut {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: exact pointer/length pair returned by mmap.
+            unsafe {
+                sys::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +312,24 @@ mod tests {
         let m = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
         assert!(m.is_empty());
         assert_eq!(m.bytes(), &[] as &[u8]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mut_mapping_writes_reach_later_readers() {
+        let path = tmp("rw", &[0u8; 256]);
+        {
+            let f = std::fs::OpenOptions::new().read(true).write(true).open(&path).unwrap();
+            let mut m = MmapMut::map_mut(&f).unwrap();
+            assert_eq!(m.len(), 256);
+            m.bytes_mut()[10..14].copy_from_slice(&[1, 2, 3, 4]);
+            m.flush_range(10, 4).unwrap();
+            // The same mapping sees its own writes.
+            assert_eq!(&m.bytes()[10..14], &[1, 2, 3, 4]);
+        }
+        // A fresh read-only mapping of the file sees them too.
+        let m2 = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
+        assert_eq!(&m2[10..14], &[1, 2, 3, 4]);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,9 +1,10 @@
 //! Hostile-input hardening: corrupt, truncated and lying binary files
 //! must surface as `Err` — never a panic, and never an allocation larger
-//! than what the stream length actually supports. Covers all three
-//! on-disk formats: `ALXCSR01`, `ALXCSR02` and the shard-major
-//! `ALXBANK01` bank.
+//! than what the stream length actually supports. Covers all four
+//! on-disk formats: `ALXCSR01`, `ALXCSR02`, the shard-major `ALXBANK01`
+//! matrix bank and the `ALXTAB01` embedding-table bank.
 
+use alx::sharding::{ShardedTable, Storage, TableBank};
 use alx::sparse::{write_chunked, ChunkedReader, Csr, CsrBank, ShardedCsr};
 use alx::util::Pcg64;
 
@@ -299,6 +300,125 @@ fn bank_single_byte_corruption_never_panics() {
                 assert!(
                     s.indices.iter().all(|&c| (c as usize) < s.cols),
                     "byte {pos}: out-of-range column survived"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- ALXTAB01
+
+/// Write a valid table bank and return its raw bytes (via a scratch file
+/// — table banks are opened by mmap, not from a stream).
+fn tab_bytes(rows: usize, dim: usize, shards: usize, storage: Storage, tag: &str) -> Vec<u8> {
+    let mut rng = Pcg64::new(rows as u64 ^ 0x7ab5);
+    let t = ShardedTable::randn(rows, dim, shards, storage, &mut rng);
+    let path = tab_scratch(tag);
+    t.spill_to_bank(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+fn tab_scratch(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("alx_corrupt_tab_{}_{}.alxtab", tag, std::process::id()))
+}
+
+/// `TableBank::open` on a raw byte image (round-tripped through a file).
+fn open_tab(bytes: &[u8], tag: &str) -> std::io::Result<TableBank> {
+    let path = tab_scratch(tag);
+    std::fs::write(&path, bytes).unwrap();
+    let out = TableBank::open(&path);
+    let _ = std::fs::remove_file(&path);
+    out
+}
+
+#[test]
+fn tab_roundtrips_clean() {
+    for storage in [Storage::F32, Storage::Bf16] {
+        let bytes = tab_bytes(21, 4, 3, storage, "clean");
+        let bank = open_tab(&bytes, "clean_open").unwrap();
+        assert_eq!(bank.rows, 21);
+        assert_eq!(bank.dim, 4);
+        assert_eq!(bank.num_shards(), 3);
+        assert_eq!(bank.storage(), storage);
+        for p in 0..3 {
+            let (start, end) = bank.shard_range(p);
+            assert_eq!(bank.load_shard(p).elems(), (end - start) * 4);
+        }
+    }
+}
+
+#[test]
+fn tab_truncation_at_every_byte_is_an_error() {
+    let bytes = tab_bytes(13, 3, 4, Storage::Bf16, "trunc");
+    for cut in 0..bytes.len() {
+        assert!(
+            open_tab(&bytes[..cut], "trunc_cut").is_err(),
+            "truncation at byte {cut}/{} accepted",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn tab_lying_header_fails_before_allocating() {
+    let clean = tab_bytes(16, 4, 4, Storage::F32, "lying");
+    // Header layout: magic 16 | rows 16..24 | dim 24..32 | shards 32..40
+    // | elem 40..48.
+    // A shard count in the billions must fail the directory-fits-the-file
+    // check, not drive a huge allocation or read.
+    let mut buf = clean.clone();
+    buf[32..40].copy_from_slice(&(1u64 << 40).to_le_bytes());
+    assert!(open_tab(&buf, "lying_shards").is_err());
+    // Oversized rows: the partition no longer matches the directory.
+    let mut buf = clean.clone();
+    buf[16..24].copy_from_slice(&(16u64 * 1000).to_le_bytes());
+    assert!(open_tab(&buf, "lying_rows").is_err());
+    // Oversized dim: segments run past the end of the file.
+    let mut buf = clean.clone();
+    buf[24..32].copy_from_slice(&4096u64.to_le_bytes());
+    assert!(open_tab(&buf, "lying_dim").is_err());
+    // An element size that is neither bf16 nor f32.
+    let mut buf = clean.clone();
+    buf[40..48].copy_from_slice(&8u64.to_le_bytes());
+    assert!(open_tab(&buf, "lying_elem").is_err());
+    // Zero dim.
+    let mut buf = clean.clone();
+    buf[24..32].copy_from_slice(&0u64.to_le_bytes());
+    assert!(open_tab(&buf, "zero_dim").is_err());
+}
+
+#[test]
+fn tab_corrupt_directory_offsets_rejected() {
+    let clean = tab_bytes(16, 4, 4, Storage::F32, "offsets");
+    // Directory entry 1 starts at byte 48 + 16; shift its offset.
+    let off_pos = 48 + 16;
+    let good = u64::from_le_bytes(clean[off_pos..off_pos + 8].try_into().unwrap());
+    for bad in [0u64, good + 8, good.wrapping_sub(8), u64::MAX] {
+        let mut buf = clean.clone();
+        buf[off_pos..off_pos + 8].copy_from_slice(&bad.to_le_bytes());
+        assert!(open_tab(&buf, "offsets_bad").is_err(), "offset {bad} accepted");
+    }
+}
+
+#[test]
+fn tab_single_byte_corruption_never_panics() {
+    // Flip one byte at every position: structural corruption must error
+    // at open; flips inside the element payload legally decode to other
+    // numbers (any bit pattern is a valid element), but nothing may
+    // panic and the decoded shapes must stay exact.
+    let clean = tab_bytes(15, 3, 3, Storage::Bf16, "flip");
+    for pos in 0..clean.len() {
+        let mut buf = clean.clone();
+        buf[pos] ^= 0x5a;
+        if let Ok(bank) = open_tab(&buf, "flip_one") {
+            for p in 0..bank.num_shards() {
+                let (start, end) = bank.shard_range(p);
+                assert_eq!(
+                    bank.load_shard(p).elems(),
+                    (end - start) * bank.dim,
+                    "byte {pos}: shard {p} shape drifted"
                 );
             }
         }

@@ -1,0 +1,214 @@
+//! The spilled-model contract: a session whose embedding tables live in
+//! read-write-mapped `ALXTAB01` banks (demand-paged through the LRU
+//! residency manager, scatters checked out and written back per shard
+//! pass) trains **bitwise identically** to the fully resident model —
+//! same objective history, same final tables, same recalls — at every
+//! thread count and storage precision, including across a
+//! checkpoint/resume, while a run over the residency budget reports
+//! nonzero table-shard faults and prefetch hits.
+
+use alx::als::{EpochStats, PrecisionPolicy, TrainConfig};
+use alx::config::AlxConfig;
+use alx::coordinator::TrainSession;
+use alx::data::InMemorySource;
+use alx::prelude::*;
+use alx::util::Pcg64;
+use std::path::PathBuf;
+
+fn community_matrix(users: usize, items: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut t = Vec::new();
+    for u in 0..users as u32 {
+        let comm = (u as usize) % 2;
+        for _ in 0..6 {
+            let item = if rng.next_f64() < 0.9 {
+                comm * (items / 2) + rng.range(0, items / 2)
+            } else {
+                rng.range(0, items)
+            };
+            t.push((u, item as u32, 1.0));
+        }
+    }
+    Csr::from_coo(users, items, &t)
+}
+
+fn cfg(epochs: usize, threads: usize, spill_model: bool, precision: PrecisionPolicy) -> AlxConfig {
+    AlxConfig {
+        cores: 8,
+        model_spill: spill_model,
+        resident_table_shards: 2,
+        train: TrainConfig {
+            dim: 8,
+            epochs,
+            lambda: 0.05,
+            alpha: 0.01,
+            batch_rows: 16,
+            batch_width: 4,
+            threads,
+            precision,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("alx_model_spill_{}_{}", tag, std::process::id()))
+}
+
+/// Timing-free fingerprint of an epoch.
+fn fingerprint(h: &EpochStats) -> (usize, Option<u64>, u64) {
+    (h.epoch, h.objective.map(f64::to_bits), h.comm_bytes)
+}
+
+type RunFingerprint =
+    (Vec<(usize, Option<u64>, u64)>, Vec<f32>, Vec<f32>, Vec<(usize, u64)>);
+
+fn run(mut s: TrainSession) -> (RunFingerprint, RunReport) {
+    let report = s.run().unwrap();
+    let recalls: Vec<(usize, u64)> =
+        report.recalls.iter().map(|r| (r.k, r.recall.to_bits())).collect();
+    (
+        (
+            report.history.iter().map(fingerprint).collect(),
+            s.trainer.w.to_dense().data,
+            s.trainer.h.to_dense().data,
+            recalls,
+        ),
+        report,
+    )
+}
+
+#[test]
+fn spilled_model_is_bitwise_identical_to_resident() {
+    let m = community_matrix(80, 48, 3);
+    for threads in [1usize, 4] {
+        for precision in [PrecisionPolicy::F32, PrecisionPolicy::Mixed] {
+            let tag = format!("bitwise_t{threads}_{}", precision.name());
+            let resident = {
+                let source = InMemorySource::new("community", m.clone());
+                TrainSession::new(&source, cfg(3, threads, false, precision)).unwrap()
+            };
+            let (fp_resident, rep_resident) = run(resident);
+            assert!(
+                rep_resident.table_spill.is_none(),
+                "resident run must not report model spill"
+            );
+
+            let spilled = {
+                let mut c = cfg(3, threads, true, precision);
+                c.model_spill_dir = tmp(&tag).display().to_string();
+                let source = InMemorySource::new("community", m.clone());
+                TrainSession::new(&source, c).unwrap()
+            };
+            let (fp_spilled, rep_spilled) = run(spilled);
+            assert_eq!(fp_spilled.0, fp_resident.0, "objective history differs ({tag})");
+            assert_eq!(fp_spilled.1, fp_resident.1, "W differs ({tag})");
+            assert_eq!(fp_spilled.2, fp_resident.2, "H differs ({tag})");
+            assert_eq!(fp_spilled.3, fp_resident.3, "recalls differ ({tag})");
+            let ts = rep_spilled.table_spill.expect("spilled model must report accounting");
+            assert!(ts.bank_bytes > 0);
+            let _ = std::fs::remove_dir_all(tmp(&tag));
+        }
+    }
+}
+
+#[test]
+fn model_spill_over_budget_faults_and_prefetches() {
+    // 8 table shards per side, residency cap 2: every pass faults fixed
+    // shards back in, and the shard workers stage upcoming target shards
+    // through the background prefetcher.
+    let m = community_matrix(120, 64, 5);
+    let dir = tmp("budget");
+    let mut c = cfg(3, 4, true, PrecisionPolicy::F32);
+    c.model_spill_dir = dir.display().to_string();
+    let source = InMemorySource::new("community", m.clone());
+    let (_, report) = run(TrainSession::new(&source, c).unwrap());
+    let ts = report.table_spill.expect("table spill accounting");
+    assert!(ts.shard_faults > 0, "over-budget run must fault: {ts:?}");
+    assert!(ts.prefetch_hits > 0, "residency cache must land hits: {ts:?}");
+    assert!(ts.prefetches > 0, "shard workers must stage prefetches: {ts:?}");
+    // The two banks hold W and H at storage precision: (rows + cols)
+    // rows of dim 8 at ≥ 2 bytes per element is a safe lower bound.
+    let table_bytes = (m.rows as u64 + m.cols as u64) * 8 * 2;
+    assert!(ts.bank_bytes >= table_bytes, "{ts:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spilled_model_checkpoint_resume_is_bitwise() {
+    let m = community_matrix(80, 48, 7);
+    let dir_a = tmp("resume_full");
+    let dir_b = tmp("resume_cut");
+    let ckpt = tmp("resume.ckpt");
+    let make = |dir: &PathBuf, threads: usize| {
+        let mut c = cfg(4, threads, true, PrecisionPolicy::Mixed);
+        c.model_spill_dir = dir.display().to_string();
+        let source = InMemorySource::new("community", m.clone());
+        TrainSession::new(&source, c).unwrap()
+    };
+
+    let mut full = make(&dir_a, 4);
+    while full.remaining_epochs() > 0 {
+        full.step().unwrap();
+    }
+
+    // Interrupted at epoch 2, resumed in a fresh session whose banks
+    // start from a different random init (the resume re-attaches and
+    // overwrites them shard by shard) and a different thread count.
+    {
+        let mut s = make(&dir_b, 4);
+        s.step().unwrap();
+        s.step().unwrap();
+        s.checkpoint(&ckpt).unwrap();
+    }
+    let source = InMemorySource::new("community", m.clone());
+    let mut c = cfg(4, 1, true, PrecisionPolicy::Mixed);
+    c.model_spill_dir = dir_b.display().to_string();
+    let mut resumed = TrainSession::resume_with(&ckpt, &source, c, None).unwrap();
+    assert_eq!(resumed.trainer.current_epoch(), 2);
+    while resumed.remaining_epochs() > 0 {
+        resumed.step().unwrap();
+    }
+    assert_eq!(full.trainer.w.to_dense().data, resumed.trainer.w.to_dense().data);
+    assert_eq!(full.trainer.h.to_dense().data, resumed.trainer.h.to_dense().data);
+    let _ = std::fs::remove_file(&ckpt);
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn fully_out_of_core_matrix_and_model_is_bitwise() {
+    // The complete composition: ALXCSR02 chunks stream through the split
+    // into spilled ALXBANK01 matrix banks, the model spills into
+    // ALXTAB01 table banks — with --stream --spill --spill-model neither
+    // the matrix nor the model ever exists in RAM, and training is still
+    // bitwise identical to the fully resident session on the same data.
+    let m = community_matrix(80, 48, 9);
+    let csr02 = tmp("stream.csr02");
+    let dir = tmp("stream_banks");
+    {
+        let f = std::io::BufWriter::new(std::fs::File::create(&csr02).unwrap());
+        alx::sparse::write_chunked(&m, f, 16).unwrap();
+    }
+    let resident = {
+        let source = InMemorySource::new("community", m.clone());
+        TrainSession::new(&source, cfg(2, 4, false, PrecisionPolicy::Mixed)).unwrap()
+    };
+    let (fp_resident, _) = run(resident);
+
+    let mut c = cfg(2, 4, true, PrecisionPolicy::Mixed);
+    c.data_spill = true;
+    c.resident_shards = 2;
+    c.spill_dir = dir.display().to_string();
+    let spilled = TrainSession::from_streaming(&csr02, c, None).unwrap();
+    let (fp_spilled, report) = run(spilled);
+    assert_eq!(fp_spilled.0, fp_resident.0, "objective history differs");
+    assert_eq!(fp_spilled.1, fp_resident.1, "W differs");
+    assert_eq!(fp_spilled.2, fp_resident.2, "H differs");
+    assert_eq!(fp_spilled.3, fp_resident.3, "recalls differ");
+    assert!(report.spill.is_some(), "matrix spill accounting missing");
+    assert!(report.table_spill.is_some(), "model spill accounting missing");
+    let _ = std::fs::remove_file(&csr02);
+    let _ = std::fs::remove_dir_all(&dir);
+}
