@@ -1,0 +1,69 @@
+//! Cost of the fault-injection hooks on the IO hot paths.
+//!
+//! The contract is that a production build (no `failpoints` feature)
+//! pays nothing: every hook is an inlined `Ok(())`. With the feature on,
+//! each hook is one registry lock + hash lookup; this bench puts numbers
+//! on both states and on a chunked-write path threaded with hooks.
+//!
+//! ```bash
+//! cargo bench --bench fault_overhead                        # no-op hooks
+//! cargo bench --bench fault_overhead --features failpoints  # live hooks
+//! ```
+
+use alx::sparse::{write_chunked, Csr};
+use alx::util::{fault, Pcg64, Timer};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let timer = Timer::start();
+    for _ in 0..iters {
+        f();
+    }
+    let per = timer.elapsed_secs() / iters as f64;
+    println!("{name:<44} {:>12.1} ns/iter", per * 1e9);
+    per
+}
+
+fn main() {
+    println!(
+        "fault hooks compiled {}: fault::ENABLED = {}\n",
+        if fault::ENABLED { "IN (--features failpoints)" } else { "OUT" },
+        fault::ENABLED
+    );
+
+    // Raw hook cost, unconfigured name (the production steady state even
+    // in a failpoints build: nothing armed).
+    bench("failpoint(), unconfigured", 2_000_000, || {
+        let _ = std::hint::black_box(fault::failpoint(std::hint::black_box("bench.nop")));
+    });
+    bench("failpoint_bytes(), unconfigured", 2_000_000, || {
+        let _ = std::hint::black_box(fault::failpoint_bytes(std::hint::black_box("bench.nop"), 4096));
+    });
+
+    // An armed-but-never-firing failpoint (trigger far out of reach) — the
+    // worst case a torture run pays on the paths it is not killing.
+    if fault::ENABLED {
+        fault::configure("bench.armed=hit:18446744073709551615").unwrap();
+        bench("failpoint(), armed non-firing", 2_000_000, || {
+            let _ = std::hint::black_box(fault::failpoint(std::hint::black_box("bench.armed")));
+        });
+        fault::reset();
+    }
+
+    // End-to-end: a chunked-format write (hooks at every chunk flush)
+    // into an in-memory sink, so the delta is hook cost, not disk.
+    let mut rng = Pcg64::new(7);
+    let mut triplets = Vec::new();
+    for r in 0..4000u32 {
+        for _ in 0..8 {
+            triplets.push((r, rng.range(0, 2000) as u32, 1.0f32));
+        }
+    }
+    let m = Csr::from_coo(4000, 2000, &triplets);
+    bench("write_chunked 4000x2000 (64-row chunks)", 50, || {
+        let mut sink = Vec::with_capacity(1 << 20);
+        write_chunked(&m, &mut sink, 64).unwrap();
+        std::hint::black_box(sink.len());
+    });
+}

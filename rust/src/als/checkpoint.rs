@@ -236,7 +236,33 @@ fn read_recall_section(r: &mut impl Read) -> std::io::Result<Vec<RecallLogEntry>
 /// [`crate::als::Trainer::load_checkpoint`] instead, which streams the
 /// payloads shard by shard into its existing storage.
 pub fn load(r: &mut impl Read, num_shards: usize) -> std::io::Result<LoadedCheckpoint> {
+    load_limited(r, num_shards, None)
+}
+
+/// [`load`] with an optional stream-length bound. When `stream_len` is
+/// known (a file's size), the header's claimed table payload is checked
+/// against it **before** the fresh tables are allocated, so a corrupt or
+/// lying header can never drive an allocation larger than the file that
+/// carries it.
+pub fn load_limited(
+    r: &mut impl Read,
+    num_shards: usize,
+    stream_len: Option<u64>,
+) -> std::io::Result<LoadedCheckpoint> {
     let (meta, objective_log) = read_header(r)?;
+    if let Some(len) = stream_len {
+        let elem: u128 = if meta.storage_bf16 { 2 } else { 4 };
+        let table_bytes = (meta.users as u128 + meta.items as u128) * meta.dim as u128 * elem;
+        if table_bytes > len as u128 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "checkpoint header claims {table_bytes} bytes of table data \
+                     but the stream is only {len} bytes"
+                ),
+            ));
+        }
+    }
     let storage = if meta.storage_bf16 { Storage::Bf16 } else { Storage::F32 };
     let mut users =
         ShardedTable::zeros(meta.users as usize, meta.dim as usize, num_shards, storage);

@@ -18,7 +18,7 @@ pub mod local_stats;
 pub mod stats;
 pub mod trainer;
 
-pub use checkpoint::{LoadedCheckpoint, ObjectiveLogEntry, RecallLogEntry};
+pub use checkpoint::{CheckpointMeta, LoadedCheckpoint, ObjectiveLogEntry, RecallLogEntry};
 pub use engine::{NativeEngine, SolveEngine};
 pub use trainer::{EpochStats, TrainConfig, Trainer};
 

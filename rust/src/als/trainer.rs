@@ -97,6 +97,18 @@ impl TrainConfig {
     }
 }
 
+/// Best-effort text of a joined thread's panic payload (for converting
+/// worker panics into error returns instead of aborting the epoch).
+fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
 /// Per-epoch record (history entry).
 #[derive(Clone, Debug)]
 pub struct EpochStats {
@@ -376,7 +388,7 @@ impl Trainer {
                     scope.spawn(move || -> anyhow::Result<()> {
                         loop {
                             let (claimed, next, stage) = {
-                                let mut pool = pool.lock().unwrap();
+                                let mut pool = threads::lock_or_recover(pool);
                                 let claimed = pool.pop();
                                 let next = pool.last().map(|(p, _)| *p);
                                 let stage = pool.last().and_then(|(_, v)| v.stage_handle());
@@ -407,7 +419,14 @@ impl Trainer {
                 .collect();
             handles
                 .into_iter()
-                .map(|h| h.join().expect("shard worker panicked"))
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    // A panicking worker becomes an error return, not a
+                    // process abort: its claimed view already wrote back
+                    // on the unwind, the epoch fails cleanly, and the
+                    // last published checkpoint is untouched.
+                    Err(p) => Err(anyhow::anyhow!("shard worker panicked: {}", panic_text(&p))),
+                })
                 .collect()
         });
         for r in results {
@@ -512,7 +531,17 @@ impl Trainer {
                 }
             }
             scatter_q.close();
-            scatter.join().expect("scatter stage panicked");
+            if let Err(p) = scatter.join() {
+                // The view wrote its dirty shard back during the scatter
+                // thread's unwind; surface the failure instead of killing
+                // the whole process.
+                if out.is_ok() {
+                    out = Err(anyhow::anyhow!(
+                        "scatter stage panicked on matrix shard {piece}: {}",
+                        panic_text(&p)
+                    ));
+                }
+            }
             out
         })
     }

@@ -168,6 +168,10 @@ pub struct AlxConfig {
     pub early_stop_recall_every: usize,
     /// Where periodic/final checkpoints are written.
     pub checkpoint_path: String,
+    /// Fault-injection spec (`name=trigger[:action];...`), forwarded to
+    /// [`crate::util::fault::configure`] at tool startup. Empty = off.
+    /// Non-empty specs require a binary built with `--features failpoints`.
+    pub fault_points: String,
 }
 
 impl Default for AlxConfig {
@@ -199,6 +203,7 @@ impl Default for AlxConfig {
             early_stop_recall_patience: 2,
             early_stop_recall_every: 1,
             checkpoint_path: "alx.ckpt".to_string(),
+            fault_points: String::new(),
         }
     }
 }
@@ -340,6 +345,9 @@ impl AlxConfig {
             anyhow::ensure!(!v.is_empty(), "session.checkpoint_path must be non-empty");
             cfg.checkpoint_path = v.to_string();
         }
+        if let Some(v) = kv.get("fault.points") {
+            cfg.fault_points = v.to_string();
+        }
         Ok(cfg)
     }
 }
@@ -478,6 +486,14 @@ checkpoint_path = "run.ckpt"
         let mut bad = KvConfig::default();
         bad.set("session.early_stop_recall_every", "0");
         assert!(AlxConfig::from_kv(&bad).is_err());
+    }
+
+    #[test]
+    fn fault_points_parse() {
+        let kv = KvConfig::parse("[fault]\npoints = \"ckpt.write=once\"\n").unwrap();
+        let cfg = AlxConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.fault_points, "ckpt.write=once");
+        assert!(AlxConfig::from_kv(&KvConfig::default()).unwrap().fault_points.is_empty());
     }
 
     #[test]

@@ -371,6 +371,7 @@ impl TrainSession {
     /// Load checkpoint state (tables, epoch counter, objective log) into
     /// this freshly-built session.
     fn load_checkpoint_file(&mut self, path: &Path) -> anyhow::Result<()> {
+        crate::util::fault::failpoint("ckpt.read")?;
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path)
                 .map_err(|e| anyhow::anyhow!("open checkpoint {}: {e}", path.display()))?,
@@ -553,6 +554,7 @@ impl TrainSession {
         let mut recall_log = self.restored_recalls.clone();
         recall_log.extend(self.recall_log.iter().copied());
         let write = || -> anyhow::Result<()> {
+            crate::util::fault::failpoint("ckpt.write")?;
             let mut f = std::io::BufWriter::new(
                 std::fs::File::create(&tmp)
                     .map_err(|e| anyhow::anyhow!("create {}: {e}", tmp.display()))?,
@@ -569,6 +571,10 @@ impl TrainSession {
         if let Err(e) = write() {
             let _ = std::fs::remove_file(&tmp);
             return Err(e);
+        }
+        if let Err(e) = crate::util::fault::failpoint("ckpt.publish") {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
         }
         std::fs::rename(&tmp, path)
             .map_err(|e| anyhow::anyhow!("rename {} -> {}: {e}", tmp.display(), path.display()))?;

@@ -29,6 +29,7 @@ use crate::sparse::{
     ChunkedReader, Csr, CsrBank, CsrStorage, InMemory, MmapBank, RowDisposition, ShardedCsr,
     ShardedCsrBuilder, SplitPlan, TestRow, ALXCSR02_MAGIC,
 };
+use crate::util::durable;
 use crate::webgraph::{generate, Variant, VariantSpec};
 use std::io::{BufRead, Read};
 use std::path::{Path, PathBuf};
@@ -435,29 +436,43 @@ impl StreamingSource {
         let header = *reader.header();
         let mut plan = SplitPlan::new(header.rows, train_frac, holdout_frac, seed);
         let mut builder = ShardedCsrBuilder::new(header.rows, header.cols, num_shards);
-        builder
-            .spill_to(&train_path)
-            .map_err(|e| anyhow::anyhow!("spill to {}: {e}", train_path.display()))?;
         let mut test = Vec::new();
-        while let Some(chunk) = reader
-            .next_chunk()
-            .map_err(|e| anyhow::anyhow!("read {}: {e}", self.path.display()))?
-        {
-            for i in 0..chunk.row_count() {
-                let (r, idx, val) = chunk.row(i);
-                match plan.dispose(r, idx, val) {
-                    RowDisposition::Train => builder.push_row(idx, val),
-                    RowDisposition::Test(tr) => {
-                        test.push(tr);
-                        builder.push_empty();
+        // Stream into a sibling temp file and rename only once the bank is
+        // complete and fsynced, so a crash or full disk mid-ingest never
+        // leaves a half-written bank at the published path.
+        let train_tmp = crate::util::durable::tmp_path(&train_path);
+        let train_artifact = format!("train bank {}", train_path.display());
+        let staged: anyhow::Result<()> = (|| {
+            builder
+                .spill_to(&train_tmp)
+                .map_err(|e| anyhow::anyhow!("spill to {}: {e}", train_tmp.display()))?;
+            while let Some(chunk) = reader
+                .next_chunk()
+                .map_err(|e| anyhow::anyhow!("read {}: {e}", self.path.display()))?
+            {
+                for i in 0..chunk.row_count() {
+                    let (r, idx, val) = chunk.row(i);
+                    match plan.dispose(r, idx, val) {
+                        RowDisposition::Train => builder.push_row(idx, val),
+                        RowDisposition::Test(tr) => {
+                            test.push(tr);
+                            builder.push_empty();
+                        }
+                        RowDisposition::Skip => builder.push_empty(),
                     }
-                    RowDisposition::Skip => builder.push_empty(),
                 }
             }
+            builder
+                .finish_spilled()
+                .map_err(|e| anyhow::anyhow!("{}", durable::annotate(e, &train_artifact)))?;
+            Ok(())
+        })();
+        if let Err(e) = staged {
+            let _ = std::fs::remove_file(&train_tmp);
+            return Err(e);
         }
-        builder
-            .finish_spilled()
-            .map_err(|e| anyhow::anyhow!("finish bank {}: {e}", train_path.display()))?;
+        std::fs::rename(&train_tmp, &train_path)
+            .map_err(|e| anyhow::anyhow!("{}", durable::annotate(e, &train_artifact)))?;
 
         // Derive the transpose bank from the (validated) train bank,
         // with the multi-writer scatter scratch held to the same budget

@@ -42,6 +42,7 @@ pub mod sharding;
 pub mod sparse;
 pub mod topo;
 pub mod util;
+pub mod verify;
 pub mod webgraph;
 
 /// Most commonly used types, re-exported for examples and downstream users.

@@ -125,13 +125,20 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("engine", "engine.kind"),
         ("artifacts", "engine.artifacts_dir"),
         ("approximate", "eval.approximate"),
+        ("failpoints", "fault.points"),
     ];
     for (flag, key) in map {
         if let Some(v) = args.get(flag) {
             kv.set(key, v);
         }
     }
-    AlxConfig::from_kv(&kv)
+    let cfg = AlxConfig::from_kv(&kv)?;
+    // Arm fault injection before any IO happens. A live spec against a
+    // binary without the `failpoints` feature is a hard error here, not a
+    // silently-ignored flag.
+    alx::util::fault::configure(&cfg.fault_points)
+        .map_err(|e| anyhow::anyhow!("--failpoints '{}': {e}", cfg.fault_points))?;
+    Ok(cfg)
 }
 
 fn cmd_generate(args: &Args) -> anyhow::Result<()> {
@@ -148,15 +155,22 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     );
     if let Some(path) = args.get("out") {
         let format = args.get("format").unwrap_or("csr02");
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        match format {
-            // The chunked format streams back through `alx train --stream`.
-            "csr02" => alx::sparse::write_chunked(&g.adjacency, &mut f, cfg.chunk_rows)?,
-            "csr01" => g.adjacency.write_to(&mut f)?,
-            other => anyhow::bail!("--format {other}: expected csr02|csr01"),
-        }
-        use std::io::Write;
-        f.flush()?;
+        anyhow::ensure!(
+            matches!(format, "csr02" | "csr01"),
+            "--format {format}: expected csr02|csr01"
+        );
+        alx::util::fault::failpoint("tool.generate")?;
+        // Stage + rename like every other writer: an interrupted generate
+        // must never leave a truncated dataset at the published path.
+        alx::util::durable::write_atomic(
+            std::path::Path::new(path),
+            &format!("dataset {path}"),
+            |f| match format {
+                // The chunked format streams back through `alx train --stream`.
+                "csr02" => alx::sparse::write_chunked(&g.adjacency, &mut *f, cfg.chunk_rows),
+                _ => g.adjacency.write_to(f),
+            },
+        )?;
         println!("wrote {path} ({format})");
     }
     Ok(())
@@ -175,6 +189,7 @@ fn cmd_convert(args: &Args) -> anyhow::Result<()> {
         .get("out")
         .ok_or_else(|| anyhow::anyhow!("convert needs --out <output file>"))?;
     anyhow::ensure!(input != out, "--data and --out must differ");
+    alx::util::fault::failpoint("tool.convert")?;
     let chunk_rows = cfg.chunk_rows;
 
     // Sniff the magic to pick the path.
@@ -222,6 +237,9 @@ fn cmd_convert(args: &Args) -> anyhow::Result<()> {
         };
         use std::io::Write;
         w.flush()?;
+        // fsync before the rename publishes the file: rename durability is
+        // only as good as the data it points at.
+        w.get_ref().sync_all()?;
         Ok(dims)
     };
     let (rows, cols, nnz, chunks) = match convert() {
@@ -253,6 +271,7 @@ fn cmd_bank(args: &Args) -> anyhow::Result<()> {
         .get("out")
         .ok_or_else(|| anyhow::anyhow!("bank needs --out <output file.alxbank>"))?;
     anyhow::ensure!(input != out, "--data and --out must differ");
+    alx::util::fault::failpoint("tool.bank")?;
     let shards = args.get_or("shards", cfg.cores)?;
     anyhow::ensure!(shards >= 1, "--shards must be >= 1");
 
@@ -288,7 +307,6 @@ fn cmd_bank(args: &Args) -> anyhow::Result<()> {
     );
     if let Some(tout) = args.get("transpose-out") {
         anyhow::ensure!(tout != out && tout != input, "--transpose-out must be a new file");
-        let ttmp = format!("{tout}.tmp.{}", std::process::id());
         // Bounded by --ingest-budget-mb, or the honest default when unset
         // (an unbounded group would materialize the whole transpose).
         let t_budget = match budget {
@@ -296,14 +314,38 @@ fn cmd_bank(args: &Args) -> anyhow::Result<()> {
             b => b,
         };
         let bank = alx::sparse::CsrBank::open(out)?;
-        if let Err(e) = bank.write_transpose_bank_budgeted(&ttmp, shards, t_budget) {
-            let _ = std::fs::remove_file(&ttmp);
-            return Err(e.into());
-        }
-        std::fs::rename(&ttmp, tout)
-            .map_err(|e| anyhow::anyhow!("rename {ttmp} -> {tout}: {e}"))?;
+        // write_transpose_bank_budgeted stages into its own sibling tmp
+        // file, fsyncs and renames, so no outer tmp dance is needed here.
+        bank.write_transpose_bank_budgeted(tout, shards, t_budget)?;
         println!("transpose bank -> {tout}");
     }
+    Ok(())
+}
+
+/// Structurally validate on-disk ALX artifacts (any of `ALXCSR01`,
+/// `ALXCSR02`, `ALXBANK01`, `ALXTAB01`, `ALXCKPT2`): sniff the magic,
+/// walk the headers/directories/chunks, and exit non-zero on the first
+/// sign of truncation or corruption.
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !args.positional.is_empty(),
+        "verify needs at least one file: alx verify <path> [<path> ...]"
+    );
+    let mut failed = 0usize;
+    for path in &args.positional {
+        match alx::verify::verify_file(path) {
+            Ok(r) => println!("{path}: {} ok — {}", r.format, r.summary),
+            Err(e) => {
+                eprintln!("{path}: FAILED — {e}");
+                failed += 1;
+            }
+        }
+    }
+    anyhow::ensure!(
+        failed == 0,
+        "{failed} of {} file(s) failed verification",
+        args.positional.len()
+    );
     Ok(())
 }
 
@@ -547,7 +589,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: alx <generate|convert|bank|train|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
+        "usage: alx <generate|convert|bank|verify|train|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
          train flags: --source webgraph|edge-list --data <file> --resume <ckpt>\n\
                       --stream --ingest-budget-mb <MiB> (out-of-core ALXCSR02 ingestion)\n\
                       --spill --spill-dir <dir> --resident-shards <n> (demand-paged shard banks)\n\
@@ -558,6 +600,8 @@ fn usage() -> ! {
          convert:     --data <in: text|ALXCSR01|ALXCSR02> --out <file.alxcsr02> [--chunk-rows <n>]\n\
          bank:        --data <file.alxcsr02> --out <file.alxbank> [--shards <n>] [--transpose-out <f>]\n\
          generate:    --out <file> [--format csr02|csr01] [--chunk-rows <n>]\n\
+         verify:      <path> [<path> ...] (validate any ALX artifact; non-zero exit on corruption)\n\
+         fault injection (builds with --features failpoints): --failpoints 'name=trigger[:action];...'\n\
          see the CLI cheatsheet in README.md"
     );
     std::process::exit(2)
@@ -570,11 +614,11 @@ fn main() -> anyhow::Result<()> {
     }
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..]);
-    let _ = &args.positional;
     match cmd.as_str() {
         "generate" => cmd_generate(&args),
         "convert" => cmd_convert(&args),
         "bank" => cmd_bank(&args),
+        "verify" => cmd_verify(&args),
         "train" => cmd_train(&args),
         "table1" => cmd_table1(&args),
         "table2" => cmd_table2(&args),

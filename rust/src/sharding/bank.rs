@@ -37,6 +37,7 @@
 use super::{ShardData, Storage};
 use crate::sparse::bank::per_for;
 use crate::util::mmap::MmapMut;
+use crate::util::{durable, fault};
 use std::io::{Result, Write};
 use std::path::Path;
 
@@ -141,6 +142,12 @@ impl<W: Write> TableBankWriter<W> {
                 data.elems()
             )));
         }
+        // Failpoint `tab.write_shard`: one hit per shard segment, byte
+        // counter advanced by the segment's on-disk size.
+        fault::failpoint_bytes(
+            "tab.write_shard",
+            want as u64 * self.storage.elem_bytes(),
+        )?;
         let mut buf = Vec::with_capacity(want * self.storage.elem_bytes() as usize);
         match data {
             ShardData::Bf16(v) => {
@@ -167,6 +174,7 @@ impl<W: Write> TableBankWriter<W> {
                 self.next_shard, self.num_shards
             )));
         }
+        fault::failpoint("tab.finish")?;
         self.w.flush()?;
         Ok(self.w)
     }
@@ -192,7 +200,12 @@ impl TableBank {
     /// is checked here (exact file size, canonical directory), so later
     /// decodes cannot fail.
     pub fn open(path: impl AsRef<Path>) -> Result<TableBank> {
-        let f = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+        fault::failpoint("tab.open")?;
+        let path = path.as_ref();
+        let f = durable::retry("table bank open", || {
+            std::fs::OpenOptions::new().read(true).write(true).open(path)
+        })
+        .map_err(|e| durable::annotate(e, &format!("table bank {}", path.display())))?;
         let map = MmapMut::map_mut(&f)?;
         Self::from_map(map)
     }
@@ -345,6 +358,9 @@ impl TableBank {
                 self.storage
             )));
         }
+        // Failpoint `tab.store_shard`: one hit per write-back, byte counter
+        // advanced by the segment's size.
+        fault::failpoint_bytes("tab.store_shard", n as u64 * self.storage.elem_bytes())?;
         let off = self.seg_offset(p);
         let elem = self.storage.elem_bytes() as usize;
         let dst = &mut self.map.bytes_mut()[off..off + n * elem];

@@ -233,18 +233,20 @@ impl ShardedTable {
         path: &Path,
         resident_table_shards: usize,
     ) -> std::io::Result<ShardedTable> {
-        use std::io::Write;
         let ranges = Self::ranges_for(rows, num_shards);
         let scale = 1.0 / (dim as f64).sqrt();
-        let f = std::fs::File::create(path)?;
-        let mut w =
-            TableBankWriter::create(std::io::BufWriter::new(f), rows, dim, num_shards, storage)?;
-        for r in &ranges {
-            let mut srng = rng.split();
-            w.write_shard(&randn_shard(r.len() * dim, storage, scale, &mut srng))?;
-        }
-        let mut inner = w.finish()?;
-        inner.flush()?;
+        // Staged + fsynced + renamed: a crash or full disk mid-init never
+        // leaves a half-written table bank at the destination path.
+        let artifact = format!("table bank {}", path.display());
+        crate::util::durable::write_atomic(path, &artifact, |f| {
+            let mut w = TableBankWriter::create(&mut *f, rows, dim, num_shards, storage)?;
+            for r in &ranges {
+                let mut srng = rng.split();
+                w.write_shard(&randn_shard(r.len() * dim, storage, scale, &mut srng))?;
+            }
+            w.finish()?;
+            Ok(())
+        })?;
         Self::open_bank(path, resident_table_shards)
     }
 
@@ -465,21 +467,24 @@ impl ShardedTable {
     /// [`ShardedTable::open_bank`]). Element bits are persisted exactly,
     /// so a spilled table reads back bitwise identical.
     pub fn spill_to_bank(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
-        use std::io::Write;
-        let f = std::fs::File::create(path)?;
-        let mut w = TableBankWriter::create(
-            std::io::BufWriter::new(f),
-            self.rows,
-            self.dim,
-            self.num_shards(),
-            self.storage,
-        )?;
-        for s in 0..self.num_shards() {
-            self.with_shard_data(s, |data| w.write_shard(data))?;
-        }
-        let mut inner = w.finish()?;
-        inner.flush()?;
-        Ok(())
+        // Staged + fsynced + renamed: a crash or full disk mid-spill never
+        // leaves a half-written table bank at the destination path.
+        let path = path.as_ref();
+        let artifact = format!("table bank {}", path.display());
+        crate::util::durable::write_atomic(path, &artifact, |f| {
+            let mut w = TableBankWriter::create(
+                &mut *f,
+                self.rows,
+                self.dim,
+                self.num_shards(),
+                self.storage,
+            )?;
+            for s in 0..self.num_shards() {
+                self.with_shard_data(s, |data| w.write_shard(data))?;
+            }
+            w.finish()?;
+            Ok(())
+        })
     }
 
     /// Open an `ALXTAB01` bank as a demand-paged table with a residency
@@ -571,7 +576,15 @@ impl Drop for ShardViewMut<'_> {
     fn drop(&mut self) {
         if let ViewState::Paged { store, shard, data } = &mut self.state {
             if let Some(d) = data.take() {
-                store.checkin(*shard, d);
+                if std::thread::panicking() {
+                    // Already unwinding: write the dirty shard back without
+                    // risking a double panic (which would abort the process
+                    // and lose every other shard's write-back too). A
+                    // failure here is logged by the backend, not silent.
+                    let _ = store.checkin_nopanic(*shard, d);
+                } else {
+                    store.checkin(*shard, d);
+                }
             }
         }
     }
@@ -580,6 +593,38 @@ impl Drop for ShardViewMut<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn view_dropped_during_panic_still_writes_back() {
+        // A worker panicking between checkout and drop must neither
+        // deadlock later users of the table nor silently drop the dirty
+        // shard: the view's Drop checks it in on the unwind path.
+        let mut rng = Pcg64::new(3);
+        let t = ShardedTable::randn(24, 4, 3, Storage::F32, &mut rng);
+        let path = std::env::temp_dir()
+            .join(format!("alx_shard_unwind_{}.alxtab", std::process::id()));
+        t.spill_to_bank(&path).unwrap();
+        let mut paged = ShardedTable::open_bank(&path, 2).unwrap();
+        let marker = [7.5f32, -1.5, 0.25, 3.0];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut views = paged.shard_views_mut();
+            views[1].write_row(9, &marker); // checks shard 1 out
+            panic!("worker died mid-pass");
+        }));
+        assert!(r.is_err());
+        // The dirty shard was written back during the unwind...
+        let mut row = [0.0f32; 4];
+        paged.read_row(9, &mut row);
+        assert_eq!(row, marker);
+        // ...the table is not wedged for further checkouts...
+        paged.write_row(9, &[1.0, 2.0, 3.0, 4.0]);
+        // ...and a fresh open of the bank sees everything.
+        drop(paged);
+        let reopened = ShardedTable::open_bank(&path, 2).unwrap();
+        reopened.read_row(9, &mut row);
+        assert_eq!(row, [1.0, 2.0, 3.0, 4.0]);
+        let _ = std::fs::remove_file(&path);
+    }
 
     #[test]
     fn ranges_partition_rows() {

@@ -27,9 +27,12 @@
 use super::bank::TableBank;
 use super::ShardData;
 use crate::sparse::SpillStats;
+use crate::util::fault;
+use crate::util::threads::{lock_or_recover, stall_timeout_ms};
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// Where the row-range shards of a [`super::ShardedTable`] live.
 ///
@@ -62,6 +65,15 @@ pub trait TableStorage: Send + Sync + std::fmt::Debug {
 
     /// Check a mutated shard back in (write-through for paged backends).
     fn checkin(&self, s: usize, data: ShardData);
+
+    /// [`TableStorage::checkin`] for unwinding contexts: must not panic.
+    /// Returns `false` (after logging) when the write-back failed instead
+    /// of propagating — a view dropped during a panic must neither abort
+    /// the process with a double panic nor silently lose the shard.
+    fn checkin_nopanic(&self, s: usize, data: ShardData) -> bool {
+        self.checkin(s, data);
+        true
+    }
 
     /// Residency/fault accounting (all zero for resident backends).
     fn spill_stats(&self) -> SpillStats {
@@ -140,6 +152,7 @@ struct PagedShared {
     faults: AtomicU64,
     hits: AtomicU64,
     prefetches: AtomicU64,
+    prefetch_failures: AtomicU64,
 }
 
 impl PagedShared {
@@ -148,7 +161,7 @@ impl PagedShared {
     /// use elsewhere stay alive until their last `Arc` drops — eviction
     /// never invalidates a reader.
     fn insert_fresh(&self, p: usize, data: Arc<ShardData>) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_or_recover(&self.state);
         g.loading.remove(&p);
         if !g.resident.iter().any(|(q, _)| *q == p) {
             g.resident.push_front((p, data));
@@ -163,7 +176,7 @@ impl PagedShared {
     /// Insert a checked-in shard, *replacing* any stale resident copy —
     /// after a write-back the cache must serve the new contents.
     fn insert_replace(&self, p: usize, data: Arc<ShardData>) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_or_recover(&self.state);
         if let Some(pos) = g.resident.iter().position(|(q, _)| *q == p) {
             g.resident.remove(pos);
         }
@@ -177,7 +190,7 @@ impl PagedShared {
 
     /// Decode shard `p` from the mapped bank.
     fn load(&self, p: usize) -> Arc<ShardData> {
-        let bank = self.bank.lock().unwrap();
+        let bank = lock_or_recover(&self.bank);
         Arc::new(bank.load_shard(p))
     }
 }
@@ -194,7 +207,7 @@ struct TableLoadingGuard<'a> {
 
 impl Drop for TableLoadingGuard<'_> {
     fn drop(&mut self) {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = lock_or_recover(&self.shared.state);
         g.loading.remove(&self.p);
         drop(g);
         self.shared.loaded.notify_all();
@@ -227,6 +240,7 @@ impl PagedTable {
                 faults: AtomicU64::new(0),
                 hits: AtomicU64::new(0),
                 prefetches: AtomicU64::new(0),
+                prefetch_failures: AtomicU64::new(0),
             }),
         }
     }
@@ -234,6 +248,12 @@ impl PagedTable {
     /// Max decoded shards resident at once.
     pub fn resident_cap(&self) -> usize {
         self.shared.cap
+    }
+
+    /// Write a shard's bits back through the mapped bank.
+    fn write_back(&self, s: usize, data: &ShardData) -> std::io::Result<()> {
+        let mut bank = lock_or_recover(&self.shared.bank);
+        bank.store_shard(s, data)
     }
 }
 
@@ -261,7 +281,7 @@ impl TableStorage for PagedTable {
 
     fn shard(&self, p: usize) -> Arc<ShardData> {
         let s = &*self.shared;
-        let mut g = s.state.lock().unwrap();
+        let mut g = lock_or_recover(&s.state);
         loop {
             if let Some(pos) = g.resident.iter().position(|(q, _)| *q == p) {
                 let entry = g.resident.remove(pos).unwrap();
@@ -272,7 +292,22 @@ impl TableStorage for PagedTable {
             }
             if g.loading.contains(&p) {
                 // A prefetch (or another reader) is already decoding it.
-                g = s.loaded.wait(g).unwrap();
+                // Bounded wait: if the loader stalls or dies without
+                // clearing its mark, steal the load and fault on demand
+                // instead of hanging the epoch.
+                let (ng, timeout) = s
+                    .loaded
+                    .wait_timeout(g, Duration::from_millis(stall_timeout_ms()))
+                    .unwrap_or_else(|e| e.into_inner());
+                g = ng;
+                if timeout.timed_out() && g.loading.contains(&p) {
+                    crate::log_warn!(
+                        "background load of table shard {p} stalled past {}ms; \
+                         loading on demand",
+                        stall_timeout_ms()
+                    );
+                    g.loading.remove(&p);
+                }
                 continue;
             }
             // Fault: decode synchronously on this thread.
@@ -290,7 +325,7 @@ impl TableStorage for PagedTable {
     fn prefetch(&self, p: usize) {
         let s = &*self.shared;
         {
-            let mut g = s.state.lock().unwrap();
+            let mut g = lock_or_recover(&s.state);
             if g.loading.contains(&p) || g.resident.iter().any(|(q, _)| *q == p) {
                 return;
             }
@@ -299,9 +334,31 @@ impl TableStorage for PagedTable {
         s.prefetches.fetch_add(1, Ordering::Relaxed);
         let shared = Arc::clone(&self.shared);
         std::thread::spawn(move || {
+            // Panic isolation: a dying prefetch thread clears its loading
+            // mark (the guard) and is counted, and the reader degrades to
+            // an on-demand fault — never a hung epoch or lost shard.
             let guard = TableLoadingGuard { shared: &shared, p };
-            let data = shared.load(p);
-            shared.insert_fresh(p, data);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                fault::failpoint("prefetch.table")?;
+                let data = shared.load(p);
+                shared.insert_fresh(p, data);
+                Ok::<(), std::io::Error>(())
+            }));
+            match r {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    shared.prefetch_failures.fetch_add(1, Ordering::Relaxed);
+                    crate::log_warn!(
+                        "prefetch of table shard {p} failed ({e}); it will load on demand"
+                    );
+                }
+                Err(_) => {
+                    shared.prefetch_failures.fetch_add(1, Ordering::Relaxed);
+                    crate::log_warn!(
+                        "prefetch thread for table shard {p} panicked; it will load on demand"
+                    );
+                }
+            }
             drop(guard);
         });
     }
@@ -314,14 +371,27 @@ impl TableStorage for PagedTable {
     }
 
     fn checkin(&self, s: usize, data: ShardData) {
-        {
-            let mut bank = self.shared.bank.lock().unwrap();
-            // Shapes are fixed by construction; a write-back can only
-            // fail on the non-unix owned-buffer fallback's file IO, and
-            // silently dropping updates would corrupt training.
-            bank.store_shard(s, &data).expect("table bank write-back failed");
-        }
+        // Shapes are fixed by construction; a write-back can only fail on
+        // the non-unix owned-buffer fallback's file IO (or an injected
+        // fault), and silently dropping updates would corrupt training.
+        self.write_back(s, &data).expect("table bank write-back failed");
         self.shared.insert_replace(s, Arc::new(data));
+    }
+
+    fn checkin_nopanic(&self, s: usize, data: ShardData) -> bool {
+        match self.write_back(s, &data) {
+            Ok(()) => {
+                self.shared.insert_replace(s, Arc::new(data));
+                true
+            }
+            Err(e) => {
+                // The cache keeps serving what is actually on disk; the
+                // loss is loud, not silent, and the caller is already
+                // unwinding from its own failure.
+                crate::log_error!("table shard {s} write-back failed during unwind: {e}");
+                false
+            }
+        }
     }
 
     fn spill_stats(&self) -> SpillStats {
@@ -330,12 +400,13 @@ impl TableStorage for PagedTable {
             shard_faults: s.faults.load(Ordering::Relaxed),
             prefetch_hits: s.hits.load(Ordering::Relaxed),
             prefetches: s.prefetches.load(Ordering::Relaxed),
+            prefetch_failures: s.prefetch_failures.load(Ordering::Relaxed),
             bank_bytes: s.file_bytes,
         }
     }
 
     fn resident_bytes(&self) -> u64 {
-        let g = self.shared.state.lock().unwrap();
+        let g = lock_or_recover(&self.shared.state);
         g.resident.iter().map(|(_, d)| d.memory_bytes()).sum()
     }
 

@@ -35,6 +35,7 @@
 
 use super::csr::{io, Csr};
 use crate::util::mmap::Mmap;
+use crate::util::{durable, fault};
 use std::io::{Result, Seek, SeekFrom, Write};
 use std::path::Path;
 
@@ -145,6 +146,9 @@ impl<W: Write + Seek> BankWriter<W> {
                 self.next_shard, shard.cols, self.cols
             )));
         }
+        // Failpoint `bank.write_shard`: one hit per shard segment, byte
+        // counter advanced by the segment's on-disk size.
+        fault::failpoint_bytes("bank.write_shard", segment_bytes(shard.rows, shard.nnz()) as u64)?;
         io::write_u64s(&mut self.w, shard.indptr.iter().map(|&p| p as u64))?;
         io::write_u32s(&mut self.w, &shard.indices)?;
         io::write_f32s(&mut self.w, &shard.values)?;
@@ -165,6 +169,7 @@ impl<W: Write + Seek> BankWriter<W> {
                 self.next_shard, self.num_shards
             )));
         }
+        fault::failpoint("bank.finish")?;
         self.w.flush()?;
         self.w.seek(SeekFrom::Start(MAGIC_BYTES as u64 + 16))?;
         self.w.write_all(&self.nnz.to_le_bytes())?;
@@ -211,7 +216,10 @@ impl CsrBank {
     /// checked here (exact file size, canonical segment offsets, `indptr`
     /// monotonicity, column ranges), so later decodes cannot fail.
     pub fn open(path: impl AsRef<Path>) -> Result<CsrBank> {
-        let f = std::fs::File::open(path)?;
+        fault::failpoint("bank.open")?;
+        let path = path.as_ref();
+        let f = durable::retry("bank open", || std::fs::File::open(path))
+            .map_err(|e| durable::annotate(e, &format!("bank {}", path.display())))?;
         let map = Mmap::map(&f)?;
         Self::from_map(map)
     }
@@ -431,8 +439,29 @@ impl CsrBank {
             }
         }
 
-        let f = std::fs::File::create(path)?;
-        let mut w = BankWriter::create(std::io::BufWriter::new(f), t_rows, self.rows, num_pieces)?;
+        // Staged through `{path}.tmp.{pid}` + fsync + rename: a crash or
+        // ENOSPC mid-derivation never leaves a half-written bank at the
+        // destination path.
+        let path = path.as_ref();
+        let artifact = format!("transpose bank {}", path.display());
+        durable::write_atomic(path, &artifact, |f| {
+            self.scatter_transpose(&mut *f, num_pieces, budget_bytes, t_per, &counts)
+        })
+    }
+
+    /// The counting-pass-fed scatter behind
+    /// [`CsrBank::write_transpose_bank_budgeted`], writing into an already
+    /// staged writer.
+    fn scatter_transpose<W: Write + Seek>(
+        &self,
+        w: W,
+        num_pieces: usize,
+        budget_bytes: u64,
+        t_per: usize,
+        counts: &[u64],
+    ) -> Result<()> {
+        let t_rows = self.cols;
+        let mut w = BankWriter::create(w, t_rows, self.rows, num_pieces)?;
         let mut group_start = 0usize;
         while group_start < num_pieces {
             // Grow the group while its build scratch fits the budget
@@ -502,8 +531,7 @@ impl CsrBank {
             }
             group_start = group_end;
         }
-        let mut inner = w.finish()?;
-        inner.flush()?;
+        w.finish()?;
         Ok(())
     }
 }

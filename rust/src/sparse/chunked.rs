@@ -28,6 +28,7 @@
 //! than one chunk.
 
 use super::csr::{io, Csr};
+use crate::util::fault;
 use std::io::{BufReader, Read, Result, Write};
 use std::path::Path;
 
@@ -242,6 +243,12 @@ impl<R: Read> ChunkedReader<R> {
             )));
         }
         self.peak_chunk_bytes = self.peak_chunk_bytes.max(chunk_bytes);
+        // Failpoint `chunked.read`: one hit per chunk, byte counter
+        // advanced by the chunk's on-stream size (for `after:BYTES`).
+        fault::failpoint_bytes(
+            "chunked.read",
+            CHUNK_HEADER_BYTES + row_count * 4 + chunk_nnz * 8,
+        )?;
         let row_count = row_count as usize;
         let chunk_nnz = chunk_nnz as usize;
 
@@ -402,6 +409,11 @@ impl<W: Write> ChunkedWriter<W> {
         }
         let chunk_nnz = self.buf_indices.len() as u64;
         let row_start = (self.next_row - row_count) as u64;
+        // Failpoint `chunked.write`: one hit per chunk flushed.
+        fault::failpoint_bytes(
+            "chunked.write",
+            CHUNK_HEADER_BYTES + row_count as u64 * 4 + chunk_nnz * 8,
+        )?;
         self.w.write_all(CHUNK_MAGIC)?;
         for v in [row_start, row_count as u64, chunk_nnz] {
             self.w.write_all(&v.to_le_bytes())?;
@@ -439,6 +451,7 @@ impl<W: Write> ChunkedWriter<W> {
                 self.chunks_written, self.expected_chunks
             )));
         }
+        fault::failpoint("chunked.finish")?;
         self.w.flush()?;
         Ok(self.w)
     }

@@ -242,14 +242,18 @@ impl ShardedCsr {
     /// [`ShardedCsrBuilder::spill_to`] — used to spill an already-built
     /// matrix before dropping it).
     pub fn spill_to_bank(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
-        let f = std::fs::File::create(path)?;
-        let w = std::io::BufWriter::new(f);
-        let mut w = BankWriter::create(w, self.rows, self.cols, self.num_pieces())?;
-        for piece in &self.store.pieces {
-            w.write_shard(piece)?;
-        }
-        w.finish()?;
-        Ok(())
+        // Staged + fsynced + renamed: a crash or full disk mid-spill never
+        // leaves a half-written bank at the destination path.
+        let path = path.as_ref();
+        let artifact = format!("matrix bank {}", path.display());
+        crate::util::durable::write_atomic(path, &artifact, |f| {
+            let mut w = BankWriter::create(&mut *f, self.rows, self.cols, self.num_pieces())?;
+            for piece in &self.store.pieces {
+                w.write_shard(piece)?;
+            }
+            w.finish()?;
+            Ok(())
+        })
     }
 }
 
@@ -354,7 +358,9 @@ impl ShardedCsrBuilder {
                 "spill_to must be called on a fresh builder",
             ));
         }
-        let f = std::fs::File::create(path)?;
+        let path = path.as_ref();
+        let f = crate::util::durable::retry("spill bank create", || std::fs::File::create(path))
+            .map_err(|e| crate::util::durable::annotate(e, &format!("spill bank {}", path.display())))?;
         self.spill = Some(BankWriter::create(
             std::io::BufWriter::new(f),
             self.rows,
@@ -461,7 +467,9 @@ impl ShardedCsrBuilder {
             return Err(e);
         }
         let w = self.spill.take().expect("spill writer present");
-        w.finish()?;
+        // fsync before the caller publishes (renames) the bank: rename
+        // durability is only as good as the data it points at.
+        w.finish()?.get_ref().sync_all()?;
         Ok(self.nnz)
     }
 }

@@ -20,9 +20,12 @@
 
 use super::bank::CsrBank;
 use super::csr::{Csr, RowMatrix};
+use crate::util::fault;
+use crate::util::threads::{lock_or_recover, stall_timeout_ms};
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 /// Residency/fault accounting of a storage backend (all zero for fully
 /// resident backends).
@@ -35,6 +38,9 @@ pub struct SpillStats {
     pub prefetch_hits: u64,
     /// Prefetches issued to the background loader.
     pub prefetches: u64,
+    /// Background loads that died (panic or IO failure) and degraded to
+    /// an on-demand fault instead of staging their shard.
+    pub prefetch_failures: u64,
     /// Bytes of the on-disk bank backing this storage.
     pub bank_bytes: u64,
 }
@@ -55,6 +61,7 @@ impl SpillStats {
             shard_faults: self.shard_faults + other.shard_faults,
             prefetch_hits: self.prefetch_hits + other.prefetch_hits,
             prefetches: self.prefetches + other.prefetches,
+            prefetch_failures: self.prefetch_failures + other.prefetch_failures,
             bank_bytes: self.bank_bytes + other.bank_bytes,
         }
     }
@@ -121,6 +128,7 @@ struct BankShared {
     faults: AtomicU64,
     hits: AtomicU64,
     prefetches: AtomicU64,
+    prefetch_failures: AtomicU64,
 }
 
 impl BankShared {
@@ -128,7 +136,7 @@ impl BankShared {
     /// the cap. Evicted handles still in use elsewhere stay alive until
     /// their last `Arc` drops — eviction never invalidates a consumer.
     fn insert(&self, p: usize, csr: Arc<Csr>) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_or_recover(&self.state);
         g.loading.remove(&p);
         if !g.resident.iter().any(|(q, _)| *q == p) {
             g.resident.push_front((p, csr));
@@ -153,7 +161,7 @@ struct LoadingGuard<'a> {
 
 impl Drop for LoadingGuard<'_> {
     fn drop(&mut self) {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = lock_or_recover(&self.shared.state);
         g.loading.remove(&self.p);
         drop(g);
         self.shared.loaded.notify_all();
@@ -182,6 +190,7 @@ impl MmapBank {
                 faults: AtomicU64::new(0),
                 hits: AtomicU64::new(0),
                 prefetches: AtomicU64::new(0),
+                prefetch_failures: AtomicU64::new(0),
             }),
         }
     }
@@ -212,7 +221,7 @@ impl CsrStorage for MmapBank {
 
     fn piece(&self, p: usize) -> Arc<Csr> {
         let s = &*self.shared;
-        let mut g = s.state.lock().unwrap();
+        let mut g = lock_or_recover(&s.state);
         loop {
             if let Some(pos) = g.resident.iter().position(|(q, _)| *q == p) {
                 let entry = g.resident.remove(pos).unwrap();
@@ -223,7 +232,22 @@ impl CsrStorage for MmapBank {
             }
             if g.loading.contains(&p) {
                 // A prefetch (or another consumer) is already decoding it.
-                g = s.loaded.wait(g).unwrap();
+                // Bounded wait: if the loader stalls or dies without
+                // clearing its mark, steal the load and fault on demand
+                // instead of hanging the epoch.
+                let (ng, timeout) = s
+                    .loaded
+                    .wait_timeout(g, Duration::from_millis(stall_timeout_ms()))
+                    .unwrap_or_else(|e| e.into_inner());
+                g = ng;
+                if timeout.timed_out() && g.loading.contains(&p) {
+                    crate::log_warn!(
+                        "background load of matrix shard {p} stalled past {}ms; \
+                         loading on demand",
+                        stall_timeout_ms()
+                    );
+                    g.loading.remove(&p);
+                }
                 continue;
             }
             // Fault: decode synchronously on this thread.
@@ -241,7 +265,7 @@ impl CsrStorage for MmapBank {
     fn prefetch(&self, p: usize) {
         let s = &*self.shared;
         {
-            let mut g = s.state.lock().unwrap();
+            let mut g = lock_or_recover(&s.state);
             if g.loading.contains(&p) || g.resident.iter().any(|(q, _)| *q == p) {
                 return;
             }
@@ -250,9 +274,31 @@ impl CsrStorage for MmapBank {
         s.prefetches.fetch_add(1, Ordering::Relaxed);
         let shared = Arc::clone(&self.shared);
         std::thread::spawn(move || {
+            // Panic isolation: a dying prefetch thread clears its loading
+            // mark (the guard) and is counted, and the consumer degrades
+            // to an on-demand fault — never a hung epoch or lost shard.
             let guard = LoadingGuard { shared: &shared, p };
-            let csr = Arc::new(shared.bank.load_shard(p));
-            shared.insert(p, csr);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                fault::failpoint("prefetch.matrix")?;
+                let csr = Arc::new(shared.bank.load_shard(p));
+                shared.insert(p, csr);
+                Ok::<(), std::io::Error>(())
+            }));
+            match r {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    shared.prefetch_failures.fetch_add(1, Ordering::Relaxed);
+                    crate::log_warn!(
+                        "prefetch of matrix shard {p} failed ({e}); it will load on demand"
+                    );
+                }
+                Err(_) => {
+                    shared.prefetch_failures.fetch_add(1, Ordering::Relaxed);
+                    crate::log_warn!(
+                        "prefetch thread for matrix shard {p} panicked; it will load on demand"
+                    );
+                }
+            }
             drop(guard);
         });
     }
@@ -263,12 +309,13 @@ impl CsrStorage for MmapBank {
             shard_faults: s.faults.load(Ordering::Relaxed),
             prefetch_hits: s.hits.load(Ordering::Relaxed),
             prefetches: s.prefetches.load(Ordering::Relaxed),
+            prefetch_failures: s.prefetch_failures.load(Ordering::Relaxed),
             bank_bytes: s.bank.file_bytes(),
         }
     }
 
     fn resident_bytes(&self) -> u64 {
-        let g = self.shared.state.lock().unwrap();
+        let g = lock_or_recover(&self.shared.state);
         g.resident.iter().map(|(_, c)| c.memory_bytes()).sum()
     }
 }

@@ -1,0 +1,224 @@
+//! Classified IO failures, bounded retry, and atomic publication — the
+//! durability substrate the spill banks and checkpoints share.
+//!
+//! Three concerns, in order of appearance on a failing run:
+//!
+//! * [`classify`] sorts an `io::Error` into transient (worth retrying),
+//!   disk-full (recoverable by the operator) or permanent;
+//! * [`retry`] runs an operation up to a small bounded number of attempts
+//!   with exponential backoff, retrying only transient failures;
+//! * [`write_atomic`] publishes a file the way the checkpoint writer does
+//!   — write to a sibling `*.tmp.<pid>`, flush, `sync_all`, then rename —
+//!   so a crash or error at any byte never leaves a half-published
+//!   artifact at the destination path, and a failure names the artifact
+//!   it lost.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// What kind of failure an IO error represents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoClass {
+    /// Worth retrying in place (EINTR, EWOULDBLOCK, timeouts).
+    Transient,
+    /// The disk (or quota) is full: the operation cannot succeed until the
+    /// operator frees space, but already-published artifacts are intact.
+    DiskFull,
+    /// Everything else: corrupt data, permissions, missing files.
+    Permanent,
+}
+
+/// Classify an IO error. ENOSPC/EDQUOT are recognized by raw os error so
+/// the classification works on every toolchain in use.
+pub fn classify(e: &io::Error) -> IoClass {
+    if let Some(raw) = e.raw_os_error() {
+        // ENOSPC / EDQUOT (linux numbering; both mean "no room").
+        if raw == 28 || raw == 122 {
+            return IoClass::DiskFull;
+        }
+    }
+    match e.kind() {
+        io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+            IoClass::Transient
+        }
+        _ => IoClass::Permanent,
+    }
+}
+
+/// Attempts [`retry`] makes before giving up on a transient failure.
+pub const RETRY_ATTEMPTS: u32 = 3;
+
+/// Run `op`, retrying transient failures up to [`RETRY_ATTEMPTS`] times
+/// with exponential backoff (1ms, 4ms). Non-transient errors return
+/// immediately.
+pub fn retry<T>(what: &str, mut op: impl FnMut() -> io::Result<T>) -> io::Result<T> {
+    let mut delay_ms = 1u64;
+    let mut attempt = 1;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if attempt < RETRY_ATTEMPTS && classify(&e) == IoClass::Transient => {
+                crate::log_warn!(
+                    "transient IO failure in {what} (attempt {attempt}/{RETRY_ATTEMPTS}): {e}; retrying"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+                delay_ms *= 4;
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Annotate `e` with the artifact it hit; a disk-full failure additionally
+/// states what was (and was not) lost, so the operator knows the run is
+/// recoverable.
+pub fn annotate(e: io::Error, artifact: &str) -> io::Error {
+    let msg = match classify(&e) {
+        IoClass::DiskFull => format!(
+            "disk full writing {artifact}: {e} \
+             (the partial file was removed; previously published artifacts are \
+             untouched — free space and re-run)"
+        ),
+        _ => format!("{artifact}: {e}"),
+    };
+    io::Error::new(e.kind(), msg)
+}
+
+/// The sibling temp path [`write_atomic`] stages into: per-process, so
+/// concurrent writers to the same destination degrade to
+/// last-rename-wins instead of interleaving one file.
+pub fn tmp_path(dst: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.tmp.{}", dst.display(), std::process::id()))
+}
+
+/// Write `dst` atomically: `write` streams into `{dst}.tmp.{pid}`, the
+/// file is flushed and fsynced, then renamed over `dst`. On any error the
+/// temp file is removed and the error is [`annotate`]d with `artifact`;
+/// `dst` itself is never touched except by the final rename, so it either
+/// keeps its previous content or holds the complete new artifact.
+pub fn write_atomic<T>(
+    dst: &Path,
+    artifact: &str,
+    write: impl FnOnce(&mut io::BufWriter<std::fs::File>) -> io::Result<T>,
+) -> io::Result<T> {
+    let tmp = tmp_path(dst);
+    let staged = (|| -> io::Result<T> {
+        let f = retry(artifact, || std::fs::File::create(&tmp))?;
+        let mut w = io::BufWriter::new(f);
+        let v = write(&mut w)?;
+        io::Write::flush(&mut w)?;
+        // fsync before the rename: otherwise a power loss can persist the
+        // rename with unwritten data, destroying the previous good file
+        // the atomic-rename dance is meant to protect.
+        w.get_ref().sync_all()?;
+        Ok(v)
+    })();
+    match staged {
+        Ok(v) => {
+            std::fs::rename(&tmp, dst).map_err(|e| annotate(e, artifact))?;
+            Ok(v)
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(annotate(e, artifact))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_splits_the_three_classes() {
+        assert_eq!(classify(&io::Error::from_raw_os_error(28)), IoClass::DiskFull);
+        assert_eq!(classify(&io::Error::from_raw_os_error(122)), IoClass::DiskFull);
+        assert_eq!(
+            classify(&io::Error::new(io::ErrorKind::Interrupted, "x")),
+            IoClass::Transient
+        );
+        assert_eq!(
+            classify(&io::Error::new(io::ErrorKind::TimedOut, "x")),
+            IoClass::Transient
+        );
+        assert_eq!(
+            classify(&io::Error::new(io::ErrorKind::InvalidData, "x")),
+            IoClass::Permanent
+        );
+        assert_eq!(
+            classify(&io::Error::new(io::ErrorKind::NotFound, "x")),
+            IoClass::Permanent
+        );
+    }
+
+    #[test]
+    fn retry_recovers_from_transient_failures() {
+        let mut calls = 0;
+        let v = retry("test", || {
+            calls += 1;
+            if calls < 3 {
+                Err(io::Error::new(io::ErrorKind::Interrupted, "flaky"))
+            } else {
+                Ok(42)
+            }
+        })
+        .unwrap();
+        assert_eq!(v, 42);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_gives_up_after_bounded_attempts() {
+        let mut calls = 0;
+        let e = retry("test", || -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::Interrupted, "always flaky"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, RETRY_ATTEMPTS);
+        assert_eq!(e.kind(), io::ErrorKind::Interrupted);
+    }
+
+    #[test]
+    fn retry_does_not_retry_permanent_failures() {
+        let mut calls = 0;
+        let _ = retry("test", || -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::InvalidData, "corrupt"))
+        });
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn annotate_names_the_artifact_and_disk_full_recovery() {
+        let e = annotate(io::Error::from_raw_os_error(28), "bank shards/train.alxbank");
+        assert!(e.to_string().contains("disk full"), "{e}");
+        assert!(e.to_string().contains("train.alxbank"), "{e}");
+        let e = annotate(io::Error::new(io::ErrorKind::NotFound, "gone"), "ckpt");
+        assert!(e.to_string().contains("ckpt"), "{e}");
+    }
+
+    #[test]
+    fn write_atomic_publishes_complete_files_only() {
+        let dir = std::env::temp_dir();
+        let dst = dir.join(format!("alx_durable_ok_{}.bin", std::process::id()));
+        write_atomic(&dst, "test artifact", |w| {
+            io::Write::write_all(w, b"hello world")
+        })
+        .unwrap();
+        assert_eq!(std::fs::read(&dst).unwrap(), b"hello world");
+
+        // A failing writer must leave the previous content untouched and
+        // clean up its temp file.
+        let e = write_atomic(&dst, "test artifact", |w| -> io::Result<()> {
+            io::Write::write_all(w, b"partial")?;
+            Err(io::Error::new(io::ErrorKind::InvalidData, "boom"))
+        })
+        .unwrap_err();
+        assert!(e.to_string().contains("test artifact"), "{e}");
+        assert_eq!(std::fs::read(&dst).unwrap(), b"hello world", "dst clobbered");
+        assert!(!tmp_path(&dst).exists(), "temp file left behind");
+        let _ = std::fs::remove_file(&dst);
+    }
+}

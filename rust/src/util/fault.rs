@@ -1,0 +1,313 @@
+//! Deterministic fault injection: named failpoints threaded through the
+//! IO and threading choke points (chunked reader/writer, bank writers and
+//! opens, prefetch threads, checkpoint save/load, the CLI tools).
+//!
+//! A failpoint is a call to [`failpoint`] (or [`failpoint_bytes`]) with a
+//! stable name like `"ckpt.write"`. Which failpoints actually fire — and
+//! how — is selected at runtime from the `ALX_FAILPOINTS` environment
+//! variable, the `[fault] points` config key, or [`configure`]:
+//!
+//! ```text
+//! ALX_FAILPOINTS='name=trigger[:action][;name=trigger[:action]...]'
+//!
+//! triggers:  once         fire on the first hit
+//!            hit:N        fire on exactly the Nth hit (1-based)
+//!            every:N      fire on every Nth hit
+//!            after:BYTES  fire once the byte counter passes BYTES
+//! actions:   err          io::ErrorKind::Other (default)
+//!            transient    io::ErrorKind::Interrupted (retryable)
+//!            enospc       raw os error 28 (disk full)
+//!            panic        panic the calling thread
+//!            abort        abort the whole process (crash torture)
+//! ```
+//!
+//! Triggers are counted per failpoint in hit order, so a run with a fixed
+//! thread schedule hits the same failpoint at the same operation every
+//! time — the crash-torture suite derives `N` from a seeded RNG and
+//! replays kills deterministically.
+//!
+//! Unless the crate is built with `--features failpoints`, every hook
+//! compiles to an inlined `Ok(())` and the registry does not exist: the
+//! production binary carries zero overhead and cannot be made to fail by
+//! the environment.
+
+/// Whether fault injection is compiled in.
+pub const ENABLED: bool = cfg!(feature = "failpoints");
+
+#[cfg(feature = "failpoints")]
+mod imp {
+    use std::collections::HashMap;
+    use std::io;
+    use std::sync::{Mutex, OnceLock};
+
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    enum Trigger {
+        Once,
+        Hit(u64),
+        Every(u64),
+        After(u64),
+    }
+
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    enum Action {
+        Err,
+        Transient,
+        Enospc,
+        Panic,
+        Abort,
+    }
+
+    struct FpState {
+        trigger: Trigger,
+        action: Action,
+        hits: u64,
+        bytes: u64,
+        fired: bool,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, FpState>> {
+        static REG: OnceLock<Mutex<HashMap<String, FpState>>> = OnceLock::new();
+        REG.get_or_init(|| {
+            let mut map = HashMap::new();
+            if let Ok(spec) = std::env::var("ALX_FAILPOINTS") {
+                if let Err(e) = parse_into(&spec, &mut map) {
+                    eprintln!("ALX_FAILPOINTS ignored: {e}");
+                    map.clear();
+                }
+            }
+            Mutex::new(map)
+        })
+    }
+
+    fn parse_into(spec: &str, map: &mut HashMap<String, FpState>) -> Result<(), String> {
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("'{part}': expected name=trigger[:action]"))?;
+            let toks: Vec<&str> = val.split(':').collect();
+            let (trigger, rest) = match toks[0] {
+                "once" => (Trigger::Once, &toks[1..]),
+                kind @ ("hit" | "every" | "after") => {
+                    let n = toks
+                        .get(1)
+                        .and_then(|s| s.parse::<u64>().ok())
+                        .filter(|&n| n > 0)
+                        .ok_or_else(|| format!("'{part}': {kind} needs a positive count"))?;
+                    let t = match kind {
+                        "hit" => Trigger::Hit(n),
+                        "every" => Trigger::Every(n),
+                        _ => Trigger::After(n),
+                    };
+                    (t, &toks[2..])
+                }
+                other => return Err(format!("'{part}': unknown trigger '{other}'")),
+            };
+            let action = match rest {
+                [] => Action::Err,
+                [a] => match *a {
+                    "err" => Action::Err,
+                    "transient" => Action::Transient,
+                    "enospc" => Action::Enospc,
+                    "panic" => Action::Panic,
+                    "abort" => Action::Abort,
+                    other => return Err(format!("'{part}': unknown action '{other}'")),
+                },
+                _ => return Err(format!("'{part}': too many ':' fields")),
+            };
+            map.insert(
+                name.trim().to_string(),
+                FpState { trigger, action, hits: 0, bytes: 0, fired: false },
+            );
+        }
+        Ok(())
+    }
+
+    fn fire(name: &str, action: Action) -> io::Result<()> {
+        match action {
+            Action::Err => Err(io::Error::other(format!("injected fault at failpoint '{name}'"))),
+            Action::Transient => Err(io::Error::new(
+                io::ErrorKind::Interrupted,
+                format!("injected transient fault at failpoint '{name}'"),
+            )),
+            // Real raw code so util::durable classifies it as DiskFull.
+            Action::Enospc => Err(io::Error::from_raw_os_error(28)),
+            Action::Panic => panic!("injected panic at failpoint '{name}'"),
+            Action::Abort => {
+                eprintln!("injected abort at failpoint '{name}'");
+                std::process::abort()
+            }
+        }
+    }
+
+    /// Hit the named failpoint. Returns the configured failure when the
+    /// trigger is due, `Ok(())` otherwise (including for unconfigured
+    /// names).
+    pub fn failpoint(name: &str) -> io::Result<()> {
+        failpoint_bytes(name, 0)
+    }
+
+    /// [`failpoint`] that also advances the failpoint's byte counter (for
+    /// `after:BYTES` triggers on streaming writers/readers).
+    pub fn failpoint_bytes(name: &str, bytes: u64) -> io::Result<()> {
+        let mut reg = registry().lock().unwrap_or_else(|p| p.into_inner());
+        let Some(st) = reg.get_mut(name) else { return Ok(()) };
+        st.hits += 1;
+        st.bytes = st.bytes.saturating_add(bytes);
+        let due = match st.trigger {
+            Trigger::Once => !st.fired,
+            Trigger::Hit(n) => st.hits == n,
+            Trigger::Every(n) => st.hits % n == 0,
+            Trigger::After(b) => !st.fired && st.bytes >= b,
+        };
+        if !due {
+            return Ok(());
+        }
+        st.fired = true;
+        let action = st.action;
+        // Release the registry before panicking/aborting so a caught
+        // injected panic cannot poison it for the rest of the process.
+        drop(reg);
+        fire(name, action)
+    }
+
+    /// Install failpoints from a spec string (same grammar as
+    /// `ALX_FAILPOINTS`); merges over whatever is already configured.
+    pub fn configure(spec: &str) -> Result<(), String> {
+        let mut fresh = HashMap::new();
+        parse_into(spec, &mut fresh)?;
+        let mut reg = registry().lock().unwrap_or_else(|p| p.into_inner());
+        reg.extend(fresh);
+        Ok(())
+    }
+
+    /// Remove every configured failpoint (tests).
+    pub fn reset() {
+        registry().lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+
+    /// How many times the named failpoint has been hit (0 when not
+    /// configured — unconfigured hits are not counted).
+    pub fn hits(name: &str) -> u64 {
+        registry()
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(name)
+            .map(|s| s.hits)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(not(feature = "failpoints"))]
+mod imp {
+    use std::io;
+
+    #[inline(always)]
+    pub fn failpoint(_name: &str) -> io::Result<()> {
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn failpoint_bytes(_name: &str, _bytes: u64) -> io::Result<()> {
+        Ok(())
+    }
+
+    /// Asking for live failpoints in a build that compiled them out is a
+    /// configuration error, not a silent no-op.
+    pub fn configure(spec: &str) -> Result<(), String> {
+        if spec.trim().is_empty() {
+            Ok(())
+        } else {
+            Err("failpoints are compiled out (rebuild with --features failpoints)".to_string())
+        }
+    }
+
+    pub fn reset() {}
+
+    pub fn hits(_name: &str) -> u64 {
+        0
+    }
+}
+
+pub use imp::{configure, failpoint, failpoint_bytes, hits, reset};
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconfigured_failpoints_pass() {
+        assert!(failpoint("fault.test.unconfigured").is_ok());
+        assert_eq!(hits("fault.test.unconfigured"), 0);
+    }
+
+    #[test]
+    fn hit_n_fires_exactly_once_at_n() {
+        configure("fault.test.hitn=hit:3").unwrap();
+        assert!(failpoint("fault.test.hitn").is_ok());
+        assert!(failpoint("fault.test.hitn").is_ok());
+        let e = failpoint("fault.test.hitn").unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::Other);
+        assert!(e.to_string().contains("fault.test.hitn"), "{e}");
+        assert!(failpoint("fault.test.hitn").is_ok(), "hit:N fires only on the Nth hit");
+    }
+
+    #[test]
+    fn once_fires_on_first_hit_only() {
+        configure("fault.test.once=once:transient").unwrap();
+        let e = failpoint("fault.test.once").unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::Interrupted);
+        assert!(failpoint("fault.test.once").is_ok());
+    }
+
+    #[test]
+    fn every_n_fires_periodically() {
+        configure("fault.test.every=every:2").unwrap();
+        let fired: Vec<bool> =
+            (0..6).map(|_| failpoint("fault.test.every").is_err()).collect();
+        assert_eq!(fired, [false, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn after_bytes_fires_once_past_threshold() {
+        configure("fault.test.bytes=after:100:enospc").unwrap();
+        assert!(failpoint_bytes("fault.test.bytes", 60).is_ok());
+        let e = failpoint_bytes("fault.test.bytes", 60).unwrap_err();
+        assert_eq!(e.raw_os_error(), Some(28));
+        assert!(failpoint_bytes("fault.test.bytes", 1000).is_ok(), "after fires once");
+    }
+
+    #[test]
+    fn injected_panic_is_catchable() {
+        configure("fault.test.panic=once:panic").unwrap();
+        let r = std::panic::catch_unwind(|| failpoint("fault.test.panic"));
+        assert!(r.is_err());
+        // The registry survives the caught panic.
+        assert!(failpoint("fault.test.panic").is_ok());
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in ["noeq", "a=", "a=hit", "a=hit:0", "a=hit:x", "a=once:nope", "a=once:err:x"] {
+            assert!(configure(bad).is_err(), "spec '{bad}' should be rejected");
+        }
+    }
+}
+
+#[cfg(all(test, not(feature = "failpoints")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compiled_out_hooks_are_noops() {
+        assert!(!ENABLED);
+        assert!(failpoint("anything").is_ok());
+        assert!(failpoint_bytes("anything", u64::MAX).is_ok());
+        assert_eq!(hits("anything"), 0);
+        assert!(configure("").is_ok());
+        assert!(configure("a=once").is_err(), "live spec must not be silently ignored");
+    }
+}

@@ -5,6 +5,8 @@
 //! from `rand`, `half`, `log` or `rayon` is implemented here.
 
 pub mod bf16;
+pub mod durable;
+pub mod fault;
 pub mod logger;
 pub mod mem;
 pub mod mmap;

@@ -5,6 +5,29 @@
 //! threads via `std::thread::scope`. On single-CPU hosts it degrades to a
 //! sequential loop with no thread overhead.
 
+/// Lock a mutex, recovering from poisoning. The storage layers guard
+/// plain data (residency queues, mapped banks) whose invariants hold
+/// between operations, so a panic on one thread — injected or real — must
+/// not cascade into every other thread that touches the same lock.
+pub fn lock_or_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// How long a consumer waits on an in-flight background load before
+/// assuming the loader died and taking over (`ALX_STALL_MS` override,
+/// default 2000ms). A dead prefetch thread then degrades to an on-demand
+/// fault instead of hanging the epoch.
+pub fn stall_timeout_ms() -> u64 {
+    static MS: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    *MS.get_or_init(|| {
+        std::env::var("ALX_STALL_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|&ms| ms > 0)
+            .unwrap_or(2000)
+    })
+}
+
 /// Number of worker threads to use (``ALX_THREADS`` override, else the
 /// machine's available parallelism).
 pub fn worker_threads() -> usize {

@@ -1,12 +1,18 @@
 //! Hostile-input hardening: corrupt, truncated and lying binary files
 //! must surface as `Err` — never a panic, and never an allocation larger
-//! than what the stream length actually supports. Covers all four
+//! than what the stream length actually supports. Covers all five
 //! on-disk formats: `ALXCSR01`, `ALXCSR02`, the shard-major `ALXBANK01`
-//! matrix bank and the `ALXTAB01` embedding-table bank.
+//! matrix bank, the `ALXTAB01` embedding-table bank and the `ALXCKPT2`
+//! checkpoint.
 
+use alx::als::checkpoint::{load_limited, save, CheckpointMeta};
+use alx::als::TrainConfig;
+use alx::config::AlxConfig;
+use alx::coordinator::TrainSession;
+use alx::data::InMemorySource;
 use alx::sharding::{ShardedTable, Storage, TableBank};
 use alx::sparse::{write_chunked, ChunkedReader, Csr, CsrBank, ShardedCsr};
-use alx::util::Pcg64;
+use alx::util::{durable, Pcg64};
 
 fn sample_matrix(rows: usize, cols: usize, seed: u64) -> Csr {
     let mut rng = Pcg64::new(seed);
@@ -400,6 +406,139 @@ fn tab_corrupt_directory_offsets_rejected() {
         buf[off_pos..off_pos + 8].copy_from_slice(&bad.to_le_bytes());
         assert!(open_tab(&buf, "offsets_bad").is_err(), "offset {bad} accepted");
     }
+}
+
+// ---------------------------------------------------------------- ALXCKPT2
+
+/// A valid checkpoint image: two tables, a 2-entry objective log (one
+/// recorded objective, one skipped epoch) and one recall record.
+fn ckpt_bytes(storage: Storage) -> Vec<u8> {
+    let mut rng = Pcg64::new(0xc47);
+    let users = ShardedTable::randn(14, 3, 2, storage, &mut rng);
+    let items = ShardedTable::randn(11, 3, 2, storage, &mut rng);
+    let meta = CheckpointMeta {
+        epoch: 4,
+        dim: 3,
+        users: 14,
+        items: 11,
+        storage_bf16: storage == Storage::Bf16,
+    };
+    let mut buf = Vec::new();
+    save(&mut buf, &meta, &users, &items, &[(1, Some(-12.5)), (2, None)], &[(2, 20, 0.5)])
+        .unwrap();
+    buf
+}
+
+#[test]
+fn ckpt_truncation_at_every_byte_is_an_error() {
+    for storage in [Storage::F32, Storage::Bf16] {
+        let clean = ckpt_bytes(storage);
+        assert!(load_limited(&mut &clean[..], 2, Some(clean.len() as u64)).is_ok());
+        let mut legacy_boundary_ok = 0;
+        for cut in 0..clean.len() {
+            match load_limited(&mut &clean[..cut], 2, Some(cut as u64)) {
+                Err(_) => {}
+                Ok(ck) => {
+                    // The one legal truncation point: exactly at the start
+                    // of the trailing recall section, which is optional for
+                    // legacy-file compatibility. Everything before it must
+                    // have parsed intact.
+                    assert!(ck.recall_log.is_empty(), "cut {cut}");
+                    assert_eq!(ck.meta.epoch, 4, "cut {cut}");
+                    assert_eq!(ck.objective_log.len(), 2, "cut {cut}");
+                    legacy_boundary_ok += 1;
+                }
+            }
+        }
+        assert!(
+            legacy_boundary_ok <= 1,
+            "{legacy_boundary_ok} truncation points accepted ({storage:?})"
+        );
+    }
+}
+
+#[test]
+fn ckpt_single_byte_corruption_never_panics() {
+    // Flip one byte at every position. Structural damage must error;
+    // flips confined to table elements legally decode to other numbers,
+    // but nothing may panic and the result must stay self-consistent.
+    let clean = ckpt_bytes(Storage::Bf16);
+    for pos in 0..clean.len() {
+        let mut buf = clean.clone();
+        buf[pos] ^= 0x5a;
+        if let Ok(ck) = load_limited(&mut &buf[..], 2, Some(buf.len() as u64)) {
+            assert_eq!(ck.users.rows as u64, ck.meta.users, "byte {pos}");
+            assert_eq!(ck.items.rows as u64, ck.meta.items, "byte {pos}");
+            assert_eq!(
+                ck.users.to_dense().data.len(),
+                ck.meta.users as usize * ck.meta.dim as usize,
+                "byte {pos}: users table shape drifted"
+            );
+            assert_eq!(
+                ck.items.to_dense().data.len(),
+                ck.meta.items as usize * ck.meta.dim as usize,
+                "byte {pos}: items table shape drifted"
+            );
+        }
+    }
+}
+
+#[test]
+fn ckpt_lying_header_fails_before_allocating() {
+    // A header claiming ~10^15-row tables over a 61-byte stream must be
+    // rejected by the length check, not drive a petabyte allocation.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"ALXCKPT2");
+    buf.extend_from_slice(&0u64.to_le_bytes()); // epoch
+    buf.extend_from_slice(&u32::MAX.to_le_bytes()); // dim
+    buf.extend_from_slice(&(1u64 << 50).to_le_bytes()); // users
+    buf.extend_from_slice(&(1u64 << 50).to_le_bytes()); // items
+    buf.push(0); // storage f32
+    buf.extend_from_slice(&0u64.to_le_bytes()); // objective log len
+    let err = load_limited(&mut &buf[..], 2, Some(buf.len() as u64)).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+    assert!(err.to_string().contains("table data"), "{err}");
+}
+
+#[test]
+fn failed_checkpoint_save_preserves_previous_good_one() {
+    // A save that cannot even stage its tmp file (here: the staging path
+    // is occupied by a directory) must leave the previously published
+    // checkpoint byte-for-byte intact — corrupting the only good
+    // checkpoint while failing to write its replacement is the one
+    // unrecoverable outcome.
+    let path = std::env::temp_dir()
+        .join(format!("alx_corrupt_ckpt_keep_{}.ckpt", std::process::id()));
+    let source = InMemorySource::new("corrupt-keep", sample_matrix(30, 20, 40));
+    let cfg = AlxConfig {
+        cores: 2,
+        train: TrainConfig {
+            dim: 6,
+            epochs: 4,
+            batch_rows: 16,
+            batch_width: 4,
+            threads: 1,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    };
+    let mut s = TrainSession::new(&source, cfg).unwrap();
+    s.step().unwrap();
+    s.checkpoint(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    let tmp = durable::tmp_path(&path);
+    std::fs::create_dir_all(&tmp).unwrap();
+    s.step().unwrap();
+    let r = s.checkpoint(&path);
+    assert!(r.is_err(), "checkpoint save must fail when staging is impossible");
+    assert_eq!(std::fs::read(&path).unwrap(), good, "previous good checkpoint clobbered");
+
+    // Once the obstruction clears, the next save publishes new state.
+    std::fs::remove_dir_all(&tmp).unwrap();
+    s.checkpoint(&path).unwrap();
+    assert_ne!(std::fs::read(&path).unwrap(), good, "second save published stale state");
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

@@ -1,0 +1,457 @@
+//! Crash torture: kill a child `alx train` at seeded failpoints mid-epoch
+//! and mid-checkpoint, resume it, and assert the finished run is bitwise
+//! identical to an uninterrupted reference — for resident training and
+//! for the fully out-of-core `--stream --spill --spill-model` path.
+//! Published artifacts left behind by a crash must pass `alx verify`.
+//!
+//! The whole suite needs fault injection compiled in; run it with
+//! `cargo test --features failpoints --test crash_torture`. Without the
+//! feature only a stub asserting the hooks are no-ops remains.
+
+#[cfg(not(feature = "failpoints"))]
+mod stub {
+    #[test]
+    fn crash_torture_requires_failpoints_feature() {
+        // Compiled-out build: the hooks are inert no-ops and there is
+        // nothing to torture. The CI torture job builds with the feature.
+        assert!(!alx::util::fault::ENABLED);
+        assert!(alx::util::fault::failpoint("ckpt.write").is_ok());
+    }
+}
+
+#[cfg(feature = "failpoints")]
+mod torture {
+    use alx::als::TrainConfig;
+    use alx::config::AlxConfig;
+    use alx::coordinator::TrainSession;
+    use alx::data::InMemorySource;
+    use alx::sparse::{Csr, ShardedCsr};
+    use alx::util::{durable, fault, Pcg64};
+    use std::path::{Path, PathBuf};
+    use std::process::{Command, Output};
+    use std::sync::Mutex;
+
+    /// The in-process tests below share the global failpoint registry;
+    /// serialize them so one test's injected faults never fire inside
+    /// another. (The subprocess tests configure children via the
+    /// `ALX_FAILPOINTS` env var and never touch this process's registry.)
+    static FP_LOCK: Mutex<()> = Mutex::new(());
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("alx_torture_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn alx_bin(dir: &Path) -> Command {
+        let mut c = Command::new(env!("CARGO_BIN_EXE_alx"));
+        c.current_dir(dir);
+        c.env_remove("ALX_FAILPOINTS");
+        c
+    }
+
+    fn run_ok(mut c: Command) -> Output {
+        let out = c.output().unwrap();
+        assert!(
+            out.status.success(),
+            "command failed\nstdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        out
+    }
+
+    /// Run a child train and assert the injected abort actually killed it.
+    fn run_killed(mut c: Command, failpoints: &str) -> Output {
+        c.env("ALX_FAILPOINTS", failpoints);
+        let out = c.output().unwrap();
+        assert!(
+            !out.status.success(),
+            "child survived ALX_FAILPOINTS='{failpoints}'\nstdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        out
+    }
+
+    /// Small deterministic resident run: 3 epochs, checkpoint every epoch
+    /// plus the final write (4 `ckpt.write` hits total).
+    fn resident_train_args(ckpt: &str) -> Vec<String> {
+        [
+            "train", "--scale", "0.0012", "--dim", "8", "--epochs", "3", "--cores", "2",
+            "--threads", "1", "--checkpoint-every", "1", "--checkpoint", ckpt,
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+    }
+
+    /// Fully out-of-core run: streamed ingestion, spilled matrix banks,
+    /// spilled model banks, 2 epochs (3 `ckpt.write` hits total).
+    fn spill_train_args(ckpt: &str) -> Vec<String> {
+        [
+            "train", "--stream", "--data", "g.alxcsr02", "--spill", "--spill-dir", "spill",
+            "--spill-model", "--model-spill-dir", "spill", "--resident-shards", "1",
+            "--resident-table-shards", "1", "--cores", "4", "--threads", "1", "--dim", "8",
+            "--epochs", "2", "--checkpoint-every", "1", "--checkpoint", ckpt,
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+    }
+
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    walk(&p, out);
+                } else {
+                    out.push(p);
+                }
+            }
+        }
+    }
+
+    /// `alx verify` every published bank artifact under `dir` (skipping
+    /// in-flight `*.tmp.*` staging files, which a kill may leave behind).
+    fn verify_leftover_banks(dir: &Path) -> usize {
+        let mut files = Vec::new();
+        walk(dir, &mut files);
+        let mut checked = 0;
+        for p in files {
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            if name.contains(".tmp.") {
+                continue;
+            }
+            if name.ends_with(".alxbank") || name.ends_with(".alxtab") {
+                run_ok({
+                    let mut c = alx_bin(dir);
+                    c.arg("verify").arg(&p);
+                    c
+                });
+                checked += 1;
+            }
+        }
+        checked
+    }
+
+    /// Kill a resident run during its Nth checkpoint write (N seeded, and
+    /// always ≥ 2 so a previous good checkpoint exists), resume from what
+    /// survived, and demand a bitwise-identical final checkpoint.
+    #[test]
+    fn resident_kill_mid_checkpoint_resumes_bitwise() {
+        let dir = scratch("resident_ckpt");
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(resident_train_args("ref.ckpt"));
+            c
+        });
+        let reference = std::fs::read(dir.join("ref.ckpt")).unwrap();
+
+        let mut rng = Pcg64::new(0xC0A7);
+        for round in 0..2 {
+            let ckpt = format!("crash_{round}.ckpt");
+            let hit = rng.range(2, 5); // kill during ckpt write 2..=4 of 4
+            run_killed(
+                {
+                    let mut c = alx_bin(&dir);
+                    c.args(resident_train_args(&ckpt));
+                    c
+                },
+                &format!("ckpt.write=hit:{hit}:abort"),
+            );
+            // The abort fired before this write created its tmp file, so
+            // the published checkpoint is the previous complete one.
+            run_ok({
+                let mut c = alx_bin(&dir);
+                c.arg("verify").arg(&ckpt);
+                c
+            });
+            run_ok({
+                let mut c = alx_bin(&dir);
+                c.args(resident_train_args(&ckpt));
+                c.arg("--resume").arg(&ckpt);
+                c
+            });
+            let resumed = std::fs::read(dir.join(&ckpt)).unwrap();
+            assert_eq!(
+                resumed, reference,
+                "resumed checkpoint differs from uninterrupted run (kill at ckpt.write hit {hit})"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Kill between the checkpoint's fsync and its rename: the staged tmp
+    /// file is orphaned, the published checkpoint stays the previous good
+    /// one, and resume still converges bitwise.
+    #[test]
+    fn resident_kill_at_publish_keeps_previous_checkpoint() {
+        let dir = scratch("resident_publish");
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(resident_train_args("ref.ckpt"));
+            c
+        });
+        let reference = std::fs::read(dir.join("ref.ckpt")).unwrap();
+
+        run_killed(
+            {
+                let mut c = alx_bin(&dir);
+                c.args(resident_train_args("crash.ckpt"));
+                c
+            },
+            "ckpt.publish=hit:2:abort",
+        );
+        // Published checkpoint = epoch 1's write; the epoch-2 bytes died
+        // staged in a tmp file that must never be picked up as published.
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.arg("verify").arg("crash.ckpt");
+            c
+        });
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(resident_train_args("crash.ckpt"));
+            c.arg("--resume").arg("crash.ckpt");
+            c
+        });
+        assert_eq!(std::fs::read(dir.join("crash.ckpt")).unwrap(), reference);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Kill the out-of-core path mid-epoch (during a table-shard
+    /// write-back, before any checkpoint exists): the crash must leave
+    /// only verifiable published banks plus ignorable tmp files, and a
+    /// from-scratch rerun must match the uninterrupted reference bitwise.
+    #[test]
+    fn spill_kill_mid_epoch_leaves_verifiable_artifacts() {
+        let dir = scratch("spill_midepoch");
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(["generate", "--scale", "0.0012", "--out", "g.alxcsr02", "--chunk-rows", "64"]);
+            c
+        });
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(spill_train_args("ref.ckpt"));
+            c
+        });
+        let reference = std::fs::read(dir.join("ref.ckpt")).unwrap();
+
+        let mut rng = Pcg64::new(0x5EED);
+        let hit = rng.range(3, 9); // within epoch 1: W+H write-backs alone exceed this
+        run_killed(
+            {
+                let mut c = alx_bin(&dir);
+                c.args(spill_train_args("crash.ckpt"));
+                c
+            },
+            &format!("tab.store_shard=hit:{hit}:abort"),
+        );
+        assert!(
+            !dir.join("crash.ckpt").exists(),
+            "no checkpoint should have been published before the mid-epoch kill"
+        );
+        // Everything the crashed run *published* must still verify clean.
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(["verify", "g.alxcsr02"]);
+            c
+        });
+        let banks = verify_leftover_banks(&dir);
+        assert!(banks >= 1, "expected published spill banks to survive the crash");
+        // No checkpoint to resume from: recovery is a from-scratch rerun,
+        // which must be untroubled by the crash debris and end bitwise
+        // identical to the reference.
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(spill_train_args("crash.ckpt"));
+            c
+        });
+        assert_eq!(std::fs::read(dir.join("crash.ckpt")).unwrap(), reference);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Kill the out-of-core path mid-checkpoint and resume from the
+    /// surviving checkpoint (re-ingesting the stream into fresh banks).
+    #[test]
+    fn spill_kill_mid_checkpoint_resumes_bitwise() {
+        let dir = scratch("spill_ckpt");
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(["generate", "--scale", "0.0012", "--out", "g.alxcsr02", "--chunk-rows", "64"]);
+            c
+        });
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(spill_train_args("ref.ckpt"));
+            c
+        });
+        let reference = std::fs::read(dir.join("ref.ckpt")).unwrap();
+
+        run_killed(
+            {
+                let mut c = alx_bin(&dir);
+                c.args(spill_train_args("crash.ckpt"));
+                c
+            },
+            "ckpt.write=hit:2:abort",
+        );
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.arg("verify").arg("crash.ckpt");
+            c
+        });
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(spill_train_args("crash.ckpt"));
+            c.arg("--resume").arg("crash.ckpt");
+            c
+        });
+        assert_eq!(std::fs::read(dir.join("crash.ckpt")).unwrap(), reference);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `alx verify` is the corruption oracle the torture runs lean on:
+    /// it must pass intact artifacts and exit non-zero on truncation.
+    #[test]
+    fn verify_cli_detects_truncation() {
+        let dir = scratch("verify_cli");
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(["generate", "--scale", "0.0012", "--out", "g.alxcsr02", "--chunk-rows", "64"]);
+            c
+        });
+        run_ok({
+            let mut c = alx_bin(&dir);
+            c.args(["verify", "g.alxcsr02"]);
+            c
+        });
+        let whole = std::fs::read(dir.join("g.alxcsr02")).unwrap();
+        std::fs::write(dir.join("cut.alxcsr02"), &whole[..whole.len() - 7]).unwrap();
+        let out = alx_bin(&dir).args(["verify", "cut.alxcsr02"]).output().unwrap();
+        assert!(!out.status.success(), "verify passed a truncated file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ------------------------------------------------------------------
+    // In-process injection: behaviors that don't need a child process.
+    // ------------------------------------------------------------------
+
+    fn tiny_matrix(users: usize, items: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut t = Vec::new();
+        for u in 0..users as u32 {
+            for _ in 0..6 {
+                t.push((u, rng.range(0, items) as u32, 1.0));
+            }
+        }
+        Csr::from_coo(users, items, &t)
+    }
+
+    fn tiny_cfg(epochs: usize) -> AlxConfig {
+        AlxConfig {
+            cores: 4,
+            train: TrainConfig {
+                dim: 8,
+                epochs,
+                lambda: 0.05,
+                alpha: 0.01,
+                batch_rows: 16,
+                batch_width: 4,
+                threads: 1,
+                ..TrainConfig::default()
+            },
+            ..AlxConfig::default()
+        }
+    }
+
+    /// ENOSPC while spilling a bank: clean classified error naming the
+    /// artifact, nothing half-published at the destination, no staging
+    /// litter.
+    #[test]
+    fn enospc_spill_publishes_nothing() {
+        let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        fault::reset();
+        fault::configure("bank.write_shard=once:enospc").unwrap();
+        let sharded = ShardedCsr::from_csr(&tiny_matrix(48, 30, 9), 3);
+        let path =
+            std::env::temp_dir().join(format!("alx_torture_enospc_{}.alxbank", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let e = sharded.spill_to_bank(&path).unwrap_err();
+        fault::reset();
+        assert!(e.to_string().contains("disk full"), "unclassified ENOSPC: {e}");
+        assert!(e.to_string().contains("alxbank"), "error must name the artifact: {e}");
+        assert!(!path.exists(), "half-published bank left at destination");
+        assert!(!durable::tmp_path(&path).exists(), "staging file left behind");
+    }
+
+    /// ENOSPC during a checkpoint write must leave the previous good
+    /// checkpoint byte-for-byte intact and clean up its staging file.
+    #[test]
+    fn enospc_checkpoint_keeps_previous_good_one() {
+        let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        fault::reset();
+        let path = std::env::temp_dir()
+            .join(format!("alx_torture_ckpt_enospc_{}.ckpt", std::process::id()));
+        let source = InMemorySource::new("tiny", tiny_matrix(48, 30, 9));
+        let mut s = TrainSession::new(&source, tiny_cfg(4)).unwrap();
+        s.step().unwrap();
+        s.checkpoint(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        s.step().unwrap();
+        fault::configure("ckpt.write=once:enospc").unwrap();
+        let r = s.checkpoint(&path);
+        fault::reset();
+        assert!(r.is_err(), "injected disk-full checkpoint write must error");
+        assert_eq!(std::fs::read(&path).unwrap(), good, "previous checkpoint clobbered");
+        assert!(!durable::tmp_path(&path).exists(), "staging file left behind");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Every background prefetch dying (panic in the prefetch thread) must
+    /// degrade to on-demand loads: the epoch completes, the failures are
+    /// counted, and the result is bitwise identical to a healthy run.
+    #[test]
+    fn dead_prefetchers_degrade_to_on_demand() {
+        let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        fault::reset();
+        let base = scratch("prefetch_degrade");
+        let spill_cfg = |sub: &str| AlxConfig {
+            data_spill: true,
+            spill_dir: base.join(sub).display().to_string(),
+            resident_shards: 1,
+            model_spill: true,
+            model_spill_dir: base.join(sub).display().to_string(),
+            resident_table_shards: 1,
+            ..tiny_cfg(2)
+        };
+
+        let source = InMemorySource::new("tiny", tiny_matrix(48, 30, 9));
+        let (w_clean, h_clean) = {
+            let mut s = TrainSession::new(&source, spill_cfg("clean")).unwrap();
+            s.run().unwrap();
+            (s.trainer.w.to_dense().data, s.trainer.h.to_dense().data)
+        };
+
+        fault::configure("prefetch.matrix=every:1:panic;prefetch.table=every:1:panic").unwrap();
+        let (w_faulty, h_faulty, report) = {
+            let mut s = TrainSession::new(&source, spill_cfg("faulty")).unwrap();
+            let report = s.run().unwrap(); // must not hang or fail
+            (s.trainer.w.to_dense().data, s.trainer.h.to_dense().data, report)
+        };
+        fault::reset();
+
+        assert_eq!(w_clean, w_faulty, "dead prefetchers changed W");
+        assert_eq!(h_clean, h_faulty, "dead prefetchers changed H");
+        let sp = report.spill.expect("spill stats missing");
+        if sp.prefetches > 0 {
+            assert!(sp.prefetch_failures > 0, "dead prefetches were not counted");
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}
