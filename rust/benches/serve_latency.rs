@@ -1,0 +1,159 @@
+//! Serving latency/throughput — the batching acceptance measurement.
+//!
+//! A bank-backed model (items demand-paged from an `ALXTAB01` bank, 2 of
+//! 8 shards resident) serves 8 closed-loop clients issuing a seeded
+//! zipfian query mix, for four batcher settings: the unbatched baseline
+//! (`batch_max = 1`, every request is its own scoring pass) and batch
+//! windows of 0, 100µs and 1ms with `batch_max = 64`. The cache is off —
+//! this measures the scoring path, not memoization.
+//!
+//! Reported per config: p50/p99 latency and QPS, plus the batch shapes
+//! actually formed. Asserts the acceptance bar: best batched QPS ≥ 2×
+//! the unbatched baseline at 8 concurrent clients (coalescing decodes
+//! each paged shard once per *batch* instead of once per *query*, so the
+//! win is mostly the removed paging churn).
+//!
+//! ```bash
+//! cargo bench --bench serve_latency
+//! ```
+//! Record the printed table in EXPERIMENTS.md §Serving.
+
+use alx::serving::{serve, Client, Response, ServeConfig, ServeModel, TopKRequest};
+use alx::sharding::{ShardedTable, Storage};
+use alx::util::{Pcg64, Timer};
+use std::sync::Arc;
+use std::time::Instant;
+
+const USERS: usize = 4_096;
+const ITEMS: usize = 12_288;
+const DIM: usize = 32;
+const SHARDS: usize = 8;
+const CLUSTERS: usize = 64;
+const PROBES: usize = 8;
+const CLIENTS: usize = 8;
+const PER_CLIENT: usize = 150;
+
+struct RunResult {
+    p50_us: f64,
+    p99_us: f64,
+    qps: f64,
+    batches: u64,
+    largest_batch: u64,
+}
+
+fn run_config(model: &Arc<ServeModel>, window_us: u64, batch_max: usize) -> RunResult {
+    let cfg = ServeConfig {
+        threads: 2,
+        batch_window_us: window_us,
+        batch_max,
+        cache_entries: 0,
+        mips_probes: PROBES,
+        ..ServeConfig::default()
+    };
+    let mut handle = serve(Arc::clone(model), &cfg).unwrap();
+    let addr = handle.addr();
+
+    let wall = Timer::start();
+    let joins: Vec<_> = (0..CLIENTS as u64)
+        .map(|t| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::new(0xC0FFEE ^ t);
+                let mut c = Client::connect(&addr).unwrap();
+                let mut lat_us = Vec::with_capacity(PER_CLIENT);
+                for _ in 0..PER_CLIENT {
+                    let user = rng.next_zipf(USERS, 1.2) as u64;
+                    let req = TopKRequest {
+                        user,
+                        k: 10,
+                        probes: PROBES as u32,
+                        deadline_us: 0,
+                        exclude: vec![],
+                    };
+                    let t0 = Instant::now();
+                    match c.topk(&req).unwrap() {
+                        Response::TopK(items) => assert_eq!(items.len(), 10),
+                        other => panic!("unexpected reply: {other:?}"),
+                    }
+                    lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                }
+                lat_us
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+    let secs = wall.elapsed_secs();
+    handle.stop();
+    let stats = handle.stats();
+    assert_eq!(stats.requests, (CLIENTS * PER_CLIENT) as u64);
+
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    RunResult {
+        p50_us: alx::util::stats::quantile_sorted(&lat, 0.50),
+        p99_us: alx::util::stats::quantile_sorted(&lat, 0.99),
+        qps: lat.len() as f64 / secs.max(1e-9),
+        batches: stats.batches,
+        largest_batch: stats.largest_batch,
+    }
+}
+
+fn main() {
+    // Bank-backed model: H spills to an ALXTAB01 bank and serves with 2
+    // of 8 shards resident, so every scoring pass pages. W stays
+    // resident (one row read per request either way).
+    let mut rng = Pcg64::new(17);
+    let users = ShardedTable::randn(USERS, DIM, SHARDS, Storage::Bf16, &mut rng);
+    let items = ShardedTable::randn(ITEMS, DIM, SHARDS, Storage::Bf16, &mut rng);
+    let dir = std::env::temp_dir().join(format!("alx_serve_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let bank = dir.join("h.alxtab");
+    items.spill_to_bank(&bank).unwrap();
+    let items = ShardedTable::open_bank(&bank, 2).unwrap();
+
+    let t = Timer::start();
+    let model = Arc::new(ServeModel::from_tables(users, items, CLUSTERS, 0x5eed));
+    println!(
+        "serve_latency: {USERS} users × {ITEMS} items, d={DIM}, bf16; H bank-backed \
+         ({SHARDS} shards, 2 resident); index {CLUSTERS} clusters / {PROBES} probes \
+         (built streamed in {:.3}s)",
+        t.elapsed_secs()
+    );
+    println!(
+        "{CLIENTS} closed-loop clients × {PER_CLIENT} requests, k=10, zipf(1.2) users, \
+         cache off, 2 scoring workers\n"
+    );
+
+    println!(
+        "{:<22} {:>10} {:>10} {:>9} {:>8} {:>8}",
+        "config", "p50(us)", "p99(us)", "QPS", "batches", "largest"
+    );
+    let print = |name: &str, r: &RunResult| {
+        println!(
+            "{:<22} {:>10.0} {:>10.0} {:>9.0} {:>8} {:>8}",
+            name, r.p50_us, r.p99_us, r.qps, r.batches, r.largest_batch
+        );
+    };
+
+    let unbatched = run_config(&model, 0, 1);
+    print("unbatched (max=1)", &unbatched);
+    let mut best_qps = 0.0f64;
+    for (name, window) in [("window 0", 0u64), ("window 100us", 100), ("window 1ms", 1_000)] {
+        let r = run_config(&model, window, 64);
+        print(&format!("batched {name}"), &r);
+        assert!(r.largest_batch > 1, "{name}: batching must actually coalesce");
+        best_qps = best_qps.max(r.qps);
+    }
+
+    println!(
+        "\nbest batched QPS {:.0} vs unbatched {:.0} ({:.2}x)",
+        best_qps,
+        unbatched.qps,
+        best_qps / unbatched.qps.max(1e-9)
+    );
+    assert!(
+        best_qps >= 2.0 * unbatched.qps,
+        "acceptance: batched QPS must be >= 2x unbatched ({best_qps:.0} vs {:.0})",
+        unbatched.qps
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -274,6 +274,60 @@ pub fn load_limited(
     Ok(LoadedCheckpoint { meta, users, items, objective_log, recall_log })
 }
 
+/// Load only the meta and the two embedding tables from a checkpoint —
+/// the serving entry point: no trainer, no training matrix, and the
+/// trailing objective/recall logs are simply not needed. With `spill`
+/// set to `(dir, resident_table_shards)`, each table streams straight
+/// into an `ALXTAB01` bank under `dir` (`w.alxtab` / `h.alxtab`) and
+/// comes back demand-paged, so a larger-than-RAM model loads — and then
+/// serves — with peak memory of about one shard. `stream_len` (a file's
+/// size, when known) bounds allocations against a lying header exactly
+/// like [`load_limited`].
+pub fn load_tables(
+    r: &mut impl Read,
+    num_shards: usize,
+    stream_len: Option<u64>,
+    spill: Option<(&std::path::Path, usize)>,
+) -> std::io::Result<(CheckpointMeta, ShardedTable, ShardedTable)> {
+    let (meta, _objective_log) = read_header(r)?;
+    if let Some(len) = stream_len {
+        let elem: u128 = if meta.storage_bf16 { 2 } else { 4 };
+        let table_bytes = (meta.users as u128 + meta.items as u128) * meta.dim as u128 * elem;
+        if table_bytes > len as u128 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "checkpoint header claims {table_bytes} bytes of table data \
+                     but the stream is only {len} bytes"
+                ),
+            ));
+        }
+    }
+    let storage = if meta.storage_bf16 { Storage::Bf16 } else { Storage::F32 };
+    let dim = meta.dim as usize;
+    let make = |rows: usize, bank: &str| -> std::io::Result<ShardedTable> {
+        match spill {
+            Some((dir, resident)) => {
+                std::fs::create_dir_all(dir)?;
+                ShardedTable::zeros_spilled(
+                    rows,
+                    dim,
+                    num_shards,
+                    storage,
+                    &dir.join(bank),
+                    resident,
+                )
+            }
+            None => Ok(ShardedTable::zeros(rows, dim, num_shards, storage)),
+        }
+    };
+    let mut users = make(meta.users as usize, "w.alxtab")?;
+    read_table_into(r, &mut users)?;
+    let mut items = make(meta.items as usize, "h.alxtab")?;
+    read_table_into(r, &mut items)?;
+    Ok((meta, users, items))
+}
+
 /// Fill `buf` completely, or return 0 if the stream ended exactly at its
 /// start; a partial fill is an `UnexpectedEof` error.
 fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<usize> {
@@ -442,6 +496,44 @@ mod tests {
         assert_eq!(ck.users.to_dense().data, u.to_dense().data);
         assert_eq!(ck.items.to_dense().data, h.to_dense().data);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_tables_matches_full_load_resident_and_spilled() {
+        let u = table(23, 4, 3, Storage::Bf16, 61);
+        let h = table(31, 4, 3, Storage::Bf16, 62);
+        let meta = CheckpointMeta { epoch: 5, dim: 4, users: 23, items: 31, storage_bf16: true };
+        let mut buf = Vec::new();
+        save(&mut buf, &meta, &u, &h, &[(1, Some(2.0))], &[(1, 20, 0.5)]).unwrap();
+        let full = load(&mut &buf[..], 3).unwrap();
+
+        let (m2, lu, lh) = load_tables(&mut &buf[..], 3, Some(buf.len() as u64), None).unwrap();
+        assert_eq!(m2, meta);
+        assert!(!lu.is_spilled());
+        assert_eq!(lu.to_dense().data, full.users.to_dense().data);
+        assert_eq!(lh.to_dense().data, full.items.to_dense().data);
+
+        let dir = std::env::temp_dir().join(format!("alx_load_tabs_{}", std::process::id()));
+        let (m3, su, sh) =
+            load_tables(&mut &buf[..], 3, Some(buf.len() as u64), Some((&dir, 1))).unwrap();
+        assert_eq!(m3, meta);
+        assert!(su.is_spilled() && sh.is_spilled());
+        assert_eq!(su.to_dense().data, full.users.to_dense().data);
+        assert_eq!(sh.to_dense().data, full.items.to_dense().data);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_tables_rejects_lying_header_length() {
+        let u = table(6, 3, 2, Storage::F32, 63);
+        let h = table(5, 3, 2, Storage::F32, 64);
+        let meta = CheckpointMeta { epoch: 1, dim: 3, users: 6, items: 5, storage_bf16: false };
+        let mut buf = Vec::new();
+        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
+        // Claim a billion users: with the true stream length supplied the
+        // header is rejected before any allocation happens.
+        buf[20..28].copy_from_slice(&1_000_000_000u64.to_le_bytes());
+        assert!(load_tables(&mut &buf[..], 2, Some(buf.len() as u64), None).is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use crate::als::{PrecisionPolicy, TrainConfig};
 use crate::linalg::SolverKind;
+use crate::serving::ServeConfig;
 use crate::webgraph::Variant;
 use std::collections::BTreeMap;
 
@@ -172,6 +173,8 @@ pub struct AlxConfig {
     /// [`crate::util::fault::configure`] at tool startup. Empty = off.
     /// Non-empty specs require a binary built with `--features failpoints`.
     pub fault_points: String,
+    /// `alx serve` knobs (`[serve]` section).
+    pub serve: ServeConfig,
 }
 
 impl Default for AlxConfig {
@@ -204,6 +207,7 @@ impl Default for AlxConfig {
             early_stop_recall_every: 1,
             checkpoint_path: "alx.ckpt".to_string(),
             fault_points: String::new(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -347,6 +351,39 @@ impl AlxConfig {
         }
         if let Some(v) = kv.get("fault.points") {
             cfg.fault_points = v.to_string();
+        }
+        if let Some(v) = kv.get_u64("serve.port")? {
+            anyhow::ensure!(v <= u64::from(u16::MAX), "serve.port must fit in u16");
+            cfg.serve.port = v as u16;
+        }
+        if let Some(v) = kv.get_usize("serve.threads")? {
+            cfg.serve.threads = v; // 0 = auto (ALX_THREADS env, else all cores)
+        }
+        if let Some(v) = kv.get_u64("serve.batch_window_us")? {
+            cfg.serve.batch_window_us = v; // 0 = flush immediately
+        }
+        if let Some(v) = kv.get_usize("serve.batch_max")? {
+            anyhow::ensure!(v >= 1, "serve.batch_max must be >= 1");
+            cfg.serve.batch_max = v;
+        }
+        if let Some(v) = kv.get_usize("serve.queue_depth")? {
+            anyhow::ensure!(v >= 1, "serve.queue_depth must be >= 1");
+            cfg.serve.queue_depth = v;
+        }
+        if let Some(v) = kv.get_usize("serve.cache_entries")? {
+            cfg.serve.cache_entries = v; // 0 = cache off
+        }
+        if let Some(v) = kv.get_u64("serve.cache_ttl_ms")? {
+            cfg.serve.cache_ttl_ms = v; // 0 = no expiry
+        }
+        if let Some(v) = kv.get_usize("serve.mips_clusters")? {
+            cfg.serve.mips_clusters = v; // 0 = sqrt(n) heuristic
+        }
+        if let Some(v) = kv.get_usize("serve.mips_probes")? {
+            cfg.serve.mips_probes = v; // 0 = index default
+        }
+        if let Some(v) = kv.get_u64("serve.seed")? {
+            cfg.serve.seed = v;
         }
         Ok(cfg)
     }
@@ -494,6 +531,50 @@ checkpoint_path = "run.ckpt"
         let cfg = AlxConfig::from_kv(&kv).unwrap();
         assert_eq!(cfg.fault_points, "ckpt.write=once");
         assert!(AlxConfig::from_kv(&KvConfig::default()).unwrap().fault_points.is_empty());
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let kv = KvConfig::parse(
+            r#"
+[serve]
+port = 7878
+threads = 4
+batch_window_us = 200
+batch_max = 32
+queue_depth = 256
+cache_entries = 1024
+cache_ttl_ms = 5000
+mips_clusters = 64
+mips_probes = 8
+seed = 42
+"#,
+        )
+        .unwrap();
+        let cfg = AlxConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.serve.port, 7878);
+        assert_eq!(cfg.serve.threads, 4);
+        assert_eq!(cfg.serve.batch_window_us, 200);
+        assert_eq!(cfg.serve.batch_max, 32);
+        assert_eq!(cfg.serve.queue_depth, 256);
+        assert_eq!(cfg.serve.cache_entries, 1024);
+        assert_eq!(cfg.serve.cache_ttl_ms, 5000);
+        assert_eq!(cfg.serve.mips_clusters, 64);
+        assert_eq!(cfg.serve.mips_probes, 8);
+        assert_eq!(cfg.serve.seed, 42);
+
+        let defaults = AlxConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(defaults.serve, ServeConfig::default());
+
+        let mut bad = KvConfig::default();
+        bad.set("serve.port", "70000");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        let mut bad = KvConfig::default();
+        bad.set("serve.batch_max", "0");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        let mut bad = KvConfig::default();
+        bad.set("serve.queue_depth", "0");
+        assert!(AlxConfig::from_kv(&bad).is_err());
     }
 
     #[test]

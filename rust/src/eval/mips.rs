@@ -7,11 +7,22 @@
 //! systems): k-means over the item embeddings, score the query against the
 //! `c` centroids, and run exact search only inside the best `p` clusters —
 //! expected cost `O(c·d + p·(n/c)·d)`, sublinear in n for `c ≈ √n`.
+//!
+//! The index builds directly off a [`ShardedTable`], streaming one shard
+//! at a time (so a spilled, larger-than-RAM item table never has to be
+//! materialized densely) with the Lloyd assignment loop parallelized
+//! across rows. Search comes in three shapes that all produce bitwise
+//! identical rankings: the dense-matrix path (tests / tiny problems), a
+//! table-streamed single query, and [`MipsIndex::search_batch`] — the
+//! serving path that groups an entire batch's candidate lookups by owning
+//! shard so a paged backend faults each shard at most once per batch.
 
 use crate::linalg::{mat::dot, Mat};
+use crate::sharding::ShardedTable;
+use crate::util::threads::parallel_map_indexed;
 use crate::util::Pcg64;
 
-/// Cluster-pruned MIPS index over a fixed item matrix.
+/// Cluster-pruned MIPS index over a fixed item table.
 #[derive(Clone, Debug)]
 pub struct MipsIndex {
     /// `c × d` centroid matrix.
@@ -23,9 +34,26 @@ pub struct MipsIndex {
 impl MipsIndex {
     /// Build with `num_clusters` k-means clusters (0 → `√n` heuristic).
     /// A few Lloyd iterations suffice — the index only prunes.
+    ///
+    /// Dense entry point: wraps `items` in a single-shard resident table
+    /// and delegates to [`MipsIndex::build_table`], so the dense and
+    /// streamed builds are the same code and provably produce the same
+    /// index.
     pub fn build(items: &Mat, num_clusters: usize, seed: u64) -> MipsIndex {
-        let n = items.rows;
-        let d = items.cols;
+        Self::build_table(&dense_as_table(items), num_clusters, seed)
+    }
+
+    /// Build the index off a sharded table, streaming shard-by-shard: at
+    /// no point is more than one shard's worth of item rows resident
+    /// (plus the `c × d` centroids), so index construction works on a
+    /// demand-paged model that never fits in RAM. The Lloyd assignment
+    /// loop is parallelized across rows; assignments are collected in
+    /// row order and the centroid sums accumulate serially in global row
+    /// order, so the result is bitwise identical for every worker count
+    /// and identical to the historical serial dense build.
+    pub fn build_table(table: &ShardedTable, num_clusters: usize, seed: u64) -> MipsIndex {
+        let n = table.rows;
+        let d = table.dim;
         let c = if num_clusters == 0 {
             ((n as f64).sqrt().ceil() as usize).clamp(1, n.max(1))
         } else {
@@ -38,45 +66,67 @@ impl MipsIndex {
         rng.shuffle(&mut ids);
         let mut centroids = Mat::zeros(c, d);
         for k in 0..c {
-            centroids.row_mut(k).copy_from_slice(items.row(ids[k % n.max(1)] as usize));
+            table.read_row(ids[k % n.max(1)] as usize, centroids.row_mut(k));
         }
 
         let mut assign = vec![0usize; n];
         for _iter in 0..8 {
             // Assign to nearest centroid (L2 — standard k-means; the probe
             // step scores by inner product which is what MIPS needs).
+            // One decoded shard at a time; rows within the shard are
+            // assigned in parallel (each row is independent, and
+            // `parallel_map_indexed` returns results in row order).
             let mut changed = 0usize;
-            for i in 0..n {
-                let x = items.row(i);
-                let mut best = 0usize;
-                let mut best_d = f32::INFINITY;
-                for k in 0..c {
-                    let cent = centroids.row(k);
-                    let mut dist = 0.0f32;
-                    for j in 0..d {
-                        let t = x[j] - cent[j];
-                        dist += t * t;
-                    }
-                    if dist < best_d {
-                        best_d = dist;
-                        best = k;
-                    }
+            for s in 0..table.num_shards() {
+                let range = table.range(s);
+                if range.is_empty() {
+                    continue;
                 }
-                if assign[i] != best {
-                    assign[i] = best;
-                    changed += 1;
+                let rows = table.shard_f32(s);
+                let shard_assign = parallel_map_indexed(range.len(), |r| {
+                    let x = &rows[r * d..(r + 1) * d];
+                    let mut best = 0usize;
+                    let mut best_d = f32::INFINITY;
+                    for k in 0..c {
+                        let cent = centroids.row(k);
+                        let mut dist = 0.0f32;
+                        for j in 0..d {
+                            let t = x[j] - cent[j];
+                            dist += t * t;
+                        }
+                        if dist < best_d {
+                            best_d = dist;
+                            best = k;
+                        }
+                    }
+                    best
+                });
+                for (r, best) in shard_assign.into_iter().enumerate() {
+                    let i = range.start + r;
+                    if assign[i] != best {
+                        assign[i] = best;
+                        changed += 1;
+                    }
                 }
             }
-            // Update.
+            // Update: serial accumulation in global row order (bitwise
+            // determinism), streamed over the same one-shard window.
             let mut counts = vec![0usize; c];
             let mut sums = Mat::zeros(c, d);
-            for i in 0..n {
-                counts[assign[i]] += 1;
-                let row = items.row(i);
-                let srow = sums.row_mut(assign[i]);
-                for j in 0..d {
-                    srow[j] += row[j];
-                }
+            for s in 0..table.num_shards() {
+                let range = table.range(s);
+                let mut row = vec![0.0f32; d];
+                table.with_shard_data(s, |data| {
+                    for r in 0..range.len() {
+                        data.read_row_f32(r * d, &mut row);
+                        let i = range.start + r;
+                        counts[assign[i]] += 1;
+                        let srow = sums.row_mut(assign[i]);
+                        for j in 0..d {
+                            srow[j] += row[j];
+                        }
+                    }
+                });
             }
             for k in 0..c {
                 if counts[k] > 0 {
@@ -100,6 +150,51 @@ impl MipsIndex {
         MipsIndex { centroids, clusters }
     }
 
+    /// Resolve the probe count (0 → `√c` heuristic, min 1) and rank all
+    /// clusters by centroid inner product, best first. Every search shape
+    /// goes through this one ranking so batched and serial probes visit
+    /// clusters in the identical order.
+    pub fn ranked_clusters(&self, query: &[f32], probes: usize) -> Vec<usize> {
+        let c = self.centroids.rows;
+        let probes = if probes == 0 {
+            ((c as f64).sqrt().ceil() as usize).clamp(1, c)
+        } else {
+            probes.clamp(1, c)
+        };
+        let mut ranked: Vec<(f32, usize)> =
+            (0..c).map(|i| (dot(self.centroids.row(i), query), i)).collect();
+        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        ranked.truncate(probes);
+        ranked.into_iter().map(|(_, cl)| cl).collect()
+    }
+
+    /// The candidate item ids a probe of `query` visits, in the exact
+    /// enumeration order every search shape scores them in: ranked
+    /// cluster order, ids in cluster order, exclusions dropped. The order
+    /// matters because ties are broken by a stable sort over this
+    /// sequence.
+    fn candidates(&self, query: &[f32], probes: usize, exclude: &[u32]) -> Vec<u32> {
+        let mut out = Vec::new();
+        for cl in self.ranked_clusters(query, probes) {
+            for &id in &self.clusters[cl] {
+                if exclude.binary_search(&id).is_ok() {
+                    continue;
+                }
+                out.push(id);
+            }
+        }
+        out
+    }
+
+    /// Rank already-scored candidates: stable sort by score descending
+    /// over the enumeration order, truncate to k. Shared by every search
+    /// shape — this is where bitwise-identical tie-breaking lives.
+    fn rank(mut scored: Vec<(f32, u32)>, k: usize) -> Vec<(f32, u32)> {
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.truncate(k);
+        scored
+    }
+
     /// Approximate top-k by probing the `probes` best clusters
     /// (0 → `√c` heuristic, min 1).
     pub fn search(
@@ -110,29 +205,95 @@ impl MipsIndex {
         probes: usize,
         exclude: &[u32],
     ) -> Vec<u32> {
-        let c = self.centroids.rows;
-        let probes = if probes == 0 {
-            ((c as f64).sqrt().ceil() as usize).clamp(1, c)
-        } else {
-            probes.clamp(1, c)
-        };
-        // Rank clusters by centroid inner product.
-        let mut ranked: Vec<(f32, usize)> =
-            (0..c).map(|i| (dot(self.centroids.row(i), query), i)).collect();
-        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        self.search_scored(items, query, k, probes, exclude).into_iter().map(|(_, id)| id).collect()
+    }
 
-        let mut scored: Vec<(f32, u32)> = Vec::new();
-        for &(_, cl) in ranked.iter().take(probes) {
-            for &id in &self.clusters[cl] {
-                if exclude.binary_search(&id).is_ok() {
-                    continue;
-                }
-                scored.push((dot(items.row(id as usize), query), id));
+    /// [`MipsIndex::search`] that also returns the inner-product scores
+    /// (what a serving response carries).
+    pub fn search_scored(
+        &self,
+        items: &Mat,
+        query: &[f32],
+        k: usize,
+        probes: usize,
+        exclude: &[u32],
+    ) -> Vec<(f32, u32)> {
+        let scored = self
+            .candidates(query, probes, exclude)
+            .into_iter()
+            .map(|id| (dot(items.row(id as usize), query), id))
+            .collect();
+        Self::rank(scored, k)
+    }
+
+    /// Single-query probe against a sharded table. Scores with the same
+    /// `dot` in the same candidate order as the dense path, so results
+    /// are bitwise identical to [`MipsIndex::search_scored`] over
+    /// `table.to_dense()` — without ever materializing the table.
+    pub fn search_table(
+        &self,
+        table: &ShardedTable,
+        query: &[f32],
+        k: usize,
+        probes: usize,
+        exclude: &[u32],
+    ) -> Vec<(f32, u32)> {
+        self.search_batch(table, &[BatchQuery { query, k, probes, exclude }])
+            .pop()
+            .expect("one query in, one result out")
+    }
+
+    /// Batched probe: the serving hot path. All queries' candidate
+    /// lookups are grouped by the shard that owns each item row, so a
+    /// demand-paged table decodes every touched shard exactly once per
+    /// batch instead of once per (query, cluster) — the `[B×d]·[d×n]`
+    /// amortization, organized around the bank's actual unit of IO.
+    /// Scoring order over shards is free because each candidate slot is
+    /// written exactly once; the final per-query ranking re-reads slots
+    /// in candidate-enumeration order, making each result bitwise
+    /// identical to a serial [`MipsIndex::search_table`] of that query.
+    pub fn search_batch(
+        &self,
+        table: &ShardedTable,
+        queries: &[BatchQuery],
+    ) -> Vec<Vec<(f32, u32)>> {
+        let d = table.dim;
+        // Per-query candidate lists in enumeration order; scores filled
+        // shard-by-shard below.
+        let cands: Vec<Vec<u32>> =
+            queries.iter().map(|q| self.candidates(q.query, q.probes, q.exclude)).collect();
+        let mut scores: Vec<Vec<f32>> = cands.iter().map(|c| vec![0.0f32; c.len()]).collect();
+
+        // Group (query, slot) work by owning shard.
+        let mut by_shard: Vec<Vec<(u32, u32, u32)>> = vec![Vec::new(); table.num_shards()];
+        for (qi, c) in cands.iter().enumerate() {
+            for (slot, &id) in c.iter().enumerate() {
+                by_shard[table.shard_of(id as usize)].push((qi as u32, slot as u32, id));
             }
         }
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        scored.truncate(k);
-        scored.into_iter().map(|(_, id)| id).collect()
+
+        let mut row = vec![0.0f32; d];
+        for (s, work) in by_shard.iter().enumerate() {
+            if work.is_empty() {
+                continue;
+            }
+            let start = table.range(s).start;
+            table.with_shard_data(s, |data| {
+                for &(qi, slot, id) in work {
+                    data.read_row_f32((id as usize - start) * d, &mut row);
+                    scores[qi as usize][slot as usize] = dot(&row, queries[qi as usize].query);
+                }
+            });
+        }
+
+        cands
+            .into_iter()
+            .zip(scores)
+            .zip(queries)
+            .map(|((c, sc), q)| {
+                Self::rank(sc.into_iter().zip(c).collect(), q.k)
+            })
+            .collect()
     }
 
     /// Expected fraction of items scored per query (search cost model).
@@ -148,10 +309,39 @@ impl MipsIndex {
     }
 }
 
+/// One query in a [`MipsIndex::search_batch`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchQuery<'a> {
+    /// The `d`-dimensional query embedding.
+    pub query: &'a [f32],
+    /// How many results to return.
+    pub k: usize,
+    /// Clusters to probe (0 → `√c` heuristic).
+    pub probes: usize,
+    /// Sorted item ids to exclude (a user's training history).
+    pub exclude: &'a [u32],
+}
+
+/// Wrap a dense matrix as a single-shard resident f32 table (zero
+/// rounding, so values — and therefore every distance and score — are
+/// exactly the matrix's own).
+fn dense_as_table(items: &Mat) -> ShardedTable {
+    let mut t = ShardedTable::zeros(items.rows, items.cols, 1, crate::sharding::Storage::F32);
+    if items.rows > 0 {
+        t.update_shard(0, |data| {
+            if let crate::sharding::ShardData::F32(v) = data {
+                v.copy_from_slice(&items.data);
+            }
+        });
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::eval::topk_exact;
+    use crate::sharding::Storage;
 
     /// Items in two well-separated blobs.
     fn blobs(n_per: usize, d: usize, seed: u64) -> Mat {
@@ -164,6 +354,14 @@ mod tests {
             }
         }
         m
+    }
+
+    /// The same blob items scattered into a multi-shard f32 table.
+    fn blobs_table(items: &Mat, shards: usize) -> ShardedTable {
+        let mut t = ShardedTable::zeros(items.rows, items.cols, shards, Storage::F32);
+        let ids: Vec<u32> = (0..items.rows as u32).collect();
+        t.scatter(&ids, items);
+        t
     }
 
     #[test]
@@ -228,5 +426,75 @@ mod tests {
         let excluded = full[0];
         let pruned = idx.search(&items, &query, 5, 4, &[excluded]);
         assert!(!pruned.contains(&excluded));
+    }
+
+    #[test]
+    fn streamed_build_matches_dense_build_bitwise() {
+        // The same items, dense vs. scattered over 5 shards: identical
+        // centroid bits and identical cluster membership.
+        let items = blobs(40, 6, 21);
+        let table = blobs_table(&items, 5);
+        let dense = MipsIndex::build(&items, 8, 22);
+        let streamed = MipsIndex::build_table(&table, 8, 22);
+        assert_eq!(dense.centroids.data, streamed.centroids.data);
+        assert_eq!(dense.clusters, streamed.clusters);
+    }
+
+    #[test]
+    fn streamed_build_is_threadcount_invariant() {
+        // parallel_map_indexed collects per-row assignments in row order,
+        // so Lloyd iterations cannot depend on the worker count.
+        let items = blobs(30, 4, 31);
+        let table = blobs_table(&items, 3);
+        let base = MipsIndex::build_table(&table, 6, 32);
+        std::env::set_var("ALX_THREADS", "1");
+        let single = MipsIndex::build_table(&table, 6, 32);
+        std::env::remove_var("ALX_THREADS");
+        assert_eq!(base.centroids.data, single.centroids.data);
+        assert_eq!(base.clusters, single.clusters);
+    }
+
+    #[test]
+    fn table_search_matches_dense_search_bitwise() {
+        let items = blobs(35, 5, 41);
+        let table = blobs_table(&items, 4);
+        let idx = MipsIndex::build(&items, 8, 42);
+        let mut rng = Pcg64::new(43);
+        for _ in 0..10 {
+            let query: Vec<f32> = (0..5).map(|_| rng.next_normal() as f32).collect();
+            let exclude = [3u32, 17, 40];
+            let dense = idx.search_scored(&items, &query, 7, 3, &exclude);
+            let table_r = idx.search_table(&table, &query, 7, 3, &exclude);
+            assert_eq!(dense.len(), table_r.len());
+            for (a, b) in dense.iter().zip(&table_r) {
+                assert_eq!(a.1, b.1);
+                assert_eq!(a.0.to_bits(), b.0.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn batched_search_matches_serial_searches_bitwise() {
+        let items = blobs(45, 6, 51);
+        let table = blobs_table(&items, 6);
+        let idx = MipsIndex::build(&items, 9, 52);
+        let mut rng = Pcg64::new(53);
+        let queries: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..6).map(|_| rng.next_normal() as f32).collect()).collect();
+        let excludes: Vec<Vec<u32>> = (0..8).map(|i| vec![i as u32, 50 + i as u32]).collect();
+        let batch: Vec<BatchQuery> = queries
+            .iter()
+            .zip(&excludes)
+            .map(|(q, e)| BatchQuery { query: q, k: 5, probes: 4, exclude: e })
+            .collect();
+        let batched = idx.search_batch(&table, &batch);
+        for (bq, got) in batch.iter().zip(&batched) {
+            let serial = idx.search_scored(&items, bq.query, bq.k, bq.probes, bq.exclude);
+            assert_eq!(serial.len(), got.len());
+            for (a, b) in serial.iter().zip(got) {
+                assert_eq!(a.1, b.1);
+                assert_eq!(a.0.to_bits(), b.0.to_bits());
+            }
+        }
     }
 }

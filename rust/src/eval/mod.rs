@@ -19,6 +19,7 @@ pub use mips::MipsIndex;
 
 use crate::als::Trainer;
 use crate::linalg::{mat::dot, Mat};
+use crate::sharding::ShardedTable;
 use crate::sparse::TestRow;
 
 /// Eval knobs.
@@ -57,29 +58,82 @@ pub struct RecallReport {
     pub rows_evaluated: usize,
 }
 
+/// Bounded top-k accumulator: min-heap of (score, id) fed in id order.
+/// One implementation behind [`topk_exact`] and [`topk_exact_table`], so
+/// the dense and shard-streamed exact searches perform the identical
+/// sequence of heap operations and return identical ids.
+struct TopKHeap {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<(OrderedF32, u32)>>,
+    k: usize,
+}
+
+impl TopKHeap {
+    fn new(k: usize) -> TopKHeap {
+        TopKHeap { heap: std::collections::BinaryHeap::with_capacity(k + 1), k }
+    }
+
+    #[inline]
+    fn push(&mut self, score: f32, id: u32) {
+        use std::cmp::Reverse;
+        if self.heap.len() < self.k {
+            self.heap.push(Reverse((ordered(score), id)));
+        } else if let Some(&Reverse((min, _))) = self.heap.peek() {
+            if ordered(score) > min {
+                self.heap.pop();
+                self.heap.push(Reverse((ordered(score), id)));
+            }
+        }
+    }
+
+    fn finish(self) -> Vec<u32> {
+        let mut out: Vec<(OrderedF32, u32)> =
+            self.heap.into_iter().map(|std::cmp::Reverse(x)| x).collect();
+        out.sort_by(|a, b| b.0.cmp(&a.0));
+        out.into_iter().map(|(_, i)| i).collect()
+    }
+}
+
 /// Exact top-k item indices by inner product with `query`, excluding ids in
 /// `exclude` (sorted). O(n·d + n log k) via a bounded min-heap.
 pub fn topk_exact(items: &Mat, query: &[f32], k: usize, exclude: &[u32]) -> Vec<u32> {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-    let mut heap: BinaryHeap<Reverse<(OrderedF32, u32)>> = BinaryHeap::with_capacity(k + 1);
+    let mut top = TopKHeap::new(k);
     for i in 0..items.rows {
         if exclude.binary_search(&(i as u32)).is_ok() {
             continue;
         }
-        let s = dot(items.row(i), query);
-        if heap.len() < k {
-            heap.push(Reverse((ordered(s), i as u32)));
-        } else if let Some(&Reverse((min, _))) = heap.peek() {
-            if ordered(s) > min {
-                heap.pop();
-                heap.push(Reverse((ordered(s), i as u32)));
-            }
-        }
+        top.push(dot(items.row(i), query), i as u32);
     }
-    let mut out: Vec<(OrderedF32, u32)> = heap.into_iter().map(|Reverse(x)| x).collect();
-    out.sort_by(|a, b| b.0.cmp(&a.0));
-    out.into_iter().map(|(_, i)| i).collect()
+    top.finish()
+}
+
+/// [`topk_exact`] off a sharded table, streaming one shard at a time —
+/// rows are visited in the same global order (shards are contiguous row
+/// ranges) and scored with the same `dot`, so results are bitwise
+/// identical to `topk_exact(&table.to_dense(), ...)` without the
+/// full-table materialization.
+pub fn topk_exact_table(
+    table: &ShardedTable,
+    query: &[f32],
+    k: usize,
+    exclude: &[u32],
+) -> Vec<u32> {
+    let d = table.dim;
+    let mut top = TopKHeap::new(k);
+    let mut row = vec![0.0f32; d];
+    for s in 0..table.num_shards() {
+        let range = table.range(s);
+        table.with_shard_data(s, |data| {
+            for r in 0..range.len() {
+                let i = (range.start + r) as u32;
+                if exclude.binary_search(&i).is_ok() {
+                    continue;
+                }
+                data.read_row_f32(r * d, &mut row);
+                top.push(dot(&row, query), i);
+            }
+        });
+    }
+    top.finish()
 }
 
 /// Total-order f32 wrapper (NaN-free scores assumed; the bit trick gives a
@@ -108,11 +162,14 @@ pub fn recall_at_k(predictions: &[u32], holdout: &[u32], k: usize) -> f64 {
     hits as f64 / holdout.len().min(k) as f64
 }
 
-/// Fold a row's history into the embedding space (Eq. 4) against a dense
-/// item matrix — the strong-generalization query builder. Free-standing so
-/// the parallel eval loop only borrows `Sync` data.
-pub fn fold_in_dense(
-    items: &Mat,
+/// Fold a row's history into the embedding space (Eq. 4) given the
+/// history's item rows pre-gathered into `hist_rows` (one row per history
+/// entry, in history order) — the strong-generalization query builder's
+/// core. Free-standing so the parallel eval loop only borrows `Sync`
+/// data; row-gather based so a spilled item table feeds it through
+/// [`ShardedTable::gather`] without a dense materialization.
+pub fn fold_in_rows(
+    hist_rows: &Mat,
     history: &[(u32, f32)],
     gramian: &Mat,
     lambda: f32,
@@ -120,7 +177,8 @@ pub fn fold_in_dense(
     solver: crate::linalg::SolverKind,
     opts: &crate::linalg::SolveOptions,
 ) -> Vec<f32> {
-    let d = items.cols;
+    assert_eq!(hist_rows.rows, history.len());
+    let d = hist_rows.cols;
     let mut a = Mat::zeros(d, d);
     for i in 0..d {
         for j in 0..d {
@@ -129,8 +187,8 @@ pub fn fold_in_dense(
         a[(i, i)] += lambda;
     }
     let mut b = vec![0.0f32; d];
-    for &(item, y) in history {
-        let hrow = items.row(item as usize);
+    for (h, &(_, y)) in history.iter().enumerate() {
+        let hrow = hist_rows.row(h);
         for i in 0..d {
             b[i] += y * hrow[i];
             for j in i..d {
@@ -142,9 +200,33 @@ pub fn fold_in_dense(
     crate::linalg::solvers::solve(solver, &a, &b, opts)
 }
 
+/// [`fold_in_rows`] against a dense item matrix (gathers the history rows
+/// itself; same bits as the gather-based path).
+pub fn fold_in_dense(
+    items: &Mat,
+    history: &[(u32, f32)],
+    gramian: &Mat,
+    lambda: f32,
+    alpha: f32,
+    solver: crate::linalg::SolverKind,
+    opts: &crate::linalg::SolveOptions,
+) -> Vec<f32> {
+    let mut hist_rows = Mat::zeros(history.len(), items.cols);
+    for (h, &(item, _)) in history.iter().enumerate() {
+        hist_rows.row_mut(h).copy_from_slice(items.row(item as usize));
+    }
+    fold_in_rows(&hist_rows, history, gramian, lambda, alpha, solver, opts)
+}
+
 /// Evaluate a trained model on the strong-generalization test rows.
+///
+/// The item table is never materialized densely: fold-in gathers only
+/// each row's history items, the MIPS index builds shard-streamed, and
+/// both search paths score straight off the (possibly demand-paged)
+/// table — so evaluating a spilled, larger-than-RAM model stays within
+/// the paging budget.
 pub fn evaluate(trainer: &Trainer, test: &[TestRow], cfg: &EvalConfig) -> Vec<RecallReport> {
-    let items = trainer.h.to_dense();
+    let items = &trainer.h;
     let gramian = trainer.item_gramian();
     let kmax = cfg.ks.iter().copied().max().unwrap_or(50);
     let (lambda, alpha) = (trainer.cfg.lambda, trainer.cfg.alpha);
@@ -152,27 +234,25 @@ pub fn evaluate(trainer: &Trainer, test: &[TestRow], cfg: &EvalConfig) -> Vec<Re
     let opts = trainer.cfg.solve_options();
 
     let index = if cfg.approximate {
-        Some(MipsIndex::build(
-            &items,
-            cfg.mips_clusters,
-            trainer.cfg.seed ^ 0x5eed,
-        ))
+        Some(MipsIndex::build_table(items, cfg.mips_clusters, trainer.cfg.seed ^ 0x5eed))
     } else {
         None
     };
 
     let per_row: Vec<Vec<f64>> = crate::util::threads::parallel_map_indexed(test.len(), |t| {
         let row = &test[t];
-        let query = fold_in_dense(&items, &row.history, &gramian, lambda, alpha, solver, &opts);
-        let mut exclude: Vec<u32> = if cfg.exclude_history {
-            row.history.iter().map(|&(c, _)| c).collect()
-        } else {
-            Vec::new()
-        };
+        let hist_ids: Vec<u32> = row.history.iter().map(|&(c, _)| c).collect();
+        let hist_rows = items.gather(&hist_ids);
+        let query = fold_in_rows(&hist_rows, &row.history, &gramian, lambda, alpha, solver, &opts);
+        let mut exclude: Vec<u32> = if cfg.exclude_history { hist_ids } else { Vec::new() };
         exclude.sort_unstable();
         let preds = match &index {
-            Some(idx) => idx.search(&items, &query, kmax, cfg.mips_probes, &exclude),
-            None => topk_exact(&items, &query, kmax, &exclude),
+            Some(idx) => idx
+                .search_table(items, &query, kmax, cfg.mips_probes, &exclude)
+                .into_iter()
+                .map(|(_, id)| id)
+                .collect(),
+            None => topk_exact_table(items, &query, kmax, &exclude),
         };
         cfg.ks.iter().map(|&k| recall_at_k(&preds, &row.holdout, k)).collect()
     });

@@ -38,6 +38,7 @@ pub mod eval;
 pub mod harness;
 pub mod linalg;
 pub mod runtime;
+pub mod serving;
 pub mod sharding;
 pub mod sparse;
 pub mod topo;
@@ -60,6 +61,7 @@ pub mod prelude {
     pub use crate::densebatch::{DenseBatch, DenseBatcher};
     pub use crate::eval::{recall_at_k, EvalConfig, RecallReport};
     pub use crate::linalg::Mat;
+    pub use crate::serving::{serve, Client, ServeConfig, ServeModel, ServerHandle, TopKRequest};
     pub use crate::sharding::{ShardedTable, Storage, TableStorage};
     pub use crate::sparse::{Csr, CsrStorage, MmapBank, RowMatrix, ShardedCsr, SpillStats};
     pub use crate::topo::Topology;

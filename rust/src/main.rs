@@ -11,6 +11,9 @@
 //! alx train     --stream --spill --spill-model ...     # matrix AND model out of core
 //! alx train     --checkpoint-every 4 --eval-every 2    # session hooks
 //! alx train     --resume run.ckpt                      # continue a run
+//! alx serve     --checkpoint run.ckpt --port 7878      # Top-K server
+//! alx serve     --w-bank w.alxtab --h-bank h.alxtab    # serve out of core
+//! alx query     --port 7878 --user 42 --k 10           # one Top-K query
 //! alx table1    --scale 0.001                          # Table 1 stats
 //! alx table2    --scale 0.002 --epochs 8               # Table 2 recalls
 //! alx fig4      --lambda 1e-4                          # precision study
@@ -29,6 +32,7 @@ use alx::als::TrainConfig;
 use alx::config::{AlxConfig, KvConfig};
 use alx::coordinator::{grid_search, GridSpec, TrainSession};
 use alx::harness;
+use alx::serving::{serve, Client, Response, ServeModel, TopKRequest};
 use alx::topo::Topology;
 use alx::util::stats::human_bytes;
 use alx::webgraph::{generate, Variant, VariantSpec};
@@ -126,6 +130,16 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("artifacts", "engine.artifacts_dir"),
         ("approximate", "eval.approximate"),
         ("failpoints", "fault.points"),
+        ("port", "serve.port"),
+        ("serve-threads", "serve.threads"),
+        ("batch-window-us", "serve.batch_window_us"),
+        ("batch-max", "serve.batch_max"),
+        ("queue-depth", "serve.queue_depth"),
+        ("cache-entries", "serve.cache_entries"),
+        ("cache-ttl-ms", "serve.cache_ttl_ms"),
+        ("mips-clusters", "serve.mips_clusters"),
+        ("mips-probes", "serve.mips_probes"),
+        ("serve-seed", "serve.seed"),
     ];
     for (flag, key) in map {
         if let Some(v) = args.get(flag) {
@@ -469,6 +483,136 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Serve Top-K recommendations from a trained model over TCP. The model
+/// comes from an `ALXCKPT2` checkpoint (optionally spilled to `ALXTAB01`
+/// banks with `--spill-model`) or directly from a pair of existing banks
+/// (`--w-bank`/`--h-bank`), which serve demand-paged without ever loading
+/// the full tables. Blocks until a client sends SHUTDOWN.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = resolve_config(args)?;
+    let shards = args.get_or("shards", cfg.cores)?;
+    anyhow::ensure!(shards >= 1, "--shards must be >= 1");
+    let serve_cfg = cfg.serve.clone();
+    let model = if let Some(ckpt) = args.get("checkpoint") {
+        let spill_dir;
+        let spill = if cfg.model_spill {
+            spill_dir = if cfg.model_spill_dir.is_empty() {
+                std::env::temp_dir().join(format!("alx_serve_{}", std::process::id()))
+            } else {
+                std::path::PathBuf::from(&cfg.model_spill_dir)
+            };
+            Some((spill_dir.as_path(), cfg.resident_table_shards))
+        } else {
+            None
+        };
+        ServeModel::from_checkpoint(
+            std::path::Path::new(ckpt),
+            shards,
+            spill,
+            serve_cfg.mips_clusters,
+            serve_cfg.seed,
+        )
+        .map_err(|e| anyhow::anyhow!("load {ckpt}: {e} (try `alx verify {ckpt}`)"))?
+    } else {
+        let (Some(w), Some(h)) = (args.get("w-bank"), args.get("h-bank")) else {
+            anyhow::bail!("serve needs --checkpoint <file> or both --w-bank and --h-bank");
+        };
+        ServeModel::from_banks(
+            std::path::Path::new(w),
+            std::path::Path::new(h),
+            cfg.resident_table_shards,
+            serve_cfg.mips_clusters,
+            serve_cfg.seed,
+        )
+        .map_err(|e| anyhow::anyhow!("open banks {w}, {h}: {e} (try `alx verify`)"))?
+    };
+    println!(
+        "model: {} users × {} items, d={}{}; index: {} clusters",
+        model.users.rows,
+        model.items.rows,
+        model.dim(),
+        if model.items.is_spilled() { " (bank-backed)" } else { "" },
+        model.index.centroids.rows,
+    );
+    let mut handle = serve(std::sync::Arc::new(model), &serve_cfg)?;
+    println!("listening on {} (send SHUTDOWN or `alx query --shutdown` to stop)", handle.addr());
+    handle.wait();
+    let s = handle.stats();
+    println!(
+        "served {} requests ({} cache hits, {} rejected, {} expired) in {} batches \
+         (largest {}) over {} connections; {} malformed frames",
+        s.requests,
+        s.cache_hits,
+        s.rejected,
+        s.deadline_expired,
+        s.batches,
+        s.largest_batch,
+        s.connections,
+        s.malformed,
+    );
+    Ok(())
+}
+
+/// Minimal client for `alx serve` (CI smoke tests and ad-hoc queries).
+/// Top-K output prints one `item score-bits score` line per result —
+/// byte-identical across runs for identical server state, so responses
+/// can be `cmp`-ed.
+fn cmd_query(args: &Args) -> anyhow::Result<()> {
+    let host = args.get("host").unwrap_or("127.0.0.1");
+    let port: u16 = args.get_or("port", 0u16)?;
+    anyhow::ensure!(port != 0, "query needs --port <port>");
+    let addr = format!("{host}:{port}");
+    let mut client = Client::connect(&addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    if args.has("ping") {
+        match client.ping()? {
+            Response::Ok => println!("pong"),
+            other => anyhow::bail!("unexpected ping reply: {other:?}"),
+        }
+        return Ok(());
+    }
+    if args.has("shutdown") {
+        match client.shutdown()? {
+            Response::Ok => println!("shutdown acknowledged"),
+            other => anyhow::bail!("unexpected shutdown reply: {other:?}"),
+        }
+        return Ok(());
+    }
+    if args.has("malformed") {
+        // Deliberately send an invalid opcode: the server must answer ERR
+        // and stay up (the CI smoke checks exactly this).
+        match client.send_raw(&[0xFF, 1, 2, 3])? {
+            Some(Response::Err(msg)) => println!("server rejected frame: {msg}"),
+            other => anyhow::bail!("expected an ERR reply, got {other:?}"),
+        }
+        return Ok(());
+    }
+    let exclude: Vec<u32> = match args.get("exclude") {
+        None => vec![],
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("--exclude: {e}"))?,
+    };
+    let req = TopKRequest {
+        user: args.get_or("user", 0u64)?,
+        k: args.get_or("k", 10u32)?,
+        probes: args.get_or("probes", 0u32)?,
+        deadline_us: args.get_or("deadline-us", 0u32)?,
+        exclude,
+    };
+    match client.topk(&req)? {
+        Response::TopK(items) => {
+            for (id, score) in items {
+                println!("{id} {:08x} {score}", score.to_bits());
+            }
+        }
+        Response::Err(msg) => anyhow::bail!("server error: {msg}"),
+        other => anyhow::bail!("unexpected reply: {other:?}"),
+    }
+    Ok(())
+}
+
 fn cmd_table1(args: &Args) -> anyhow::Result<()> {
     let scale = args.get_or("scale", 0.001)?;
     let seed = args.get_or("seed", 7u64)?;
@@ -589,7 +733,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: alx <generate|convert|bank|verify|train|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
+        "usage: alx <generate|convert|bank|verify|train|serve|query|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
          train flags: --source webgraph|edge-list --data <file> --resume <ckpt>\n\
                       --stream --ingest-budget-mb <MiB> (out-of-core ALXCSR02 ingestion)\n\
                       --spill --spill-dir <dir> --resident-shards <n> (demand-paged shard banks)\n\
@@ -601,6 +745,12 @@ fn usage() -> ! {
          bank:        --data <file.alxcsr02> --out <file.alxbank> [--shards <n>] [--transpose-out <f>]\n\
          generate:    --out <file> [--format csr02|csr01] [--chunk-rows <n>]\n\
          verify:      <path> [<path> ...] (validate any ALX artifact; non-zero exit on corruption)\n\
+         serve:       --checkpoint <ckpt> | --w-bank <f> --h-bank <f> (bank-backed, out of core)\n\
+                      --port <p> --serve-threads <n> --batch-window-us <µs> --batch-max <n>\n\
+                      --cache-entries <n> --cache-ttl-ms <ms> --mips-clusters <c> --mips-probes <p>\n\
+                      --spill-model --resident-table-shards <n> (serve a checkpoint demand-paged)\n\
+         query:       --port <p> [--host <h>] --user <u> --k <n> [--probes <p>] [--exclude a,b,c]\n\
+                      [--deadline-us <µs>] | --ping | --malformed | --shutdown\n\
          fault injection (builds with --features failpoints): --failpoints 'name=trigger[:action];...'\n\
          see the CLI cheatsheet in README.md"
     );
@@ -620,6 +770,8 @@ fn main() -> anyhow::Result<()> {
         "bank" => cmd_bank(&args),
         "verify" => cmd_verify(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
         "table1" => cmd_table1(&args),
         "table2" => cmd_table2(&args),
         "fig4" => cmd_fig4(&args),

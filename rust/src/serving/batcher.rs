@@ -1,0 +1,240 @@
+//! Request coalescing: the bounded queue between connection threads and
+//! scoring workers.
+//!
+//! Concurrent Top-K queries that arrive within one **batch window** are
+//! drained as a single batch and scored in one shard-grouped pass
+//! ([`crate::eval::MipsIndex::search_batch`]) — the serving analogue of
+//! the trainer's fused gather: a demand-paged item table decodes each
+//! touched shard once per *batch* instead of once per *query*, and even
+//! resident tables amortize the per-probe bookkeeping. The window is the
+//! latency/throughput dial: 0 keeps latency minimal (a worker grabs
+//! whatever is queued the moment it is free — natural batching under
+//! load), while 100µs–1ms trades a bounded wait for larger batches.
+//!
+//! The queue is bounded: a submit beyond `depth` is rejected immediately
+//! (the connection answers `ERR overloaded`) rather than queueing into
+//! unbounded memory and blown deadlines. Shutdown is graceful — already
+//! queued requests are still handed to workers; only then do workers see
+//! `None` and exit.
+
+use super::protocol::{Response, TopKRequest};
+use crate::util::threads::lock_or_recover;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued query: the request plus everything needed to answer it.
+pub struct Pending {
+    pub req: TopKRequest,
+    /// When the request entered the queue (starts the batch window).
+    pub enqueued: Instant,
+    /// Absolute scoring deadline (`None` = no deadline).
+    pub deadline: Option<Instant>,
+    /// Where the scoring worker sends the response.
+    pub reply: mpsc::Sender<Response>,
+}
+
+struct State {
+    queue: VecDeque<Pending>,
+    shutdown: bool,
+}
+
+/// Bounded coalescing queue (see module docs).
+pub struct Batcher {
+    state: Mutex<State>,
+    /// Signals workers on submit and everyone on shutdown.
+    arrived: Condvar,
+    window: Duration,
+    batch_max: usize,
+    depth: usize,
+}
+
+impl Batcher {
+    /// `window_us` coalescing window, `batch_max` requests per batch
+    /// (flushes the window early when reached), `depth` queue bound.
+    pub fn new(window_us: u64, batch_max: usize, depth: usize) -> Batcher {
+        Batcher {
+            state: Mutex::new(State { queue: VecDeque::new(), shutdown: false }),
+            arrived: Condvar::new(),
+            window: Duration::from_micros(window_us),
+            batch_max: batch_max.max(1),
+            depth: depth.max(1),
+        }
+    }
+
+    /// Enqueue a request. `Err` returns the request untouched when the
+    /// queue is full or the batcher is shutting down — the caller answers
+    /// the client itself.
+    pub fn submit(&self, p: Pending) -> Result<(), Pending> {
+        let mut st = lock_or_recover(&self.state);
+        if st.shutdown || st.queue.len() >= self.depth {
+            return Err(p);
+        }
+        st.queue.push_back(p);
+        drop(st);
+        self.arrived.notify_one();
+        Ok(())
+    }
+
+    /// Block until a batch is ready and drain it (≤ `batch_max`
+    /// requests). After the first request arrives the call waits out the
+    /// remaining batch window — more arrivals coalesce in — unless the
+    /// batch fills or shutdown flushes it early. Returns `None` only at
+    /// shutdown with an empty queue: workers exit then, and not before
+    /// every queued request has been handed out.
+    pub fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut st = lock_or_recover(&self.state);
+        loop {
+            if let Some(first) = st.queue.front() {
+                // Window accounting is anchored to the *oldest* queued
+                // request, so a request never waits more than one window
+                // regardless of what arrives after it.
+                let anchor = first.enqueued;
+                while st.queue.len() < self.batch_max && !st.shutdown {
+                    let elapsed = anchor.elapsed();
+                    if elapsed >= self.window {
+                        break;
+                    }
+                    let (guard, _timeout) = self
+                        .arrived
+                        .wait_timeout(st, self.window - elapsed)
+                        .unwrap_or_else(|p| p.into_inner());
+                    st = guard;
+                    if st.queue.is_empty() {
+                        // The batch was stolen by another worker while we
+                        // waited; go back to sleeping for a new arrival.
+                        break;
+                    }
+                }
+                if st.queue.is_empty() {
+                    continue;
+                }
+                let take = st.queue.len().min(self.batch_max);
+                let batch: Vec<Pending> = st.queue.drain(..take).collect();
+                if !st.queue.is_empty() {
+                    // Leftovers form the next batch; wake another worker.
+                    self.arrived.notify_one();
+                }
+                return Some(batch);
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self
+                .arrived
+                .wait_timeout(st, Duration::from_millis(100))
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
+        }
+    }
+
+    /// Begin graceful shutdown: reject new submissions, flush queued
+    /// requests to workers immediately (no further window waits matter —
+    /// the loop in [`Batcher::next_batch`] checks the flag), and wake
+    /// everyone.
+    pub fn shutdown(&self) {
+        lock_or_recover(&self.state).shutdown = true;
+        self.arrived.notify_all();
+    }
+
+    /// Whether shutdown has begun.
+    pub fn is_shutdown(&self) -> bool {
+        lock_or_recover(&self.state).shutdown
+    }
+
+    /// Requests currently queued (observability).
+    pub fn queued(&self) -> usize {
+        lock_or_recover(&self.state).queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn pending(user: u64) -> (Pending, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                req: TopKRequest { user, k: 1, probes: 1, deadline_us: 0, exclude: vec![] },
+                enqueued: Instant::now(),
+                deadline: None,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn single_request_zero_window_flushes_immediately() {
+        let b = Batcher::new(0, 8, 16);
+        let (p, _rx) = pending(1);
+        b.submit(p).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].req.user, 1);
+    }
+
+    #[test]
+    fn window_coalesces_concurrent_requests() {
+        let b = Arc::new(Batcher::new(50_000, 8, 64)); // 50ms window
+        for u in 0..5 {
+            let (p, _rx) = pending(u);
+            b.submit(p).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 5, "all five arrivals coalesce into one batch");
+    }
+
+    #[test]
+    fn batch_max_flushes_early_and_splits() {
+        let b = Batcher::new(1_000_000, 3, 64); // 1s window: only the cap flushes
+        for u in 0..7 {
+            let (p, _rx) = pending(u);
+            b.submit(p).unwrap();
+        }
+        assert_eq!(b.next_batch().unwrap().len(), 3);
+        assert_eq!(b.next_batch().unwrap().len(), 3);
+        // The final partial batch would wait out the window; shutdown
+        // flushes it instead of stalling the test for a second.
+        b.shutdown();
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow() {
+        let b = Batcher::new(0, 4, 2);
+        let (p1, _r1) = pending(1);
+        let (p2, _r2) = pending(2);
+        let (p3, _r3) = pending(3);
+        assert!(b.submit(p1).is_ok());
+        assert!(b.submit(p2).is_ok());
+        let rejected = b.submit(p3).unwrap_err();
+        assert_eq!(rejected.req.user, 3, "rejected request comes back to the caller");
+    }
+
+    #[test]
+    fn shutdown_drains_queue_before_none() {
+        let b = Batcher::new(0, 8, 16);
+        let (p, _rx) = pending(1);
+        b.submit(p).unwrap();
+        b.shutdown();
+        let (p2, _rx2) = pending(2);
+        assert!(b.submit(p2).is_err(), "no new work after shutdown");
+        assert_eq!(b.next_batch().unwrap().len(), 1, "queued work still drains");
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn blocked_worker_wakes_on_shutdown() {
+        let b = Arc::new(Batcher::new(0, 8, 16));
+        let b2 = Arc::clone(&b);
+        let worker = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.shutdown();
+        assert!(worker.join().unwrap().is_none());
+    }
+}

@@ -1,0 +1,211 @@
+//! Hot-user result cache: bounded LRU with an optional TTL.
+//!
+//! Serving traffic is zipfian — a small set of hot users generates most
+//! queries — so memoizing full Top-K responses removes those queries from
+//! the scoring path entirely. Correctness notes:
+//!
+//! * The key is the **entire** request identity `(user, k, probes,
+//!   sorted exclusions)`, not a hash of it: two requests collide only if
+//!   they would provably produce the same response, so a hit is bitwise
+//!   identical to a recompute (the model is immutable while serving).
+//! * `capacity == 0` disables the cache (every `get` misses, `put` is a
+//!   no-op), which the equivalence tests and the latency bench use to
+//!   force the scoring path.
+//! * TTL exists for operational hygiene (bounded staleness once model
+//!   hot-swap lands), not correctness.
+
+use crate::util::threads::lock_or_recover;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Full request identity — see the module docs for why every field is in
+/// the key.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+pub struct CacheKey {
+    pub user: u64,
+    pub k: u32,
+    pub probes: u32,
+    /// Sorted exclusion list.
+    pub exclude: Vec<u32>,
+}
+
+struct Entry {
+    value: Vec<(u32, f32)>,
+    /// Recency stamp; also the key into `order`.
+    tick: u64,
+    inserted: Instant,
+}
+
+struct Inner {
+    map: HashMap<CacheKey, Entry>,
+    /// tick → key, ascending = least recently used first.
+    order: BTreeMap<u64, CacheKey>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// Bounded LRU response cache (thread-safe; one lock, O(log n) ops).
+pub struct ResultCache {
+    capacity: usize,
+    ttl: Option<Duration>,
+    inner: Mutex<Inner>,
+}
+
+impl ResultCache {
+    /// `capacity` entries (0 disables), `ttl_ms` milliseconds of
+    /// freshness (0 = entries never expire).
+    pub fn new(capacity: usize, ttl_ms: u64) -> ResultCache {
+        ResultCache {
+            capacity,
+            ttl: (ttl_ms > 0).then(|| Duration::from_millis(ttl_ms)),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: BTreeMap::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Look up a response, refreshing its recency. Expired entries are
+    /// dropped on access.
+    pub fn get(&self, key: &CacheKey) -> Option<Vec<(u32, f32)>> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let mut inner = lock_or_recover(&self.inner);
+        let Some(entry) = inner.map.get(key) else {
+            inner.misses += 1;
+            return None;
+        };
+        if let Some(ttl) = self.ttl {
+            if entry.inserted.elapsed() > ttl {
+                let tick = entry.tick;
+                inner.map.remove(key);
+                inner.order.remove(&tick);
+                inner.misses += 1;
+                return None;
+            }
+        }
+        let old_tick = entry.tick;
+        let value = entry.value.clone();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.order.remove(&old_tick);
+        inner.order.insert(tick, key.clone());
+        if let Some(e) = inner.map.get_mut(key) {
+            e.tick = tick;
+        }
+        inner.hits += 1;
+        Some(value)
+    }
+
+    /// Insert (or refresh) a response, evicting the least recently used
+    /// entry when full.
+    pub fn put(&self, key: CacheKey, value: Vec<(u32, f32)>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut inner = lock_or_recover(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.map.remove(&key) {
+            inner.order.remove(&old.tick);
+        }
+        while inner.map.len() >= self.capacity {
+            let Some((&oldest, _)) = inner.order.iter().next() else { break };
+            if let Some(victim) = inner.order.remove(&oldest) {
+                inner.map.remove(&victim);
+            }
+        }
+        inner.order.insert(tick, key.clone());
+        inner.map.insert(key, Entry { value, tick, inserted: Instant::now() });
+    }
+
+    /// Current entry count.
+    pub fn len(&self) -> usize {
+        lock_or_recover(&self.inner).map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = lock_or_recover(&self.inner);
+        (inner.hits, inner.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(user: u64) -> CacheKey {
+        CacheKey { user, k: 10, probes: 2, exclude: vec![] }
+    }
+
+    #[test]
+    fn get_put_roundtrip_and_stats() {
+        let c = ResultCache::new(4, 0);
+        assert!(c.get(&key(1)).is_none());
+        c.put(key(1), vec![(7, 0.5)]);
+        assert_eq!(c.get(&key(1)).unwrap(), vec![(7, 0.5)]);
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn differing_request_fields_do_not_collide() {
+        let c = ResultCache::new(8, 0);
+        c.put(key(1), vec![(1, 1.0)]);
+        let k5 = CacheKey { k: 5, ..key(1) };
+        let probed = CacheKey { probes: 3, ..key(1) };
+        let excl = CacheKey { exclude: vec![2], ..key(1) };
+        assert!(c.get(&k5).is_none());
+        assert!(c.get(&probed).is_none());
+        assert!(c.get(&excl).is_none());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c = ResultCache::new(2, 0);
+        c.put(key(1), vec![(1, 1.0)]);
+        c.put(key(2), vec![(2, 2.0)]);
+        assert!(c.get(&key(1)).is_some()); // 1 is now most recent
+        c.put(key(3), vec![(3, 3.0)]); // evicts 2
+        assert!(c.get(&key(2)).is_none());
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(3)).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c = ResultCache::new(0, 0);
+        c.put(key(1), vec![(1, 1.0)]);
+        assert!(c.get(&key(1)).is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let c = ResultCache::new(4, 1); // 1ms TTL
+        c.put(key(1), vec![(1, 1.0)]);
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(c.get(&key(1)).is_none());
+        assert!(c.is_empty(), "expired entry is dropped on access");
+    }
+
+    #[test]
+    fn reinsert_refreshes_value() {
+        let c = ResultCache::new(2, 0);
+        c.put(key(1), vec![(1, 1.0)]);
+        c.put(key(1), vec![(9, 9.0)]);
+        assert_eq!(c.get(&key(1)).unwrap(), vec![(9, 9.0)]);
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,310 @@
+//! `alx serve`: a batched, bank-backed Top-K recommendation server.
+//!
+//! The paper's downstream task is Recall@K retrieval; this subsystem is
+//! the piece that actually answers "top-K items for user *u*" under load,
+//! completing the train → checkpoint → **serve** lifecycle:
+//!
+//! * [`ServeModel`] loads `W`/`H` from an `ALXCKPT2` checkpoint or
+//!   directly from `ALXTAB01` table banks. Bank-backed tables stay behind
+//!   the demand-paged [`crate::sharding::PagedTable`] LRU, so a model
+//!   larger than host RAM serves out of core; the cluster-pruned
+//!   [`MipsIndex`] builds shard-streamed at startup (never materializing
+//!   the item table).
+//! * [`server`] runs the request loop: a listener + per-connection
+//!   threads speaking the length-prefixed [`protocol`], a bounded
+//!   [`batcher`] that coalesces concurrent queries into one shard-grouped
+//!   scoring pass per batch, an LRU [`cache`] for hot users, per-request
+//!   deadlines and graceful shutdown.
+//!
+//! Everything is plain `std` + the crate's own [`crate::util::threads`]
+//! primitives — no new dependencies — and the scoring path is bitwise
+//! identical to offline [`crate::eval`] scoring (`tests/serve_equivalence.rs`
+//! holds the proof obligation).
+
+pub mod batcher;
+pub mod cache;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{Batcher, Pending};
+pub use cache::{CacheKey, ResultCache};
+pub use protocol::{Client, Request, Response, TopKRequest};
+pub use server::{serve, ServeStatsSnapshot, ServerHandle};
+
+use crate::als::checkpoint;
+use crate::eval::mips::{BatchQuery, MipsIndex};
+use crate::sharding::ShardedTable;
+use std::io;
+use std::path::Path;
+
+/// Serving knobs (the `[serve]` config section / `alx serve` flags).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// TCP port (0 = OS-assigned, printed at startup).
+    pub port: u16,
+    /// Scoring worker threads (0 = auto from `ALX_THREADS` / CPU count).
+    pub threads: usize,
+    /// Batch coalescing window in µs (0 = flush immediately).
+    pub batch_window_us: u64,
+    /// Max requests per scoring batch.
+    pub batch_max: usize,
+    /// Bound on queued requests (beyond it, requests are rejected with
+    /// `ERR overloaded`).
+    pub queue_depth: usize,
+    /// Result-cache capacity in entries (0 disables the cache).
+    pub cache_entries: usize,
+    /// Result-cache TTL in ms (0 = no expiry).
+    pub cache_ttl_ms: u64,
+    /// MIPS clusters for the startup index build (0 = `√n`).
+    pub mips_clusters: usize,
+    /// Default clusters probed per query when a request asks for 0.
+    pub mips_probes: usize,
+    /// Seed for the k-means index build.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            port: 0,
+            threads: 0,
+            batch_window_us: 0,
+            batch_max: 64,
+            queue_depth: 1024,
+            cache_entries: 0,
+            cache_ttl_ms: 0,
+            mips_clusters: 0,
+            mips_probes: 0,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// An immutable model ready to serve: both tables plus the item-side
+/// MIPS index. Shared across every server thread behind an `Arc` — all
+/// access is read-only ([`ShardedTable`] reads are `&self` and
+/// thread-safe on both resident and paged backends).
+#[derive(Debug)]
+pub struct ServeModel {
+    /// User table `W` (`|U| × d`).
+    pub users: ShardedTable,
+    /// Item table `H` (`|I| × d`).
+    pub items: ShardedTable,
+    /// Cluster-pruned index over `items`, built shard-streamed.
+    pub index: MipsIndex,
+}
+
+impl ServeModel {
+    /// Load from an `ALXCKPT2` checkpoint file. With `spill` set to
+    /// `(dir, resident_table_shards)`, both tables stream into `ALXTAB01`
+    /// banks under `dir` and serve demand-paged; otherwise they are
+    /// resident. `num_shards` controls the serving shard layout (also the
+    /// paging granularity when spilled).
+    pub fn from_checkpoint(
+        path: &Path,
+        num_shards: usize,
+        spill: Option<(&Path, usize)>,
+        mips_clusters: usize,
+        seed: u64,
+    ) -> io::Result<ServeModel> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        let mut r = std::io::BufReader::new(file);
+        let (_meta, users, items) = checkpoint::load_tables(&mut r, num_shards, Some(len), spill)?;
+        Ok(Self::from_tables(users, items, mips_clusters, seed))
+    }
+
+    /// Attach to existing `ALXTAB01` banks (the artifacts `--spill-model`
+    /// training leaves behind), demand-paged with `resident_table_shards`
+    /// decoded shards per table. No copy of the model is made: this is
+    /// the zero-RAM-headroom path.
+    pub fn from_banks(
+        w_bank: &Path,
+        h_bank: &Path,
+        resident_table_shards: usize,
+        mips_clusters: usize,
+        seed: u64,
+    ) -> io::Result<ServeModel> {
+        let users = ShardedTable::open_bank(w_bank, resident_table_shards)?;
+        let items = ShardedTable::open_bank(h_bank, resident_table_shards)?;
+        if users.dim != items.dim {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bank dim mismatch: W has d={}, H has d={}", users.dim, items.dim),
+            ));
+        }
+        Ok(Self::from_tables(users, items, mips_clusters, seed))
+    }
+
+    /// Wrap already-loaded tables (tests, in-process serving). Builds the
+    /// shard-streamed MIPS index — the only startup cost.
+    pub fn from_tables(
+        users: ShardedTable,
+        items: ShardedTable,
+        mips_clusters: usize,
+        seed: u64,
+    ) -> ServeModel {
+        let index = MipsIndex::build_table(&items, mips_clusters, seed);
+        ServeModel { users, items, index }
+    }
+
+    /// Embedding dimension.
+    pub fn dim(&self) -> usize {
+        self.items.dim
+    }
+
+    /// Score one user's Top-K (the reference path: what a cache hit or a
+    /// batched response must be bitwise identical to). `exclude` must be
+    /// sorted. Returns ranked `(item, score)` pairs.
+    pub fn topk(
+        &self,
+        user: usize,
+        k: usize,
+        probes: usize,
+        exclude: &[u32],
+    ) -> Result<Vec<(u32, f32)>, String> {
+        if user >= self.users.rows {
+            return Err(format!("user {user} out of range (table has {} rows)", self.users.rows));
+        }
+        let mut query = vec![0.0f32; self.users.dim];
+        self.users.read_row(user, &mut query);
+        let ranked = self.index.search_table(&self.items, &query, k, probes, exclude);
+        Ok(ranked.into_iter().map(|(s, id)| (id, s)).collect())
+    }
+
+    /// Score a batch of user queries in one shard-grouped pass. Each
+    /// element of `reqs` is `(user, k, probes, sorted-exclude)`; each
+    /// result is `Ok(ranked pairs)` or a per-request error (out-of-range
+    /// user ids fail individually, not the whole batch).
+    pub fn topk_batch(
+        &self,
+        reqs: &[(usize, usize, usize, &[u32])],
+    ) -> Vec<Result<Vec<(u32, f32)>, String>> {
+        let d = self.users.dim;
+        // Gather the valid users' query rows (request order).
+        let mut queries: Vec<Option<Vec<f32>>> = Vec::with_capacity(reqs.len());
+        for &(user, _, _, _) in reqs {
+            if user >= self.users.rows {
+                queries.push(None);
+                continue;
+            }
+            let mut q = vec![0.0f32; d];
+            self.users.read_row(user, &mut q);
+            queries.push(Some(q));
+        }
+        let batch: Vec<BatchQuery> = queries
+            .iter()
+            .zip(reqs)
+            .filter_map(|(q, &(_, k, probes, exclude))| {
+                q.as_ref().map(|query| BatchQuery { query, k, probes, exclude })
+            })
+            .collect();
+        let mut scored = self.index.search_batch(&self.items, &batch).into_iter();
+        queries
+            .iter()
+            .zip(reqs)
+            .map(|(q, &(user, _, _, _))| match q {
+                None => Err(format!(
+                    "user {user} out of range (table has {} rows)",
+                    self.users.rows
+                )),
+                Some(_) => Ok(scored
+                    .next()
+                    .expect("one scored result per valid query")
+                    .into_iter()
+                    .map(|(s, id)| (id, s))
+                    .collect()),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sharding::Storage;
+    use crate::util::Pcg64;
+
+    fn model(seed: u64) -> ServeModel {
+        let mut rng = Pcg64::new(seed);
+        let users = ShardedTable::randn(12, 6, 2, Storage::F32, &mut rng);
+        let items = ShardedTable::randn(40, 6, 4, Storage::F32, &mut rng);
+        ServeModel::from_tables(users, items, 8, 99)
+    }
+
+    #[test]
+    fn topk_batch_matches_serial_topk() {
+        let m = model(7);
+        let excl = [3u32, 9];
+        let reqs: Vec<(usize, usize, usize, &[u32])> =
+            (0..8).map(|u| (u, 5, 3, &excl[..])).collect();
+        let batched = m.topk_batch(&reqs);
+        for (i, r) in batched.iter().enumerate() {
+            let serial = m.topk(i, 5, 3, &excl).unwrap();
+            let got = r.as_ref().unwrap();
+            assert_eq!(got.len(), serial.len());
+            for (a, b) in got.iter().zip(&serial) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.1.to_bits(), b.1.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_user_fails_individually() {
+        let m = model(8);
+        let reqs: Vec<(usize, usize, usize, &[u32])> =
+            vec![(1, 3, 2, &[]), (999, 3, 2, &[]), (2, 3, 2, &[])];
+        let res = m.topk_batch(&reqs);
+        assert!(res[0].is_ok());
+        assert!(res[1].is_err());
+        assert!(res[2].is_ok());
+        assert!(m.topk(999, 3, 2, &[]).is_err());
+    }
+
+    #[test]
+    fn checkpoint_and_bank_loads_serve_identically() {
+        use crate::als::checkpoint::{save, CheckpointMeta};
+        let m = model(9);
+        let dir = std::env::temp_dir().join(format!("alx_servemodel_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Persist as a checkpoint...
+        let meta = CheckpointMeta {
+            epoch: 1,
+            dim: 6,
+            users: m.users.rows as u64,
+            items: m.items.rows as u64,
+            storage_bf16: false,
+        };
+        let ckpt = dir.join("m.alxckpt");
+        let mut f = std::fs::File::create(&ckpt).unwrap();
+        save(&mut f, &meta, &m.users, &m.items, &[], &[]).unwrap();
+        drop(f);
+        // ...and as table banks.
+        let wb = dir.join("w.alxtab");
+        let hb = dir.join("h.alxtab");
+        m.users.spill_to_bank(&wb).unwrap();
+        m.items.spill_to_bank(&hb).unwrap();
+
+        let from_ckpt = ServeModel::from_checkpoint(&ckpt, 2, None, 8, 99).unwrap();
+        let spill_dir = dir.join("spill");
+        let from_ckpt_spilled =
+            ServeModel::from_checkpoint(&ckpt, 2, Some((&spill_dir, 1)), 8, 99).unwrap();
+        let from_banks = ServeModel::from_banks(&wb, &hb, 1, 8, 99).unwrap();
+        assert!(from_ckpt_spilled.users.is_spilled());
+        assert!(from_banks.items.is_spilled());
+
+        for srv in [&from_ckpt, &from_ckpt_spilled, &from_banks] {
+            for u in 0..4 {
+                let want = m.topk(u, 6, 4, &[]).unwrap();
+                let got = srv.topk(u, 6, 4, &[]).unwrap();
+                assert_eq!(want.len(), got.len());
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.0, b.0);
+                    assert_eq!(a.1.to_bits(), b.1.to_bits());
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

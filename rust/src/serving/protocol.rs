@@ -1,0 +1,412 @@
+//! Wire protocol of `alx serve`: length-prefixed little-endian frames
+//! over TCP.
+//!
+//! Every message — request or response — is one frame:
+//!
+//! ```text
+//! [len: u32 LE] [payload: len bytes]          len ≤ 1 MiB
+//! ```
+//!
+//! Request payloads start with a one-byte opcode:
+//!
+//! ```text
+//! TOPK (1):      user u64 · k u32 · probes u32 · deadline_us u32
+//!                · n_exclude u32 · n_exclude × item u32
+//! PING (2):      (empty)
+//! SHUTDOWN (3):  (empty — asks the server to drain and exit)
+//! ```
+//!
+//! Response payloads start with a one-byte status:
+//!
+//! ```text
+//! OK (0):   TOPK → n u32 · n × (item u32 · score f32-bits u32)
+//!           PING/SHUTDOWN → (empty)
+//! ERR (1):  msg_len u32 · msg_len bytes of UTF-8
+//! ```
+//!
+//! Scores travel as raw f32 bit patterns, so a response is comparable
+//! bitwise against the exact scorer — the serving equivalence contract is
+//! checked on the wire, not on some lossy formatted view. A frame that
+//! fails to decode is answered with `ERR` and the connection is closed;
+//! the server itself stays up.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+/// Hard cap on a frame's payload size. Large enough for a Top-K response
+/// at any sane `k` and an exclusion list of ~130k items; small enough
+/// that a hostile length prefix cannot drive a large allocation.
+pub const MAX_FRAME: u32 = 1 << 20;
+
+/// Request opcodes.
+pub const OP_TOPK: u8 = 1;
+pub const OP_PING: u8 = 2;
+pub const OP_SHUTDOWN: u8 = 3;
+
+/// Response status bytes.
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERR: u8 = 1;
+
+/// One Top-K query.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopKRequest {
+    /// Row into the user table `W`.
+    pub user: u64,
+    /// How many items to return.
+    pub k: u32,
+    /// Clusters to probe (0 → the server's configured default).
+    pub probes: u32,
+    /// Give up if not scored within this budget (0 → no deadline).
+    pub deadline_us: u32,
+    /// Item ids to exclude (the user's history; any order — the server
+    /// sorts).
+    pub exclude: Vec<u32>,
+}
+
+/// A decoded request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    TopK(TopKRequest),
+    Ping,
+    Shutdown,
+}
+
+/// A decoded response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Ranked `(item, score)` pairs, best first.
+    TopK(Vec<(u32, f32)>),
+    /// PING / SHUTDOWN acknowledged.
+    Ok,
+    Err(String),
+}
+
+/// Read one frame's payload. `Ok(None)` on a clean EOF at a frame
+/// boundary (peer closed); an EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    let mut len4 = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        let n = r.read(&mut len4[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(None);
+            }
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF inside frame length"));
+        }
+        filled += n;
+    }
+    let len = u32::from_le_bytes(len4);
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Write one frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    assert!(payload.len() as u64 <= MAX_FRAME as u64, "oversized outbound frame");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Little-endian cursor over a request/response payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated payload: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!("{} trailing bytes after payload", self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+/// Encode a request into a frame payload.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    match req {
+        Request::Ping => vec![OP_PING],
+        Request::Shutdown => vec![OP_SHUTDOWN],
+        Request::TopK(q) => {
+            let mut out = Vec::with_capacity(25 + 4 * q.exclude.len());
+            out.push(OP_TOPK);
+            out.extend_from_slice(&q.user.to_le_bytes());
+            out.extend_from_slice(&q.k.to_le_bytes());
+            out.extend_from_slice(&q.probes.to_le_bytes());
+            out.extend_from_slice(&q.deadline_us.to_le_bytes());
+            out.extend_from_slice(&(q.exclude.len() as u32).to_le_bytes());
+            for &id in &q.exclude {
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            out
+        }
+    }
+}
+
+/// Decode a request payload. Errors are protocol violations: the server
+/// answers them with `ERR` and closes the connection.
+pub fn decode_request(buf: &[u8]) -> Result<Request, String> {
+    let mut c = Cursor { buf, pos: 0 };
+    let op = c.u8()?;
+    match op {
+        OP_PING => {
+            c.done()?;
+            Ok(Request::Ping)
+        }
+        OP_SHUTDOWN => {
+            c.done()?;
+            Ok(Request::Shutdown)
+        }
+        OP_TOPK => {
+            let user = c.u64()?;
+            let k = c.u32()?;
+            let probes = c.u32()?;
+            let deadline_us = c.u32()?;
+            let n = c.u32()? as usize;
+            // The length prefix already bounds the payload, but check the
+            // claimed count against the remaining bytes before allocating.
+            if c.buf.len() - c.pos != n * 4 {
+                return Err(format!(
+                    "exclusion count {n} disagrees with {} remaining payload bytes",
+                    c.buf.len() - c.pos
+                ));
+            }
+            let mut exclude = Vec::with_capacity(n);
+            for _ in 0..n {
+                exclude.push(c.u32()?);
+            }
+            Ok(Request::TopK(TopKRequest { user, k, probes, deadline_us, exclude }))
+        }
+        other => Err(format!("unknown opcode {other}")),
+    }
+}
+
+/// Encode a response into a frame payload.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    match resp {
+        Response::Ok => vec![STATUS_OK],
+        Response::TopK(items) => {
+            let mut out = Vec::with_capacity(5 + 8 * items.len());
+            out.push(STATUS_OK);
+            out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for &(id, score) in items {
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&score.to_bits().to_le_bytes());
+            }
+            out
+        }
+        Response::Err(msg) => {
+            let bytes = msg.as_bytes();
+            let mut out = Vec::with_capacity(5 + bytes.len());
+            out.push(STATUS_ERR);
+            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(bytes);
+            out
+        }
+    }
+}
+
+/// Decode a response payload. `with_items` distinguishes a Top-K reply
+/// (carries a result list) from a bare acknowledgement.
+pub fn decode_response(buf: &[u8], with_items: bool) -> Result<Response, String> {
+    let mut c = Cursor { buf, pos: 0 };
+    match c.u8()? {
+        STATUS_OK if with_items => {
+            let n = c.u32()? as usize;
+            if c.buf.len() - c.pos != n * 8 {
+                return Err(format!(
+                    "result count {n} disagrees with {} remaining payload bytes",
+                    c.buf.len() - c.pos
+                ));
+            }
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = c.u32()?;
+                let score = f32::from_bits(c.u32()?);
+                items.push((id, score));
+            }
+            Ok(Response::TopK(items))
+        }
+        STATUS_OK => {
+            c.done()?;
+            Ok(Response::Ok)
+        }
+        STATUS_ERR => {
+            let n = c.u32()? as usize;
+            let bytes = c.take(n)?;
+            c.done()?;
+            Ok(Response::Err(String::from_utf8_lossy(bytes).into_owned()))
+        }
+        other => Err(format!("unknown status {other}")),
+    }
+}
+
+/// Minimal blocking client (the `alx query` CLI, tests, and the latency
+/// bench all speak through this).
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> io::Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    fn roundtrip(&mut self, req: &Request, with_items: bool) -> io::Result<Response> {
+        write_frame(&mut self.stream, &encode_request(req))?;
+        let payload = read_frame(&mut self.stream)?.ok_or_else(|| {
+            io::Error::new(io::ErrorKind::UnexpectedEof, "server closed before replying")
+        })?;
+        decode_response(&payload, with_items)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+
+    /// Ranked `(item, score)` pairs for `user`, or the server's error.
+    pub fn topk(&mut self, req: &TopKRequest) -> io::Result<Response> {
+        self.roundtrip(&Request::TopK(req.clone()), true)
+    }
+
+    pub fn ping(&mut self) -> io::Result<Response> {
+        self.roundtrip(&Request::Ping, false)
+    }
+
+    /// Ask the server to drain in-flight requests and exit.
+    pub fn shutdown(&mut self) -> io::Result<Response> {
+        self.roundtrip(&Request::Shutdown, false)
+    }
+
+    /// Send raw bytes as a frame payload (malformed-input testing) and
+    /// read back whatever the server answers.
+    pub fn send_raw(&mut self, payload: &[u8]) -> io::Result<Option<Response>> {
+        write_frame(&mut self.stream, payload)?;
+        match read_frame(&mut self.stream)? {
+            Some(p) => decode_response(&p, false)
+                .map(Some)
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e)),
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = [
+            Request::Ping,
+            Request::Shutdown,
+            Request::TopK(TopKRequest {
+                user: 123456789,
+                k: 10,
+                probes: 4,
+                deadline_us: 2500,
+                exclude: vec![1, 5, 9],
+            }),
+            Request::TopK(TopKRequest {
+                user: 0,
+                k: 0,
+                probes: 0,
+                deadline_us: 0,
+                exclude: vec![],
+            }),
+        ];
+        for req in &reqs {
+            let enc = encode_request(req);
+            assert_eq!(&decode_request(&enc).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_preserves_score_bits() {
+        let resp = Response::TopK(vec![(7, 1.25), (3, -0.0), (9, f32::MIN_POSITIVE)]);
+        let enc = encode_response(&resp);
+        let dec = decode_response(&enc, true).unwrap();
+        let (Response::TopK(a), Response::TopK(b)) = (&resp, &dec) else {
+            panic!("wrong variant");
+        };
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn err_response_roundtrip() {
+        let enc = encode_response(&Response::Err("bad frame".into()));
+        assert_eq!(decode_response(&enc, false).unwrap(), Response::Err("bad frame".into()));
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[99]).is_err(), "unknown opcode");
+        assert!(decode_request(&[OP_PING, 0]).is_err(), "trailing bytes");
+        // TOPK with a lying exclusion count.
+        let mut buf = encode_request(&Request::TopK(TopKRequest {
+            user: 1,
+            k: 5,
+            probes: 1,
+            deadline_us: 0,
+            exclude: vec![2, 3],
+        }));
+        let n_off = 1 + 8 + 4 + 4 + 4;
+        buf[n_off..n_off + 4].copy_from_slice(&100u32.to_le_bytes());
+        assert!(decode_request(&buf).is_err());
+        // Truncated TOPK header.
+        assert!(decode_request(&buf[..9]).is_err());
+    }
+
+    #[test]
+    fn frames_roundtrip_and_cap_is_enforced() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+
+        // A hostile length prefix is rejected without allocating.
+        let huge = (MAX_FRAME + 1).to_le_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+        // EOF mid-frame is an error, not a silent None.
+        let truncated = [5u8, 0, 0, 0, b'x'];
+        assert!(read_frame(&mut &truncated[..]).is_err());
+    }
+}

@@ -1,0 +1,403 @@
+//! The `alx serve` request loop: listener, per-connection threads,
+//! scoring workers, graceful shutdown.
+//!
+//! Thread layout (all plain `std::thread`, no new deps):
+//!
+//! ```text
+//! accept thread ──spawns──► connection threads (one per client)
+//!                               │  decode frame → cache lookup
+//!                               │  miss: submit to the Batcher, block on
+//!                               ▼        a reply channel (with timeout)
+//!                           Batcher (bounded queue, batch window)
+//!                               │
+//!                           scoring workers (cfg.threads)
+//!                               │  one shard-grouped search_batch pass
+//!                               ▼
+//!                           reply channels → connection threads → wire
+//! ```
+//!
+//! Failure behavior: a malformed frame is answered with `ERR` and closes
+//! that connection only. A scoring worker that dies (e.g. an injected
+//! `serve.index` panic) drops its reply senders, so waiting connections
+//! get an `ERR` instead of hanging, and every table lock recovers from
+//! poisoning ([`lock_or_recover`]) — the server is never wedged by one
+//! bad request or one dead thread. Shutdown (a `SHUTDOWN` frame or
+//! [`ServerHandle::stop`]) drains queued requests before workers exit.
+//!
+//! Failpoints `serve.accept`, `serve.read` and `serve.index` are threaded
+//! through the three stages for crash-torture-style testing.
+
+use super::batcher::{Batcher, Pending};
+use super::cache::{CacheKey, ResultCache};
+use super::protocol::{
+    decode_request, encode_response, read_frame, write_frame, Request, Response, TopKRequest,
+};
+use super::{ServeConfig, ServeModel};
+use crate::util::fault;
+use crate::util::threads::{lock_or_recover, resolve_workers, stall_timeout_ms};
+use crate::{log_info, log_warn};
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Monotonic serving counters (lock-free; read via
+/// [`ServerHandle::stats`]).
+#[derive(Debug, Default)]
+struct ServeStats {
+    requests: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    largest_batch: AtomicU64,
+    deadline_expired: AtomicU64,
+    rejected: AtomicU64,
+    malformed: AtomicU64,
+    connections: AtomicU64,
+}
+
+/// A point-in-time copy of the serving counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStatsSnapshot {
+    /// Top-K requests received (hit + miss).
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Scoring passes executed.
+    pub batches: u64,
+    /// Requests scored across all batches.
+    pub batched_requests: u64,
+    /// Largest single scoring batch.
+    pub largest_batch: u64,
+    /// Requests dropped for missing their deadline.
+    pub deadline_expired: u64,
+    /// Requests rejected because the queue was full or shutting down.
+    pub rejected: u64,
+    /// Frames that failed to decode.
+    pub malformed: u64,
+    /// Connections accepted.
+    pub connections: u64,
+}
+
+/// State shared by every server thread.
+struct Shared {
+    model: Arc<ServeModel>,
+    cfg: ServeConfig,
+    batcher: Batcher,
+    cache: ResultCache,
+    shutdown: AtomicBool,
+    stats: ServeStats,
+    port: u16,
+}
+
+impl Shared {
+    /// Flip into shutdown exactly once: reject new work, flush the
+    /// batcher, and self-connect to unblock the accept loop.
+    fn initiate_shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.batcher.shutdown();
+        // The accept thread blocks in `accept()`; a throwaway connection
+        // wakes it so it can observe the flag and exit.
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+    }
+}
+
+/// Handle to a running server. Dropping it stops the server (graceful:
+/// queued requests drain first).
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ServerHandle {
+    /// The bound TCP port (useful with `port = 0`).
+    pub fn port(&self) -> u16 {
+        self.shared.port
+    }
+
+    /// `host:port` string clients can connect to.
+    pub fn addr(&self) -> String {
+        format!("127.0.0.1:{}", self.shared.port)
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> ServeStatsSnapshot {
+        let s = &self.shared.stats;
+        ServeStatsSnapshot {
+            requests: s.requests.load(Ordering::Relaxed),
+            cache_hits: s.cache_hits.load(Ordering::Relaxed),
+            cache_misses: s.cache_misses.load(Ordering::Relaxed),
+            batches: s.batches.load(Ordering::Relaxed),
+            batched_requests: s.batched_requests.load(Ordering::Relaxed),
+            largest_batch: s.largest_batch.load(Ordering::Relaxed),
+            deadline_expired: s.deadline_expired.load(Ordering::Relaxed),
+            rejected: s.rejected.load(Ordering::Relaxed),
+            malformed: s.malformed.load(Ordering::Relaxed),
+            connections: s.connections.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Initiate shutdown and join every thread (idempotent).
+    pub fn stop(&mut self) {
+        self.shared.initiate_shutdown();
+        self.join_all();
+    }
+
+    /// Block until the server shuts down (via a client `SHUTDOWN` frame
+    /// or [`ServerHandle::stop`] from another handle) and join every
+    /// thread.
+    pub fn wait(&mut self) {
+        self.join_all();
+    }
+
+    fn join_all(&mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Connection threads observe the flag within their read timeout.
+        let handles: Vec<JoinHandle<()>> = lock_or_recover(&self.conns).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Start serving `model` per `cfg` on `127.0.0.1:{cfg.port}` (port 0 =
+/// OS-assigned; read it back from [`ServerHandle::port`]). Returns once
+/// the listener is bound and all workers are up — queries can be sent
+/// immediately.
+pub fn serve(model: Arc<ServeModel>, cfg: &ServeConfig) -> io::Result<ServerHandle> {
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+    let port = listener.local_addr()?.port();
+    let shared = Arc::new(Shared {
+        model,
+        cfg: cfg.clone(),
+        batcher: Batcher::new(cfg.batch_window_us, cfg.batch_max, cfg.queue_depth),
+        cache: ResultCache::new(cfg.cache_entries, cfg.cache_ttl_ms),
+        shutdown: AtomicBool::new(false),
+        stats: ServeStats::default(),
+        port,
+    });
+
+    let workers: Vec<JoinHandle<()>> = (0..resolve_workers(cfg.threads))
+        .map(|_| {
+            let sh = Arc::clone(&shared);
+            std::thread::spawn(move || worker_loop(&sh))
+        })
+        .collect();
+
+    let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let accept = {
+        let sh = Arc::clone(&shared);
+        let conns = Arc::clone(&conns);
+        std::thread::spawn(move || accept_loop(&sh, &listener, &conns))
+    };
+
+    log_info!(
+        "serving on 127.0.0.1:{port} ({} workers, window {}us, batch_max {}, cache {})",
+        resolve_workers(cfg.threads),
+        cfg.batch_window_us,
+        cfg.batch_max,
+        cfg.cache_entries,
+    );
+    Ok(ServerHandle { shared, accept: Some(accept), workers, conns })
+}
+
+fn accept_loop(sh: &Arc<Shared>, listener: &TcpListener, conns: &Arc<Mutex<Vec<JoinHandle<()>>>>) {
+    loop {
+        if sh.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Err(e) = fault::failpoint("serve.accept") {
+            log_warn!("accept failpoint: {e}");
+            continue;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(e) => {
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                log_warn!("accept failed: {e}");
+                continue;
+            }
+        };
+        if sh.shutdown.load(Ordering::SeqCst) {
+            // The wake-up connection itself, or a straggler.
+            return;
+        }
+        sh.stats.connections.fetch_add(1, Ordering::Relaxed);
+        let sh2 = Arc::clone(sh);
+        let handle = std::thread::spawn(move || handle_conn(&sh2, stream));
+        lock_or_recover(conns).push(handle);
+    }
+}
+
+/// Per-connection loop: poll for a frame (checking the shutdown flag
+/// between timeouts), decode, answer. Returns (closing the connection)
+/// on EOF, malformed input, IO errors, or shutdown.
+fn handle_conn(sh: &Arc<Shared>, mut stream: TcpStream) {
+    // Small frames, latency-sensitive: disable Nagle.
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    loop {
+        if sh.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Wait for data without consuming it, so a poll timeout never
+        // strands half a length prefix.
+        let mut probe = [0u8; 1];
+        match stream.peek(&mut probe) {
+            Ok(0) => return, // EOF
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                continue;
+            }
+            Err(_) => return,
+        }
+        if let Err(e) = fault::failpoint("serve.read") {
+            let _ = write_frame(&mut stream, &encode_response(&Response::Err(e.to_string())));
+            return;
+        }
+        // Data is pending; a client that stalls mid-frame past the read
+        // timeout is disconnected (its failure, not the server's).
+        let payload = match read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => return,
+            Err(e) => {
+                sh.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = write_frame(&mut stream, &encode_response(&Response::Err(e.to_string())));
+                return;
+            }
+        };
+        let req = match decode_request(&payload) {
+            Ok(r) => r,
+            Err(msg) => {
+                sh.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                let resp = Response::Err(format!("malformed request: {msg}"));
+                let _ = write_frame(&mut stream, &encode_response(&resp));
+                return;
+            }
+        };
+        let resp = match req {
+            Request::Ping => Response::Ok,
+            Request::Shutdown => {
+                let _ = write_frame(&mut stream, &encode_response(&Response::Ok));
+                sh.initiate_shutdown();
+                return;
+            }
+            Request::TopK(q) => handle_topk(sh, q),
+        };
+        if write_frame(&mut stream, &encode_response(&resp)).is_err() {
+            return;
+        }
+    }
+}
+
+/// Answer one Top-K request: cache, or batch-submit and wait.
+fn handle_topk(sh: &Arc<Shared>, mut q: TopKRequest) -> Response {
+    sh.stats.requests.fetch_add(1, Ordering::Relaxed);
+    q.exclude.sort_unstable();
+    // Resolve the effective probe count once, so the cache key cannot
+    // alias two different server defaults.
+    if q.probes == 0 {
+        q.probes = sh.cfg.mips_probes as u32;
+    }
+    let key = CacheKey { user: q.user, k: q.k, probes: q.probes, exclude: q.exclude.clone() };
+    if let Some(hit) = sh.cache.get(&key) {
+        sh.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        return Response::TopK(hit);
+    }
+    sh.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+
+    let enqueued = Instant::now();
+    let deadline = (q.deadline_us > 0)
+        .then(|| enqueued + Duration::from_micros(u64::from(q.deadline_us)));
+    let (tx, rx) = mpsc::channel();
+    let pending = Pending { req: q, enqueued, deadline, reply: tx };
+    if sh.batcher.submit(pending).is_err() {
+        sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        let why = if sh.batcher.is_shutdown() { "shutting down" } else { "overloaded" };
+        return Response::Err(why.to_string());
+    }
+    // Workers always reply unless they died; bound the wait so a dead
+    // worker degrades to an error, never a wedged connection.
+    let wait = Duration::from_millis(stall_timeout_ms().saturating_mul(5));
+    match rx.recv_timeout(wait) {
+        Ok(resp) => {
+            if let Response::TopK(items) = &resp {
+                sh.cache.put(key, items.clone());
+            }
+            resp
+        }
+        Err(_) => Response::Err("scoring worker did not reply (timed out or died)".to_string()),
+    }
+}
+
+/// Scoring worker: drain batches until shutdown, score each in one
+/// shard-grouped pass, reply per request.
+fn worker_loop(sh: &Arc<Shared>) {
+    while let Some(batch) = sh.batcher.next_batch() {
+        sh.stats.batches.fetch_add(1, Ordering::Relaxed);
+        sh.stats.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        sh.stats.largest_batch.fetch_max(batch.len() as u64, Ordering::Relaxed);
+
+        // Deadline check happens at scoring time: a request that waited
+        // out its budget in the queue is answered with an error instead
+        // of burning a scoring slot on a reply nobody wants.
+        let now = Instant::now();
+        let mut live: Vec<Pending> = Vec::with_capacity(batch.len());
+        for p in batch {
+            if p.deadline.is_some_and(|d| now > d) {
+                sh.stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                let _ = p.reply.send(Response::Err("deadline exceeded".to_string()));
+            } else {
+                live.push(p);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        if let Err(e) = fault::failpoint("serve.index") {
+            for p in &live {
+                let _ = p.reply.send(Response::Err(e.to_string()));
+            }
+            continue;
+        }
+        let reqs: Vec<(usize, usize, usize, &[u32])> = live
+            .iter()
+            .map(|p| {
+                // A user id beyond the address space can't be a row; map it
+                // to an always-out-of-range row instead of truncating.
+                let user = usize::try_from(p.req.user).unwrap_or(usize::MAX);
+                (user, p.req.k as usize, p.req.probes as usize, p.req.exclude.as_slice())
+            })
+            .collect();
+        let results = sh.model.topk_batch(&reqs);
+        for (p, r) in live.iter().zip(results) {
+            let resp = match r {
+                Ok(items) => Response::TopK(items),
+                Err(msg) => Response::Err(msg),
+            };
+            // A send error just means the connection gave up (deadline,
+            // disconnect); nothing to do.
+            let _ = p.reply.send(resp);
+        }
+    }
+}

@@ -101,6 +101,24 @@ impl ShardData {
     pub fn memory_bytes(&self) -> u64 {
         self.elems() as u64 * self.storage().elem_bytes()
     }
+
+    /// Decode `out.len()` elements starting at element offset `off` into
+    /// f32 — the single widening path every reader shares. Public so
+    /// shard-streaming consumers outside this module (the MIPS index
+    /// build, the serving scorer) can decode rows from a borrowed shard
+    /// without round-tripping through [`ShardedTable::read_row`]'s
+    /// per-row shard lookup.
+    #[inline]
+    pub fn read_row_f32(&self, off: usize, out: &mut [f32]) {
+        match self {
+            ShardData::Bf16(v) => {
+                for (o, &b) in out.iter_mut().zip(&v[off..off + out.len()]) {
+                    *o = Bf16(b).to_f32();
+                }
+            }
+            ShardData::F32(v) => out.copy_from_slice(&v[off..off + out.len()]),
+        }
+    }
 }
 
 /// Write `src` into a shard at element offset `off`, rounding to the
@@ -133,19 +151,24 @@ fn randn_shard(elems: usize, storage: Storage, scale: f64, srng: &mut Pcg64) -> 
     }
 }
 
-/// Read one row at element offset `off` into `out`, widened to f32 — the
-/// single decode path every reader (gathers, gramians, checkpoints)
-/// shares, whichever backend served the shard.
+/// Read one row at element offset `off` into `out`, widened to f32
+/// (thin alias over [`ShardData::read_row_f32`] kept for the module's
+/// internal call sites).
 #[inline]
 fn read_row_data(data: &ShardData, off: usize, out: &mut [f32]) {
-    match data {
-        ShardData::Bf16(v) => {
-            for (o, &b) in out.iter_mut().zip(&v[off..off + out.len()]) {
-                *o = Bf16(b).to_f32();
-            }
-        }
-        ShardData::F32(v) => out.copy_from_slice(&v[off..off + out.len()]),
-    }
+    data.read_row_f32(off, out);
+}
+
+/// Process-wide count of [`ShardedTable::to_dense`] calls. A full-table
+/// materialization on a spilled model defeats the whole out-of-core
+/// design, so streaming paths (eval, index build, serving) are guarded
+/// by tests that snapshot this counter and assert it does not move.
+static DENSE_MATERIALIZATIONS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// How many times any table has been fully materialized via
+/// [`ShardedTable::to_dense`] since process start (test instrumentation).
+pub fn dense_materializations() -> u64 {
+    DENSE_MATERIALIZATIONS.load(std::sync::atomic::Ordering::Relaxed)
 }
 
 /// An embedding table uniformly sharded over `num_shards` cores, stored
@@ -243,6 +266,36 @@ impl ShardedTable {
             for r in &ranges {
                 let mut srng = rng.split();
                 w.write_shard(&randn_shard(r.len() * dim, storage, scale, &mut srng))?;
+            }
+            w.finish()?;
+            Ok(())
+        })?;
+        Self::open_bank(path, resident_table_shards)
+    }
+
+    /// [`ShardedTable::zeros`] streamed straight into an `ALXTAB01` bank
+    /// at `path` and reopened demand-paged — the landing pad checkpoint
+    /// restore uses when the model should never be fully resident: peak
+    /// memory is one zero shard, and the caller then streams real shards
+    /// in via [`ShardedTable::update_shard`].
+    pub fn zeros_spilled(
+        rows: usize,
+        dim: usize,
+        num_shards: usize,
+        storage: Storage,
+        path: &Path,
+        resident_table_shards: usize,
+    ) -> std::io::Result<ShardedTable> {
+        let ranges = Self::ranges_for(rows, num_shards);
+        let artifact = format!("table bank {}", path.display());
+        crate::util::durable::write_atomic(path, &artifact, |f| {
+            let mut w = TableBankWriter::create(&mut *f, rows, dim, num_shards, storage)?;
+            for r in &ranges {
+                let shard = match storage {
+                    Storage::Bf16 => ShardData::Bf16(vec![0u16; r.len() * dim]),
+                    Storage::F32 => ShardData::F32(vec![0.0f32; r.len() * dim]),
+                };
+                w.write_shard(&shard)?;
             }
             w.finish()?;
             Ok(())
@@ -421,7 +474,10 @@ impl ShardedTable {
     }
 
     /// Materialize the full table as a dense matrix (eval / small problems).
+    /// Bumps the process-wide [`dense_materializations`] counter so tests
+    /// can assert a streaming code path never fell back to this.
     pub fn to_dense(&self) -> Mat {
+        DENSE_MATERIALIZATIONS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut out = Mat::zeros(self.rows, self.dim);
         for r in 0..self.rows {
             let d = self.dim;
@@ -817,6 +873,23 @@ mod tests {
             // A fresh attach to the same bank sees the writes.
             let reopened = ShardedTable::open_bank(&path, 2).unwrap();
             assert_eq!(reopened.to_dense().data, resident.to_dense().data);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn zeros_spilled_matches_resident_zeros() {
+        for storage in [Storage::F32, Storage::Bf16] {
+            let path = tab_path(&format!("zs{}", storage.elem_bytes()));
+            let mut spilled = ShardedTable::zeros_spilled(19, 3, 4, storage, &path, 1).unwrap();
+            assert!(spilled.is_spilled());
+            assert_eq!(spilled.to_dense().data, vec![0.0f32; 19 * 3]);
+            // The landing pad accepts streamed shard writes like any
+            // other paged table.
+            spilled.write_row(7, &[1.0, 2.0, 3.0]);
+            let mut out = [0.0f32; 3];
+            spilled.read_row(7, &mut out);
+            assert_eq!(out, [1.0, 2.0, 3.0]);
             let _ = std::fs::remove_file(&path);
         }
     }

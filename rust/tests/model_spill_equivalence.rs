@@ -178,6 +178,34 @@ fn spilled_model_checkpoint_resume_is_bitwise() {
 }
 
 #[test]
+fn spilled_eval_streams_without_dense_materialization() {
+    // The recall path must stream H shard-by-shard (MIPS index build,
+    // candidate scoring, exact top-k) — materializing a dense copy of a
+    // spilled table would defeat the whole out-of-core model story. The
+    // sharding module counts every `to_dense()`; eval must add zero.
+    let m = community_matrix(80, 48, 11);
+    let dir = tmp("eval_stream");
+    let mut c = cfg(2, 4, true, PrecisionPolicy::F32);
+    c.model_spill_dir = dir.display().to_string();
+    let source = InMemorySource::new("community", m.clone());
+    let mut s = TrainSession::new(&source, c).unwrap();
+    while s.remaining_epochs() > 0 {
+        s.step().unwrap();
+    }
+    assert!(s.trainer.h.is_spilled());
+    let before = alx::sharding::dense_materializations();
+    let exact = s.evaluate().unwrap();
+    let approx = s.evaluate_with(&EvalConfig { approximate: true, ..EvalConfig::default() });
+    assert!(!exact.is_empty() && !approx.is_empty());
+    let after = alx::sharding::dense_materializations();
+    assert_eq!(
+        after, before,
+        "evaluate must stream shards, never to_dense() a table (exact and MIPS paths)"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn fully_out_of_core_matrix_and_model_is_bitwise() {
     // The complete composition: ALXCSR02 chunks stream through the split
     // into spilled ALXBANK01 matrix banks, the model spills into

@@ -1,0 +1,315 @@
+//! The serving contract: every Top-K answer the server produces — cache
+//! miss, cache hit, or coalesced into a concurrent batch — is **bitwise
+//! identical** to single-threaded exact `eval::mips` scoring over the
+//! dense item table, for f32 and bf16 models, on resident and
+//! bank-backed (spilled) table storage. Plus the liveness half of the
+//! story: shutdown mid-traffic leaves no wedged workers and no poisoned
+//! table locks (the same `Arc<ServeModel>` serves again immediately),
+//! expired deadlines degrade to errors, and injected faults at the
+//! accept/read/index stages never take the server down.
+
+use alx::eval::MipsIndex;
+use alx::linalg::Mat;
+use alx::serving::{serve, Client, Response, ServeConfig, ServeModel, TopKRequest};
+use alx::sharding::{ShardedTable, Storage};
+use alx::util::Pcg64;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const DIM: usize = 8;
+const USERS: usize = 24;
+const ITEMS: usize = 64;
+const CLUSTERS: usize = 8;
+const SEED: u64 = 4242;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("alx_serve_eq_{}_{}", tag, std::process::id()))
+}
+
+/// Random model tables; `spill_dir` routes them through `ALXTAB01` banks
+/// and reopens them demand-paged (1–2 resident shards, so serving pages).
+fn tables(storage: Storage, spill_dir: Option<&PathBuf>) -> (ShardedTable, ShardedTable) {
+    let mut rng = Pcg64::new(11);
+    let users = ShardedTable::randn(USERS, DIM, 3, storage, &mut rng);
+    let items = ShardedTable::randn(ITEMS, DIM, 5, storage, &mut rng);
+    match spill_dir {
+        None => (users, items),
+        Some(dir) => {
+            std::fs::create_dir_all(dir).unwrap();
+            let wb = dir.join("w.alxtab");
+            let hb = dir.join("h.alxtab");
+            users.spill_to_bank(&wb).unwrap();
+            items.spill_to_bank(&hb).unwrap();
+            (ShardedTable::open_bank(&wb, 1).unwrap(), ShardedTable::open_bank(&hb, 2).unwrap())
+        }
+    }
+}
+
+/// The reference: single-threaded exact `eval::mips` scoring over dense
+/// matrices (densifying is fine in a test — it is exactly what serving
+/// must never need to do).
+fn expect_topk(
+    idx: &MipsIndex,
+    users_dense: &Mat,
+    items_dense: &Mat,
+    user: usize,
+    k: usize,
+    probes: usize,
+    exclude: &[u32],
+) -> Vec<(u32, f32)> {
+    let mut ex = exclude.to_vec();
+    ex.sort_unstable();
+    idx.search_scored(items_dense, users_dense.row(user), k, probes, &ex)
+        .into_iter()
+        .map(|(s, id)| (id, s))
+        .collect()
+}
+
+fn assert_bitwise(got: &[(u32, f32)], want: &[(u32, f32)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.0, w.0, "{ctx}: item at rank {i}");
+        assert_eq!(g.1.to_bits(), w.1.to_bits(), "{ctx}: score bits at rank {i}");
+    }
+}
+
+#[test]
+fn server_responses_bitwise_match_exact_scoring() {
+    for storage in [Storage::F32, Storage::Bf16] {
+        for spilled in [false, true] {
+            let tag = format!("{storage:?}_{}", if spilled { "spilled" } else { "resident" });
+            let dir = tmp(&tag);
+            let (users, items) = tables(storage, spilled.then_some(&dir));
+            assert_eq!(items.is_spilled(), spilled);
+            let model = Arc::new(ServeModel::from_tables(users, items, CLUSTERS, SEED));
+            let users_dense = model.users.to_dense();
+            let items_dense = model.items.to_dense();
+            let idx = MipsIndex::build(&items_dense, CLUSTERS, SEED);
+            assert_eq!(
+                idx.centroids.data, model.index.centroids.data,
+                "{tag}: streamed index build must equal the dense build"
+            );
+
+            let cfg = ServeConfig {
+                threads: 2,
+                batch_window_us: 2_000,
+                batch_max: 16,
+                cache_entries: 8,
+                ..ServeConfig::default()
+            };
+            let mut handle = serve(Arc::clone(&model), &cfg).unwrap();
+            let addr = handle.addr();
+
+            // Concurrent clients with overlapping users: requests coalesce
+            // into mixed batches, and repeated identities land cache hits.
+            let mut joins = Vec::new();
+            for t in 0..3u64 {
+                let addr = addr.clone();
+                joins.push(std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let mut out = Vec::new();
+                    for i in 0..8u64 {
+                        let user = (t * 3 + i) % USERS as u64;
+                        let exclude = vec![(user as u32 * 7) % ITEMS as u32];
+                        let req = TopKRequest { user, k: 6, probes: 3, deadline_us: 0, exclude };
+                        match c.topk(&req).unwrap() {
+                            Response::TopK(items) => out.push((req, items)),
+                            other => panic!("unexpected reply: {other:?}"),
+                        }
+                    }
+                    out
+                }));
+            }
+            for j in joins {
+                for (req, got) in j.join().unwrap() {
+                    let want = expect_topk(
+                        &idx,
+                        &users_dense,
+                        &items_dense,
+                        req.user as usize,
+                        6,
+                        3,
+                        &req.exclude,
+                    );
+                    assert_bitwise(&got, &want, &format!("{tag} user {}", req.user));
+                }
+            }
+
+            // Explicit miss-then-hit on one connection: both must equal
+            // the reference (a hit replays stored bits, never recomputes).
+            let mut c = Client::connect(&addr).unwrap();
+            let req = TopKRequest { user: 5, k: 6, probes: 3, deadline_us: 0, exclude: vec![9, 1] };
+            let hits_before = handle.stats().cache_hits;
+            let Response::TopK(first) = c.topk(&req).unwrap() else { panic!("miss failed") };
+            let Response::TopK(second) = c.topk(&req).unwrap() else { panic!("hit failed") };
+            let want = expect_topk(&idx, &users_dense, &items_dense, 5, 6, 3, &req.exclude);
+            assert_bitwise(&first, &want, &format!("{tag} cache miss"));
+            assert_bitwise(&second, &want, &format!("{tag} cache hit"));
+            assert!(
+                handle.stats().cache_hits > hits_before,
+                "{tag}: repeated request must hit the cache"
+            );
+
+            handle.stop();
+            let stats = handle.stats();
+            assert!(stats.requests >= 26, "{tag}: {stats:?}");
+            assert!(stats.batches >= 1, "{tag}: {stats:?}");
+            if spilled {
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+}
+
+#[test]
+fn shutdown_mid_traffic_then_restart_serves_again() {
+    // Spilled backend on purpose: a shutdown that poisoned the paged
+    // table's locks or wedged a worker would surface when the same
+    // Arc<ServeModel> is served a second time.
+    let dir = tmp("restart");
+    let (users, items) = tables(Storage::F32, Some(&dir));
+    let model = Arc::new(ServeModel::from_tables(users, items, CLUSTERS, SEED));
+    let users_dense = model.users.to_dense();
+    let items_dense = model.items.to_dense();
+    let idx = MipsIndex::build(&items_dense, CLUSTERS, SEED);
+
+    let cfg = ServeConfig { threads: 2, batch_window_us: 500, ..ServeConfig::default() };
+    let mut h1 = serve(Arc::clone(&model), &cfg).unwrap();
+    let addr = h1.addr();
+
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut ok = Vec::new();
+            let Ok(mut c) = Client::connect(&addr) else { return ok };
+            for i in 0..50u64 {
+                let user = (t * 7 + i) % USERS as u64;
+                let req = TopKRequest { user, k: 4, probes: 2, deadline_us: 0, exclude: vec![] };
+                match c.topk(&req) {
+                    Ok(Response::TopK(items)) => ok.push((user, items)),
+                    // Shutdown raced us: rejected or disconnected. Stop.
+                    Ok(_) | Err(_) => break,
+                }
+            }
+            ok
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    if let Ok(mut c) = Client::connect(&addr) {
+        let _ = c.shutdown();
+    }
+    for j in joins {
+        for (user, got) in j.join().unwrap() {
+            let want = expect_topk(&idx, &users_dense, &items_dense, user as usize, 4, 2, &[]);
+            assert_bitwise(&got, &want, &format!("pre-shutdown user {user}"));
+        }
+    }
+    h1.wait(); // joins accept, workers, and every connection thread
+
+    // Same model object, fresh server: everything still works.
+    let mut h2 = serve(Arc::clone(&model), &cfg).unwrap();
+    let mut c = Client::connect(&h2.addr()).unwrap();
+    let req = TopKRequest { user: 3, k: 4, probes: 2, deadline_us: 0, exclude: vec![] };
+    let Response::TopK(got) = c.topk(&req).unwrap() else { panic!("restart query failed") };
+    let want = expect_topk(&idx, &users_dense, &items_dense, 3, 4, 2, &[]);
+    assert_bitwise(&got, &want, "post-restart");
+    h2.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn expired_deadline_gets_error_not_stale_result() {
+    let (users, items) = tables(Storage::F32, None);
+    let model = Arc::new(ServeModel::from_tables(users, items, CLUSTERS, SEED));
+    // A long batch window guarantees the 1µs deadline is already blown
+    // by the time a worker drains the batch.
+    let cfg = ServeConfig { threads: 1, batch_window_us: 50_000, ..ServeConfig::default() };
+    let mut handle = serve(model, &cfg).unwrap();
+    let mut c = Client::connect(&handle.addr()).unwrap();
+    let req = TopKRequest { user: 0, k: 4, probes: 2, deadline_us: 1, exclude: vec![] };
+    match c.topk(&req).unwrap() {
+        Response::Err(msg) => assert!(msg.contains("deadline"), "got: {msg}"),
+        other => panic!("expected a deadline error, got {other:?}"),
+    }
+    handle.stop();
+    assert_eq!(handle.stats().deadline_expired, 1);
+}
+
+#[test]
+fn out_of_range_user_and_malformed_frame_answer_err_and_server_survives() {
+    let (users, items) = tables(Storage::F32, None);
+    let model = Arc::new(ServeModel::from_tables(users, items, CLUSTERS, SEED));
+    let mut handle = serve(model, &ServeConfig::default()).unwrap();
+    let addr = handle.addr();
+
+    let mut c = Client::connect(&addr).unwrap();
+    let req =
+        TopKRequest { user: USERS as u64 + 5, k: 4, probes: 2, deadline_us: 0, exclude: vec![] };
+    match c.topk(&req).unwrap() {
+        Response::Err(msg) => assert!(msg.contains("out of range"), "got: {msg}"),
+        other => panic!("expected out-of-range error, got {other:?}"),
+    }
+
+    // Garbage opcode: ERR back, that connection closed, server up.
+    let mut bad = Client::connect(&addr).unwrap();
+    match bad.send_raw(&[0xFF, 0xAA]).unwrap() {
+        Some(Response::Err(_)) => {}
+        other => panic!("expected ERR for malformed frame, got {other:?}"),
+    }
+    let mut again = Client::connect(&addr).unwrap();
+    assert_eq!(again.ping().unwrap(), Response::Ok);
+    handle.stop();
+    assert_eq!(handle.stats().malformed, 1);
+}
+
+#[cfg(feature = "failpoints")]
+mod failpoints {
+    use super::*;
+    use alx::util::fault;
+
+    /// All three serve failpoints in one test — the fault registry is
+    /// process-global, so the stages must run serialized.
+    #[test]
+    fn injected_faults_degrade_to_errors_never_wedges() {
+        let (users, items) = tables(Storage::F32, None);
+        let model = Arc::new(ServeModel::from_tables(users, items, CLUSTERS, SEED));
+        let cfg = ServeConfig { threads: 2, ..ServeConfig::default() };
+
+        // serve.read: the poisoned connection gets ERR and is dropped;
+        // the next connection is untouched.
+        fault::configure("serve.read=once").unwrap();
+        let mut h = serve(Arc::clone(&model), &cfg).unwrap();
+        let addr = h.addr();
+        let mut c = Client::connect(&addr).unwrap();
+        match c.ping() {
+            Ok(Response::Err(_)) | Err(_) => {}
+            other => panic!("expected injected read error, got {other:?}"),
+        }
+        let mut c2 = Client::connect(&addr).unwrap();
+        assert_eq!(c2.ping().unwrap(), Response::Ok);
+
+        // serve.index: one scoring batch errors out; the next succeeds on
+        // the same connection (worker loop survives).
+        fault::configure("serve.index=once").unwrap();
+        let req = TopKRequest { user: 1, k: 3, probes: 2, deadline_us: 0, exclude: vec![] };
+        match c2.topk(&req).unwrap() {
+            Response::Err(_) => {}
+            other => panic!("expected injected index error, got {other:?}"),
+        }
+        match c2.topk(&req).unwrap() {
+            Response::TopK(items) => assert_eq!(items.len(), 3),
+            other => panic!("expected recovery after injected error, got {other:?}"),
+        }
+        h.stop();
+
+        // serve.accept: an accept hiccup is logged and the loop keeps
+        // accepting.
+        fault::configure("serve.accept=once").unwrap();
+        let mut h2 = serve(model, &cfg).unwrap();
+        let mut c3 = Client::connect(&h2.addr()).unwrap();
+        assert_eq!(c3.ping().unwrap(), Response::Ok);
+        h2.stop();
+        fault::reset();
+    }
+}
