@@ -62,13 +62,13 @@ fn main() {
     };
     let mut tr = Trainer::new(&graph.adjacency, cfg, Topology::new(8)).expect("trainer");
     let stats = tr.run_epoch().expect("epoch");
-    let (ag_ops, ag_bytes, ar_ops, ar_bytes) = tr.comm.snapshot();
+    let snap = tr.comm.snapshot();
     println!(
         "\nmeasured (d=64, 8 cores): {} all-gathers ({}), {} all-reduces ({}), total {}/epoch",
-        ag_ops,
-        alx::util::stats::human_bytes(ag_bytes),
-        ar_ops,
-        alx::util::stats::human_bytes(ar_bytes),
+        snap.all_gather_ops,
+        alx::util::stats::human_bytes(snap.all_gather_bytes),
+        snap.all_reduce_ops,
+        alx::util::stats::human_bytes(snap.all_reduce_bytes),
         alx::util::stats::human_bytes(stats.comm_bytes)
     );
 }

@@ -417,6 +417,10 @@ impl super::Trainer {
         );
         read_table_into(r, &mut self.w)?;
         read_table_into(r, &mut self.h)?;
+        // Re-ship the restored bits to the transport's authoritative
+        // owners (no-op on the local backend) so a resumed distributed
+        // run continues from exactly the checkpointed state.
+        self.push_tables()?;
         let recall_log = read_recall_section(r)?;
         self.set_epoch(meta.epoch as usize);
         Ok((objective_log, recall_log))

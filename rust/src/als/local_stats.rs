@@ -166,7 +166,6 @@ mod tests {
         );
         let d = fixed.dim as u64;
         let expect = m.rows as u64 * (d * d + d) * 4;
-        let (_, _, _, ar_bytes) = stats.snapshot();
-        assert_eq!(ar_bytes, expect);
+        assert_eq!(stats.snapshot().all_reduce_bytes, expect);
     }
 }

@@ -17,7 +17,10 @@
 
 use super::engine::{NativeEngine, SolveEngine};
 use super::PrecisionPolicy;
-use crate::collectives::{record_gather_traffic, record_scatter_traffic, CommStats};
+use crate::collectives::{
+    record_gather_traffic, record_scatter_traffic, Collectives, CommStats, LocalCollectives,
+    TableId,
+};
 use crate::coordinator::pipeline::{BatchFeeder, BoundedQueue, CloseGuard};
 use crate::densebatch::DenseBatcher;
 use crate::linalg::{Mat, SolveOptions, SolverKind};
@@ -145,6 +148,13 @@ pub struct Trainer {
     engine: Box<dyn SolveEngine>,
     pub comm: CommStats,
     pub profiler: Arc<Profiler>,
+    /// The transport behind the collectives: [`LocalCollectives`] by
+    /// default (in-process, byte-priced), or a `dist::TcpCollectives`
+    /// attached via [`Trainer::attach_collectives`] for real
+    /// multi-process training. The byte accounting in `comm` is recorded
+    /// at the call sites identically for every backend — that equality
+    /// is the transport conformance oracle.
+    fabric: Arc<dyn Collectives>,
     epoch: usize,
 }
 
@@ -315,8 +325,32 @@ impl Trainer {
             engine,
             comm: CommStats::new(),
             profiler: Arc::new(Profiler::new()),
+            fabric: Arc::new(LocalCollectives),
             epoch: 0,
         })
+    }
+
+    /// Attach a transport backend and ship the current table bits to the
+    /// authoritative owners. Call once after construction; a later
+    /// checkpoint restore re-pushes through [`Trainer::push_tables`].
+    pub fn attach_collectives(&mut self, fabric: Arc<dyn Collectives>) -> anyhow::Result<()> {
+        fabric.push_table(TableId::W, &self.w)?;
+        fabric.push_table(TableId::H, &self.h)?;
+        self.fabric = fabric;
+        Ok(())
+    }
+
+    /// The attached transport backend.
+    pub fn collectives(&self) -> &Arc<dyn Collectives> {
+        &self.fabric
+    }
+
+    /// Ship the local table bits to the authoritative owners (no-op on
+    /// the local backend). Checkpoint restore calls this after streaming
+    /// the tables back in place.
+    pub fn push_tables(&self) -> anyhow::Result<()> {
+        self.fabric.push_table(TableId::W, &self.w)?;
+        self.fabric.push_table(TableId::H, &self.h)
     }
 
     /// Global gramian of `table` via shard-local partials summed in
@@ -337,6 +371,24 @@ impl Trainer {
         crate::collectives::reduce_gramians(&locals, comm)
     }
 
+    /// [`Trainer::reduced_gramian`] routed through the transport: the
+    /// per-shard partials come from the *authoritative* copy of the
+    /// table (local shards, or the owning workers over the wire), summed
+    /// in the same fixed shard order. Training passes use this —
+    /// mid-epoch the local staging copy of a remote table is stale —
+    /// while the objective and eval read the post-sync local tables
+    /// through [`Trainer::reduced_gramian`] directly.
+    fn reduced_gramian_via(
+        &self,
+        id: TableId,
+        table: &ShardedTable,
+        comm: Option<&CommStats>,
+    ) -> anyhow::Result<Mat> {
+        let workers = threads::resolve_workers(self.cfg.threads);
+        let locals = self.fabric.local_gramians(id, table, workers)?;
+        Ok(crate::collectives::reduce_gramians(&locals, comm))
+    }
+
     /// One pass over one side (Algorithm 2 lines 7-20): solve every row of
     /// `target` given fixed `fixed`, driven by `matrix` whose rows index
     /// `target` and whose columns index `fixed`.
@@ -347,14 +399,18 @@ impl Trainer {
     /// Matrix pieces materialize per shard pass; on a spilled backend a
     /// worker prefetches the next unclaimed shard while it solves its own,
     /// so the demand-paged load hides behind compute.
+    #[allow(clippy::too_many_arguments)]
     fn pass(
         engine: &dyn SolveEngine,
         batcher: &DenseBatcher,
         profiler: &Arc<Profiler>,
         comm: &CommStats,
         cfg: &TrainConfig,
+        fabric: &dyn Collectives,
         matrix: &Arc<dyn ShardedMatrix>,
+        target_id: TableId,
         target: &mut ShardedTable,
+        fixed_id: TableId,
         fixed: &ShardedTable,
         gramian: &Mat,
     ) -> anyhow::Result<()> {
@@ -410,8 +466,9 @@ impl Trainer {
                                 matrix.prefetch(next);
                             }
                             Self::shard_pass(
-                                engine, batcher, profiler, comm, cfg, matrix, piece, view,
-                                fixed, gramian, dim, elem_bytes, num_shards, inline_scatter,
+                                engine, batcher, profiler, comm, cfg, fabric, matrix, piece,
+                                target_id, view, fixed_id, fixed, gramian, dim, elem_bytes,
+                                num_shards, inline_scatter,
                             )?;
                         }
                     })
@@ -444,15 +501,19 @@ impl Trainer {
     /// solve. Batch order is fixed by the feeder and scattered rows are
     /// disjoint, so the result depends on neither stage timing nor the
     /// scatter placement.
+    #[allow(clippy::too_many_arguments)]
     fn shard_pass(
         engine: &dyn SolveEngine,
         batcher: &DenseBatcher,
         profiler: &Arc<Profiler>,
         comm: &CommStats,
         cfg: &TrainConfig,
+        fabric: &dyn Collectives,
         matrix: &Arc<dyn ShardedMatrix>,
         piece: usize,
+        target_id: TableId,
         view: ShardViewMut<'_>,
+        fixed_id: TableId,
         fixed: &ShardedTable,
         gramian: &Mat,
         dim: usize,
@@ -474,56 +535,53 @@ impl Trainer {
             cfg.feed_depth,
             Some(Arc::clone(profiler)),
         );
+        // One batch's solve, with the fixed-side rows coming from the
+        // transport's authoritative copy: the Local backend defers to the
+        // fused in-place gather (no [B·L × d] copy), a remote backend
+        // materializes the slot rows over the wire — bitwise identical
+        // per the engine's fused/materialized equivalence contract.
+        let solve = |batch: &crate::densebatch::DenseBatch| -> anyhow::Result<Mat> {
+            fabric.check_health()?;
+            record_gather_traffic(fixed, batch.items.len(), comm);
+            let gathered = fabric.gather_rows(fixed_id, fixed, &batch.items)?;
+            let sols = profiler.time("solve", || match &gathered {
+                None => engine.solve_batch_fused(batch, fixed, gramian, cfg.lambda, cfg.alpha),
+                Some(rows) => engine.solve_batch(batch, rows, gramian, cfg.lambda, cfg.alpha),
+            })?;
+            record_scatter_traffic(batch.segment_rows.len(), dim, elem_bytes, num_shards, comm);
+            Ok(sols)
+        };
         if inline_scatter {
             let mut view = view;
             while let Some(batch) = feeder.next() {
-                record_gather_traffic(fixed, batch.items.len(), comm);
-                let sols = profiler.time("solve", || {
-                    engine.solve_batch_fused(&batch, fixed, gramian, cfg.lambda, cfg.alpha)
+                let sols = solve(&batch)?;
+                profiler.time("sharded_scatter", || {
+                    fabric.scatter_rows(target_id, piece, &mut view, &batch.segment_rows, &sols)
                 })?;
-                record_scatter_traffic(
-                    batch.segment_rows.len(),
-                    dim,
-                    elem_bytes,
-                    num_shards,
-                    comm,
-                );
-                profiler.time("sharded_scatter", || view.scatter(&batch.segment_rows, &sols));
             }
             return Ok(());
         }
         let scatter_q: BoundedQueue<(Vec<u32>, Mat)> = BoundedQueue::new(2);
         std::thread::scope(|scope| {
             let qref = &scatter_q;
-            let scatter = scope.spawn(move || {
+            let scatter = scope.spawn(move || -> anyhow::Result<()> {
                 // Unblocks the solve stage's `push` if a scatter panics.
                 let _guard = CloseGuard(qref);
                 let mut view = view;
                 while let Some((ids, sols)) = qref.pop() {
-                    profiler.time("sharded_scatter", || view.scatter(&ids, &sols));
+                    profiler.time("sharded_scatter", || {
+                        fabric.scatter_rows(target_id, piece, &mut view, &ids, &sols)
+                    })?;
                 }
+                Ok(())
             });
             // Unblocks the scatter stage's `pop` if the solve stage panics
             // (scope would otherwise join a forever-blocked thread).
             let _close_guard = CloseGuard(&scatter_q);
             let mut out = Ok(());
             while let Some(batch) = feeder.next() {
-                // Fused path: no gathered [B·L × d] copy is materialized,
-                // but the collective a real pod would run is accounted.
-                record_gather_traffic(fixed, batch.items.len(), comm);
-                match profiler.time("solve", || {
-                    engine.solve_batch_fused(&batch, fixed, gramian, cfg.lambda, cfg.alpha)
-                }) {
-                    Ok(sols) => {
-                        record_scatter_traffic(
-                            batch.segment_rows.len(),
-                            dim,
-                            elem_bytes,
-                            num_shards,
-                            comm,
-                        );
-                        scatter_q.push((batch.segment_rows, sols));
-                    }
+                match solve(&batch) {
+                    Ok(sols) => scatter_q.push((batch.segment_rows, sols)),
                     Err(e) => {
                         out = Err(e);
                         break;
@@ -531,15 +589,25 @@ impl Trainer {
                 }
             }
             scatter_q.close();
-            if let Err(p) = scatter.join() {
-                // The view wrote its dirty shard back during the scatter
-                // thread's unwind; surface the failure instead of killing
-                // the whole process.
-                if out.is_ok() {
-                    out = Err(anyhow::anyhow!(
-                        "scatter stage panicked on matrix shard {piece}: {}",
-                        panic_text(&p)
-                    ));
+            match scatter.join() {
+                Ok(Ok(())) => {}
+                // A failed remote scatter surfaces like a local panic:
+                // the epoch fails cleanly, checkpoints stay intact.
+                Ok(Err(e)) => {
+                    if out.is_ok() {
+                        out = Err(e.context(format!("scatter stage on matrix shard {piece}")));
+                    }
+                }
+                Err(p) => {
+                    // The view wrote its dirty shard back during the
+                    // scatter thread's unwind; surface the failure instead
+                    // of killing the whole process.
+                    if out.is_ok() {
+                        out = Err(anyhow::anyhow!(
+                            "scatter stage panicked on matrix shard {piece}: {}",
+                            panic_text(&p)
+                        ));
+                    }
                 }
             }
             out
@@ -551,35 +619,53 @@ impl Trainer {
         let timer = Timer::start();
         let comm_before = self.comm.total_bytes();
 
+        let fabric = Arc::clone(&self.fabric);
+
         // --- user pass: fix H, solve W ---------------------------------
-        let g_items =
-            self.profiler.time("gramian", || self.reduced_gramian(&self.h, Some(&self.comm)));
+        let g_items = self
+            .profiler
+            .time("gramian", || self.reduced_gramian_via(TableId::H, &self.h, Some(&self.comm)))?;
         Self::pass(
             self.engine.as_ref(),
             &self.batcher,
             &self.profiler,
             &self.comm,
             &self.cfg,
+            fabric.as_ref(),
             &self.train,
+            TableId::W,
             &mut self.w,
+            TableId::H,
             &self.h,
             &g_items,
         )?;
 
         // --- item pass: fix W, solve H ----------------------------------
-        let g_users =
-            self.profiler.time("gramian", || self.reduced_gramian(&self.w, Some(&self.comm)));
+        let g_users = self
+            .profiler
+            .time("gramian", || self.reduced_gramian_via(TableId::W, &self.w, Some(&self.comm)))?;
         Self::pass(
             self.engine.as_ref(),
             &self.batcher,
             &self.profiler,
             &self.comm,
             &self.cfg,
+            fabric.as_ref(),
             &self.train_t,
+            TableId::H,
             &mut self.h,
+            TableId::W,
             &self.w,
             &g_users,
         )?;
+
+        // Refresh the staging copies from the transport's authoritative
+        // tables (no-op on the Local backend, which writes in place). The
+        // objective, eval and checkpoints below all read these local
+        // copies, so after the sync they see exactly the bits a Local run
+        // produces.
+        fabric.sync_table(TableId::W, &mut self.w)?;
+        fabric.sync_table(TableId::H, &mut self.h)?;
 
         self.epoch += 1;
         let objective =

@@ -18,7 +18,7 @@
 //! `sharded_scatter` (line 19) is the mirror image for solved embeddings.
 
 use crate::linalg::Mat;
-use crate::sharding::ShardedTable;
+use crate::sharding::{ShardViewMut, ShardedTable};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Byte/op accounting for all collectives issued during a pass.
@@ -28,6 +28,35 @@ pub struct CommStats {
     pub all_gather_bytes: AtomicU64,
     pub all_reduce_ops: AtomicU64,
     pub all_reduce_bytes: AtomicU64,
+}
+
+/// A consistent point-in-time copy of [`CommStats`] — per-collective op
+/// and byte counters with names instead of tuple positions. This is the
+/// conformance oracle of the transport abstraction: a run over the `Tcp`
+/// backend must report a snapshot equal to the `Local` backend's, field
+/// for field.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommSnapshot {
+    pub all_gather_ops: u64,
+    pub all_gather_bytes: u64,
+    pub all_reduce_ops: u64,
+    pub all_reduce_bytes: u64,
+}
+
+impl CommSnapshot {
+    pub fn total_bytes(&self) -> u64 {
+        self.all_gather_bytes + self.all_reduce_bytes
+    }
+
+    /// Counter-wise difference against an earlier snapshot.
+    pub fn since(&self, earlier: &CommSnapshot) -> CommSnapshot {
+        CommSnapshot {
+            all_gather_ops: self.all_gather_ops - earlier.all_gather_ops,
+            all_gather_bytes: self.all_gather_bytes - earlier.all_gather_bytes,
+            all_reduce_ops: self.all_reduce_ops - earlier.all_reduce_ops,
+            all_reduce_bytes: self.all_reduce_bytes - earlier.all_reduce_bytes,
+        }
+    }
 }
 
 impl CommStats {
@@ -56,13 +85,177 @@ impl CommStats {
         self.all_reduce_bytes.store(0, Ordering::Relaxed);
     }
 
-    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
-        (
-            self.all_gather_ops.load(Ordering::Relaxed),
-            self.all_gather_bytes.load(Ordering::Relaxed),
-            self.all_reduce_ops.load(Ordering::Relaxed),
-            self.all_reduce_bytes.load(Ordering::Relaxed),
-        )
+    pub fn snapshot(&self) -> CommSnapshot {
+        CommSnapshot {
+            all_gather_ops: self.all_gather_ops.load(Ordering::Relaxed),
+            all_gather_bytes: self.all_gather_bytes.load(Ordering::Relaxed),
+            all_reduce_ops: self.all_reduce_ops.load(Ordering::Relaxed),
+            all_reduce_bytes: self.all_reduce_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Which of the trainer's two embedding tables a collective targets. The
+/// wire protocol and the shard-ownership maps key on this, so it is part
+/// of the transport contract, not a trainer-internal detail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableId {
+    W,
+    H,
+}
+
+impl TableId {
+    pub fn index(self) -> u8 {
+        match self {
+            TableId::W => 0,
+            TableId::H => 1,
+        }
+    }
+
+    pub fn from_index(i: u8) -> Result<TableId, String> {
+        match i {
+            0 => Ok(TableId::W),
+            1 => Ok(TableId::H),
+            other => Err(format!("unknown table id {other}")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TableId::W => "W",
+            TableId::H => "H",
+        }
+    }
+}
+
+/// The transport behind the collectives: where the authoritative table
+/// bits live and how gathered rows / solved rows / gramian partials move.
+///
+/// Two backends implement this:
+///
+/// * [`LocalCollectives`] — the original single-process path. The
+///   trainer's own `ShardedTable`s are authoritative; gathers use the
+///   fused in-place read, scatters write through the shard views, and
+///   every collective is *priced* in [`CommStats`] without moving bytes.
+/// * `dist::TcpCollectives` — the real multi-process path. Worker
+///   processes own the table shards; id lists go out, gathered rows and
+///   gramian partials come back over length-prefixed frames, and the
+///   trainer's local tables are just a staging copy refreshed by
+///   [`Collectives::sync_table`].
+///
+/// Byte accounting is *not* part of this trait on purpose: the trainer
+/// records the paper's collective volumes at the call sites, identically
+/// for every backend, which is exactly what makes `CommStats` the
+/// conformance oracle between the simulated and the real transport.
+pub trait Collectives: Send + Sync {
+    /// Backend name for reports ("local", "tcp").
+    fn name(&self) -> &'static str;
+
+    /// Materialize the rows of `ids` from the authoritative copy of the
+    /// table. `Ok(None)` means the local `table` *is* authoritative and
+    /// the caller should use its fused in-place gather (the Local
+    /// answer); `Ok(Some(mat))` carries remotely gathered rows, bitwise
+    /// identical to what the fused path would have read.
+    fn gather_rows(
+        &self,
+        id: TableId,
+        table: &ShardedTable,
+        ids: &[u32],
+    ) -> anyhow::Result<Option<Mat>>;
+
+    /// Write solved rows for `ids` (all inside table shard `shard`) back
+    /// to the authoritative copy. `view` is the local mutable view over
+    /// exactly that shard: Local writes through it; a remote backend ships
+    /// the rows to the owning worker instead and leaves the staging copy
+    /// stale until the next [`Collectives::sync_table`].
+    fn scatter_rows(
+        &self,
+        id: TableId,
+        shard: usize,
+        view: &mut ShardViewMut<'_>,
+        ids: &[u32],
+        rows: &Mat,
+    ) -> anyhow::Result<()>;
+
+    /// Per-shard gramian partials of the authoritative copy, in shard
+    /// order (the fixed-order reduction over these is part of the
+    /// bitwise-determinism contract — see [`sum_gramians`]).
+    fn local_gramians(
+        &self,
+        id: TableId,
+        table: &ShardedTable,
+        workers: usize,
+    ) -> anyhow::Result<Vec<Mat>>;
+
+    /// Ship the local table bits to the authoritative owners (table
+    /// init and checkpoint restore). No-op locally.
+    fn push_table(&self, id: TableId, table: &ShardedTable) -> anyhow::Result<()>;
+
+    /// Refresh the local staging copy from the authoritative owners
+    /// (before the coordinator reads tables directly: objective, eval,
+    /// checkpoints). No-op locally.
+    fn sync_table(&self, id: TableId, table: &mut ShardedTable) -> anyhow::Result<()>;
+
+    /// Fail fast if the heartbeat monitor has declared a peer dead.
+    fn check_health(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Politely stop remote workers (no-op locally). Drivers that own the
+    /// fleet's lifecycle (`alx launch`) call this once training is done.
+    fn shutdown(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// The in-process backend: local tables are authoritative, no bytes move.
+/// This is bit-for-bit the pre-trait behavior of the trainer.
+#[derive(Default)]
+pub struct LocalCollectives;
+
+impl Collectives for LocalCollectives {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn gather_rows(
+        &self,
+        _id: TableId,
+        _table: &ShardedTable,
+        _ids: &[u32],
+    ) -> anyhow::Result<Option<Mat>> {
+        Ok(None) // local tables are authoritative: use the fused path
+    }
+
+    fn scatter_rows(
+        &self,
+        _id: TableId,
+        _shard: usize,
+        view: &mut ShardViewMut<'_>,
+        ids: &[u32],
+        rows: &Mat,
+    ) -> anyhow::Result<()> {
+        view.scatter(ids, rows);
+        Ok(())
+    }
+
+    fn local_gramians(
+        &self,
+        _id: TableId,
+        table: &ShardedTable,
+        workers: usize,
+    ) -> anyhow::Result<Vec<Mat>> {
+        Ok(crate::util::threads::parallel_map_indexed_with(workers, table.num_shards(), |s| {
+            table.local_gramian(s)
+        }))
+    }
+
+    fn push_table(&self, _id: TableId, _table: &ShardedTable) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn sync_table(&self, _id: TableId, _table: &mut ShardedTable) -> anyhow::Result<()> {
+        Ok(())
     }
 }
 
@@ -215,11 +408,43 @@ mod tests {
         let ids: Vec<u32> = (0..10).collect();
         let stats = CommStats::new();
         sharded_gather(&t, &ids, &stats);
-        let (ag_ops, ag_bytes, ar_ops, ar_bytes) = stats.snapshot();
-        assert_eq!(ag_ops, 1);
-        assert_eq!(ag_bytes, 10 * 4 * 4); // ids × 4B × 4 shards
-        assert_eq!(ar_ops, 1);
-        assert_eq!(ar_bytes, 10 * 8 * 2); // rows × dim × bf16
+        let snap = stats.snapshot();
+        assert_eq!(snap.all_gather_ops, 1);
+        assert_eq!(snap.all_gather_bytes, 10 * 4 * 4); // ids × 4B × 4 shards
+        assert_eq!(snap.all_reduce_ops, 1);
+        assert_eq!(snap.all_reduce_bytes, 10 * 8 * 2); // rows × dim × bf16
+        assert_eq!(snap.total_bytes(), stats.total_bytes());
+        assert_eq!(snap.since(&CommSnapshot::default()), snap);
+    }
+
+    #[test]
+    fn local_backend_matches_direct_operations() {
+        let mut rng = Pcg64::new(31);
+        let mut t = ShardedTable::randn(48, 6, 4, Storage::F32, &mut rng);
+        let be = LocalCollectives;
+        // Gathers defer to the fused local path.
+        assert!(be.gather_rows(TableId::H, &t, &[1, 2, 3]).unwrap().is_none());
+        // Gramian partials equal the direct per-shard computation.
+        let direct: Vec<Mat> = (0..t.num_shards()).map(|s| t.local_gramian(s)).collect();
+        let via = be.local_gramians(TableId::H, &t, 2).unwrap();
+        assert_eq!(direct.len(), via.len());
+        for (a, b) in direct.iter().zip(&via) {
+            assert_eq!(a.data, b.data);
+        }
+        // Scatters write through the local view.
+        let ids = [0u32, 5];
+        let rows = Mat::randn(2, 6, 1.0, &mut rng);
+        {
+            let mut views = t.shard_views_mut();
+            be.scatter_rows(TableId::W, 0, &mut views[0], &ids, &rows).unwrap();
+        }
+        assert_eq!(t.gather(&ids).data, rows.data);
+        // Push/sync are no-ops for the authoritative local copy.
+        let before = t.shard_f32(0);
+        be.push_table(TableId::W, &t).unwrap();
+        be.sync_table(TableId::W, &mut t).unwrap();
+        assert_eq!(t.shard_f32(0), before);
+        be.check_health().unwrap();
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! or bare strings, ints, floats, booleans.
 
 use crate::als::{PrecisionPolicy, TrainConfig};
+use crate::dist::{DistConfig, DistMode};
 use crate::linalg::SolverKind;
 use crate::serving::ServeConfig;
 use crate::webgraph::Variant;
@@ -175,6 +176,9 @@ pub struct AlxConfig {
     pub fault_points: String,
     /// `alx serve` knobs (`[serve]` section).
     pub serve: ServeConfig,
+    /// Distributed-training transport (`[dist]` section): local
+    /// in-process collectives (default) or TCP workers.
+    pub dist: DistConfig,
 }
 
 impl Default for AlxConfig {
@@ -208,6 +212,7 @@ impl Default for AlxConfig {
             checkpoint_path: "alx.ckpt".to_string(),
             fault_points: String::new(),
             serve: ServeConfig::default(),
+            dist: DistConfig::default(),
         }
     }
 }
@@ -384,6 +389,29 @@ impl AlxConfig {
         }
         if let Some(v) = kv.get_u64("serve.seed")? {
             cfg.serve.seed = v;
+        }
+        if let Some(v) = kv.get("dist.mode") {
+            cfg.dist.mode = DistMode::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("dist.mode must be local|tcp, got '{v}'"))?;
+        }
+        if let Some(v) = kv.get("dist.topology") {
+            anyhow::ensure!(
+                matches!(v, "parameter-server" | "all-reduce"),
+                "dist.topology must be parameter-server|all-reduce"
+            );
+            cfg.dist.topology = v.to_string();
+        }
+        if let Some(v) = kv.get("dist.workers") {
+            // Comma-separated `host:port` list, in worker-index order.
+            cfg.dist.workers =
+                v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+        }
+        if let Some(v) = kv.get_u64("dist.heartbeat_ms")? {
+            cfg.dist.heartbeat_ms = v; // 0 = heartbeats off
+        }
+        if cfg.dist.mode == DistMode::Tcp {
+            // Surface bad topologies at config time, not at connect time.
+            cfg.dist.resolve_topology()?;
         }
         Ok(cfg)
     }
@@ -574,6 +602,39 @@ seed = 42
         assert!(AlxConfig::from_kv(&bad).is_err());
         let mut bad = KvConfig::default();
         bad.set("serve.queue_depth", "0");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+    }
+
+    #[test]
+    fn dist_section_parses_and_validates() {
+        let kv = KvConfig::parse(
+            r#"
+[dist]
+mode = "tcp"
+topology = "all-reduce"
+workers = "127.0.0.1:7001, 127.0.0.1:7002"
+heartbeat_ms = 250
+"#,
+        )
+        .unwrap();
+        let cfg = AlxConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.dist.mode, DistMode::Tcp);
+        assert_eq!(cfg.dist.topology, "all-reduce");
+        assert_eq!(cfg.dist.workers, vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
+        assert_eq!(cfg.dist.heartbeat_ms, 250);
+
+        let defaults = AlxConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(defaults.dist, DistConfig::default());
+
+        let mut bad = KvConfig::default();
+        bad.set("dist.mode", "rdma");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        let mut bad = KvConfig::default();
+        bad.set("dist.topology", "ring");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        // tcp mode with no workers is a config-time error.
+        let mut bad = KvConfig::default();
+        bad.set("dist.mode", "tcp");
         assert!(AlxConfig::from_kv(&bad).is_err());
     }
 

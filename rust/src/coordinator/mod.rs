@@ -38,6 +38,9 @@ pub struct RunReport {
     pub epoch_seconds_mean: f64,
     pub simulated_epoch_seconds: f64,
     pub comm_bytes_per_epoch: u64,
+    /// Per-collective op/byte totals for the whole run — the transport
+    /// conformance oracle (a `tcp` run must equal its `local` twin).
+    pub comm: crate::collectives::CommSnapshot,
     /// Peak resident set size of the process at the end of the run
     /// (`VmHWM`; 0 on platforms without procfs).
     pub peak_rss_bytes: u64,

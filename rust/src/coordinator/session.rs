@@ -19,6 +19,7 @@
 
 use super::RunReport;
 use crate::als::{EpochStats, ObjectiveLogEntry, RecallLogEntry, SolveEngine, Trainer};
+use crate::collectives::Collectives;
 use crate::config::AlxConfig;
 use crate::data::{
     source_from_config, spill_to_banks, DataSource, Dataset, DatasetInfo, IngestReport,
@@ -328,6 +329,20 @@ impl TrainSession {
         } else {
             Trainer::from_sharded(train, train_t, cfg.train.clone(), topo, engine)?
         };
+        let mut trainer = trainer;
+        if cfg.dist.mode == crate::dist::DistMode::Tcp {
+            // Real multi-process transport: connect the worker fleet and
+            // ship the freshly initialized tables to their authoritative
+            // owners. A later checkpoint restore re-pushes through the
+            // same fabric (see Trainer::load_checkpoint).
+            let fabric = crate::dist::TcpCollectives::connect(&cfg.dist)?;
+            crate::log_info!(
+                "dist: attached {} over {} workers",
+                fabric.name(),
+                fabric.num_workers()
+            );
+            trainer.attach_collectives(Arc::new(fabric))?;
+        }
         Ok(TrainSession {
             cfg,
             dataset: info,
@@ -514,6 +529,7 @@ impl TrainSession {
             epoch_seconds_mean,
             simulated_epoch_seconds: self.trainer.simulated_epoch_seconds(),
             comm_bytes_per_epoch: comm,
+            comm: self.trainer.comm.snapshot(),
             history,
             recalls,
             peak_rss_bytes: crate::util::mem::peak_rss_bytes(),

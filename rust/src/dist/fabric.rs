@@ -1,0 +1,504 @@
+//! The coordinator side of the transport: [`TcpCollectives`], a
+//! [`Collectives`] backend that routes every collective to the worker
+//! processes owning the shards.
+//!
+//! Shard `s` is owned by worker `s % num_workers` — the same uniform
+//! assignment for both topologies; only the message routing differs (see
+//! the module docs on [`super`]). One RPC connection per worker, behind a
+//! mutex, so concurrent shard passes interleave whole request/response
+//! pairs; a second connection per worker carries the heartbeat so a busy
+//! data plane never delays failure detection.
+//!
+//! Failure model: a dead worker is detected either by an RPC I/O error
+//! (immediately) or by the heartbeat monitor (within the ping interval).
+//! Both flip the link's `alive` flag; the trainer's per-batch
+//! [`Collectives::check_health`] then aborts the epoch with an error that
+//! unwinds through the session — previously written checkpoints stay
+//! intact, which is the same contract the fault-injection suite holds for
+//! local IO failures.
+
+use super::protocol::{
+    enc_gather, enc_get_shard, enc_gramian, enc_init_table, enc_ping, enc_scatter, enc_set_shard,
+    enc_shutdown, get_f32s, parse_reply, MAX_FRAME,
+};
+use super::{shard_data_from_f32, DistConfig, DistTopology};
+use crate::collectives::{Collectives, TableId};
+use crate::linalg::Mat;
+use crate::sharding::{ShardViewMut, ShardedTable, Storage};
+use crate::util::net::{read_frame_capped, write_frame_capped, Cursor};
+use crate::util::threads::lock_or_recover;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One worker's endpoints: the RPC connection (mutex-serialized) and the
+/// liveness flag shared with its heartbeat monitor.
+struct Link {
+    addr: String,
+    conn: Mutex<TcpStream>,
+    alive: Arc<AtomicBool>,
+}
+
+/// TCP-backed [`Collectives`]: the coordinator's handle on the worker
+/// fleet.
+pub struct TcpCollectives {
+    topology: DistTopology,
+    links: Vec<Link>,
+    stop: Arc<AtomicBool>,
+    monitors: Vec<JoinHandle<()>>,
+}
+
+/// Heartbeat loop: ping the worker every `every`, flip `alive` off on the
+/// first failed round trip. Sleeps in short slices so dropping the fabric
+/// never waits a full interval.
+fn monitor(
+    mut hb: TcpStream,
+    alive: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    every: Duration,
+    index: usize,
+    addr: String,
+) {
+    loop {
+        let mut slept = Duration::ZERO;
+        while slept < every {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let nap = (every - slept).min(Duration::from_millis(50));
+            std::thread::sleep(nap);
+            slept += nap;
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let ok = write_frame_capped(&mut hb, &enc_ping(), MAX_FRAME).is_ok()
+            && matches!(
+                read_frame_capped(&mut hb, MAX_FRAME),
+                Ok(Some(frame)) if parse_reply(frame).is_ok()
+            );
+        if !ok {
+            alive.store(false, Ordering::SeqCst);
+            crate::log_warn!("dist: worker {index} ({addr}) failed heartbeat");
+            return;
+        }
+    }
+}
+
+fn decode_err(what: &str, e: String) -> anyhow::Error {
+    anyhow::anyhow!("bad {what} reply: {e}")
+}
+
+impl TcpCollectives {
+    /// Connect to every worker in the config's topology. Each worker gets
+    /// an RPC connection plus (when `heartbeat_ms > 0`) a heartbeat
+    /// connection with its monitor thread.
+    pub fn connect(cfg: &DistConfig) -> anyhow::Result<TcpCollectives> {
+        let topology = cfg.resolve_topology()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut links = Vec::new();
+        let mut monitors = Vec::new();
+        for (i, addr) in topology.addrs().iter().enumerate() {
+            let conn = TcpStream::connect(addr)
+                .map_err(|e| anyhow::anyhow!("connect worker {i} at {addr}: {e}"))?;
+            conn.set_nodelay(true)?;
+            let alive = Arc::new(AtomicBool::new(true));
+            if cfg.heartbeat_ms > 0 {
+                let hb = TcpStream::connect(addr)
+                    .map_err(|e| anyhow::anyhow!("heartbeat connect worker {i} at {addr}: {e}"))?;
+                hb.set_nodelay(true)?;
+                // A worker that can't answer within 4 intervals is as good
+                // as dead (its handler threads only block on short RwLock
+                // holds, never on other workers).
+                hb.set_read_timeout(Some(Duration::from_millis(cfg.heartbeat_ms.max(25) * 4)))?;
+                let every = Duration::from_millis(cfg.heartbeat_ms);
+                let (alive2, stop2, addr2) = (Arc::clone(&alive), Arc::clone(&stop), addr.clone());
+                monitors.push(std::thread::spawn(move || {
+                    monitor(hb, alive2, stop2, every, i, addr2)
+                }));
+            }
+            links.push(Link { addr: addr.clone(), conn: Mutex::new(conn), alive });
+        }
+        Ok(TcpCollectives { topology, links, stop, monitors })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.links.len()
+    }
+
+    #[inline]
+    fn owner(&self, shard: usize) -> usize {
+        shard % self.links.len()
+    }
+
+    /// One request/response round trip on worker `w`'s RPC connection.
+    /// Any I/O failure marks the worker dead before surfacing the error.
+    fn rpc(&self, w: usize, req: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let link = &self.links[w];
+        let io = (|| -> std::io::Result<Vec<u8>> {
+            let mut conn = lock_or_recover(&link.conn);
+            write_frame_capped(&mut *conn, req, MAX_FRAME)?;
+            read_frame_capped(&mut *conn, MAX_FRAME)?.ok_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "connection closed")
+            })
+        })();
+        match io {
+            Ok(frame) => parse_reply(frame),
+            Err(e) => {
+                link.alive.store(false, Ordering::SeqCst);
+                Err(anyhow::anyhow!("rpc to worker {w} ({}) failed: {e}", link.addr))
+            }
+        }
+    }
+
+    /// Decode a gather reply: `count` then `count × dim` f32 row values.
+    fn decode_rows(&self, reply: &[u8], dim: usize) -> anyhow::Result<Vec<f32>> {
+        let mut c = Cursor::new(reply);
+        let k = c.u32().map_err(|e| decode_err("gather", e))? as usize;
+        let vals = get_f32s(&mut c, k * dim).map_err(|e| decode_err("gather", e))?;
+        c.done().map_err(|e| decode_err("gather", e))?;
+        Ok(vals)
+    }
+
+    /// Decode a scatter reply: the count of rows the worker wrote.
+    fn decode_written(&self, reply: &[u8]) -> anyhow::Result<usize> {
+        let mut c = Cursor::new(reply);
+        let k = c.u32().map_err(|e| decode_err("scatter", e))? as usize;
+        c.done().map_err(|e| decode_err("scatter", e))?;
+        Ok(k)
+    }
+
+    /// Politely stop the worker fleet (each worker's serve loop exits
+    /// after acknowledging). Errors are ignored: a worker that already
+    /// died does not need shutting down.
+    pub fn shutdown_workers(&self) {
+        for w in 0..self.links.len() {
+            let _ = self.rpc(w, &enc_shutdown());
+        }
+    }
+}
+
+impl Drop for TcpCollectives {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in std::mem::take(&mut self.monitors) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Collectives for TcpCollectives {
+    fn name(&self) -> &'static str {
+        match self.topology {
+            DistTopology::ParameterServer { .. } => "tcp/parameter-server",
+            DistTopology::AllReduce { .. } => "tcp/all-reduce",
+        }
+    }
+
+    fn check_health(&self) -> anyhow::Result<()> {
+        for (i, link) in self.links.iter().enumerate() {
+            anyhow::ensure!(
+                link.alive.load(Ordering::SeqCst),
+                "worker {i} ({}) is down; aborting the run (checkpoints preserved)",
+                link.addr
+            );
+        }
+        Ok(())
+    }
+
+    fn shutdown(&self) -> anyhow::Result<()> {
+        self.shutdown_workers();
+        Ok(())
+    }
+
+    fn gather_rows(
+        &self,
+        id: TableId,
+        table: &ShardedTable,
+        ids: &[u32],
+    ) -> anyhow::Result<Option<Mat>> {
+        let dim = table.dim;
+        let mut out = Mat::zeros(ids.len(), dim);
+        match &self.topology {
+            DistTopology::ParameterServer { .. } => {
+                // Each server sees only the ids it owns and answers with
+                // exactly those rows, in request order.
+                let mut per: Vec<(Vec<u32>, Vec<usize>)> =
+                    (0..self.links.len()).map(|_| (Vec::new(), Vec::new())).collect();
+                for (pos, &rid) in ids.iter().enumerate() {
+                    let w = self.owner(table.shard_of(rid as usize));
+                    per[w].0.push(rid);
+                    per[w].1.push(pos);
+                }
+                for (w, (wids, positions)) in per.iter().enumerate() {
+                    if wids.is_empty() {
+                        continue;
+                    }
+                    let reply = self.rpc(w, &enc_gather(id.index(), wids))?;
+                    let vals = self.decode_rows(&reply, dim)?;
+                    anyhow::ensure!(
+                        vals.len() == wids.len() * dim,
+                        "worker {w} returned {} rows for a {}-id gather",
+                        vals.len() / dim.max(1),
+                        wids.len()
+                    );
+                    for (j, &pos) in positions.iter().enumerate() {
+                        out.data[pos * dim..(pos + 1) * dim]
+                            .copy_from_slice(&vals[j * dim..(j + 1) * dim]);
+                    }
+                }
+            }
+            DistTopology::AllReduce { .. } => {
+                // The all-gather half: the full id list reaches every
+                // peer; each contributes the rows its shards own, and the
+                // assembly below is the all-reduce-sum (every row has
+                // exactly one owner, so sum = assignment, bitwise exact).
+                let mut replies: Vec<(Vec<f32>, usize)> = Vec::with_capacity(self.links.len());
+                for w in 0..self.links.len() {
+                    let reply = self.rpc(w, &enc_gather(id.index(), ids))?;
+                    replies.push((self.decode_rows(&reply, dim)?, 0));
+                }
+                for (pos, &rid) in ids.iter().enumerate() {
+                    let w = self.owner(table.shard_of(rid as usize));
+                    let (vals, cursor) = &mut replies[w];
+                    anyhow::ensure!(
+                        (*cursor + 1) * dim <= vals.len(),
+                        "worker {w} returned too few rows"
+                    );
+                    out.data[pos * dim..(pos + 1) * dim]
+                        .copy_from_slice(&vals[*cursor * dim..(*cursor + 1) * dim]);
+                    *cursor += 1;
+                }
+                for (w, (vals, cursor)) in replies.iter().enumerate() {
+                    anyhow::ensure!(
+                        *cursor * dim == vals.len(),
+                        "worker {w} returned rows for ids it does not own"
+                    );
+                }
+            }
+        }
+        Ok(Some(out))
+    }
+
+    fn scatter_rows(
+        &self,
+        id: TableId,
+        shard: usize,
+        _view: &mut ShardViewMut<'_>,
+        ids: &[u32],
+        rows: &Mat,
+    ) -> anyhow::Result<()> {
+        if ids.is_empty() {
+            return Ok(());
+        }
+        // The authoritative write goes to the owning workers; the local
+        // staging shard is refreshed wholesale by `sync_table` at the end
+        // of the epoch, so nothing is written through the view here.
+        match &self.topology {
+            DistTopology::ParameterServer { .. } => {
+                // Every id in a scatter lies inside `shard`, so the whole
+                // payload goes to that shard's server.
+                let w = self.owner(shard);
+                let reply = self.rpc(w, &enc_scatter(id.index(), ids, &rows.data))?;
+                let written = self.decode_written(&reply)?;
+                anyhow::ensure!(
+                    written == ids.len(),
+                    "worker {w} wrote {written}/{} scatter rows for shard {shard}",
+                    ids.len()
+                );
+            }
+            DistTopology::AllReduce { .. } => {
+                // Broadcast the whole (ids, rows) payload; each peer keeps
+                // the writes for its own shards — the paper's
+                // sharded_scatter verbatim.
+                let mut total = 0usize;
+                for w in 0..self.links.len() {
+                    let reply = self.rpc(w, &enc_scatter(id.index(), ids, &rows.data))?;
+                    total += self.decode_written(&reply)?;
+                }
+                anyhow::ensure!(
+                    total == ids.len(),
+                    "scatter wrote {total}/{} rows across the fleet",
+                    ids.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn local_gramians(
+        &self,
+        id: TableId,
+        table: &ShardedTable,
+        _workers: usize,
+    ) -> anyhow::Result<Vec<Mat>> {
+        let d = table.dim;
+        let mut out = Vec::with_capacity(table.num_shards());
+        for s in 0..table.num_shards() {
+            let reply = self.rpc(self.owner(s), &enc_gramian(id.index(), s as u32))?;
+            let mut c = Cursor::new(&reply);
+            let vals = get_f32s(&mut c, d * d).map_err(|e| decode_err("gramian", e))?;
+            c.done().map_err(|e| decode_err("gramian", e))?;
+            out.push(Mat::from_rows(d, d, &vals));
+        }
+        Ok(out)
+    }
+
+    fn push_table(&self, id: TableId, table: &ShardedTable) -> anyhow::Result<()> {
+        let bf16 = table.storage() == Storage::Bf16;
+        let init = enc_init_table(
+            id.index(),
+            table.rows as u64,
+            table.dim as u32,
+            table.num_shards() as u32,
+            bf16,
+        );
+        for w in 0..self.links.len() {
+            self.rpc(w, &init)?;
+        }
+        for s in 0..table.num_shards() {
+            let vals = table.shard_f32(s);
+            self.rpc(self.owner(s), &enc_set_shard(id.index(), s as u32, &vals))?;
+        }
+        Ok(())
+    }
+
+    fn sync_table(&self, id: TableId, table: &mut ShardedTable) -> anyhow::Result<()> {
+        let storage = table.storage();
+        for s in 0..table.num_shards() {
+            let want = table.range(s).len() * table.dim;
+            let reply = self.rpc(self.owner(s), &enc_get_shard(id.index(), s as u32))?;
+            let mut c = Cursor::new(&reply);
+            let vals = get_f32s(&mut c, want).map_err(|e| decode_err("sync", e))?;
+            c.done().map_err(|e| decode_err("sync", e))?;
+            table.update_shard(s, |sd| *sd = shard_data_from_f32(storage, vals));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{DistConfig, DistMode, Worker};
+    use crate::sharding::{ShardedTable, Storage};
+    use crate::util::Pcg64;
+
+    fn spawn_fleet(n: usize) -> (Vec<String>, Vec<std::thread::JoinHandle<()>>) {
+        let mut addrs = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            let w = Worker::bind("127.0.0.1:0").unwrap();
+            addrs.push(w.local_addr().unwrap().to_string());
+            handles.push(std::thread::spawn(move || w.serve().unwrap()));
+        }
+        (addrs, handles)
+    }
+
+    fn connect(topology: &str, addrs: Vec<String>) -> TcpCollectives {
+        let cfg = DistConfig {
+            mode: DistMode::Tcp,
+            topology: topology.to_string(),
+            workers: addrs,
+            heartbeat_ms: 0,
+        };
+        TcpCollectives::connect(&cfg).unwrap()
+    }
+
+    /// Full collective roundtrip against live in-process workers: push,
+    /// gather, gramians, scatter, sync — every read bitwise equal to the
+    /// local table it mirrors.
+    fn roundtrip(topology: &str, storage: Storage) {
+        let (addrs, handles) = spawn_fleet(2);
+        let fab = connect(topology, addrs);
+        assert!(fab.name().starts_with("tcp/"));
+
+        let mut rng = Pcg64::new(41);
+        // 3 shards over 2 workers: worker 0 hosts shards {0, 2}, worker 1
+        // hosts shard 1 — exercises multi-shard-per-worker routing.
+        let mut t = ShardedTable::randn(30, 4, 3, storage, &mut rng);
+        fab.push_table(TableId::W, &t).unwrap();
+
+        let ids = [0u32, 29, 11, 29, 7, 10];
+        let got = fab.gather_rows(TableId::W, &t, &ids).unwrap().unwrap();
+        assert_eq!(got.data, t.gather(&ids).data, "remote gather must be bitwise local");
+
+        let gs = fab.local_gramians(TableId::W, &t, 2).unwrap();
+        assert_eq!(gs.len(), t.num_shards());
+        for (s, g) in gs.iter().enumerate() {
+            assert_eq!(g.data, t.local_gramian(s).data, "gramian of shard {s}");
+        }
+
+        // Remote scatter leaves the local staging copy stale; sync pulls
+        // the authoritative bits back.
+        let shard = 1;
+        let start = t.range(shard).start as u32;
+        let sids = [start, start + 3];
+        let rows = Mat::randn(2, 4, 1.0, &mut rng);
+        {
+            let mut views = t.shard_views_mut();
+            fab.scatter_rows(TableId::W, shard, &mut views[shard], &sids, &rows).unwrap();
+        }
+        fab.sync_table(TableId::W, &mut t).unwrap();
+        let mut expect = Mat::zeros(2, 4);
+        for k in 0..sids.len() {
+            // Round through storage precision exactly like a local write.
+            match storage {
+                Storage::F32 => expect.row_mut(k).copy_from_slice(rows.row(k)),
+                Storage::Bf16 => {
+                    for (o, &v) in expect.row_mut(k).iter_mut().zip(rows.row(k)) {
+                        *o = crate::util::Bf16::from_f32(v).to_f32();
+                    }
+                }
+            }
+        }
+        assert_eq!(t.gather(&sids).data, expect.data, "synced scatter bits");
+
+        fab.check_health().unwrap();
+        fab.shutdown_workers();
+        drop(fab);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn parameter_server_roundtrip_f32() {
+        roundtrip("parameter-server", Storage::F32);
+    }
+
+    #[test]
+    fn all_reduce_roundtrip_f32() {
+        roundtrip("all-reduce", Storage::F32);
+    }
+
+    #[test]
+    fn parameter_server_roundtrip_bf16() {
+        roundtrip("parameter-server", Storage::Bf16);
+    }
+
+    #[test]
+    fn all_reduce_roundtrip_bf16() {
+        roundtrip("all-reduce", Storage::Bf16);
+    }
+
+    #[test]
+    fn dead_worker_fails_rpc_and_health() {
+        let (addrs, handles) = spawn_fleet(1);
+        let fab = connect("parameter-server", addrs);
+        let mut rng = Pcg64::new(43);
+        let t = ShardedTable::randn(8, 2, 1, Storage::F32, &mut rng);
+        fab.push_table(TableId::W, &t).unwrap();
+        fab.shutdown_workers();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // The fleet is gone: the next RPC fails and marks the link dead,
+        // after which health checks refuse further batches.
+        assert!(fab.gather_rows(TableId::W, &t, &[1]).is_err());
+        let err = fab.check_health().unwrap_err().to_string();
+        assert!(err.contains("checkpoints preserved"), "{err}");
+    }
+}

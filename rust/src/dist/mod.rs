@@ -1,0 +1,203 @@
+//! Multi-process distributed training: the real-transport backend behind
+//! the [`crate::collectives::Collectives`] trait.
+//!
+//! The process model mirrors the paper's pod: each **worker** process owns
+//! the authoritative copy of the table shards assigned to it (shard `s`
+//! lives on worker `s % n`) and serves gather / scatter / gramian requests
+//! over a length-prefixed TCP protocol (the same framing the serving path
+//! uses, shared via [`crate::util::net`]). The **coordinator** process runs
+//! the full ALS schedule — batching, solves, objective, eval, checkpoints —
+//! and routes every collective through a [`fabric::TcpCollectives`].
+//!
+//! Two topologies route the same collectives differently:
+//!
+//! * [`DistTopology::ParameterServer`] — the coordinator sends each server
+//!   only the ids that server owns and receives exactly those rows back;
+//!   scatters are partitioned the same way.
+//! * [`DistTopology::AllReduce`] — the full id list is broadcast to every
+//!   peer (the all-gather half of `sharded_gather`); each peer answers with
+//!   the rows it owns and the coordinator assembles them by ownership,
+//!   which is the all-reduce-sum with single-owner rows. Scatters broadcast
+//!   the full `(ids, rows)` payload and each peer keeps its own shard's
+//!   writes, exactly like the paper's `sharded_scatter`.
+//!
+//! Conformance contract: a Tcp run records **exactly** the bytes a Local
+//! run records in [`crate::collectives::CommStats`] (the accounting lives
+//! at the trainer's call sites, not in any backend) and produces bitwise
+//! identical tables, objectives and checkpoints — `tests/dist_equivalence`
+//! holds both ends of that contract.
+
+pub mod fabric;
+pub mod protocol;
+pub mod worker;
+
+pub use fabric::TcpCollectives;
+pub use worker::{run_worker, Worker};
+
+use crate::sharding::{ShardData, Storage};
+use crate::util::Bf16;
+
+/// Marker line a worker prints on stdout once its listener is bound, so
+/// `alx launch` (and scripts) can harvest the ephemeral port:
+/// `ALX_WORKER_LISTENING 127.0.0.1:41623`.
+pub const WORKER_READY_PREFIX: &str = "ALX_WORKER_LISTENING";
+
+/// Transport selection for a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistMode {
+    /// In-process collectives (the default; byte-priced emulation).
+    Local,
+    /// Multi-process collectives over TCP workers.
+    Tcp,
+}
+
+impl DistMode {
+    pub fn parse(s: &str) -> Option<DistMode> {
+        match s {
+            "local" => Some(DistMode::Local),
+            "tcp" => Some(DistMode::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DistMode::Local => "local",
+            DistMode::Tcp => "tcp",
+        }
+    }
+}
+
+/// How the coordinator routes collectives over the worker set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DistTopology {
+    /// Sharded parameter servers: requests carry only the ids each server
+    /// owns.
+    ParameterServer { server_addrs: Vec<String> },
+    /// Peer broadcast: every collective's full payload reaches every peer,
+    /// mirroring the paper's all-gather + all-reduce formulation.
+    AllReduce { peers: Vec<String> },
+}
+
+impl DistTopology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistTopology::ParameterServer { .. } => "parameter-server",
+            DistTopology::AllReduce { .. } => "all-reduce",
+        }
+    }
+
+    /// The worker addresses, in worker-index order (shard `s` is owned by
+    /// worker `s % addrs.len()`).
+    pub fn addrs(&self) -> &[String] {
+        match self {
+            DistTopology::ParameterServer { server_addrs } => server_addrs,
+            DistTopology::AllReduce { peers } => peers,
+        }
+    }
+}
+
+/// The `[dist]` config section (plus its CLI flags), resolved.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DistConfig {
+    /// `local` or `tcp`.
+    pub mode: DistMode,
+    /// `parameter-server` or `all-reduce` (meaningful only in tcp mode).
+    pub topology: String,
+    /// Worker addresses (`host:port`), in worker-index order.
+    pub workers: Vec<String>,
+    /// Heartbeat ping interval in milliseconds (0 = heartbeats off; rpc
+    /// errors still detect dead workers).
+    pub heartbeat_ms: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            mode: DistMode::Local,
+            topology: "parameter-server".to_string(),
+            workers: Vec::new(),
+            heartbeat_ms: 500,
+        }
+    }
+}
+
+impl DistConfig {
+    /// Build the routing topology from the config (workers + kind).
+    pub fn resolve_topology(&self) -> anyhow::Result<DistTopology> {
+        anyhow::ensure!(
+            !self.workers.is_empty(),
+            "dist.mode = tcp requires at least one worker address (dist.workers / --workers)"
+        );
+        match self.topology.as_str() {
+            "parameter-server" => {
+                Ok(DistTopology::ParameterServer { server_addrs: self.workers.clone() })
+            }
+            "all-reduce" => Ok(DistTopology::AllReduce { peers: self.workers.clone() }),
+            other => anyhow::bail!("dist.topology must be parameter-server|all-reduce, got '{other}'"),
+        }
+    }
+}
+
+/// Rebuild a shard payload from f32 values received over the wire,
+/// rounding through the exact same path as
+/// [`crate::sharding::ShardedTable::write_row`] (`Bf16::from_f32`). The
+/// wire always carries f32: bf16 → f32 widening is exact and rounding the
+/// widened value back is the identity, so shipping a shard is bitwise
+/// lossless for both storage precisions.
+pub fn shard_data_from_f32(storage: Storage, vals: Vec<f32>) -> ShardData {
+    match storage {
+        Storage::F32 => ShardData::F32(vals),
+        Storage::Bf16 => ShardData::Bf16(vals.iter().map(|&x| Bf16::from_f32(x).0).collect()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_config_defaults_to_local() {
+        let cfg = DistConfig::default();
+        assert_eq!(cfg.mode, DistMode::Local);
+        assert_eq!(cfg.topology, "parameter-server");
+        assert!(cfg.workers.is_empty());
+    }
+
+    #[test]
+    fn topology_resolution() {
+        let mut cfg = DistConfig {
+            mode: DistMode::Tcp,
+            workers: vec!["a:1".into(), "b:2".into()],
+            ..DistConfig::default()
+        };
+        let topo = cfg.resolve_topology().unwrap();
+        assert_eq!(topo.name(), "parameter-server");
+        assert_eq!(topo.addrs().len(), 2);
+        cfg.topology = "all-reduce".to_string();
+        assert_eq!(cfg.resolve_topology().unwrap().name(), "all-reduce");
+        cfg.topology = "ring".to_string();
+        assert!(cfg.resolve_topology().is_err());
+        cfg.topology = "all-reduce".to_string();
+        cfg.workers.clear();
+        assert!(cfg.resolve_topology().is_err(), "no workers must be rejected");
+    }
+
+    #[test]
+    fn shard_payload_roundtrips_bitwise() {
+        // f32 storage: bits pass through untouched.
+        let vals = vec![1.5f32, -0.25, 3.0e-8, f32::MIN_POSITIVE];
+        match shard_data_from_f32(Storage::F32, vals.clone()) {
+            ShardData::F32(v) => assert_eq!(v, vals),
+            _ => panic!("wrong payload kind"),
+        }
+        // bf16 storage: widen → wire → round is the identity on values
+        // that are exactly representable in bf16.
+        let bits: Vec<u16> = vec![0x3FC0, 0xBF80, 0x0001, 0x7F7F];
+        let widened: Vec<f32> = bits.iter().map(|&b| Bf16(b).to_f32()).collect();
+        match shard_data_from_f32(Storage::Bf16, widened) {
+            ShardData::Bf16(v) => assert_eq!(v, bits),
+            _ => panic!("wrong payload kind"),
+        }
+    }
+}

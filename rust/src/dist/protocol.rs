@@ -1,0 +1,203 @@
+//! The distributed-training wire protocol: request/response frames over
+//! the shared [`crate::util::net`] framing.
+//!
+//! Requests are coordinator → worker; every request gets exactly one
+//! response. All integers are little-endian; all rows travel as f32 (see
+//! [`super::shard_data_from_f32`] for why that is bitwise lossless for
+//! both storage precisions).
+//!
+//! ```text
+//! request  := op:u8 body
+//! response := status:u8 payload            status 0 = ok, 1 = error
+//!
+//! PING                                      → ok
+//! INIT_TABLE table rows:u64 dim:u32 shards:u32 bf16:u8
+//!                                           → ok (allocates the table)
+//! SET_SHARD  table shard:u32 f32[rows·dim]  → ok (marks the shard hosted)
+//! GET_SHARD  table shard:u32                → f32[rows·dim]
+//! GATHER     table n:u32 id:u32[n]          → k:u32 f32[k·dim]   (hosted
+//!                                             ids only, request order)
+//! SCATTER    table n:u32 id:u32[n] f32[n·dim] → k:u32  (rows written)
+//! GRAMIAN    table shard:u32                → f32[dim·dim]
+//! SHUTDOWN                                  → ok, then the worker exits
+//! ```
+
+use crate::util::net::Cursor;
+
+/// Frame cap for the dist plane: must hold a whole table shard
+/// (`shard rows × dim × 4` bytes) plus headers. 1 GiB.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+pub const OP_PING: u8 = 1;
+pub const OP_INIT_TABLE: u8 = 2;
+pub const OP_SET_SHARD: u8 = 3;
+pub const OP_GET_SHARD: u8 = 4;
+pub const OP_GATHER: u8 = 5;
+pub const OP_SCATTER: u8 = 6;
+pub const OP_GRAMIAN: u8 = 7;
+pub const OP_SHUTDOWN: u8 = 8;
+
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERR: u8 = 1;
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
+    buf.reserve(vals.len() * 4);
+    for &v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn put_u32s(buf: &mut Vec<u8>, vals: &[u32]) {
+    buf.reserve(vals.len() * 4);
+    for &v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Decode `n` f32 values from the cursor.
+pub fn get_f32s(c: &mut Cursor<'_>, n: usize) -> Result<Vec<f32>, String> {
+    let raw = c.take(n * 4)?;
+    Ok(raw.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect())
+}
+
+/// Decode `n` u32 values from the cursor.
+pub fn get_u32s(c: &mut Cursor<'_>, n: usize) -> Result<Vec<u32>, String> {
+    let raw = c.take(n * 4)?;
+    Ok(raw.chunks_exact(4).map(|b| u32::from_le_bytes(b.try_into().unwrap())).collect())
+}
+
+pub fn enc_ping() -> Vec<u8> {
+    vec![OP_PING]
+}
+
+pub fn enc_init_table(table: u8, rows: u64, dim: u32, num_shards: u32, bf16: bool) -> Vec<u8> {
+    let mut buf = vec![OP_INIT_TABLE, table];
+    put_u64(&mut buf, rows);
+    put_u32(&mut buf, dim);
+    put_u32(&mut buf, num_shards);
+    buf.push(bf16 as u8);
+    buf
+}
+
+pub fn enc_set_shard(table: u8, shard: u32, values: &[f32]) -> Vec<u8> {
+    let mut buf = vec![OP_SET_SHARD, table];
+    put_u32(&mut buf, shard);
+    put_f32s(&mut buf, values);
+    buf
+}
+
+pub fn enc_get_shard(table: u8, shard: u32) -> Vec<u8> {
+    let mut buf = vec![OP_GET_SHARD, table];
+    put_u32(&mut buf, shard);
+    buf
+}
+
+pub fn enc_gather(table: u8, ids: &[u32]) -> Vec<u8> {
+    let mut buf = vec![OP_GATHER, table];
+    put_u32(&mut buf, ids.len() as u32);
+    put_u32s(&mut buf, ids);
+    buf
+}
+
+/// `rows` is row-major `[ids.len() × dim]`.
+pub fn enc_scatter(table: u8, ids: &[u32], rows: &[f32]) -> Vec<u8> {
+    let mut buf = vec![OP_SCATTER, table];
+    put_u32(&mut buf, ids.len() as u32);
+    put_u32s(&mut buf, ids);
+    put_f32s(&mut buf, rows);
+    buf
+}
+
+pub fn enc_gramian(table: u8, shard: u32) -> Vec<u8> {
+    let mut buf = vec![OP_GRAMIAN, table];
+    put_u32(&mut buf, shard);
+    buf
+}
+
+pub fn enc_shutdown() -> Vec<u8> {
+    vec![OP_SHUTDOWN]
+}
+
+/// Wrap a successful response payload.
+pub fn ok_reply(mut payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 1);
+    out.push(STATUS_OK);
+    out.append(&mut payload);
+    out
+}
+
+/// Wrap a worker-side error message.
+pub fn err_reply(msg: &str) -> Vec<u8> {
+    let mut out = vec![STATUS_ERR];
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+/// Strip the status byte off a response frame: `Ok(payload)` for ok
+/// responses, the worker's error message otherwise.
+pub fn parse_reply(frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(!frame.is_empty(), "empty response frame");
+    match frame[0] {
+        STATUS_OK => Ok(frame[1..].to_vec()),
+        STATUS_ERR => {
+            anyhow::bail!("worker error: {}", String::from_utf8_lossy(&frame[1..]))
+        }
+        other => anyhow::bail!("unknown response status {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_payloads_roundtrip() {
+        let mut buf = Vec::new();
+        put_u32s(&mut buf, &[1, u32::MAX, 7]);
+        put_f32s(&mut buf, &[1.5, -0.0, f32::MIN_POSITIVE]);
+        let mut c = Cursor::new(&buf);
+        assert_eq!(get_u32s(&mut c, 3).unwrap(), vec![1, u32::MAX, 7]);
+        let f = get_f32s(&mut c, 3).unwrap();
+        assert_eq!(f[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(f[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(f[2].to_bits(), f32::MIN_POSITIVE.to_bits());
+        c.done().unwrap();
+    }
+
+    #[test]
+    fn request_encodings_parse_back() {
+        let req = enc_gather(1, &[3, 9, 27]);
+        let mut c = Cursor::new(&req);
+        assert_eq!(c.u8().unwrap(), OP_GATHER);
+        assert_eq!(c.u8().unwrap(), 1);
+        let n = c.u32().unwrap() as usize;
+        assert_eq!(get_u32s(&mut c, n).unwrap(), vec![3, 9, 27]);
+        c.done().unwrap();
+
+        let req = enc_init_table(0, 1000, 16, 8, true);
+        let mut c = Cursor::new(&req);
+        assert_eq!(c.u8().unwrap(), OP_INIT_TABLE);
+        assert_eq!(c.u8().unwrap(), 0);
+        assert_eq!(c.u64().unwrap(), 1000);
+        assert_eq!(c.u32().unwrap(), 16);
+        assert_eq!(c.u32().unwrap(), 8);
+        assert_eq!(c.u8().unwrap(), 1);
+        c.done().unwrap();
+    }
+
+    #[test]
+    fn reply_status_handling() {
+        assert_eq!(parse_reply(ok_reply(vec![9, 9])).unwrap(), vec![9, 9]);
+        let err = parse_reply(err_reply("shard not hosted")).unwrap_err();
+        assert!(err.to_string().contains("shard not hosted"), "{err}");
+        assert!(parse_reply(Vec::new()).is_err());
+    }
+}

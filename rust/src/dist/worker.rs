@@ -1,0 +1,388 @@
+//! The worker process: a passive shard server.
+//!
+//! A worker owns the authoritative copy of the table shards the
+//! coordinator pushes to it ([`super::protocol::OP_SET_SHARD`] marks a
+//! shard hosted) and answers gather / scatter / gramian requests against
+//! them. All scheduling lives in the coordinator; the worker is pure
+//! request/response, one thread per connection, so the protocol can never
+//! deadlock — there are no barriers to get stuck on.
+//!
+//! Failpoints (`--features failpoints`): `dist.push`, `dist.sync`,
+//! `dist.gather`, `dist.scatter`, `dist.gramian` fire at the matching
+//! request handlers — `alx launch --worker-failpoints 'dist.gather=hit:3:abort'`
+//! kills worker 0 deterministically mid-epoch, which is how the
+//! worker-failure tests avoid timing-dependent SIGKILLs.
+
+use super::protocol::{
+    err_reply, get_f32s, get_u32s, ok_reply, put_f32s, put_u32, MAX_FRAME, OP_GATHER,
+    OP_GET_SHARD, OP_GRAMIAN, OP_INIT_TABLE, OP_PING, OP_SCATTER, OP_SET_SHARD, OP_SHUTDOWN,
+};
+use super::{shard_data_from_f32, WORKER_READY_PREFIX};
+use crate::sharding::{ShardedTable, Storage};
+use crate::util::fault;
+use crate::util::net::{read_frame_capped, write_frame_capped, Cursor};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// One hosted table: the allocated sharded storage plus which shards this
+/// worker actually owns (only those may be gathered from / scattered to).
+struct HostedTable {
+    table: ShardedTable,
+    hosted: Vec<bool>,
+}
+
+/// Shared worker state: one slot per [`crate::collectives::TableId`]
+/// (W = 0, H = 1), each behind its own lock so a W-pass scatter never
+/// serializes against an H gather.
+struct State {
+    slots: [RwLock<Option<HostedTable>>; 2],
+}
+
+impl State {
+    fn new() -> State {
+        State { slots: [RwLock::new(None), RwLock::new(None)] }
+    }
+
+    fn read_slot(&self, i: usize) -> RwLockReadGuard<'_, Option<HostedTable>> {
+        self.slots[i].read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn write_slot(&self, i: usize) -> RwLockWriteGuard<'_, Option<HostedTable>> {
+        self.slots[i].write().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+fn slot_index(c: &mut Cursor<'_>) -> Result<usize, String> {
+    let i = c.u8()? as usize;
+    if i >= 2 {
+        return Err(format!("bad table index {i} (want 0 = W, 1 = H)"));
+    }
+    Ok(i)
+}
+
+fn fp(name: &str) -> Result<(), String> {
+    fault::failpoint(name).map_err(|e| e.to_string())
+}
+
+/// Handle one decoded request. Returns the ok-payload and whether the
+/// worker should shut down after replying.
+fn handle_request(state: &State, payload: &[u8]) -> Result<(Vec<u8>, bool), String> {
+    let mut c = Cursor::new(payload);
+    match c.u8()? {
+        OP_PING => {
+            c.done()?;
+            Ok((Vec::new(), false))
+        }
+        OP_SHUTDOWN => {
+            c.done()?;
+            Ok((Vec::new(), true))
+        }
+        OP_INIT_TABLE => {
+            let slot = slot_index(&mut c)?;
+            let rows = c.u64()? as usize;
+            let dim = c.u32()? as usize;
+            let shards = c.u32()? as usize;
+            let bf16 = c.u8()? != 0;
+            c.done()?;
+            if rows == 0 || dim == 0 || shards == 0 {
+                return Err(format!("bad table shape {rows}x{dim}/{shards}"));
+            }
+            let storage = if bf16 { Storage::Bf16 } else { Storage::F32 };
+            // (Re)allocate: a fresh push (e.g. after a checkpoint restore)
+            // re-inits and then re-SETs every hosted shard.
+            *state.write_slot(slot) = Some(HostedTable {
+                table: ShardedTable::zeros(rows, dim, shards, storage),
+                hosted: vec![false; shards],
+            });
+            Ok((Vec::new(), false))
+        }
+        OP_SET_SHARD => {
+            fp("dist.push")?;
+            let slot = slot_index(&mut c)?;
+            let shard = c.u32()? as usize;
+            let mut guard = state.write_slot(slot);
+            let host = guard.as_mut().ok_or("table not initialized (INIT_TABLE first)")?;
+            if shard >= host.table.num_shards() {
+                return Err(format!("shard {shard} out of range"));
+            }
+            let want = host.table.range(shard).len() * host.table.dim;
+            let vals = get_f32s(&mut c, want)?;
+            c.done()?;
+            let storage = host.table.storage();
+            host.table.update_shard(shard, |sd| *sd = shard_data_from_f32(storage, vals));
+            host.hosted[shard] = true;
+            Ok((Vec::new(), false))
+        }
+        OP_GET_SHARD => {
+            fp("dist.sync")?;
+            let slot = slot_index(&mut c)?;
+            let shard = c.u32()? as usize;
+            c.done()?;
+            let guard = state.read_slot(slot);
+            let host = guard.as_ref().ok_or("table not initialized")?;
+            if shard >= host.table.num_shards() || !host.hosted[shard] {
+                return Err(format!("shard {shard} not hosted here"));
+            }
+            let vals = host.table.shard_f32(shard);
+            let mut reply = Vec::with_capacity(vals.len() * 4);
+            put_f32s(&mut reply, &vals);
+            Ok((reply, false))
+        }
+        OP_GATHER => {
+            fp("dist.gather")?;
+            let slot = slot_index(&mut c)?;
+            let n = c.u32()? as usize;
+            let ids = get_u32s(&mut c, n)?;
+            c.done()?;
+            let guard = state.read_slot(slot);
+            let host = guard.as_ref().ok_or("table not initialized")?;
+            let dim = host.table.dim;
+            let mut row = vec![0.0f32; dim];
+            // Hosted ids only, in request order — the parameter-server
+            // request is pre-filtered (everything matches); the all-reduce
+            // broadcast relies on this filter to contribute exactly its
+            // own shards' rows.
+            let mut rows = Vec::new();
+            let mut k: u32 = 0;
+            for &id in &ids {
+                let id = id as usize;
+                if id >= host.table.rows {
+                    return Err(format!("row {id} out of range"));
+                }
+                if host.hosted[host.table.shard_of(id)] {
+                    host.table.read_row(id, &mut row);
+                    put_f32s(&mut rows, &row);
+                    k += 1;
+                }
+            }
+            let mut reply = Vec::with_capacity(4 + rows.len());
+            put_u32(&mut reply, k);
+            reply.extend_from_slice(&rows);
+            Ok((reply, false))
+        }
+        OP_SCATTER => {
+            fp("dist.scatter")?;
+            let slot = slot_index(&mut c)?;
+            let n = c.u32()? as usize;
+            let ids = get_u32s(&mut c, n)?;
+            let mut guard = state.write_slot(slot);
+            let host = guard.as_mut().ok_or("table not initialized")?;
+            let dim = host.table.dim;
+            let rows = get_f32s(&mut c, n * dim)?;
+            c.done()?;
+            let mut written: u32 = 0;
+            for (k, &id) in ids.iter().enumerate() {
+                let id = id as usize;
+                if id >= host.table.rows {
+                    return Err(format!("row {id} out of range"));
+                }
+                if host.hosted[host.table.shard_of(id)] {
+                    host.table.write_row(id, &rows[k * dim..(k + 1) * dim]);
+                    written += 1;
+                }
+            }
+            let mut reply = Vec::with_capacity(4);
+            put_u32(&mut reply, written);
+            Ok((reply, false))
+        }
+        OP_GRAMIAN => {
+            fp("dist.gramian")?;
+            let slot = slot_index(&mut c)?;
+            let shard = c.u32()? as usize;
+            c.done()?;
+            let guard = state.read_slot(slot);
+            let host = guard.as_ref().ok_or("table not initialized")?;
+            if shard >= host.table.num_shards() || !host.hosted[shard] {
+                return Err(format!("shard {shard} not hosted here"));
+            }
+            let g = host.table.local_gramian(shard);
+            let mut reply = Vec::with_capacity(g.data.len() * 4);
+            put_f32s(&mut reply, &g.data);
+            Ok((reply, false))
+        }
+        other => Err(format!("unknown op {other}")),
+    }
+}
+
+/// One connection's request loop. Same probe-under-timeout discipline as
+/// the serving loop: peek with a 100 ms read timeout so the thread
+/// notices the shutdown flag, then read the frame once bytes are there.
+fn handle_conn(state: &State, mut stream: TcpStream, stop: &AtomicBool) -> anyhow::Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut probe = [0u8; 1];
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match stream.peek(&mut probe) {
+            Ok(0) => return Ok(()), // peer closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let Some(req) = read_frame_capped(&mut stream, MAX_FRAME)? else {
+            return Ok(());
+        };
+        let (reply, shutdown) = match handle_request(state, &req) {
+            Ok((payload, shutdown)) => (ok_reply(payload), shutdown),
+            Err(msg) => (err_reply(&msg), false),
+        };
+        write_frame_capped(&mut stream, &reply, MAX_FRAME)?;
+        if shutdown {
+            stop.store(true, Ordering::SeqCst);
+            return Ok(());
+        }
+    }
+}
+
+/// A bound-but-not-yet-serving worker. Binding and serving are split so
+/// in-process harnesses (tests) can learn the ephemeral port before the
+/// accept loop starts.
+pub struct Worker {
+    listener: TcpListener,
+    state: Arc<State>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Worker {
+    pub fn bind(addr: &str) -> anyhow::Result<Worker> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("bind worker listener on {addr}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        Ok(Worker {
+            listener,
+            state: Arc::new(State::new()),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Flag that makes [`Worker::serve`] return (also set by a SHUTDOWN
+    /// request). In-process harnesses hold this to stop a worker whose
+    /// coordinator died.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept-and-serve until shut down. Thread-per-connection; every
+    /// connection thread is joined before this returns.
+    pub fn serve(self) -> anyhow::Result<()> {
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let state = Arc::clone(&self.state);
+                    let stop = Arc::clone(&self.stop);
+                    conns.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(&state, stream, &stop) {
+                            crate::log_warn!("dist worker: connection {peer} failed: {e}");
+                        }
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(anyhow::anyhow!("worker accept: {e}")),
+            }
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// `alx worker` entry point: bind, announce the resolved address on
+/// stdout (the launcher parses it), serve until SHUTDOWN.
+pub fn run_worker(bind_addr: &str) -> anyhow::Result<()> {
+    let worker = Worker::bind(bind_addr)?;
+    let addr = worker.local_addr()?;
+    println!("{WORKER_READY_PREFIX} {addr}");
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    crate::log_info!("dist worker listening on {addr}");
+    worker.serve()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::protocol::{
+        enc_gather, enc_gramian, enc_init_table, enc_ping, enc_scatter, enc_set_shard,
+        enc_shutdown, parse_reply,
+    };
+
+    fn rpc(stream: &mut TcpStream, req: &[u8]) -> anyhow::Result<Vec<u8>> {
+        write_frame_capped(stream, req, MAX_FRAME)?;
+        let frame = read_frame_capped(stream, MAX_FRAME)?
+            .ok_or_else(|| anyhow::anyhow!("worker closed connection"))?;
+        parse_reply(frame)
+    }
+
+    #[test]
+    fn worker_serves_the_full_protocol() {
+        let worker = Worker::bind("127.0.0.1:0").unwrap();
+        let addr = worker.local_addr().unwrap();
+        let server = std::thread::spawn(move || worker.serve().unwrap());
+        let mut conn = TcpStream::connect(addr).unwrap();
+
+        // Ping before any table exists.
+        rpc(&mut conn, &enc_ping()).unwrap();
+
+        // 10 rows, dim 2, 2 shards; host only shard 0 (rows 0..5).
+        rpc(&mut conn, &enc_init_table(0, 10, 2, 2, false)).unwrap();
+        let shard0: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        rpc(&mut conn, &enc_set_shard(0, 0, &shard0)).unwrap();
+
+        // Gather filters to hosted ids, preserving request order.
+        let reply = rpc(&mut conn, &enc_gather(0, &[7, 1, 4])).unwrap();
+        let mut c = Cursor::new(&reply);
+        assert_eq!(c.u32().unwrap(), 2, "ids 1 and 4 are hosted, 7 is not");
+        let rows = get_f32s(&mut c, 4).unwrap();
+        assert_eq!(rows, vec![2.0, 3.0, 8.0, 9.0]);
+
+        // Scatter writes hosted rows only and reports the count.
+        let reply =
+            rpc(&mut conn, &enc_scatter(0, &[1, 7], &[-1.0, -2.0, 5.0, 5.0])).unwrap();
+        assert_eq!(Cursor::new(&reply).u32().unwrap(), 1);
+        let reply = rpc(&mut conn, &enc_gather(0, &[1])).unwrap();
+        let mut c = Cursor::new(&reply);
+        assert_eq!(c.u32().unwrap(), 1);
+        assert_eq!(get_f32s(&mut c, 2).unwrap(), vec![-1.0, -2.0]);
+
+        // Gramian of the hosted shard; the non-hosted shard is an error.
+        let reply = rpc(&mut conn, &enc_gramian(0, 0)).unwrap();
+        assert_eq!(reply.len(), 2 * 2 * 4);
+        assert!(rpc(&mut conn, &enc_gramian(0, 1)).is_err());
+
+        // Errors leave the connection usable.
+        assert!(rpc(&mut conn, &[42u8]).is_err(), "unknown op");
+        rpc(&mut conn, &enc_ping()).unwrap();
+
+        rpc(&mut conn, &enc_shutdown()).unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn stop_handle_ends_serve() {
+        let worker = Worker::bind("127.0.0.1:0").unwrap();
+        let stop = worker.stop_handle();
+        let server = std::thread::spawn(move || worker.serve().unwrap());
+        stop.store(true, Ordering::SeqCst);
+        server.join().unwrap();
+    }
+}

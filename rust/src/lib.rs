@@ -34,6 +34,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod densebatch;
+pub mod dist;
 pub mod eval;
 pub mod harness;
 pub mod linalg;
@@ -49,6 +50,7 @@ pub mod webgraph;
 /// Most commonly used types, re-exported for examples and downstream users.
 pub mod prelude {
     pub use crate::als::{EpochStats, PrecisionPolicy, SolverKind, TrainConfig, Trainer};
+    pub use crate::collectives::{Collectives, CommSnapshot, TableId};
     pub use crate::config::AlxConfig;
     pub use crate::coordinator::{
         CheckpointEvery, Coordinator, EarlyStopOnPlateau, EarlyStopOnRecall, EpochHook,
@@ -59,6 +61,7 @@ pub mod prelude {
         StreamingSource, WebGraphSource,
     };
     pub use crate::densebatch::{DenseBatch, DenseBatcher};
+    pub use crate::dist::{DistConfig, DistMode, DistTopology, TcpCollectives, Worker};
     pub use crate::eval::{recall_at_k, EvalConfig, RecallReport};
     pub use crate::linalg::Mat;
     pub use crate::serving::{serve, Client, ServeConfig, ServeModel, ServerHandle, TopKRequest};

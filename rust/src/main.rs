@@ -11,6 +11,8 @@
 //! alx train     --stream --spill --spill-model ...     # matrix AND model out of core
 //! alx train     --checkpoint-every 4 --eval-every 2    # session hooks
 //! alx train     --resume run.ckpt                      # continue a run
+//! alx worker    --port 7001                            # dist table-shard server
+//! alx launch    --num-workers 4 --epochs 2             # multi-process training
 //! alx serve     --checkpoint run.ckpt --port 7878      # Top-K server
 //! alx serve     --w-bank w.alxtab --h-bank h.alxtab    # serve out of core
 //! alx query     --port 7878 --user 42 --k 10           # one Top-K query
@@ -29,6 +31,7 @@
 //! the configured `--epochs` total.
 
 use alx::als::TrainConfig;
+use alx::collectives::Collectives;
 use alx::config::{AlxConfig, KvConfig};
 use alx::coordinator::{grid_search, GridSpec, TrainSession};
 use alx::harness;
@@ -130,6 +133,10 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("artifacts", "engine.artifacts_dir"),
         ("approximate", "eval.approximate"),
         ("failpoints", "fault.points"),
+        ("dist", "dist.mode"),
+        ("topology", "dist.topology"),
+        ("workers", "dist.workers"),
+        ("heartbeat-ms", "dist.heartbeat_ms"),
         ("port", "serve.port"),
         ("serve-threads", "serve.threads"),
         ("batch-window-us", "serve.batch_window_us"),
@@ -443,6 +450,21 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if session.stopped() {
         println!("(stopped early: objective plateau)");
     }
+    // Per-collective traffic: the same numbers for every transport — a
+    // tcp run must print exactly what its local twin prints.
+    let c = &report.comm;
+    println!(
+        "\ncollectives ({} transport):\n\
+         {:<12} {:>8}  {:>12}\n\
+         {:<12} {:>8}  {:>12}\n\
+         {:<12} {:>8}  {:>12}\n\
+         {:<12} {:>8}  {:>12}",
+        session.trainer.collectives().name(),
+        "collective", "ops", "bytes",
+        "all-gather", c.all_gather_ops, human_bytes(c.all_gather_bytes),
+        "all-reduce", c.all_reduce_ops, human_bytes(c.all_reduce_bytes),
+        "total", c.all_gather_ops + c.all_reduce_ops, human_bytes(c.total_bytes()),
+    );
     if let Some(ing) = &report.ingest {
         let budget = match ing.budget_bytes {
             0 => "unbounded".to_string(),
@@ -731,10 +753,99 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Run one distributed-training worker: bind, announce the address on
+/// stdout (`ALX_WORKER_LISTENING host:port`), and serve collectives until
+/// a coordinator sends SHUTDOWN.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    if let Some(spec) = args.get("failpoints") {
+        alx::util::fault::configure(spec)
+            .map_err(|e| anyhow::anyhow!("--failpoints '{spec}': {e}"))?;
+    }
+    let bind = match args.get("bind") {
+        Some(b) => b.to_string(),
+        None => format!("127.0.0.1:{}", args.get_or("port", 0u16)?),
+    };
+    alx::dist::run_worker(&bind)
+}
+
+/// Spawn a local worker fleet on ephemeral ports, then run `alx train`
+/// against it in tcp mode. All remaining flags pass through to train, so
+/// `alx launch --num-workers 4 --epochs 2 ...` is the multi-process twin
+/// of the same `alx train ...` invocation. The fleet is shut down (and the
+/// children reaped) whatever the training outcome.
+fn cmd_launch(args: &Args) -> anyhow::Result<()> {
+    let n: usize = args.get_or("num-workers", 4usize)?;
+    anyhow::ensure!(n >= 1, "--num-workers must be >= 1");
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::new();
+    let mut addrs = Vec::new();
+    for i in 0..n {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker").arg("--port").arg("0");
+        // Deterministic fault-injection rides on worker 0 only, so a
+        // killed-worker drill has exactly one victim.
+        if i == 0 {
+            if let Some(spec) = args.get("worker-failpoints") {
+                cmd.arg("--failpoints").arg(spec);
+            }
+        }
+        cmd.stdout(std::process::Stdio::piped());
+        let mut child = cmd.spawn().map_err(|e| anyhow::anyhow!("spawn worker {i}: {e}"))?;
+        use std::io::BufRead;
+        let stdout = child.stdout.take().expect("stdout was piped");
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let k = reader.read_line(&mut line)?;
+            anyhow::ensure!(k > 0, "worker {i} exited before announcing its address");
+            if let Some(rest) = line.trim().strip_prefix(alx::dist::WORKER_READY_PREFIX) {
+                addrs.push(rest.trim().to_string());
+                break;
+            }
+        }
+        // Keep draining the child's stdout so its log writes never block
+        // on a full pipe.
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while matches!(reader.read_line(&mut sink), Ok(k) if k > 0) {
+                sink.clear();
+            }
+        });
+        children.push(child);
+    }
+    println!("launched {n} workers: {}", addrs.join(", "));
+    let mut train_args = Args { positional: args.positional.clone(), flags: args.flags.clone() };
+    train_args.flags.push(("dist".to_string(), "tcp".to_string()));
+    train_args.flags.push(("workers".to_string(), addrs.join(",")));
+    let result = cmd_train(&train_args);
+    // Stop the fleet regardless of how training ended; a worker that
+    // already died (or was fault-killed) just fails the connect.
+    for addr in &addrs {
+        if let Ok(mut s) = std::net::TcpStream::connect(addr) {
+            let _ = alx::util::net::write_frame_capped(
+                &mut s,
+                &alx::dist::protocol::enc_shutdown(),
+                alx::dist::protocol::MAX_FRAME,
+            );
+            let _ = alx::util::net::read_frame_capped(&mut s, alx::dist::protocol::MAX_FRAME);
+        }
+    }
+    for mut c in children {
+        let _ = c.wait();
+    }
+    result
+}
+
 fn usage() -> ! {
     eprintln!(
-        "usage: alx <generate|convert|bank|verify|train|serve|query|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
+        "usage: alx <generate|convert|bank|verify|train|worker|launch|serve|query|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
          train flags: --source webgraph|edge-list --data <file> --resume <ckpt>\n\
+                      --dist local|tcp --workers host:p1,host:p2 --topology parameter-server|all-reduce\n\
+                      --heartbeat-ms <ms> (multi-process training against `alx worker` processes)\n\
+         worker:      --port <p> | --bind <host:port> (serve table shards; prints ALX_WORKER_LISTENING)\n\
+         launch:      --num-workers <n> [train flags...] (spawn a local fleet, train over it in tcp mode)\n\
+                      [--worker-failpoints 'spec'] (arm fault injection on worker 0)\n\
                       --stream --ingest-budget-mb <MiB> (out-of-core ALXCSR02 ingestion)\n\
                       --spill --spill-dir <dir> --resident-shards <n> (demand-paged shard banks)\n\
                       --spill-model --resident-table-shards <n> (demand-paged W/H table banks;\n\
@@ -770,6 +881,8 @@ fn main() -> anyhow::Result<()> {
         "bank" => cmd_bank(&args),
         "verify" => cmd_verify(&args),
         "train" => cmd_train(&args),
+        "worker" => cmd_worker(&args),
+        "launch" => cmd_launch(&args),
         "serve" => cmd_serve(&args),
         "query" => cmd_query(&args),
         "table1" => cmd_table1(&args),

@@ -30,6 +30,7 @@
 //! fails to decode is answered with `ERR` and the connection is closed;
 //! the server itself stays up.
 
+use crate::util::net::{read_frame_capped, write_frame_capped, Cursor};
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
 
@@ -81,79 +82,17 @@ pub enum Response {
     Err(String),
 }
 
-/// Read one frame's payload. `Ok(None)` on a clean EOF at a frame
-/// boundary (peer closed); an EOF mid-frame is an error.
+/// Read one frame's payload under the serving cap (see
+/// [`crate::util::net`] for the shared framing layer). `Ok(None)` on a
+/// clean EOF at a frame boundary (peer closed); an EOF mid-frame is an
+/// error.
 pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
-    let mut len4 = [0u8; 4];
-    let mut filled = 0;
-    while filled < 4 {
-        let n = r.read(&mut len4[filled..])?;
-        if n == 0 {
-            if filled == 0 {
-                return Ok(None);
-            }
-            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF inside frame length"));
-        }
-        filled += n;
-    }
-    let len = u32::from_le_bytes(len4);
-    if len > MAX_FRAME {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"),
-        ));
-    }
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload)?;
-    Ok(Some(payload))
+    read_frame_capped(r, MAX_FRAME)
 }
 
-/// Write one frame.
+/// Write one frame under the serving cap.
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
-    assert!(payload.len() as u64 <= MAX_FRAME as u64, "oversized outbound frame");
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(payload)?;
-    w.flush()
-}
-
-/// Little-endian cursor over a request/response payload.
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
-        if self.pos + n > self.buf.len() {
-            return Err(format!(
-                "truncated payload: wanted {n} bytes at offset {}, have {}",
-                self.pos,
-                self.buf.len()
-            ));
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-
-    fn u8(&mut self) -> Result<u8, String> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn u32(&mut self) -> Result<u32, String> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64, String> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn done(&self) -> Result<(), String> {
-        if self.pos != self.buf.len() {
-            return Err(format!("{} trailing bytes after payload", self.buf.len() - self.pos));
-        }
-        Ok(())
-    }
+    write_frame_capped(w, payload, MAX_FRAME)
 }
 
 /// Encode a request into a frame payload.

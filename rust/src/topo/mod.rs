@@ -196,6 +196,48 @@ impl Workload {
     }
 }
 
+/// Ideal per-epoch collective volume, split per collective the way
+/// [`crate::collectives::CommStats`] accounts it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IdealComm {
+    pub all_gather_bytes: u64,
+    pub all_reduce_bytes: u64,
+}
+
+impl IdealComm {
+    pub fn total_bytes(&self) -> u64 {
+        self.all_gather_bytes + self.all_reduce_bytes
+    }
+}
+
+/// Predict one epoch's collective bytes (both passes) under the trainer's
+/// accounting, assuming **zero batch padding**: every non-zero occupies
+/// exactly one dense slot and every embedding row is solved exactly once
+/// per pass.
+///
+/// Per the trainer's call sites:
+/// * gather id all-gather — 4 B per slot per shard, both passes;
+/// * gathered-row all-reduce — `d · elem_bytes` per slot, both passes;
+/// * scatter all-gather — each solved row broadcast to every shard;
+/// * gramian all-reduce — one `d×d` f32 reduction per pass.
+///
+/// Measured [`crate::collectives::CommSnapshot`] bytes exceed this by the
+/// batcher's padding factor (each row's slot count rounds up to the batch
+/// width L), so conformance tests assert a ratio bound, not equality —
+/// and the *same* measured number must come back from every transport.
+pub fn ideal_epoch_comm(w: &Workload, num_shards: usize) -> IdealComm {
+    let m = num_shards as u64;
+    let d = w.dim as u64;
+    let id_bytes = 2 * w.nnz * 4 * m;
+    let scatter_bytes = w.rows_plus_cols * d * w.elem_bytes * m;
+    let row_bytes = 2 * w.nnz * d * w.elem_bytes;
+    let gramian_bytes = 2 * d * d * 4;
+    IdealComm {
+        all_gather_bytes: id_bytes + scatter_bytes,
+        all_reduce_bytes: row_bytes + gramian_bytes,
+    }
+}
+
 /// Predict one epoch's runtime on `topo` (Fig. 6 generator).
 pub fn epoch_time(topo: &Topology, w: &Workload) -> EpochCost {
     let m = topo.num_cores as f64;
@@ -286,6 +328,28 @@ mod tests {
         let late_speedup = t1024 / t2048;
         assert!(early_speedup > 1.5, "early speedup {early_speedup}");
         assert!(late_speedup < early_speedup, "late speedup should flatten");
+    }
+
+    #[test]
+    fn ideal_comm_formula() {
+        let w = Workload {
+            nnz: 100,
+            rows_plus_cols: 10,
+            dim: 4,
+            elem_bytes: 2,
+            batch_rows: 8,
+            batch_width: 4,
+        };
+        let c = ideal_epoch_comm(&w, 4);
+        // ids: 2·100·4·4 = 3200; scatter: 10·4·2·4 = 320
+        assert_eq!(c.all_gather_bytes, 3200 + 320);
+        // rows: 2·100·4·2 = 1600; gramians: 2·16·4 = 128
+        assert_eq!(c.all_reduce_bytes, 1600 + 128);
+        assert_eq!(c.total_bytes(), 3200 + 320 + 1600 + 128);
+        // More shards → strictly more broadcast traffic, same reduce.
+        let c8 = ideal_epoch_comm(&w, 8);
+        assert!(c8.all_gather_bytes > c.all_gather_bytes);
+        assert_eq!(c8.all_reduce_bytes, c.all_reduce_bytes);
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod fault;
 pub mod logger;
 pub mod mem;
 pub mod mmap;
+pub mod net;
 pub mod rng;
 pub mod stats;
 pub mod threads;

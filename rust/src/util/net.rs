@@ -1,0 +1,154 @@
+//! Shared wire-format primitives: length-prefixed little-endian frames
+//! and a bounds-checked payload cursor.
+//!
+//! Every ALX network protocol (the `alx serve` Top-K protocol, the
+//! distributed-training data plane) speaks the same outer framing:
+//!
+//! ```text
+//! [len: u32 LE] [payload: len bytes]          len ≤ cap
+//! ```
+//!
+//! The cap is the caller's: serving keeps its tight 1 MiB bound (a
+//! hostile length prefix must not drive a large allocation on a public
+//! port), while the distributed fabric uses a larger cap sized for
+//! whole table shards. Both inherit the same EOF discipline — a clean
+//! EOF at a frame boundary is `Ok(None)`, an EOF mid-frame is an error.
+
+use std::io::{self, Read, Write};
+
+/// Read one frame's payload, rejecting frames larger than `cap` bytes
+/// before allocating. `Ok(None)` on a clean EOF at a frame boundary
+/// (peer closed); an EOF mid-frame is an error.
+pub fn read_frame_capped(r: &mut impl Read, cap: u32) -> io::Result<Option<Vec<u8>>> {
+    let mut len4 = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        let n = r.read(&mut len4[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(None);
+            }
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF inside frame length"));
+        }
+        filled += n;
+    }
+    let len = u32::from_le_bytes(len4);
+    if len > cap {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {cap}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Write one frame. Frames above `cap` are a caller bug, not a runtime
+/// condition: the matching reader would reject them anyway.
+pub fn write_frame_capped(w: &mut impl Write, payload: &[u8], cap: u32) -> io::Result<()> {
+    assert!(payload.len() as u64 <= cap as u64, "oversized outbound frame");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Little-endian cursor over a frame payload. Every read is
+/// bounds-checked; decode errors are `String`s describing the protocol
+/// violation (answered with an error frame by servers, surfaced as
+/// `InvalidData` by clients).
+pub struct Cursor<'a> {
+    pub buf: &'a [u8],
+    pub pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated payload: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn done(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!("{} trailing bytes after payload", self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_per_cap() {
+        let mut wire = Vec::new();
+        write_frame_capped(&mut wire, b"abc", 8).unwrap();
+        write_frame_capped(&mut wire, b"", 8).unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_frame_capped(&mut r, 8).unwrap().unwrap(), b"abc");
+        assert_eq!(read_frame_capped(&mut r, 8).unwrap().unwrap(), b"");
+        assert!(read_frame_capped(&mut r, 8).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn cap_is_readers_own() {
+        // A frame legal under a big cap is rejected by a small-cap reader.
+        let mut wire = Vec::new();
+        write_frame_capped(&mut wire, &[0u8; 100], 1 << 20).unwrap();
+        assert!(read_frame_capped(&mut &wire[..], 16).is_err());
+        assert_eq!(read_frame_capped(&mut &wire[..], 100).unwrap().unwrap().len(), 100);
+    }
+
+    #[test]
+    fn eof_mid_frame_is_an_error() {
+        let truncated = [5u8, 0, 0, 0, b'x'];
+        assert!(read_frame_capped(&mut &truncated[..], 64).is_err());
+        let half_len = [5u8, 0];
+        assert!(read_frame_capped(&mut &half_len[..], 64).is_err());
+    }
+
+    #[test]
+    fn cursor_reads_and_bounds() {
+        let mut buf = Vec::new();
+        buf.push(7u8);
+        buf.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        buf.extend_from_slice(&42u64.to_le_bytes());
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.u8().unwrap(), 7);
+        assert_eq!(c.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.remaining(), 8);
+        assert_eq!(c.u64().unwrap(), 42);
+        c.done().unwrap();
+        assert!(c.u8().is_err(), "reads past the end are errors");
+    }
+}
