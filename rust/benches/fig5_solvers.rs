@@ -1,6 +1,8 @@
 //! Bench target for **Figure 5**: training time per epoch by linear solver
 //! (LU, QR, Cholesky, CG) as the embedding dimension grows — on the
 //! native engine and, when artifacts exist, on the XLA/PJRT engine.
+//! Also races the direct engine against the iALS++ subspace engine and
+//! asserts the headline bar: same recall@20 in ≤ 0.5× solve busy-time.
 //!
 //! Paper context: on TPU the MXU makes CG the fastest at large d. On this
 //! CPU substrate the native engine favours Cholesky (lowest flop count);
@@ -21,6 +23,35 @@ fn main() {
     println!("== native engine ==");
     let points = harness::run_fig5(Variant::InDense, 0.002, &dims, 4, 7, None).expect("fig5");
     harness::print_fig5(&points);
+
+    // Headline race: the iALS++ subspace engine must reach the direct
+    // engine's epoch-8 recall@20 in at most half the solve busy-time.
+    println!("\n== solver race (direct vs iALS++) ==");
+    let race = harness::run_solver_race(Variant::InDense, 0.002, 64, 16, 8, 4, 7)
+        .expect("solver race");
+    harness::print_solver_race(&race);
+    let qr = &race[0];
+    let pp = &race[1];
+    assert!(
+        pp.recall_at_20 >= qr.recall_at_20,
+        "iALS++ never reached the direct engine's recall@20 \
+         ({:.4} < {:.4} after {} epochs)",
+        pp.recall_at_20,
+        qr.recall_at_20,
+        pp.epochs_run
+    );
+    assert!(
+        pp.solve_ms <= 0.5 * qr.solve_ms,
+        "iALS++ solve time not under the 0.5× bar: {:.1} ms vs {:.1} ms direct",
+        pp.solve_ms,
+        qr.solve_ms
+    );
+    println!(
+        "iALS++ matched recall@20 {:.4} in {} epochs at {:.2}x the direct engine's solve time",
+        pp.recall_at_20,
+        pp.epochs_run,
+        pp.solve_ms / qr.solve_ms
+    );
 
     if std::path::Path::new("artifacts/manifest.tsv").exists() {
         println!("\n== xla engine (AOT L2 graph + L1 Pallas kernel via PJRT) ==");

@@ -22,7 +22,14 @@
 //! before the section existed — load with an empty recall log, and old
 //! readers ignored trailing bytes, so the format stays compatible in both
 //! directions without a magic bump.
+//!
+//! A second trailing section, `ENGM`, records the solve-engine identity —
+//! [`EngineKind`] plus the iALS++ `block_dim` — so a resume with a
+//! different update strategy is rejected instead of silently blending two
+//! optimization trajectories. Files without it (pre-iALS++) load as
+//! direct-engine checkpoints.
 
+use super::engine::EngineKind;
 use crate::sharding::{ShardData, ShardedTable, Storage};
 use std::io::{Read, Write};
 
@@ -105,6 +112,28 @@ pub type RecallLogEntry = (u64, u32, f64);
 /// Magic of the trailing recall-log section (after both tables).
 const RECALL_SECTION_MAGIC: &[u8; 4] = b"RCLG";
 
+/// Magic of the trailing engine-identity section (after the recall log).
+const ENGINE_SECTION_MAGIC: &[u8; 4] = b"ENGM";
+
+/// Persisted solve-engine identity: which update strategy trained the
+/// checkpointed tables, and (for iALS++) its subspace size. Resume rejects
+/// a mismatch — the two engines walk different optimization trajectories,
+/// and a silent switch would make "resumed ≡ uninterrupted" unprovable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineMeta {
+    pub kind: EngineKind,
+    /// iALS++ subspace size (meaningful only when `kind` is
+    /// [`EngineKind::IalsPp`]; the direct engine records its config value
+    /// but ignores it on compare).
+    pub block_dim: u32,
+}
+
+impl Default for EngineMeta {
+    fn default() -> Self {
+        EngineMeta { kind: EngineKind::Qr, block_dim: 16 }
+    }
+}
+
 /// Save a checkpoint of both tables plus the objective and recall logs.
 pub fn save(
     w: &mut impl Write,
@@ -113,6 +142,7 @@ pub fn save(
     items: &ShardedTable,
     objective_log: &[ObjectiveLogEntry],
     recall_log: &[RecallLogEntry],
+    engine: EngineMeta,
 ) -> std::io::Result<()> {
     w.write_all(b"ALXCKPT2")?;
     w.write_all(&meta.epoch.to_le_bytes())?;
@@ -135,6 +165,9 @@ pub fn save(
         w.write_all(&k.to_le_bytes())?;
         w.write_all(&recall.to_bits().to_le_bytes())?;
     }
+    w.write_all(ENGINE_SECTION_MAGIC)?;
+    w.write_all(&[engine.kind.code()])?;
+    w.write_all(&engine.block_dim.to_le_bytes())?;
     Ok(())
 }
 
@@ -145,6 +178,9 @@ pub struct LoadedCheckpoint {
     pub items: ShardedTable,
     pub objective_log: Vec<ObjectiveLogEntry>,
     pub recall_log: Vec<RecallLogEntry>,
+    /// `None` for files written before the `ENGM` section existed — all
+    /// of which were trained by the direct engine.
+    pub engine: Option<EngineMeta>,
 }
 
 /// Parse the magic, meta header and objective log — everything before
@@ -227,6 +263,27 @@ fn read_recall_section(r: &mut impl Read) -> std::io::Result<Vec<RecallLogEntry>
     Ok(recall_log)
 }
 
+/// Parse the trailing engine-identity section (after the recall log):
+/// absent in pre-iALS++ files (EOF → `None`); when present it must parse
+/// completely and carry a known engine code.
+fn read_engine_section(r: &mut impl Read) -> std::io::Result<Option<EngineMeta>> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let mut tag = [0u8; 4];
+    match read_exact_or_eof(r, &mut tag)? {
+        0 => Ok(None),
+        n if n == tag.len() && &tag == ENGINE_SECTION_MAGIC => {
+            let mut b1 = [0u8; 1];
+            let mut b4 = [0u8; 4];
+            r.read_exact(&mut b1)?;
+            r.read_exact(&mut b4)?;
+            let kind = EngineKind::from_code(b1[0])
+                .ok_or_else(|| bad("unknown engine code in the checkpoint ENGM section"))?;
+            Ok(Some(EngineMeta { kind, block_dim: u32::from_le_bytes(b4) }))
+        }
+        _ => Err(bad("trailing garbage after the recall log")),
+    }
+}
+
 /// Load a checkpoint into fresh resident tables; they are resharded onto
 /// `num_shards` cores (the slice size may differ between save and resume
 /// — uniform sharding makes relayout trivial). Accepts both `ALXCKPT2`
@@ -271,7 +328,8 @@ pub fn load_limited(
     read_table_into(r, &mut users)?;
     read_table_into(r, &mut items)?;
     let recall_log = read_recall_section(r)?;
-    Ok(LoadedCheckpoint { meta, users, items, objective_log, recall_log })
+    let engine = read_engine_section(r)?;
+    Ok(LoadedCheckpoint { meta, users, items, objective_log, recall_log, engine })
 }
 
 /// Load only the meta and the two embedding tables from a checkpoint —
@@ -372,7 +430,8 @@ impl super::Trainer {
             items: self.h.rows as u64,
             storage_bf16: self.cfg.precision.storage() == Storage::Bf16,
         };
-        save(w, &meta, &self.w, &self.h, objective_log, recall_log)
+        let engine = EngineMeta { kind: self.cfg.engine, block_dim: self.cfg.block_dim as u32 };
+        save(w, &meta, &self.w, &self.h, objective_log, recall_log, engine)
     }
 
     /// Restore tables (and the epoch counter) from a checkpoint, returning
@@ -422,6 +481,36 @@ impl super::Trainer {
         // run continues from exactly the checkpointed state.
         self.push_tables()?;
         let recall_log = read_recall_section(r)?;
+        // Engine identity: resuming with a different update strategy (or
+        // a different iALS++ subspace size) silently blends optimization
+        // trajectories — reject instead. Files without the section were
+        // all trained by the direct engine.
+        match read_engine_section(r)? {
+            Some(eng) => {
+                anyhow::ensure!(
+                    eng.kind == self.cfg.engine,
+                    "checkpoint engine mismatch: checkpoint was trained with '{}', \
+                     config wants '{}'",
+                    eng.kind.name(),
+                    self.cfg.engine.name()
+                );
+                if eng.kind == EngineKind::IalsPp {
+                    anyhow::ensure!(
+                        eng.block_dim as usize == self.cfg.block_dim,
+                        "checkpoint block_dim mismatch: checkpoint was trained with \
+                         block_dim={}, config wants block_dim={}",
+                        eng.block_dim,
+                        self.cfg.block_dim
+                    );
+                }
+            }
+            None => anyhow::ensure!(
+                self.cfg.engine == EngineKind::Qr,
+                "checkpoint engine mismatch: checkpoint predates the engine record \
+                 (trained with the direct engine), config wants '{}'",
+                self.cfg.engine.name()
+            ),
+        }
         self.set_epoch(meta.epoch as usize);
         Ok((objective_log, recall_log))
     }
@@ -443,10 +532,11 @@ mod tests {
         let h = table(31, 4, 3, Storage::Bf16, 2);
         let meta = CheckpointMeta { epoch: 5, dim: 4, users: 23, items: 31, storage_bf16: true };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[], &[], EngineMeta::default()).unwrap();
         let ck = load(&mut &buf[..], 3).unwrap();
         assert!(ck.objective_log.is_empty());
         assert!(ck.recall_log.is_empty());
+        assert_eq!(ck.engine, Some(EngineMeta::default()));
         assert_eq!(meta, ck.meta);
         assert!(ck.users.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
         assert!(ck.items.to_dense().max_abs_diff(&h.to_dense()) == 0.0);
@@ -458,7 +548,7 @@ mod tests {
         let h = table(40, 6, 8, Storage::F32, 4);
         let meta = CheckpointMeta { epoch: 1, dim: 6, users: 40, items: 40, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[], &[], EngineMeta::default()).unwrap();
         // Resume on a 3-core slice.
         let ck = load(&mut &buf[..], 3).unwrap();
         assert_eq!(ck.users.num_shards(), 3);
@@ -471,7 +561,7 @@ mod tests {
         let h = table(19, 5, 2, Storage::F32, 22);
         let meta = CheckpointMeta { epoch: 9, dim: 5, users: 17, items: 19, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[], &[], EngineMeta::default()).unwrap();
         let ck = load(&mut &buf[..], 2).unwrap();
         assert_eq!(meta, ck.meta);
         assert!(ck.users.to_dense().max_abs_diff(&u.to_dense()) == 0.0);
@@ -492,9 +582,9 @@ mod tests {
         let ph = ShardedTable::open_bank(&hp, 1).unwrap();
         let meta = CheckpointMeta { epoch: 5, dim: 4, users: 23, items: 31, storage_bf16: true };
         let mut resident = Vec::new();
-        save(&mut resident, &meta, &u, &h, &[], &[]).unwrap();
+        save(&mut resident, &meta, &u, &h, &[], &[], EngineMeta::default()).unwrap();
         let mut spilled = Vec::new();
-        save(&mut spilled, &meta, &pu, &ph, &[], &[]).unwrap();
+        save(&mut spilled, &meta, &pu, &ph, &[], &[], EngineMeta::default()).unwrap();
         assert_eq!(resident, spilled, "checkpoint bytes must not depend on table storage");
         let ck = load(&mut &spilled[..], 3).unwrap();
         assert_eq!(ck.users.to_dense().data, u.to_dense().data);
@@ -508,7 +598,8 @@ mod tests {
         let h = table(31, 4, 3, Storage::Bf16, 62);
         let meta = CheckpointMeta { epoch: 5, dim: 4, users: 23, items: 31, storage_bf16: true };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[(1, Some(2.0))], &[(1, 20, 0.5)]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[(1, Some(2.0))], &[(1, 20, 0.5)], EngineMeta::default())
+            .unwrap();
         let full = load(&mut &buf[..], 3).unwrap();
 
         let (m2, lu, lh) = load_tables(&mut &buf[..], 3, Some(buf.len() as u64), None).unwrap();
@@ -533,7 +624,7 @@ mod tests {
         let h = table(5, 3, 2, Storage::F32, 64);
         let meta = CheckpointMeta { epoch: 1, dim: 3, users: 6, items: 5, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[], &[], EngineMeta::default()).unwrap();
         // Claim a billion users: with the true stream length supplied the
         // header is rejected before any allocation happens.
         buf[20..28].copy_from_slice(&1_000_000_000u64.to_le_bytes());
@@ -554,7 +645,7 @@ mod tests {
         let log = vec![(1u64, Some(123.456f64)), (2, None), (3, Some(f64::MIN_POSITIVE))];
         let recalls = vec![(1u64, 20u32, 0.125f64), (3, 50, f64::MIN_POSITIVE)];
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &log, &recalls).unwrap();
+        save(&mut buf, &meta, &u, &h, &log, &recalls, EngineMeta::default()).unwrap();
         let ck = load(&mut &buf[..], 2).unwrap();
         assert_eq!(log, ck.objective_log);
         assert_eq!(recalls, ck.recall_log);
@@ -566,7 +657,7 @@ mod tests {
         let h = table(4, 2, 1, Storage::F32, 44);
         let meta = CheckpointMeta { epoch: 1, dim: 2, users: 4, items: 4, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[(1, Some(1.0))], &[]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[(1, Some(1.0))], &[], EngineMeta::default()).unwrap();
         // Corrupt the log length (offset: 8 magic + 29 meta) to a huge value.
         buf[37..45].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(load(&mut &buf[..], 1).is_err());
@@ -578,17 +669,19 @@ mod tests {
         let h = table(5, 3, 2, Storage::F32, 46);
         let meta = CheckpointMeta { epoch: 2, dim: 3, users: 6, items: 5, storage_bf16: false };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[], &[]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[], &[], EngineMeta::default()).unwrap();
         // Rewrite as the v1 layout: old magic, no log-length field, and no
-        // trailing recall section (12 bytes: "RCLG" + empty count).
+        // trailing sections (21 bytes: "RCLG" + empty count, then "ENGM" +
+        // engine code + block_dim).
         let mut v1 = Vec::new();
         v1.extend_from_slice(b"ALXCKPT1");
         v1.extend_from_slice(&buf[8..37]); // meta
-        v1.extend_from_slice(&buf[45..buf.len() - 12]); // tables only
+        v1.extend_from_slice(&buf[45..buf.len() - 21]); // tables only
         let ck = load(&mut &v1[..], 2).unwrap();
         assert_eq!(ck.meta, meta);
         assert!(ck.objective_log.is_empty());
         assert!(ck.recall_log.is_empty());
+        assert_eq!(ck.engine, None, "legacy files must load without an engine record");
         assert_eq!(ck.users.to_dense().data, u.to_dense().data);
         assert_eq!(ck.items.to_dense().data, h.to_dense().data);
     }
@@ -599,7 +692,7 @@ mod tests {
         let h = table(5, 3, 2, Storage::Bf16, 32);
         let meta = CheckpointMeta { epoch: 2, dim: 3, users: 6, items: 5, storage_bf16: true };
         let mut buf = Vec::new();
-        save(&mut buf, &meta, &u, &h, &[], &[(1, 20, 0.5)]).unwrap();
+        save(&mut buf, &meta, &u, &h, &[], &[(1, 20, 0.5)], EngineMeta::default()).unwrap();
         // Truncations inside the magic, the header, each table payload and
         // the trailing recall section must all surface as errors, never as
         // silently-short state.
@@ -613,6 +706,73 @@ mod tests {
         }
         // The untruncated file still loads.
         assert!(load(&mut &buf[..], 2).is_ok());
+    }
+
+    #[test]
+    fn engine_meta_roundtrips_and_unknown_code_rejected() {
+        let u = table(6, 3, 2, Storage::F32, 71);
+        let h = table(5, 3, 2, Storage::F32, 72);
+        let meta = CheckpointMeta { epoch: 1, dim: 3, users: 6, items: 5, storage_bf16: false };
+        let eng = EngineMeta { kind: EngineKind::IalsPp, block_dim: 32 };
+        let mut buf = Vec::new();
+        save(&mut buf, &meta, &u, &h, &[], &[], eng).unwrap();
+        let ck = load(&mut &buf[..], 2).unwrap();
+        assert_eq!(ck.engine, Some(eng));
+        // Corrupt the engine code (5th-from-last byte: code + block_dim u32
+        // trail the file) — the section must be rejected, not defaulted.
+        let n = buf.len();
+        buf[n - 5] = 0xEE;
+        assert!(load(&mut &buf[..], 2).is_err());
+    }
+
+    #[test]
+    fn trainer_rejects_engine_mismatch_on_resume() {
+        use crate::als::{EngineKind, TrainConfig};
+        use crate::sparse::Csr;
+        use crate::topo::Topology;
+        let m = Csr::from_coo(
+            12,
+            10,
+            &(0..12u32).flat_map(|r| [(r, 0u32, 1.0), (r, r % 10, 1.0)]).collect::<Vec<_>>(),
+        );
+        let cfg = TrainConfig {
+            dim: 8,
+            epochs: 1,
+            batch_rows: 8,
+            batch_width: 4,
+            block_dim: 4,
+            ..TrainConfig::default()
+        };
+        let tr = crate::als::Trainer::new(&m, cfg.clone(), Topology::new(2)).unwrap();
+        let mut buf = Vec::new();
+        tr.save_checkpoint(&mut buf).unwrap();
+
+        // qr checkpoint into an ialspp config → rejected.
+        let ialspp = TrainConfig { engine: EngineKind::IalsPp, ..cfg.clone() };
+        let mut t2 = crate::als::Trainer::new(&m, ialspp.clone(), Topology::new(2)).unwrap();
+        let err = t2.load_checkpoint(&mut &buf[..]).unwrap_err();
+        assert!(err.to_string().contains("engine mismatch"), "{err}");
+
+        // ialspp checkpoint into a different block_dim → rejected; same
+        // block_dim → accepted.
+        let tr2 = crate::als::Trainer::new(&m, ialspp.clone(), Topology::new(2)).unwrap();
+        let mut buf2 = Vec::new();
+        tr2.save_checkpoint(&mut buf2).unwrap();
+        let other_block = TrainConfig { block_dim: 8, ..ialspp.clone() };
+        let mut t3 = crate::als::Trainer::new(&m, other_block, Topology::new(2)).unwrap();
+        let err = t3.load_checkpoint(&mut &buf2[..]).unwrap_err();
+        assert!(err.to_string().contains("block_dim mismatch"), "{err}");
+        let mut t4 = crate::als::Trainer::new(&m, ialspp, Topology::new(2)).unwrap();
+        t4.load_checkpoint(&mut &buf2[..]).unwrap();
+
+        // A legacy file (no ENGM section) counts as a direct-engine
+        // checkpoint: qr config accepts it, ialspp rejects it.
+        let legacy = &buf[..buf.len() - 9];
+        let mut t5 = crate::als::Trainer::new(&m, cfg.clone(), Topology::new(2)).unwrap();
+        t5.load_checkpoint(&mut &legacy[..]).unwrap();
+        let ialspp2 = TrainConfig { engine: EngineKind::IalsPp, ..cfg };
+        let mut t6 = crate::als::Trainer::new(&m, ialspp2, Topology::new(2)).unwrap();
+        assert!(t6.load_checkpoint(&mut &legacy[..]).is_err());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! identical, which this module's tests verify.
 
 use crate::collectives::CommStats;
-use crate::linalg::mat::{symmetrize_upper, Mat};
+use crate::linalg::mat::{symmetrize_upper, syrk_rankk_upper, Mat, SYRK_CHUNK_ROWS};
 use crate::linalg::{batched_solve, SolveOptions, SolverKind};
 use crate::sharding::ShardedTable;
 use crate::sparse::Csr;
@@ -38,7 +38,7 @@ pub fn local_stats_pass(
 ) {
     let d = fixed.dim;
     let m = fixed.num_shards();
-    let mut row_buf = vec![0.0f32; d];
+    let mut stage = vec![0.0f32; SYRK_CHUNK_ROWS * d];
 
     // Process rows in fixed-size rounds so the all-reduced statistic
     // buffer has a static shape (the same XLA constraint as the batches).
@@ -66,23 +66,28 @@ pub fn local_stats_pass(
                 }
                 ablock[i * d + i] += lambda;
             }
+            // Stage embeddings in SYRK_CHUNK_ROWS groups and flush through
+            // the blocked rank-k kernel — bitwise identical to the old
+            // per-entry rank-1 loop (see `syrk_rankk_upper`), just faster.
+            let mut staged = 0usize;
             for (&col, &y) in matrix
                 .row_indices(row as usize)
                 .iter()
                 .zip(matrix.row_values(row as usize))
             {
-                fixed.read_row(col as usize, &mut row_buf);
-                for i in 0..d {
-                    let hi = row_buf[i];
-                    bblock[i] += y * hi;
-                    if hi == 0.0 {
-                        continue;
-                    }
-                    let arow = &mut ablock[i * d + i..(i + 1) * d];
-                    for (av, &hv) in arow.iter_mut().zip(&row_buf[i..]) {
-                        *av += hi * hv;
-                    }
+                let dst = &mut stage[staged * d..(staged + 1) * d];
+                fixed.read_row(col as usize, dst);
+                for (bi, &hv) in bblock.iter_mut().zip(dst.iter()) {
+                    *bi += y * hv;
                 }
+                staged += 1;
+                if staged == SYRK_CHUNK_ROWS {
+                    syrk_rankk_upper(ablock, d, &stage);
+                    staged = 0;
+                }
+            }
+            if staged > 0 {
+                syrk_rankk_upper(ablock, d, &stage[..staged * d]);
             }
             symmetrize_upper(&mut ablock[..], d);
         }

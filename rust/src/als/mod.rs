@@ -19,7 +19,7 @@ pub mod stats;
 pub mod trainer;
 
 pub use checkpoint::{CheckpointMeta, LoadedCheckpoint, ObjectiveLogEntry, RecallLogEntry};
-pub use engine::{NativeEngine, SolveEngine};
+pub use engine::{EngineKind, IalsPpEngine, NativeEngine, SolveEngine};
 pub use trainer::{EpochStats, TrainConfig, Trainer};
 
 pub use crate::linalg::SolverKind;

@@ -15,7 +15,7 @@
 //! trained tables and epoch history are bitwise identical for every thread
 //! count — `ALX_THREADS=1` is the serial reference.
 
-use super::engine::{NativeEngine, SolveEngine};
+use super::engine::{EngineKind, IalsPpEngine, NativeEngine, SolveEngine};
 use super::PrecisionPolicy;
 use crate::collectives::{
     record_gather_traffic, record_scatter_traffic, Collectives, CommStats, LocalCollectives,
@@ -46,6 +46,13 @@ pub struct TrainConfig {
     pub alpha: f32,
     /// Linear solver (paper recommends CG).
     pub solver: SolverKind,
+    /// Update strategy: full-dimension direct solves
+    /// ([`EngineKind::Qr`], the default) or the iALS++ subspace solver
+    /// ([`EngineKind::IalsPp`]).
+    pub engine: EngineKind,
+    /// iALS++ subspace size (must divide `dim`; ignored under
+    /// [`EngineKind::Qr`]).
+    pub block_dim: usize,
     /// Numeric policy (paper default: Mixed).
     pub precision: PrecisionPolicy,
     /// Dense-batch rows B (static shape).
@@ -79,6 +86,8 @@ impl Default for TrainConfig {
             lambda: 1e-3,
             alpha: 1e-4,
             solver: SolverKind::Cg,
+            engine: EngineKind::Qr,
+            block_dim: 16,
             precision: PrecisionPolicy::Mixed,
             batch_rows: 256,
             batch_width: 16,
@@ -124,6 +133,16 @@ pub struct EpochStats {
     pub comm_bytes: u64,
     /// Predicted epoch seconds on the simulated TPU slice.
     pub simulated_seconds: f64,
+    /// Per-stage busy-time breakdown for this epoch, in milliseconds,
+    /// summed across worker threads (so a pipelined epoch's buckets can
+    /// exceed `seconds`×1000). "gather" is the transport's explicit row
+    /// materialization (≈0 on the Local backend, whose gather is fused
+    /// into "stats"), "stats" the gramian accumulation, "solve" the
+    /// factorizations, "scatter" the write-back.
+    pub gather_ms: f64,
+    pub stats_ms: f64,
+    pub solve_ms: f64,
+    pub scatter_ms: f64,
 }
 
 /// Distributed ALS trainer over a (simulated) TPU slice.
@@ -146,6 +165,10 @@ pub struct Trainer {
     pub h: ShardedTable,
     batcher: DenseBatcher,
     engine: Box<dyn SolveEngine>,
+    /// Whether the engine reports its own "stats"/"solve" profiler
+    /// buckets (native engines) or the shard pass times the whole engine
+    /// call as "solve" (XLA).
+    engine_profiled: bool,
     pub comm: CommStats,
     pub profiler: Arc<Profiler>,
     /// The transport behind the collectives: [`LocalCollectives`] by
@@ -172,7 +195,17 @@ impl Trainer {
         let total = threads::resolve_workers(cfg.threads);
         let shard_workers = topo.num_cores.clamp(1, total.max(1));
         let inner = (total / shard_workers).max(1);
-        Box::new(NativeEngine::with_workers(cfg.solver, cfg.solve_options(), inner))
+        match cfg.engine {
+            EngineKind::Qr => {
+                Box::new(NativeEngine::with_workers(cfg.solver, cfg.solve_options(), inner))
+            }
+            EngineKind::IalsPp => Box::new(IalsPpEngine::with_workers(
+                cfg.solver,
+                cfg.solve_options(),
+                cfg.block_dim,
+                inner,
+            )),
+        }
     }
 
     /// Build a trainer with an explicit engine (e.g. `runtime::XlaEngine`).
@@ -235,6 +268,14 @@ impl Trainer {
         table_spill: Option<(&Path, usize)>,
     ) -> anyhow::Result<Trainer> {
         anyhow::ensure!(cfg.dim > 0 && cfg.batch_rows > 0 && cfg.batch_width > 0);
+        if cfg.engine == EngineKind::IalsPp {
+            anyhow::ensure!(
+                cfg.block_dim > 0 && cfg.block_dim <= cfg.dim && cfg.dim % cfg.block_dim == 0,
+                "solver.block_dim must be a divisor of dim in 1..=dim (got block_dim={} dim={})",
+                cfg.block_dim,
+                cfg.dim,
+            );
+        }
         anyhow::ensure!(train.rows() > 0 && train.cols() > 0, "empty training matrix");
         anyhow::ensure!(
             train_t.rows() == train.cols()
@@ -314,6 +355,14 @@ impl Trainer {
             }
         };
 
+        // Hand the engine the trainer's profiler so the native engines can
+        // split their wall-clock into "stats" and "solve"; an engine that
+        // can't (the XLA engine runs one fused graph) declines and the
+        // shard pass times the whole call as "solve" instead.
+        let profiler = Arc::new(Profiler::new());
+        let mut engine = engine;
+        let engine_profiled = engine.attach_profiler(&profiler);
+
         Ok(Trainer {
             batcher: DenseBatcher::new(cfg.batch_rows, cfg.batch_width),
             train,
@@ -323,8 +372,9 @@ impl Trainer {
             topo,
             cfg,
             engine,
+            engine_profiled,
             comm: CommStats::new(),
-            profiler: Arc::new(Profiler::new()),
+            profiler,
             fabric: Arc::new(LocalCollectives),
             epoch: 0,
         })
@@ -402,6 +452,7 @@ impl Trainer {
     #[allow(clippy::too_many_arguments)]
     fn pass(
         engine: &dyn SolveEngine,
+        engine_profiled: bool,
         batcher: &DenseBatcher,
         profiler: &Arc<Profiler>,
         comm: &CommStats,
@@ -466,9 +517,9 @@ impl Trainer {
                                 matrix.prefetch(next);
                             }
                             Self::shard_pass(
-                                engine, batcher, profiler, comm, cfg, fabric, matrix, piece,
-                                target_id, view, fixed_id, fixed, gramian, dim, elem_bytes,
-                                num_shards, inline_scatter,
+                                engine, engine_profiled, batcher, profiler, comm, cfg, fabric,
+                                matrix, piece, target_id, view, fixed_id, fixed, gramian, dim,
+                                elem_bytes, num_shards, inline_scatter,
                             )?;
                         }
                     })
@@ -504,6 +555,7 @@ impl Trainer {
     #[allow(clippy::too_many_arguments)]
     fn shard_pass(
         engine: &dyn SolveEngine,
+        engine_profiled: bool,
         batcher: &DenseBatcher,
         profiler: &Arc<Profiler>,
         comm: &CommStats,
@@ -543,11 +595,19 @@ impl Trainer {
         let solve = |batch: &crate::densebatch::DenseBatch| -> anyhow::Result<Mat> {
             fabric.check_health()?;
             record_gather_traffic(fixed, batch.items.len(), comm);
-            let gathered = fabric.gather_rows(fixed_id, fixed, &batch.items)?;
-            let sols = profiler.time("solve", || match &gathered {
+            // "gather" times the transport's explicit row materialization;
+            // on the Local backend the gather is fused into the engine's
+            // statistics accumulation and shows up under "stats" instead.
+            let gathered =
+                profiler.time("gather", || fabric.gather_rows(fixed_id, fixed, &batch.items))?;
+            let run = || match &gathered {
                 None => engine.solve_batch_fused(batch, fixed, gramian, cfg.lambda, cfg.alpha),
                 Some(rows) => engine.solve_batch(batch, rows, gramian, cfg.lambda, cfg.alpha),
-            })?;
+            };
+            // A profiler-attached engine splits its own time into "stats"
+            // and "solve"; otherwise the whole call is "solve".
+            let sols =
+                if engine_profiled { run() } else { profiler.time("solve", run) }?;
             record_scatter_traffic(batch.segment_rows.len(), dim, elem_bytes, num_shards, comm);
             Ok(sols)
         };
@@ -618,6 +678,7 @@ impl Trainer {
     pub fn run_epoch(&mut self) -> anyhow::Result<EpochStats> {
         let timer = Timer::start();
         let comm_before = self.comm.total_bytes();
+        let prof_before = self.profiler.snapshot();
 
         let fabric = Arc::clone(&self.fabric);
 
@@ -627,6 +688,7 @@ impl Trainer {
             .time("gramian", || self.reduced_gramian_via(TableId::H, &self.h, Some(&self.comm)))?;
         Self::pass(
             self.engine.as_ref(),
+            self.engine_profiled,
             &self.batcher,
             &self.profiler,
             &self.comm,
@@ -646,6 +708,7 @@ impl Trainer {
             .time("gramian", || self.reduced_gramian_via(TableId::W, &self.w, Some(&self.comm)))?;
         Self::pass(
             self.engine.as_ref(),
+            self.engine_profiled,
             &self.batcher,
             &self.profiler,
             &self.comm,
@@ -668,6 +731,15 @@ impl Trainer {
         fabric.sync_table(TableId::H, &mut self.h)?;
 
         self.epoch += 1;
+        // Per-stage deltas against the epoch-start snapshot ("objective"
+        // time below is deliberately excluded — it runs after the take).
+        let prof_after = self.profiler.snapshot();
+        let bucket_ms = |name: &str| -> f64 {
+            let secs = |snap: &[(&'static str, f64, u64)]| {
+                snap.iter().find(|(n, _, _)| *n == name).map_or(0.0, |(_, s, _)| *s)
+            };
+            (secs(&prof_after) - secs(&prof_before)) * 1e3
+        };
         let objective =
             if self.cfg.compute_objective { Some(self.objective()) } else { None };
         let stats = EpochStats {
@@ -676,13 +748,22 @@ impl Trainer {
             objective,
             comm_bytes: self.comm.total_bytes() - comm_before,
             simulated_seconds: self.simulated_epoch_seconds(),
+            gather_ms: bucket_ms("gather"),
+            stats_ms: bucket_ms("stats"),
+            solve_ms: bucket_ms("solve"),
+            scatter_ms: bucket_ms("sharded_scatter"),
         };
         crate::log_info!(
-            "epoch {} done in {:.2}s obj={:?} comm={}",
+            "epoch {} done in {:.2}s obj={:?} comm={} \
+             [gather {:.0}ms | stats {:.0}ms | solve {:.0}ms | scatter {:.0}ms]",
             stats.epoch,
             stats.seconds,
             stats.objective,
-            crate::util::stats::human_bytes(stats.comm_bytes)
+            crate::util::stats::human_bytes(stats.comm_bytes),
+            stats.gather_ms,
+            stats.stats_ms,
+            stats.solve_ms,
+            stats.scatter_ms,
         );
         Ok(stats)
     }

@@ -6,7 +6,7 @@
 //! `[section]` headers (flattened to `section.key`), `#` comments, quoted
 //! or bare strings, ints, floats, booleans.
 
-use crate::als::{PrecisionPolicy, TrainConfig};
+use crate::als::{EngineKind, PrecisionPolicy, TrainConfig};
 use crate::dist::{DistConfig, DistMode};
 use crate::linalg::SolverKind;
 use crate::serving::ServeConfig;
@@ -319,6 +319,26 @@ impl AlxConfig {
         if let Some(v) = kv.get_usize("train.feed_depth")? {
             anyhow::ensure!(v >= 1, "train.feed_depth must be >= 1");
             cfg.train.feed_depth = v;
+        }
+        if let Some(v) = kv.get("solver.engine") {
+            cfg.train.engine = EngineKind::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("unknown solver.engine '{v}' (valid: qr, ialspp)")
+            })?;
+        }
+        if let Some(v) = kv.get_usize("solver.block_dim")? {
+            anyhow::ensure!(v >= 1, "solver.block_dim must be >= 1");
+            cfg.train.block_dim = v;
+        }
+        if cfg.train.engine == EngineKind::IalsPp {
+            // Surface bad subspace shapes at config time, not mid-epoch.
+            anyhow::ensure!(
+                cfg.train.block_dim <= cfg.train.dim
+                    && cfg.train.dim % cfg.train.block_dim == 0,
+                "solver.block_dim must be a divisor of train.dim in 1..=train.dim \
+                 (got block_dim={} dim={})",
+                cfg.train.block_dim,
+                cfg.train.dim
+            );
         }
         if let Some(v) = kv.get("engine.kind") {
             anyhow::ensure!(v == "native" || v == "xla", "engine.kind must be native|xla");
@@ -636,6 +656,57 @@ heartbeat_ms = 250
         let mut bad = KvConfig::default();
         bad.set("dist.mode", "tcp");
         assert!(AlxConfig::from_kv(&bad).is_err());
+    }
+
+    #[test]
+    fn solver_section_parses_and_validates() {
+        let kv = KvConfig::parse(
+            r#"
+[train]
+dim = 64
+
+[solver]
+engine = "ialspp"
+block_dim = 16
+"#,
+        )
+        .unwrap();
+        let cfg = AlxConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.train.engine, EngineKind::IalsPp);
+        assert_eq!(cfg.train.block_dim, 16);
+
+        let defaults = AlxConfig::from_kv(&KvConfig::default()).unwrap();
+        assert_eq!(defaults.train.engine, EngineKind::Qr);
+        assert_eq!(defaults.train.block_dim, TrainConfig::default().block_dim);
+
+        // Unknown engine names fail fast and name the valid options.
+        let mut bad = KvConfig::default();
+        bad.set("solver.engine", "sgd");
+        let err = AlxConfig::from_kv(&bad).unwrap_err().to_string();
+        assert!(err.contains("valid: qr, ialspp"), "{err}");
+
+        // block_dim = 0 is rejected regardless of engine.
+        let mut bad = KvConfig::default();
+        bad.set("solver.block_dim", "0");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+
+        // Under ialspp the block must divide the embedding dimension...
+        let mut bad = KvConfig::default();
+        bad.set("train.dim", "64");
+        bad.set("solver.engine", "ialspp");
+        bad.set("solver.block_dim", "24");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        // ...and cannot exceed it.
+        let mut bad = KvConfig::default();
+        bad.set("train.dim", "16");
+        bad.set("solver.engine", "ialspp");
+        bad.set("solver.block_dim", "32");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        // The same shapes are fine under the default direct engine.
+        let mut ok = KvConfig::default();
+        ok.set("train.dim", "64");
+        ok.set("solver.block_dim", "24");
+        assert!(AlxConfig::from_kv(&ok).is_ok());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! `benches/` binaries and the `alx` CLI are thin wrappers around these so
 //! EXPERIMENTS.md can cite a single entry point per artifact.
 
-use crate::als::{PrecisionPolicy, TrainConfig, Trainer};
+use crate::als::{EngineKind, PrecisionPolicy, TrainConfig, Trainer};
 use crate::config::AlxConfig;
 use crate::coordinator::Coordinator;
 use crate::eval::EvalConfig;
@@ -303,6 +303,121 @@ pub fn print_fig5(points: &[Fig5Point]) {
             }
         }
         println!();
+    }
+}
+
+// --------------------------------------------------- Figure 5 solver race
+
+/// One contestant of the solver race (`benches/fig5_solvers.rs`).
+#[derive(Clone, Debug)]
+pub struct SolverRacePoint {
+    pub engine: EngineKind,
+    /// Subspace size (`= dim` for the direct engine).
+    pub block_dim: usize,
+    /// Epochs this contestant actually trained.
+    pub epochs_run: usize,
+    /// Recall@20 after the last epoch.
+    pub recall_at_20: f64,
+    /// Cumulative solve-stage busy-time (ms, summed across threads).
+    pub solve_ms: f64,
+}
+
+/// Race the direct engine against the iALS++ subspace engine on one
+/// split: the direct engine trains for `epochs` epochs to set the
+/// recall@20 bar, then iALS++ trains until it matches the bar (capped at
+/// `2 × epochs`). Solve time is the profiler's "solve" bucket, so the
+/// comparison excludes the gather/statistics/scatter work that is
+/// identical between engines.
+pub fn run_solver_race(
+    variant: Variant,
+    scale: f64,
+    dim: usize,
+    block_dim: usize,
+    epochs: usize,
+    cores: usize,
+    seed: u64,
+) -> anyhow::Result<Vec<SolverRacePoint>> {
+    let spec = VariantSpec::preset(variant).scaled(scale);
+    let graph = generate(&spec, seed);
+    let split = split_strong_generalization(&graph.adjacency, 0.9, 0.25, seed ^ 0x9);
+    let base = TrainConfig {
+        dim,
+        lambda: 1e-3,
+        alpha: 1e-3,
+        solver: SolverKind::Qr,
+        precision: PrecisionPolicy::F32,
+        batch_rows: 64,
+        batch_width: 8,
+        compute_objective: false,
+        ..TrainConfig::default()
+    };
+    let recall20 = |trainer: &Trainer| {
+        let recalls = crate::eval::evaluate(trainer, &split.test, &EvalConfig::default());
+        recalls.iter().find(|r| r.k == 20).map(|r| r.recall).unwrap_or(0.0)
+    };
+
+    // Contestant 1: full-dimension direct solves set the bar.
+    let cfg = TrainConfig { epochs, ..base.clone() };
+    let mut qr = Trainer::new(&split.train, cfg, Topology::new(cores))?;
+    let mut qr_solve_ms = 0.0;
+    for _ in 0..epochs {
+        qr_solve_ms += qr.run_epoch()?.solve_ms;
+    }
+    let target = recall20(&qr);
+
+    // Contestant 2: iALS++ chases the same bar in subspace steps.
+    let cap = 2 * epochs;
+    let cfg = TrainConfig {
+        epochs: cap,
+        engine: EngineKind::IalsPp,
+        block_dim,
+        ..base.clone()
+    };
+    let mut pp = Trainer::new(&split.train, cfg, Topology::new(cores))?;
+    let mut pp_solve_ms = 0.0;
+    let mut pp_epochs = 0;
+    let mut pp_recall = 0.0;
+    while pp_epochs < cap {
+        pp_solve_ms += pp.run_epoch()?.solve_ms;
+        pp_epochs += 1;
+        pp_recall = recall20(&pp);
+        if pp_recall >= target {
+            break;
+        }
+    }
+    Ok(vec![
+        SolverRacePoint {
+            engine: EngineKind::Qr,
+            block_dim: dim,
+            epochs_run: epochs,
+            recall_at_20: target,
+            solve_ms: qr_solve_ms,
+        },
+        SolverRacePoint {
+            engine: EngineKind::IalsPp,
+            block_dim,
+            epochs_run: pp_epochs,
+            recall_at_20: pp_recall,
+            solve_ms: pp_solve_ms,
+        },
+    ])
+}
+
+pub fn print_solver_race(points: &[SolverRacePoint]) {
+    println!("\nFigure 5 (solver race): solve busy-time to reach the direct engine's recall");
+    println!(
+        "{:<10} {:>9} {:>7} {:>10} {:>11}",
+        "engine", "block_dim", "epochs", "recall@20", "solve(ms)"
+    );
+    for p in points {
+        println!(
+            "{:<10} {:>9} {:>7} {:>10.4} {:>11.1}",
+            p.engine.name(),
+            p.block_dim,
+            p.epochs_run,
+            p.recall_at_20,
+            p.solve_ms
+        );
     }
 }
 

@@ -49,7 +49,9 @@ pub mod webgraph;
 
 /// Most commonly used types, re-exported for examples and downstream users.
 pub mod prelude {
-    pub use crate::als::{EpochStats, PrecisionPolicy, SolverKind, TrainConfig, Trainer};
+    pub use crate::als::{
+        EngineKind, EpochStats, PrecisionPolicy, SolverKind, TrainConfig, Trainer,
+    };
     pub use crate::collectives::{Collectives, CommSnapshot, TableId};
     pub use crate::config::AlxConfig;
     pub use crate::coordinator::{

@@ -85,12 +85,17 @@ impl Mat {
         out
     }
 
-    /// Gramian `selfᵀ · self` exploiting symmetry (SYRK).
+    /// Gramian `selfᵀ · self` exploiting symmetry (SYRK). Rows feed the
+    /// blocked rank-k kernel in contiguous chunks — bitwise identical to
+    /// row-at-a-time [`syrk_update`]s, one pass over `G` per chunk instead
+    /// of one per row.
     pub fn gramian(&self) -> Mat {
         let d = self.cols;
         let mut g = Mat::zeros(d, d);
-        for r in 0..self.rows {
-            syrk_update(&mut g.data, self.row(r), 1.0);
+        if d > 0 {
+            for chunk in self.data.chunks(SYRK_CHUNK_ROWS * d) {
+                syrk_rankk_upper(&mut g.data, d, chunk);
+            }
         }
         // Mirror the upper triangle into the lower.
         for i in 0..d {
@@ -191,6 +196,142 @@ pub fn syrk_update(g: &mut [f32], h: &[f32], w: f32) {
     }
 }
 
+/// Rows per chunk fed to [`syrk_rankk_upper`] by the gramian/stats hot
+/// paths: 16 × d=128 × 4 B = 8 KiB of staged rows, comfortably L1.
+pub const SYRK_CHUNK_ROWS: usize = 16;
+
+/// Rank-k symmetric update of the packed row-major `d×d` buffer:
+/// `G[i,j] += Σ_s rows[s][i]·rows[s][j]` for the upper triangle `j ≥ i`,
+/// where `rows` packs `k = rows.len()/d` rows back to back.
+///
+/// **Bitwise identical** to `k` sequential `syrk_update(g, row_s, 1.0)`
+/// calls: every `G[i,j]` entry receives its per-row contributions as
+/// separate IEEE f32 multiply-then-add operations in row (slot) order,
+/// with the same `h[i] == 0.0` row skip, and nothing is reassociated or
+/// FMA-contracted. The win is memory traffic: one read+write pass over
+/// `G`'s upper triangle per *chunk* of k rows instead of per row — the
+/// entry stays in a register across all k contributions.
+///
+/// With `--features simd` on x86_64 an AVX2 variant is dispatched at
+/// runtime; its lane-vertical accumulation performs the same scalar
+/// operation sequence per entry, so it is bitwise identical too (proven
+/// by `simd_dispatch_matches_scalar` here and the SIMD identity test in
+/// `tests/solver_equivalence.rs`).
+pub fn syrk_rankk_upper(g: &mut [f32], d: usize, rows: &[f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::avx2_available() {
+            // SAFETY: AVX2 presence checked at runtime.
+            unsafe { simd::syrk_rankk_upper_avx2(g, d, rows) };
+            return;
+        }
+    }
+    syrk_rankk_upper_scalar(g, d, rows)
+}
+
+/// Scalar reference for [`syrk_rankk_upper`]; public so the SIMD path can
+/// be proven bitwise-identical against it regardless of feature flags.
+pub fn syrk_rankk_upper_scalar(g: &mut [f32], d: usize, rows: &[f32]) {
+    if d == 0 {
+        return;
+    }
+    debug_assert_eq!(g.len(), d * d);
+    debug_assert_eq!(rows.len() % d, 0);
+    let k = rows.len() / d;
+    const NB: usize = 16;
+    for i in 0..d {
+        let grow = &mut g[i * d..(i + 1) * d];
+        let mut j = i;
+        // Full register-blocked tiles: a fixed-size accumulator array the
+        // compiler keeps in vector registers (constant trip count).
+        while j + NB <= d {
+            let mut acc = [0.0f32; NB];
+            acc.copy_from_slice(&grow[j..j + NB]);
+            for s in 0..k {
+                let hrow = &rows[s * d..(s + 1) * d];
+                let hi = hrow[i];
+                if hi == 0.0 {
+                    continue;
+                }
+                let hj = &hrow[j..j + NB];
+                for t in 0..NB {
+                    acc[t] += hi * hj[t];
+                }
+            }
+            grow[j..j + NB].copy_from_slice(&acc);
+            j += NB;
+        }
+        // Tail entries one at a time, contributions still in slot order.
+        while j < d {
+            let mut a = grow[j];
+            for s in 0..k {
+                let hi = rows[s * d + i];
+                if hi == 0.0 {
+                    continue;
+                }
+                a += hi * rows[s * d + j];
+            }
+            grow[j] = a;
+            j += 1;
+        }
+    }
+}
+
+/// AVX2 variant of the rank-k update (`--features simd`, x86_64 only).
+/// Uses `_mm256_mul_ps` + `_mm256_add_ps` — never FMA — with lane-vertical
+/// accumulation, so each `G[i,j]` sees exactly the scalar kernel's
+/// operation sequence and the result is bitwise identical.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    pub fn avx2_available() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn syrk_rankk_upper_avx2(g: &mut [f32], d: usize, rows: &[f32]) {
+        use std::arch::x86_64::*;
+        if d == 0 {
+            return;
+        }
+        debug_assert_eq!(g.len(), d * d);
+        debug_assert_eq!(rows.len() % d, 0);
+        let k = rows.len() / d;
+        for i in 0..d {
+            let grow = &mut g[i * d..(i + 1) * d];
+            let mut j = i;
+            while j + 16 <= d {
+                let mut acc0 = _mm256_loadu_ps(grow.as_ptr().add(j));
+                let mut acc1 = _mm256_loadu_ps(grow.as_ptr().add(j + 8));
+                for s in 0..k {
+                    let hi = *rows.get_unchecked(s * d + i);
+                    if hi == 0.0 {
+                        continue;
+                    }
+                    let vhi = _mm256_set1_ps(hi);
+                    let hj = rows.as_ptr().add(s * d + j);
+                    acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(vhi, _mm256_loadu_ps(hj)));
+                    acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(vhi, _mm256_loadu_ps(hj.add(8))));
+                }
+                _mm256_storeu_ps(grow.as_mut_ptr().add(j), acc0);
+                _mm256_storeu_ps(grow.as_mut_ptr().add(j + 8), acc1);
+                j += 16;
+            }
+            while j < d {
+                let mut a = grow[j];
+                for s in 0..k {
+                    let hi = *rows.get_unchecked(s * d + i);
+                    if hi == 0.0 {
+                        continue;
+                    }
+                    a += hi * *rows.get_unchecked(s * d + j);
+                }
+                grow[j] = a;
+                j += 1;
+            }
+        }
+    }
+}
+
 /// Mirror the upper triangle of a packed `d×d` buffer into the lower.
 pub fn symmetrize_upper(g: &mut [f32], d: usize) {
     debug_assert_eq!(g.len(), d * d);
@@ -271,6 +412,70 @@ mod tests {
             let b = vec![2.0f32; n];
             let expect: f32 = (0..n).map(|i| 2.0 * i as f32).sum();
             assert_eq!(dot(&a, &b), expect);
+        }
+    }
+
+    #[test]
+    fn rankk_update_bitwise_equals_sequential_rank1() {
+        let mut rng = Pcg64::new(77);
+        // Cover sub-tile dims, tile-boundary dims and tails, with and
+        // without exact zeros (the row-skip path must match exactly).
+        for &d in &[1usize, 3, 7, 15, 16, 17, 33, 48, 64] {
+            for &k in &[1usize, 2, 5, 16, 31] {
+                let mut rows: Vec<f32> =
+                    (0..k * d).map(|_| rng.next_normal() as f32).collect();
+                // Sprinkle exact zeros and a negative zero.
+                for idx in (0..rows.len()).step_by(7) {
+                    rows[idx] = 0.0;
+                }
+                if !rows.is_empty() {
+                    rows[0] = -0.0;
+                }
+                let mut g_ref: Vec<f32> =
+                    (0..d * d).map(|_| rng.next_normal() as f32).collect();
+                let mut g_blk = g_ref.clone();
+                for s in 0..k {
+                    syrk_update(&mut g_ref, &rows[s * d..(s + 1) * d], 1.0);
+                }
+                syrk_rankk_upper_scalar(&mut g_blk, d, &rows);
+                assert_eq!(g_ref, g_blk, "blocked kernel diverges at d={d} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dispatch_matches_scalar() {
+        // With `--features simd` this pins AVX2 == scalar bitwise; without
+        // it the dispatcher must be a transparent alias of the scalar path.
+        let mut rng = Pcg64::new(78);
+        for &d in &[8usize, 16, 24, 31, 64, 128] {
+            let k = 16;
+            let rows: Vec<f32> = (0..k * d)
+                .map(|i| if i % 11 == 0 { 0.0 } else { rng.next_normal() as f32 })
+                .collect();
+            let g0: Vec<f32> = (0..d * d).map(|_| rng.next_normal() as f32).collect();
+            let mut g_scalar = g0.clone();
+            let mut g_dispatch = g0;
+            syrk_rankk_upper_scalar(&mut g_scalar, d, &rows);
+            syrk_rankk_upper(&mut g_dispatch, d, &rows);
+            assert_eq!(g_scalar, g_dispatch, "dispatch diverges at d={d}");
+        }
+    }
+
+    #[test]
+    fn gramian_unchanged_by_blocked_kernel() {
+        // The blocked gramian must produce the exact bits of the
+        // row-at-a-time formulation it replaced.
+        let mut rng = Pcg64::new(79);
+        for &(rows, d) in &[(1usize, 4usize), (17, 6), (40, 16), (100, 33)] {
+            let a = Mat::randn(rows, d, 1.0, &mut rng);
+            let g = a.gramian();
+            let mut g_ref = vec![0.0f32; d * d];
+            for r in 0..rows {
+                syrk_update(&mut g_ref, a.row(r), 1.0);
+            }
+            symmetrize_upper(&mut g_ref, d);
+            assert_eq!(g.data, g_ref, "gramian diverges at {rows}x{d}");
         }
     }
 

@@ -10,8 +10,8 @@
 pub mod mat;
 pub mod solvers;
 
-pub use mat::{Mat, Vecf};
+pub use mat::{syrk_rankk_upper, syrk_rankk_upper_scalar, syrk_update, Mat, Vecf, SYRK_CHUNK_ROWS};
 pub use solvers::{
-    batched_solve, batched_solve_parallel, solve_cg, solve_cholesky, solve_lu, solve_qr,
-    SolveOptions, SolverKind,
+    batched_ialspp_parallel, batched_solve, batched_solve_parallel, ialspp_solve, solve_cg,
+    solve_cholesky, solve_lu, solve_qr, SolveOptions, SolverKind,
 };

@@ -345,6 +345,94 @@ pub fn batched_solve_parallel(
     out
 }
 
+/// iALS++ subspace solve (Rendle et al., arxiv 2110.14044): instead of a
+/// full `d×d` factorization, run `sweeps` rounds of block-coordinate
+/// (block Gauss-Seidel) updates over `d / block_dim` blocks of size
+/// `block_dim`, solving one `block_dim × block_dim` subsystem per block
+/// with `kind` as the sub-block solver. Starting from `x = 0`, a fixed
+/// sweep count makes the result a pure function of `(A, b)` — no
+/// tolerance-dependent early exit — so the trainer's bitwise-determinism
+/// contract holds unchanged.
+///
+/// Cost per sweep is `O(d² + d·block_dim²)` versus the direct solvers'
+/// `O(d³)`; the ALS normal equations are regularized and strongly
+/// diagonally dominant, so a few sweeps land close enough for the outer
+/// ALS iteration to keep converging (the engine uses 3).
+///
+/// `block_dim` must divide `d` (config parsing enforces this); with
+/// `block_dim == d` the first sweep is an exact solve and further sweeps
+/// are idempotent.
+pub fn ialspp_solve(
+    kind: SolverKind,
+    a: &Mat,
+    b: &[f32],
+    opts: &SolveOptions,
+    block_dim: usize,
+    sweeps: usize,
+) -> Vec<f32> {
+    let d = a.rows;
+    assert_eq!(a.cols, d);
+    assert_eq!(b.len(), d);
+    assert!(block_dim > 0 && block_dim <= d && d % block_dim == 0, "block_dim must divide d");
+    let p = block_dim;
+    let mut x = vec![0.0f32; d];
+    let mut abb = Mat::zeros(p, p);
+    let mut rhs = vec![0.0f32; p];
+    for _ in 0..sweeps.max(1) {
+        let mut b0 = 0;
+        while b0 < d {
+            // rhs_t = b[t] − Σ_{j∉B} A[t,j]·x[j], computed as the full row
+            // dot minus the in-block dot (fixed formula, deterministic).
+            for t in 0..p {
+                let i = b0 + t;
+                let arow = a.row(i);
+                let full = dot(arow, &x);
+                let inblk = dot(&arow[b0..b0 + p], &x[b0..b0 + p]);
+                rhs[t] = acc(b[i] - (full - inblk), opts);
+                for u in 0..p {
+                    abb.data[t * p + u] = arow[b0 + u];
+                }
+            }
+            let xb = solve(kind, &abb, &rhs, opts);
+            x[b0..b0 + p].copy_from_slice(&xb);
+            b0 += p;
+        }
+    }
+    x
+}
+
+/// Batched [`ialspp_solve`] fanned out over `workers` threads with the
+/// same fixed per-index work assignment as [`batched_solve_parallel`], so
+/// solutions are bitwise identical to serial for every worker count.
+pub fn batched_ialspp_parallel(
+    kind: SolverKind,
+    d: usize,
+    as_: &[f32],
+    bs: &[f32],
+    opts: &SolveOptions,
+    block_dim: usize,
+    sweeps: usize,
+    workers: usize,
+) -> Vec<f32> {
+    let s = bs.len() / d;
+    assert_eq!(as_.len(), s * d * d);
+    assert_eq!(bs.len(), s * d);
+    let solve_one = |i: usize| {
+        let a = Mat::from_rows(d, d, &as_[i * d * d..(i + 1) * d * d]);
+        ialspp_solve(kind, &a, &bs[i * d..(i + 1) * d], opts, block_dim, sweeps)
+    };
+    let solutions: Vec<Vec<f32>> = if workers <= 1 || s <= 1 {
+        (0..s).map(solve_one).collect()
+    } else {
+        crate::util::threads::parallel_map_indexed_with(workers, s, solve_one)
+    };
+    let mut out = Vec::with_capacity(s * d);
+    for x in solutions {
+        out.extend_from_slice(&x);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -476,6 +564,56 @@ mod tests {
         let x32 = solve(SolverKind::Cholesky, &a, &b, &SolveOptions::default());
         let r32 = residual(&a, &x32, &b);
         assert!(r >= r32, "bf16 path should not be more accurate: {r} vs {r32}");
+    }
+
+    #[test]
+    fn ialspp_full_block_is_exact() {
+        // block_dim == d: the first sweep is a direct solve.
+        let mut rng = Pcg64::new(51);
+        let n = 12;
+        let a = random_spd(n, &mut rng);
+        let b: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let opts = SolveOptions::default();
+        let x = ialspp_solve(SolverKind::Cholesky, &a, &b, &opts, n, 1);
+        let x3 = ialspp_solve(SolverKind::Cholesky, &a, &b, &opts, n, 3);
+        assert!(residual(&a, &x, &b) < 5e-3);
+        assert_eq!(x, x3, "extra sweeps on the full block must be idempotent");
+    }
+
+    #[test]
+    fn ialspp_converges_on_regularized_systems() {
+        // The ALS regime: SPD with a strengthened diagonal. A few sweeps
+        // of p-blocks must land near the direct solution.
+        let mut rng = Pcg64::new(53);
+        for &(n, p) in &[(16usize, 4usize), (32, 8), (64, 16)] {
+            let mut a = random_spd(n, &mut rng);
+            for i in 0..n {
+                a[(i, i)] += 2.0;
+            }
+            let b: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let opts = SolveOptions::default();
+            let x = ialspp_solve(SolverKind::Cholesky, &a, &b, &opts, p, 3);
+            let r = residual(&a, &x, &b);
+            assert!(r < 0.05, "n={n} p={p} residual={r}");
+        }
+    }
+
+    #[test]
+    fn batched_ialspp_parallel_bitwise_matches_serial() {
+        let mut rng = Pcg64::new(57);
+        let (d, p, s) = (16usize, 4usize, 7usize);
+        let mut as_ = Vec::new();
+        let mut bs = Vec::new();
+        for _ in 0..s {
+            as_.extend_from_slice(&random_spd(d, &mut rng).data);
+            bs.extend((0..d).map(|_| rng.next_f32()));
+        }
+        let opts = SolveOptions::default();
+        let serial = batched_ialspp_parallel(SolverKind::Qr, d, &as_, &bs, &opts, p, 3, 1);
+        for workers in [2usize, 4, 8] {
+            let par = batched_ialspp_parallel(SolverKind::Qr, d, &as_, &bs, &opts, p, 3, workers);
+            assert_eq!(serial, par, "ialspp batch differs at workers={workers}");
+        }
     }
 
     #[test]

@@ -122,6 +122,8 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("lambda", "train.lambda"),
         ("alpha", "train.alpha"),
         ("solver", "train.solver"),
+        ("solver-engine", "solver.engine"),
+        ("block-dim", "solver.block_dim"),
         ("precision", "train.precision"),
         ("batch-rows", "train.batch_rows"),
         ("batch-width", "train.batch_width"),
@@ -150,6 +152,12 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
     ];
     for (flag, key) in map {
         if let Some(v) = args.get(flag) {
+            // `--solver ialspp` selects the subspace *engine*; the inner
+            // per-block factorization stays on `train.solver`.
+            if flag == "solver" && matches!(v, "ialspp" | "ials++") {
+                kv.set("solver.engine", "ialspp");
+                continue;
+            }
             kv.set(key, v);
         }
     }
@@ -389,13 +397,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             cfg.resident_table_shards
         ));
     }
+    let solver_desc = match cfg.train.engine {
+        alx::prelude::EngineKind::Qr => cfg.train.solver.name().to_string(),
+        alx::prelude::EngineKind::IalsPp => {
+            format!("ialspp(p={},inner={})", cfg.train.block_dim, cfg.train.solver.name())
+        }
+    };
     println!(
-        "training {dataset_desc} d={} epochs={} λ={:.0e} α={:.0e} solver={} precision={} engine={} cores={}",
+        "training {dataset_desc} d={} epochs={} λ={:.0e} α={:.0e} solver={solver_desc} precision={} engine={} cores={}",
         cfg.train.dim,
         cfg.train.epochs,
         cfg.train.lambda,
         cfg.train.alpha,
-        cfg.train.solver.name(),
         cfg.train.precision.name(),
         cfg.engine,
         cfg.cores,
@@ -423,14 +436,22 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         session.checkpoint(&session.cfg.checkpoint_path)?;
         println!("checkpoint written to {}", session.cfg.checkpoint_path);
     }
-    println!("\nepoch  objective        wall(s)  simulated(s)  comm");
+    // gather/stats/solve/scatter are busy-time summed across worker
+    // threads, so their total can exceed wall(s) × 1000.
+    println!(
+        "\nepoch  objective        wall(s)  simulated(s)  gather(ms)  stats(ms)  solve(ms)  scatter(ms)  comm"
+    );
     for h in &report.history {
         println!(
-            "{:>5}  {:>14.2}  {:>8.2}  {:>12.2}  {}",
+            "{:>5}  {:>14.2}  {:>8.2}  {:>12.2}  {:>10.0}  {:>9.0}  {:>9.0}  {:>11.0}  {}",
             h.epoch,
             h.objective.unwrap_or(f64::NAN),
             h.seconds,
             h.simulated_seconds,
+            h.gather_ms,
+            h.stats_ms,
+            h.solve_ms,
+            h.scatter_ms,
             human_bytes(h.comm_bytes)
         );
     }
@@ -841,6 +862,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: alx <generate|convert|bank|verify|train|worker|launch|serve|query|table1|table2|fig4|fig5|fig6|grid|info> [--key value ...]\n\
          train flags: --source webgraph|edge-list --data <file> --resume <ckpt>\n\
+                      --solver cg|cholesky|qr|ialspp --solver-engine qr|ialspp --block-dim <p>\n\
+                      (ialspp = block-coordinate subspace solver; p must divide --dim)\n\
                       --dist local|tcp --workers host:p1,host:p2 --topology parameter-server|all-reduce\n\
                       --heartbeat-ms <ms> (multi-process training against `alx worker` processes)\n\
          worker:      --port <p> | --bind <host:port> (serve table shards; prints ALX_WORKER_LISTENING)\n\

@@ -5,7 +5,7 @@
 //! matrix bank, the `ALXTAB01` embedding-table bank and the `ALXCKPT2`
 //! checkpoint.
 
-use alx::als::checkpoint::{load_limited, save, CheckpointMeta};
+use alx::als::checkpoint::{load_limited, save, CheckpointMeta, EngineMeta};
 use alx::als::TrainConfig;
 use alx::config::AlxConfig;
 use alx::coordinator::TrainSession;
@@ -424,8 +424,16 @@ fn ckpt_bytes(storage: Storage) -> Vec<u8> {
         storage_bf16: storage == Storage::Bf16,
     };
     let mut buf = Vec::new();
-    save(&mut buf, &meta, &users, &items, &[(1, Some(-12.5)), (2, None)], &[(2, 20, 0.5)])
-        .unwrap();
+    save(
+        &mut buf,
+        &meta,
+        &users,
+        &items,
+        &[(1, Some(-12.5)), (2, None)],
+        &[(2, 20, 0.5)],
+        EngineMeta::default(),
+    )
+    .unwrap();
     buf
 }
 
@@ -439,11 +447,16 @@ fn ckpt_truncation_at_every_byte_is_an_error() {
             match load_limited(&mut &clean[..cut], 2, Some(cut as u64)) {
                 Err(_) => {}
                 Ok(ck) => {
-                    // The one legal truncation point: exactly at the start
-                    // of the trailing recall section, which is optional for
-                    // legacy-file compatibility. Everything before it must
-                    // have parsed intact.
-                    assert!(ck.recall_log.is_empty(), "cut {cut}");
+                    // The two legal truncation points: exactly at the start
+                    // of a trailing section ("RCLG" recall log / "ENGM"
+                    // engine identity), both optional for legacy-file
+                    // compatibility. Everything before the cut must have
+                    // parsed intact, and a cut before the recall section
+                    // must also drop the engine record.
+                    assert!(ck.engine.is_none(), "cut {cut}");
+                    if !ck.recall_log.is_empty() {
+                        assert_eq!(cut, clean.len() - 9, "cut {cut}");
+                    }
                     assert_eq!(ck.meta.epoch, 4, "cut {cut}");
                     assert_eq!(ck.objective_log.len(), 2, "cut {cut}");
                     legacy_boundary_ok += 1;
@@ -451,7 +464,7 @@ fn ckpt_truncation_at_every_byte_is_an_error() {
             }
         }
         assert!(
-            legacy_boundary_ok <= 1,
+            legacy_boundary_ok <= 2,
             "{legacy_boundary_ok} truncation points accepted ({storage:?})"
         );
     }
