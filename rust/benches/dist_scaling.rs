@@ -1,0 +1,154 @@
+//! Distributed compute-placement scaling: epoch wall time for a
+//! solve-bound configuration (d = 128) under the two `[dist]` compute
+//! placements, against the same in-process worker fleet.
+//!
+//! The coordinator-solve baseline runs every solve on the coordinator's
+//! single solver thread — workers are pure parameter servers, so adding
+//! workers cannot make the epoch faster. Worker-solve ships each batch to
+//! its shard owner: the coordinator degrades to a scheduler (its threads
+//! just wait on RPCs) and solve throughput scales with the fleet. The
+//! target for this PR: >= 1.8x at 4 workers over the coordinator-solve
+//! baseline.
+//!
+//! ```bash
+//! cargo bench --bench dist_scaling
+//! ```
+
+use alx::als::TrainConfig;
+use alx::config::AlxConfig;
+use alx::coordinator::TrainSession;
+use alx::data::InMemorySource;
+use alx::dist::{DistCompute, DistConfig, DistMode, Worker};
+use alx::sparse::Csr;
+use alx::util::Pcg64;
+use std::time::Instant;
+
+const USERS: usize = 768;
+const ITEMS: usize = 512;
+const NNZ_PER_USER: usize = 24;
+const DIM: usize = 128;
+const SHARDS: usize = 4;
+
+fn matrix() -> Csr {
+    let mut rng = Pcg64::new(42);
+    let mut t = Vec::new();
+    for u in 0..USERS as u32 {
+        for _ in 0..NNZ_PER_USER {
+            let item = rng.range(0, ITEMS) as u32;
+            t.push((u, item, 1.0 + rng.next_f64() as f32));
+        }
+    }
+    Csr::from_coo(USERS, ITEMS, &t)
+}
+
+fn cfg(threads: usize) -> AlxConfig {
+    AlxConfig {
+        cores: SHARDS,
+        train: TrainConfig {
+            dim: DIM,
+            epochs: 1,
+            lambda: 0.05,
+            alpha: 0.01,
+            batch_rows: 64,
+            batch_width: 8,
+            threads,
+            compute_objective: false,
+            ..TrainConfig::default()
+        },
+        ..AlxConfig::default()
+    }
+}
+
+struct Fleet {
+    addrs: Vec<String>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn spawn_fleet(n: usize) -> Fleet {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let w = Worker::bind("127.0.0.1:0").expect("bind worker");
+        addrs.push(w.local_addr().expect("local addr").to_string());
+        handles.push(std::thread::spawn(move || w.serve().expect("serve")));
+    }
+    Fleet { addrs, handles }
+}
+
+/// One measured epoch against a fresh fleet; returns (seconds, wire
+/// bytes) — wire bytes are 0 for the local backend.
+fn epoch(m: &Csr, compute: Option<DistCompute>, workers: usize, threads: usize) -> (f64, u64) {
+    let fleet = compute.map(|_| spawn_fleet(workers));
+    let mut c = cfg(threads);
+    if let (Some(compute), Some(fleet)) = (compute, fleet.as_ref()) {
+        c.dist = DistConfig {
+            mode: DistMode::Tcp,
+            topology: "parameter-server".to_string(),
+            workers: fleet.addrs.clone(),
+            heartbeat_ms: 0,
+            compute,
+        };
+    }
+    let source = InMemorySource::new("scaling", m.clone());
+    let mut s = TrainSession::new(&source, c).expect("session");
+    let t0 = Instant::now();
+    s.step().expect("epoch");
+    let secs = t0.elapsed().as_secs_f64();
+    let wire = s.trainer.collectives().wire_snapshot().map_or(0, |w| w.total_bytes());
+    s.trainer.collectives().shutdown().expect("shutdown");
+    if let Some(fleet) = fleet {
+        for h in fleet.handles {
+            h.join().expect("worker thread");
+        }
+    }
+    (secs, wire)
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let m = matrix();
+    println!(
+        "dist compute-placement scaling: {USERS}x{ITEMS}, {} nnz, d={DIM}, {SHARDS} shards \
+         ({cores} host cores)",
+        m.nnz()
+    );
+    if cores < 5 {
+        println!("note: < 5 host cores — fleet solves share cores and the ratio understates");
+    }
+
+    println!("{:>32} {:>10} {:>14}", "placement", "epoch(s)", "wire/epoch");
+    let (local, _) = epoch(&m, None, 0, 1);
+    println!("{:>32} {:>10.3} {:>14}", "local (1 thread)", local, "-");
+
+    // Baseline: coordinator solves everything on one thread; the fleet
+    // only hosts shards. One point — worker count cannot change it.
+    let (base, base_wire) = epoch(&m, Some(DistCompute::Coordinator), 4, 1);
+    println!(
+        "{:>32} {:>10.3} {:>14}",
+        "tcp coordinator-solve, 4 wkrs",
+        base,
+        alx::util::stats::human_bytes(base_wire)
+    );
+
+    // Worker-solve: scheduler threads = fleet size (they block on RPCs,
+    // not on compute), solves land on the shard owners in parallel.
+    let mut at4 = base;
+    for n in [1usize, 2, 4] {
+        let (secs, wire) = epoch(&m, Some(DistCompute::Worker), n, n);
+        if n == 4 {
+            at4 = secs;
+        }
+        println!(
+            "{:>32} {:>10.3} {:>14}",
+            format!("tcp worker-solve, {n} wkrs"),
+            secs,
+            alx::util::stats::human_bytes(wire)
+        );
+    }
+
+    let speedup = base / at4;
+    println!(
+        "\nworker-solve @4 workers vs coordinator-solve: {speedup:.2}x (target >= 1.8x) — {}",
+        if speedup >= 1.8 { "PASS" } else { "MISS" }
+    );
+}

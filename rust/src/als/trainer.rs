@@ -19,7 +19,7 @@ use super::engine::{EngineKind, IalsPpEngine, NativeEngine, SolveEngine};
 use super::PrecisionPolicy;
 use crate::collectives::{
     record_gather_traffic, record_scatter_traffic, Collectives, CommStats, LocalCollectives,
-    TableId,
+    SolveSpec, TableId,
 };
 use crate::coordinator::pipeline::{BatchFeeder, BoundedQueue, CloseGuard};
 use crate::densebatch::DenseBatcher;
@@ -104,6 +104,19 @@ impl TrainConfig {
     pub fn solve_options(&self) -> SolveOptions {
         SolveOptions {
             cg_iters: self.cg_iters,
+            bf16_accumulate: self.precision.bf16_accumulate(),
+        }
+    }
+
+    /// The engine recipe announced to compute-workers ([`SolveSpec`]):
+    /// exactly the fields [`Trainer::default_engine`] builds from, so a
+    /// worker-side rebuild produces bitwise the coordinator's engine.
+    pub fn solve_spec(&self) -> SolveSpec {
+        SolveSpec {
+            engine: self.engine,
+            solver: self.solver,
+            block_dim: self.block_dim as u32,
+            cg_iters: self.cg_iters as u32,
             bf16_accumulate: self.precision.bf16_accumulate(),
         }
     }
@@ -468,6 +481,11 @@ impl Trainer {
         let num_shards = target.num_shards();
         let dim = target.dim;
         let elem_bytes = target.storage().elem_bytes();
+        // Announce the pass to the transport: a worker-compute backend
+        // ships the engine recipe and the fixed-side gramian to every
+        // worker so [`Collectives::solve_batch_remote`] below can offload
+        // whole batches; every other backend ignores this.
+        fabric.begin_pass(target_id, fixed_id, gramian, cfg.lambda, cfg.alpha, &cfg.solve_spec())?;
         let views: Vec<(usize, ShardViewMut<'_>)> = target
             .shard_views_mut()
             .into_iter()
@@ -592,9 +610,21 @@ impl Trainer {
         // fused in-place gather (no [B·L × d] copy), a remote backend
         // materializes the slot rows over the wire — bitwise identical
         // per the engine's fused/materialized equivalence contract.
-        let solve = |batch: &crate::densebatch::DenseBatch| -> anyhow::Result<Mat> {
+        let solve = |batch: &crate::densebatch::DenseBatch| -> anyhow::Result<Option<Mat>> {
             fabric.check_health()?;
             record_gather_traffic(fixed, batch.items.len(), comm);
+            // A worker-compute transport solves the batch where the target
+            // shard lives: gather, solve and write-back all happen on the
+            // owning worker, so `None` comes back and the scatter stage
+            // skips the batch. The priced collectives are still recorded
+            // here, unchanged — the oracle prices the paper's algorithm,
+            // not the transport's route.
+            let offloaded =
+                profiler.time("solve", || fabric.solve_batch_remote(target_id, piece, batch))?;
+            if offloaded {
+                record_scatter_traffic(batch.segment_rows.len(), dim, elem_bytes, num_shards, comm);
+                return Ok(None);
+            }
             // "gather" times the transport's explicit row materialization;
             // on the Local backend the gather is fused into the engine's
             // statistics accumulation and shows up under "stats" instead.
@@ -609,12 +639,12 @@ impl Trainer {
             let sols =
                 if engine_profiled { run() } else { profiler.time("solve", run) }?;
             record_scatter_traffic(batch.segment_rows.len(), dim, elem_bytes, num_shards, comm);
-            Ok(sols)
+            Ok(Some(sols))
         };
         if inline_scatter {
             let mut view = view;
             while let Some(batch) = feeder.next() {
-                let sols = solve(&batch)?;
+                let Some(sols) = solve(&batch)? else { continue };
                 profiler.time("sharded_scatter", || {
                     fabric.scatter_rows(target_id, piece, &mut view, &batch.segment_rows, &sols)
                 })?;
@@ -641,7 +671,8 @@ impl Trainer {
             let mut out = Ok(());
             while let Some(batch) = feeder.next() {
                 match solve(&batch) {
-                    Ok(sols) => scatter_q.push((batch.segment_rows, sols)),
+                    Ok(Some(sols)) => scatter_q.push((batch.segment_rows, sols)),
+                    Ok(None) => {} // solved and written worker-side
                     Err(e) => {
                         out = Err(e);
                         break;

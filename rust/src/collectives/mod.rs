@@ -17,7 +17,8 @@
 //!
 //! `sharded_scatter` (line 19) is the mirror image for solved embeddings.
 
-use crate::linalg::Mat;
+use crate::densebatch::DenseBatch;
+use crate::linalg::{Mat, SolveOptions, SolverKind};
 use crate::sharding::{ShardViewMut, ShardedTable};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -91,6 +92,67 @@ impl CommStats {
             all_gather_bytes: self.all_gather_bytes.load(Ordering::Relaxed),
             all_reduce_ops: self.all_reduce_ops.load(Ordering::Relaxed),
             all_reduce_bytes: self.all_reduce_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Transport-measured wire traffic — actual frame bytes moved over real
+/// sockets, as opposed to [`CommStats`], which prices the paper's ideal
+/// collectives identically for every backend. The two must never be
+/// conflated: `CommStats` is the bitwise conformance oracle (a tcp run
+/// reports exactly the local numbers), while `WireSnapshot` is where real
+/// optimizations like gather-request dedup show up.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireSnapshot {
+    /// Frame bytes written to / read from sockets (coordinator↔worker
+    /// plus, in worker-compute mode, the worker↔worker peer mesh as
+    /// reported in SOLVE_BATCH replies).
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    /// Fixed-side gather ids requested before / after per-request dedup.
+    pub gather_ids_pre_dedup: u64,
+    pub gather_ids_sent: u64,
+}
+
+impl WireSnapshot {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sent + self.bytes_recv
+    }
+}
+
+/// Everything a remote solver needs to rebuild the coordinator's engine
+/// exactly: both ends construct from the same five fields, so offloaded
+/// solves are bitwise the coordinator's own.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SolveSpec {
+    pub engine: crate::als::EngineKind,
+    pub solver: SolverKind,
+    pub block_dim: u32,
+    pub cg_iters: u32,
+    pub bf16_accumulate: bool,
+}
+
+impl SolveSpec {
+    pub fn solve_options(&self) -> SolveOptions {
+        SolveOptions { cg_iters: self.cg_iters as usize, bf16_accumulate: self.bf16_accumulate }
+    }
+
+    /// Construct the engine this spec describes. `workers` is the
+    /// per-batch segment fan-out (1 = serial, the deterministic choice
+    /// for remote solvers — engines are bitwise identical at any worker
+    /// count, so this is a latency knob, not a results knob).
+    pub fn build_engine(&self, workers: usize) -> Box<dyn crate::als::SolveEngine> {
+        let opts = self.solve_options();
+        match self.engine {
+            crate::als::EngineKind::Qr => {
+                Box::new(crate::als::NativeEngine::with_workers(self.solver, opts, workers))
+            }
+            crate::als::EngineKind::IalsPp => Box::new(crate::als::IalsPpEngine::with_workers(
+                self.solver,
+                opts,
+                self.block_dim as usize,
+                workers,
+            )),
         }
     }
 }
@@ -195,6 +257,44 @@ pub trait Collectives: Send + Sync {
     /// (before the coordinator reads tables directly: objective, eval,
     /// checkpoints). No-op locally.
     fn sync_table(&self, id: TableId, table: &mut ShardedTable) -> anyhow::Result<()>;
+
+    /// Broadcast the per-pass solve context (engine spec + reduced
+    /// gramian + regularization) ahead of a shard pass, so a backend that
+    /// solves remotely can rebuild the coordinator's engine exactly.
+    /// No-op for backends that solve on the coordinator.
+    fn begin_pass(
+        &self,
+        _target: TableId,
+        _fixed: TableId,
+        _gramian: &Mat,
+        _lambda: f32,
+        _alpha: f32,
+        _spec: &SolveSpec,
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Offer one dense batch (all target rows inside table shard `shard`)
+    /// to the backend for remote solving. `Ok(true)` means the owner
+    /// solved it and wrote the solutions into its authoritative shard —
+    /// the caller skips its own solve *and* scatter; `Ok(false)` means
+    /// the backend does not offload (the default) and the caller runs the
+    /// local solve path.
+    fn solve_batch_remote(
+        &self,
+        _target: TableId,
+        _shard: usize,
+        _batch: &DenseBatch,
+    ) -> anyhow::Result<bool> {
+        Ok(false)
+    }
+
+    /// Transport-measured wire traffic, if this backend moves real bytes
+    /// (`None` for in-process backends). Distinct from [`CommStats`] by
+    /// design — see [`WireSnapshot`].
+    fn wire_snapshot(&self) -> Option<WireSnapshot> {
+        None
+    }
 
     /// Fail fast if the heartbeat monitor has declared a peer dead.
     fn check_health(&self) -> anyhow::Result<()> {

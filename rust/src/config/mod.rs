@@ -7,7 +7,7 @@
 //! or bare strings, ints, floats, booleans.
 
 use crate::als::{EngineKind, PrecisionPolicy, TrainConfig};
-use crate::dist::{DistConfig, DistMode};
+use crate::dist::{DistCompute, DistConfig, DistMode};
 use crate::linalg::SolverKind;
 use crate::serving::ServeConfig;
 use crate::webgraph::Variant;
@@ -429,6 +429,11 @@ impl AlxConfig {
         if let Some(v) = kv.get_u64("dist.heartbeat_ms")? {
             cfg.dist.heartbeat_ms = v; // 0 = heartbeats off
         }
+        if let Some(v) = kv.get("dist.compute") {
+            cfg.dist.compute = DistCompute::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("dist.compute must be coordinator|worker, got '{v}'")
+            })?;
+        }
         if cfg.dist.mode == DistMode::Tcp {
             // Surface bad topologies at config time, not at connect time.
             cfg.dist.resolve_topology()?;
@@ -634,6 +639,7 @@ mode = "tcp"
 topology = "all-reduce"
 workers = "127.0.0.1:7001, 127.0.0.1:7002"
 heartbeat_ms = 250
+compute = "worker"
 "#,
         )
         .unwrap();
@@ -642,6 +648,7 @@ heartbeat_ms = 250
         assert_eq!(cfg.dist.topology, "all-reduce");
         assert_eq!(cfg.dist.workers, vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
         assert_eq!(cfg.dist.heartbeat_ms, 250);
+        assert_eq!(cfg.dist.compute, DistCompute::Worker);
 
         let defaults = AlxConfig::from_kv(&KvConfig::default()).unwrap();
         assert_eq!(defaults.dist, DistConfig::default());
@@ -655,6 +662,9 @@ heartbeat_ms = 250
         // tcp mode with no workers is a config-time error.
         let mut bad = KvConfig::default();
         bad.set("dist.mode", "tcp");
+        assert!(AlxConfig::from_kv(&bad).is_err());
+        let mut bad = KvConfig::default();
+        bad.set("dist.compute", "gpu");
         assert!(AlxConfig::from_kv(&bad).is_err());
     }
 

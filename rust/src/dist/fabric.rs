@@ -18,17 +18,20 @@
 //! local IO failures.
 
 use super::protocol::{
-    enc_gather, enc_get_shard, enc_gramian, enc_init_table, enc_ping, enc_scatter, enc_set_shard,
-    enc_shutdown, get_f32s, parse_reply, MAX_FRAME,
+    dec_solve_batch_reply, enc_gather, enc_get_shard, enc_gramian, enc_gramian_local,
+    enc_init_table, enc_ping, enc_scatter, enc_set_peers, enc_set_shard, enc_shutdown,
+    enc_solve_batch, enc_solve_pass, get_f32s, parse_reply, MAX_FRAME,
 };
-use super::{shard_data_from_f32, DistConfig, DistTopology};
-use crate::collectives::{Collectives, TableId};
+use super::{shard_data_from_f32, DistCompute, DistConfig, DistTopology};
+use crate::collectives::{Collectives, SolveSpec, TableId, WireSnapshot};
+use crate::densebatch::DenseBatch;
 use crate::linalg::Mat;
 use crate::sharding::{ShardViewMut, ShardedTable, Storage};
 use crate::util::net::{read_frame_capped, write_frame_capped, Cursor};
 use crate::util::threads::lock_or_recover;
+use std::collections::HashMap;
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -41,13 +44,31 @@ struct Link {
     alive: Arc<AtomicBool>,
 }
 
+/// Transport-measured wire counters (see
+/// [`crate::collectives::WireSnapshot`]): real frame bytes over the
+/// coordinator↔worker sockets plus, in worker-compute mode, the peer-mesh
+/// traffic the workers report back in their SOLVE_BATCH replies.
+#[derive(Default)]
+struct WireStats {
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+    gather_ids_pre_dedup: AtomicU64,
+    gather_ids_sent: AtomicU64,
+}
+
 /// TCP-backed [`Collectives`]: the coordinator's handle on the worker
 /// fleet.
 pub struct TcpCollectives {
     topology: DistTopology,
+    compute: DistCompute,
     links: Vec<Link>,
     stop: Arc<AtomicBool>,
     monitors: Vec<JoinHandle<()>>,
+    wire: WireStats,
+    /// The (target, fixed) table indices of the pass announced by the
+    /// last [`Collectives::begin_pass`] — worker-compute batches are
+    /// stamped with them.
+    pass: Mutex<Option<(u8, u8)>>,
 }
 
 /// Heartbeat loop: ping the worker every `every`, flip `alive` off on the
@@ -121,7 +142,25 @@ impl TcpCollectives {
             }
             links.push(Link { addr: addr.clone(), conn: Mutex::new(conn), alive });
         }
-        Ok(TcpCollectives { topology, links, stop, monitors })
+        let fab = TcpCollectives {
+            topology,
+            compute: cfg.compute,
+            links,
+            stop,
+            monitors,
+            wire: WireStats::default(),
+            pass: Mutex::new(None),
+        };
+        if cfg.compute == DistCompute::Worker {
+            // Owner-computes mode: every worker needs the fleet's address
+            // list (and its own index in it) to open peer connections for
+            // fixed-side gathers.
+            let addrs = fab.topology.addrs().to_vec();
+            for w in 0..fab.links.len() {
+                fab.rpc(w, &enc_set_peers(w as u32, &addrs))?;
+            }
+        }
+        Ok(fab)
     }
 
     pub fn num_workers(&self) -> usize {
@@ -145,7 +184,11 @@ impl TcpCollectives {
             })
         })();
         match io {
-            Ok(frame) => parse_reply(frame),
+            Ok(frame) => {
+                self.wire.bytes_sent.fetch_add(req.len() as u64 + 4, Ordering::Relaxed);
+                self.wire.bytes_recv.fetch_add(frame.len() as u64 + 4, Ordering::Relaxed);
+                parse_reply(frame)
+            }
             Err(e) => {
                 link.alive.store(false, Ordering::SeqCst);
                 Err(anyhow::anyhow!("rpc to worker {w} ({}) failed: {e}", link.addr))
@@ -221,16 +264,33 @@ impl Collectives for TcpCollectives {
     ) -> anyhow::Result<Option<Mat>> {
         let dim = table.dim;
         let mut out = Mat::zeros(ids.len(), dim);
+        // Dedup repeated ids inside this request: ids recur across the
+        // batches of a shard pass, and every occurrence wants the same
+        // row bits, so the wire carries each id once and the copies
+        // happen here. `CommStats` still prices the paper's collective
+        // over all occurrences — the saving is real-transport only and
+        // shows up in [`Collectives::wire_snapshot`].
+        let mut index: HashMap<u32, usize> = HashMap::new();
+        let mut uniq: Vec<u32> = Vec::new();
+        for &rid in ids {
+            index.entry(rid).or_insert_with(|| {
+                uniq.push(rid);
+                uniq.len() - 1
+            });
+        }
+        self.wire.gather_ids_pre_dedup.fetch_add(ids.len() as u64, Ordering::Relaxed);
+        self.wire.gather_ids_sent.fetch_add(uniq.len() as u64, Ordering::Relaxed);
+        let mut uniq_rows = vec![0.0f32; uniq.len() * dim];
         match &self.topology {
             DistTopology::ParameterServer { .. } => {
                 // Each server sees only the ids it owns and answers with
                 // exactly those rows, in request order.
                 let mut per: Vec<(Vec<u32>, Vec<usize>)> =
                     (0..self.links.len()).map(|_| (Vec::new(), Vec::new())).collect();
-                for (pos, &rid) in ids.iter().enumerate() {
+                for (u, &rid) in uniq.iter().enumerate() {
                     let w = self.owner(table.shard_of(rid as usize));
                     per[w].0.push(rid);
-                    per[w].1.push(pos);
+                    per[w].1.push(u);
                 }
                 for (w, (wids, positions)) in per.iter().enumerate() {
                     if wids.is_empty() {
@@ -244,30 +304,31 @@ impl Collectives for TcpCollectives {
                         vals.len() / dim.max(1),
                         wids.len()
                     );
-                    for (j, &pos) in positions.iter().enumerate() {
-                        out.data[pos * dim..(pos + 1) * dim]
+                    for (j, &u) in positions.iter().enumerate() {
+                        uniq_rows[u * dim..(u + 1) * dim]
                             .copy_from_slice(&vals[j * dim..(j + 1) * dim]);
                     }
                 }
             }
             DistTopology::AllReduce { .. } => {
-                // The all-gather half: the full id list reaches every
-                // peer; each contributes the rows its shards own, and the
-                // assembly below is the all-reduce-sum (every row has
-                // exactly one owner, so sum = assignment, bitwise exact).
+                // The all-gather half: the (deduplicated) id list reaches
+                // every peer; each contributes the rows its shards own,
+                // and the assembly below is the all-reduce-sum (every row
+                // has exactly one owner, so sum = assignment, bitwise
+                // exact).
                 let mut replies: Vec<(Vec<f32>, usize)> = Vec::with_capacity(self.links.len());
                 for w in 0..self.links.len() {
-                    let reply = self.rpc(w, &enc_gather(id.index(), ids))?;
+                    let reply = self.rpc(w, &enc_gather(id.index(), &uniq))?;
                     replies.push((self.decode_rows(&reply, dim)?, 0));
                 }
-                for (pos, &rid) in ids.iter().enumerate() {
+                for (u, &rid) in uniq.iter().enumerate() {
                     let w = self.owner(table.shard_of(rid as usize));
                     let (vals, cursor) = &mut replies[w];
                     anyhow::ensure!(
                         (*cursor + 1) * dim <= vals.len(),
                         "worker {w} returned too few rows"
                     );
-                    out.data[pos * dim..(pos + 1) * dim]
+                    uniq_rows[u * dim..(u + 1) * dim]
                         .copy_from_slice(&vals[*cursor * dim..(*cursor + 1) * dim]);
                     *cursor += 1;
                 }
@@ -278,6 +339,10 @@ impl Collectives for TcpCollectives {
                     );
                 }
             }
+        }
+        for (pos, &rid) in ids.iter().enumerate() {
+            let u = index[&rid];
+            out.data[pos * dim..(pos + 1) * dim].copy_from_slice(&uniq_rows[u * dim..(u + 1) * dim]);
         }
         Ok(Some(out))
     }
@@ -335,6 +400,33 @@ impl Collectives for TcpCollectives {
         _workers: usize,
     ) -> anyhow::Result<Vec<Mat>> {
         let d = table.dim;
+        if self.compute == DistCompute::Worker {
+            // One batched RPC per worker; each answers with every hosted
+            // shard's gramian. Re-slotting by the shard index restores
+            // the fixed ascending reduction order, so `sum_gramians`
+            // sees bitwise the same operand sequence as a local run.
+            let mut slots: Vec<Option<Mat>> = (0..table.num_shards()).map(|_| None).collect();
+            for w in 0..self.links.len() {
+                let reply = self.rpc(w, &enc_gramian_local(id.index()))?;
+                let mut c = Cursor::new(&reply);
+                let k = c.u32().map_err(|e| decode_err("gramian", e))? as usize;
+                for _ in 0..k {
+                    let s = c.u32().map_err(|e| decode_err("gramian", e))? as usize;
+                    let vals = get_f32s(&mut c, d * d).map_err(|e| decode_err("gramian", e))?;
+                    anyhow::ensure!(
+                        s < slots.len() && self.owner(s) == w,
+                        "worker {w} reported a gramian for shard {s} it does not own"
+                    );
+                    slots[s] = Some(Mat::from_rows(d, d, &vals));
+                }
+                c.done().map_err(|e| decode_err("gramian", e))?;
+            }
+            return slots
+                .into_iter()
+                .enumerate()
+                .map(|(s, g)| g.ok_or_else(|| anyhow::anyhow!("no worker owns shard {s}")))
+                .collect();
+        }
         let mut out = Vec::with_capacity(table.num_shards());
         for s in 0..table.num_shards() {
             let reply = self.rpc(self.owner(s), &enc_gramian(id.index(), s as u32))?;
@@ -377,6 +469,79 @@ impl Collectives for TcpCollectives {
         }
         Ok(())
     }
+
+    fn begin_pass(
+        &self,
+        target: TableId,
+        fixed: TableId,
+        gramian: &Mat,
+        lambda: f32,
+        alpha: f32,
+        spec: &SolveSpec,
+    ) -> anyhow::Result<()> {
+        if self.compute != DistCompute::Worker {
+            return Ok(());
+        }
+        *lock_or_recover(&self.pass) = Some((target.index(), fixed.index()));
+        let req = enc_solve_pass(
+            target.index(),
+            fixed.index(),
+            spec,
+            lambda,
+            alpha,
+            &gramian.data,
+            gramian.rows as u32,
+        );
+        for w in 0..self.links.len() {
+            self.rpc(w, &req)?;
+        }
+        Ok(())
+    }
+
+    fn solve_batch_remote(
+        &self,
+        target: TableId,
+        shard: usize,
+        batch: &DenseBatch,
+    ) -> anyhow::Result<bool> {
+        if self.compute != DistCompute::Worker {
+            return Ok(false);
+        }
+        let (t, f) = match *lock_or_recover(&self.pass) {
+            Some(p) => p,
+            None => anyhow::bail!("solve_batch_remote before begin_pass"),
+        };
+        anyhow::ensure!(
+            t == target.index(),
+            "batch targets table {} but the announced pass targets {t}",
+            target.index()
+        );
+        let w = self.owner(shard);
+        let reply = self.rpc(w, &enc_solve_batch(t, f, shard as u32, batch))?;
+        let (written, peer) =
+            dec_solve_batch_reply(&reply).map_err(|e| decode_err("solve-batch", e))?;
+        anyhow::ensure!(
+            written as usize == batch.segment_rows.len(),
+            "worker {w} wrote {written}/{} solved rows for shard {shard}",
+            batch.segment_rows.len()
+        );
+        // Fold the worker's peer-mesh traffic into the coordinator's wire
+        // view so the snapshot covers every socket the pass touched.
+        self.wire.bytes_sent.fetch_add(peer.bytes_sent, Ordering::Relaxed);
+        self.wire.bytes_recv.fetch_add(peer.bytes_recv, Ordering::Relaxed);
+        self.wire.gather_ids_pre_dedup.fetch_add(peer.ids_pre_dedup, Ordering::Relaxed);
+        self.wire.gather_ids_sent.fetch_add(peer.ids_sent, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    fn wire_snapshot(&self) -> Option<WireSnapshot> {
+        Some(WireSnapshot {
+            bytes_sent: self.wire.bytes_sent.load(Ordering::Relaxed),
+            bytes_recv: self.wire.bytes_recv.load(Ordering::Relaxed),
+            gather_ids_pre_dedup: self.wire.gather_ids_pre_dedup.load(Ordering::Relaxed),
+            gather_ids_sent: self.wire.gather_ids_sent.load(Ordering::Relaxed),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -397,14 +562,19 @@ mod tests {
         (addrs, handles)
     }
 
-    fn connect(topology: &str, addrs: Vec<String>) -> TcpCollectives {
+    fn connect_mode(topology: &str, addrs: Vec<String>, compute: DistCompute) -> TcpCollectives {
         let cfg = DistConfig {
             mode: DistMode::Tcp,
             topology: topology.to_string(),
             workers: addrs,
             heartbeat_ms: 0,
+            compute,
         };
         TcpCollectives::connect(&cfg).unwrap()
+    }
+
+    fn connect(topology: &str, addrs: Vec<String>) -> TcpCollectives {
+        connect_mode(topology, addrs, DistCompute::Coordinator)
     }
 
     /// Full collective roundtrip against live in-process workers: push,
@@ -482,6 +652,82 @@ mod tests {
     #[test]
     fn all_reduce_roundtrip_bf16() {
         roundtrip("all-reduce", Storage::Bf16);
+    }
+
+    /// Worker-compute roundtrip: announce a pass, offload a dense batch,
+    /// and check that the solved rows land in the owning worker's shard
+    /// with exactly the bits the local engine produces — including rows
+    /// whose fixed-side ids live on the other worker (peer mesh), and
+    /// with the peer-gather dedup visible in the wire snapshot.
+    #[test]
+    fn worker_compute_solves_bitwise() {
+        use crate::als::{EngineKind, NativeEngine, SolveEngine};
+        use crate::linalg::{SolveOptions, SolverKind};
+
+        let (addrs, handles) = spawn_fleet(2);
+        let fab = connect_mode("parameter-server", addrs, DistCompute::Worker);
+
+        let mut rng = Pcg64::new(47);
+        let dim = 4;
+        let mut w = ShardedTable::randn(12, dim, 2, Storage::F32, &mut rng);
+        let h = ShardedTable::randn(10, dim, 2, Storage::F32, &mut rng);
+        fab.push_table(TableId::W, &w).unwrap();
+        fab.push_table(TableId::H, &h).unwrap();
+
+        // Worker-mode gramians come back one batched RPC per worker, in
+        // the same ascending shard order as the per-shard path.
+        let gs = fab.local_gramians(TableId::H, &h, 2).unwrap();
+        assert_eq!(gs.len(), h.num_shards());
+        let mut g = Mat::zeros(dim, dim);
+        for (s, lg) in gs.iter().enumerate() {
+            assert_eq!(lg.data, h.local_gramian(s).data, "gramian of shard {s}");
+            for (o, &v) in g.data.iter_mut().zip(&lg.data) {
+                *o += v;
+            }
+        }
+
+        // Target shard 0 of W (rows 0..6) is owned by worker 0; fixed ids
+        // 7 and 9 live in H shard 1 on worker 1, and 7 repeats so the
+        // peer gather has something to dedup.
+        let batch = DenseBatch {
+            rows: 2,
+            width: 3,
+            items: vec![0, 7, 2, 9, 0, 7],
+            values: vec![1.0; 6],
+            mask: vec![1.0; 6],
+            segments: vec![0, 1],
+            segment_rows: vec![1, 3],
+        };
+        let spec = SolveSpec {
+            engine: EngineKind::Qr,
+            solver: SolverKind::Qr,
+            block_dim: 0,
+            cg_iters: 0,
+            bf16_accumulate: false,
+        };
+        fab.begin_pass(TableId::W, TableId::H, &g, 0.1, 0.0, &spec).unwrap();
+        assert!(fab.solve_batch_remote(TableId::W, 0, &batch).unwrap(), "offload refused");
+
+        let engine = NativeEngine::with_workers(SolverKind::Qr, SolveOptions::default(), 1);
+        let hrows = h.gather(&batch.items);
+        let expect = engine.solve_batch(&batch, &hrows, &g, 0.1, 0.0).unwrap();
+        fab.sync_table(TableId::W, &mut w).unwrap();
+        assert_eq!(
+            w.gather(&batch.segment_rows).data,
+            expect.data,
+            "worker-solved rows must be bitwise identical to the local engine"
+        );
+
+        let snap = fab.wire_snapshot().unwrap();
+        assert!(snap.total_bytes() > 0);
+        assert_eq!(snap.gather_ids_pre_dedup, 3, "three fixed ids were remote");
+        assert_eq!(snap.gather_ids_sent, 2, "7 repeats, so only two unique ids cross the mesh");
+
+        fab.shutdown_workers();
+        drop(fab);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -68,6 +68,35 @@ impl DistMode {
     }
 }
 
+/// Where the dense-batch solves run in tcp mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistCompute {
+    /// The coordinator runs every solve; workers only store shards
+    /// (the PR 8 transport).
+    Coordinator,
+    /// Owner-computes: each worker solves the batches whose target rows
+    /// live in the shards it owns, fetching fixed-side rows from peers
+    /// directly, and the coordinator degrades to a scheduler.
+    Worker,
+}
+
+impl DistCompute {
+    pub fn parse(s: &str) -> Option<DistCompute> {
+        match s {
+            "coordinator" => Some(DistCompute::Coordinator),
+            "worker" => Some(DistCompute::Worker),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DistCompute::Coordinator => "coordinator",
+            DistCompute::Worker => "worker",
+        }
+    }
+}
+
 /// How the coordinator routes collectives over the worker set.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum DistTopology {
@@ -109,6 +138,9 @@ pub struct DistConfig {
     /// Heartbeat ping interval in milliseconds (0 = heartbeats off; rpc
     /// errors still detect dead workers).
     pub heartbeat_ms: u64,
+    /// Where solves run: `coordinator` (workers store shards only) or
+    /// `worker` (owner-computes; meaningful only in tcp mode).
+    pub compute: DistCompute,
 }
 
 impl Default for DistConfig {
@@ -118,6 +150,7 @@ impl Default for DistConfig {
             topology: "parameter-server".to_string(),
             workers: Vec::new(),
             heartbeat_ms: 500,
+            compute: DistCompute::Coordinator,
         }
     }
 }
@@ -162,6 +195,16 @@ mod tests {
         assert_eq!(cfg.mode, DistMode::Local);
         assert_eq!(cfg.topology, "parameter-server");
         assert!(cfg.workers.is_empty());
+        assert_eq!(cfg.compute, DistCompute::Coordinator);
+    }
+
+    #[test]
+    fn compute_mode_parses_both_ways() {
+        assert_eq!(DistCompute::parse("coordinator"), Some(DistCompute::Coordinator));
+        assert_eq!(DistCompute::parse("worker"), Some(DistCompute::Worker));
+        assert_eq!(DistCompute::parse("gpu"), None);
+        assert_eq!(DistCompute::Coordinator.name(), "coordinator");
+        assert_eq!(DistCompute::Worker.name(), "worker");
     }
 
     #[test]

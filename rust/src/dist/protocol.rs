@@ -21,7 +21,37 @@
 //! GRAMIAN    table shard:u32                → f32[dim·dim]
 //! SHUTDOWN                                  → ok, then the worker exits
 //! ```
+//!
+//! Worker-compute mode (`[dist] compute = "worker"`) adds the
+//! owner-computes verbs. SET_PEERS gives every worker the fleet's address
+//! list plus its own index so it can open direct peer connections;
+//! SOLVE_PASS broadcasts the per-pass context (engine spec + reduced
+//! gramian); SOLVE_BATCH ships one dense batch to the owner of its target
+//! shard, which gathers fixed rows locally / over PEER_GATHER, solves, and
+//! writes the solutions into its own shard; GRAMIAN_LOCAL returns every
+//! hosted shard's gramian in one round trip.
+//!
+//! ```text
+//! SET_PEERS   self:u32 n:u32 (len:u32 utf8[len])[n]   → ok
+//! PEER_GATHER table n:u32 id:u32[n]                   → k:u32 f32[k·dim]
+//!                                          (worker → worker; hosted ids
+//!                                           only, request order)
+//! SOLVE_PASS  target fixed engine:u8 solver:u8 bf16:u8
+//!             block_dim:u32 cg_iters:u32 lambda:f32 alpha:f32
+//!             d:u32 f32[d·d]                          → ok
+//! SOLVE_BATCH target fixed shard:u32 rows:u32 width:u32 segs:u32
+//!             items:u32[rows·width] values:f32[rows·width]
+//!             mask:f32[rows·width] segments:u32[rows]
+//!             segment_rows:u32[segs]
+//!                       → written:u32 peer_sent:u64 peer_recv:u64
+//!                         peer_ids_pre:u64 peer_ids_sent:u64
+//! GRAMIAN_LOCAL table                → k:u32 (shard:u32 f32[dim·dim])[k]
+//! ```
 
+use crate::als::EngineKind;
+use crate::collectives::SolveSpec;
+use crate::densebatch::DenseBatch;
+use crate::linalg::SolverKind;
 use crate::util::net::Cursor;
 
 /// Frame cap for the dist plane: must hold a whole table shard
@@ -36,6 +66,11 @@ pub const OP_GATHER: u8 = 5;
 pub const OP_SCATTER: u8 = 6;
 pub const OP_GRAMIAN: u8 = 7;
 pub const OP_SHUTDOWN: u8 = 8;
+pub const OP_SET_PEERS: u8 = 9;
+pub const OP_PEER_GATHER: u8 = 10;
+pub const OP_SOLVE_PASS: u8 = 11;
+pub const OP_SOLVE_BATCH: u8 = 12;
+pub const OP_GRAMIAN_LOCAL: u8 = 13;
 
 pub const STATUS_OK: u8 = 0;
 pub const STATUS_ERR: u8 = 1;
@@ -45,6 +80,10 @@ pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
 }
 
 pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -72,6 +111,12 @@ pub fn get_f32s(c: &mut Cursor<'_>, n: usize) -> Result<Vec<f32>, String> {
 pub fn get_u32s(c: &mut Cursor<'_>, n: usize) -> Result<Vec<u32>, String> {
     let raw = c.take(n * 4)?;
     Ok(raw.chunks_exact(4).map(|b| u32::from_le_bytes(b.try_into().unwrap())).collect())
+}
+
+/// Decode a single f32 from the cursor.
+pub fn get_f32(c: &mut Cursor<'_>) -> Result<f32, String> {
+    let raw = c.take(4)?;
+    Ok(f32::from_le_bytes(raw.try_into().unwrap()))
 }
 
 pub fn enc_ping() -> Vec<u8> {
@@ -124,6 +169,204 @@ pub fn enc_gramian(table: u8, shard: u32) -> Vec<u8> {
 
 pub fn enc_shutdown() -> Vec<u8> {
     vec![OP_SHUTDOWN]
+}
+
+pub fn enc_set_peers(self_index: u32, addrs: &[String]) -> Vec<u8> {
+    let mut buf = vec![OP_SET_PEERS];
+    put_u32(&mut buf, self_index);
+    put_u32(&mut buf, addrs.len() as u32);
+    for addr in addrs {
+        put_u32(&mut buf, addr.len() as u32);
+        buf.extend_from_slice(addr.as_bytes());
+    }
+    buf
+}
+
+/// Decode the SET_PEERS body (cursor positioned after the op byte):
+/// `(self_index, addrs)`.
+pub fn dec_set_peers(c: &mut Cursor<'_>) -> Result<(u32, Vec<String>), String> {
+    let self_index = c.u32()?;
+    let n = c.u32()? as usize;
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = c.u32()? as usize;
+        let raw = c.take(len)?;
+        let addr =
+            String::from_utf8(raw.to_vec()).map_err(|_| "peer address is not utf8".to_string())?;
+        addrs.push(addr);
+    }
+    Ok((self_index, addrs))
+}
+
+pub fn enc_peer_gather(table: u8, ids: &[u32]) -> Vec<u8> {
+    let mut buf = vec![OP_PEER_GATHER, table];
+    put_u32(&mut buf, ids.len() as u32);
+    put_u32s(&mut buf, ids);
+    buf
+}
+
+/// `gramian` is row-major `[d × d]`.
+pub fn enc_solve_pass(
+    target: u8,
+    fixed: u8,
+    spec: &SolveSpec,
+    lambda: f32,
+    alpha: f32,
+    gramian: &[f32],
+    d: u32,
+) -> Vec<u8> {
+    let mut buf = vec![
+        OP_SOLVE_PASS,
+        target,
+        fixed,
+        spec.engine.code(),
+        spec.solver.code(),
+        spec.bf16_accumulate as u8,
+    ];
+    put_u32(&mut buf, spec.block_dim);
+    put_u32(&mut buf, spec.cg_iters);
+    put_f32(&mut buf, lambda);
+    put_f32(&mut buf, alpha);
+    put_u32(&mut buf, d);
+    put_f32s(&mut buf, gramian);
+    buf
+}
+
+/// The decoded SOLVE_PASS body.
+pub struct SolvePassReq {
+    pub target: u8,
+    pub fixed: u8,
+    pub spec: SolveSpec,
+    pub lambda: f32,
+    pub alpha: f32,
+    pub dim: u32,
+    pub gramian: Vec<f32>,
+}
+
+/// Decode the SOLVE_PASS body (cursor positioned after the op byte).
+pub fn dec_solve_pass(c: &mut Cursor<'_>) -> Result<SolvePassReq, String> {
+    let target = c.u8()?;
+    let fixed = c.u8()?;
+    let engine_code = c.u8()?;
+    let solver_code = c.u8()?;
+    let bf16_accumulate = c.u8()? != 0;
+    let engine = EngineKind::from_code(engine_code)
+        .ok_or_else(|| format!("unknown engine code {engine_code}"))?;
+    let solver = SolverKind::from_code(solver_code)
+        .ok_or_else(|| format!("unknown solver code {solver_code}"))?;
+    let block_dim = c.u32()?;
+    let cg_iters = c.u32()?;
+    let lambda = get_f32(c)?;
+    let alpha = get_f32(c)?;
+    let dim = c.u32()?;
+    let gramian = get_f32s(c, (dim as usize) * (dim as usize))?;
+    Ok(SolvePassReq {
+        target,
+        fixed,
+        spec: SolveSpec { engine, solver, block_dim, cg_iters, bf16_accumulate },
+        lambda,
+        alpha,
+        dim,
+        gramian,
+    })
+}
+
+pub fn enc_solve_batch(target: u8, fixed: u8, shard: u32, batch: &DenseBatch) -> Vec<u8> {
+    let slots = batch.rows * batch.width;
+    debug_assert_eq!(batch.items.len(), slots);
+    debug_assert_eq!(batch.values.len(), slots);
+    debug_assert_eq!(batch.mask.len(), slots);
+    debug_assert_eq!(batch.segments.len(), batch.rows);
+    let cap = 23 + slots * 12 + (batch.rows + batch.segment_rows.len()) * 4;
+    let mut buf = Vec::with_capacity(cap);
+    buf.push(OP_SOLVE_BATCH);
+    buf.push(target);
+    buf.push(fixed);
+    put_u32(&mut buf, shard);
+    put_u32(&mut buf, batch.rows as u32);
+    put_u32(&mut buf, batch.width as u32);
+    put_u32(&mut buf, batch.segment_rows.len() as u32);
+    put_u32s(&mut buf, &batch.items);
+    put_f32s(&mut buf, &batch.values);
+    put_f32s(&mut buf, &batch.mask);
+    put_u32s(&mut buf, &batch.segments);
+    put_u32s(&mut buf, &batch.segment_rows);
+    buf
+}
+
+/// The decoded SOLVE_BATCH body.
+pub struct SolveBatchReq {
+    pub target: u8,
+    pub fixed: u8,
+    pub shard: u32,
+    pub batch: DenseBatch,
+}
+
+/// Decode the SOLVE_BATCH body (cursor positioned after the op byte).
+pub fn dec_solve_batch(c: &mut Cursor<'_>) -> Result<SolveBatchReq, String> {
+    let target = c.u8()?;
+    let fixed = c.u8()?;
+    let shard = c.u32()?;
+    let rows = c.u32()? as usize;
+    let width = c.u32()? as usize;
+    let segs = c.u32()? as usize;
+    let slots = rows
+        .checked_mul(width)
+        .filter(|&s| s <= (MAX_FRAME as usize) / 4)
+        .ok_or_else(|| format!("oversized batch shape {rows}x{width}"))?;
+    let items = get_u32s(c, slots)?;
+    let values = get_f32s(c, slots)?;
+    let mask = get_f32s(c, slots)?;
+    let segments = get_u32s(c, rows)?;
+    let segment_rows = get_u32s(c, segs)?;
+    Ok(SolveBatchReq {
+        target,
+        fixed,
+        shard,
+        batch: DenseBatch { rows, width, items, values, mask, segments, segment_rows },
+    })
+}
+
+/// Per-batch peer-traffic counters a worker reports back in its
+/// SOLVE_BATCH reply, so the coordinator's wire accounting covers the
+/// worker↔worker mesh it never sees directly.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PeerTraffic {
+    /// Frame bytes this worker sent to / received from peers.
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    /// Fixed-side ids needed before / after request dedup.
+    pub ids_pre_dedup: u64,
+    pub ids_sent: u64,
+}
+
+/// SOLVE_BATCH reply payload: rows written plus peer-traffic counters.
+pub fn enc_solve_batch_reply(written: u32, peer: &PeerTraffic) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(36);
+    put_u32(&mut buf, written);
+    put_u64(&mut buf, peer.bytes_sent);
+    put_u64(&mut buf, peer.bytes_recv);
+    put_u64(&mut buf, peer.ids_pre_dedup);
+    put_u64(&mut buf, peer.ids_sent);
+    buf
+}
+
+/// Decode a SOLVE_BATCH reply payload: `(written, peer_traffic)`.
+pub fn dec_solve_batch_reply(payload: &[u8]) -> Result<(u32, PeerTraffic), String> {
+    let mut c = Cursor::new(payload);
+    let written = c.u32()?;
+    let peer = PeerTraffic {
+        bytes_sent: c.u64()?,
+        bytes_recv: c.u64()?,
+        ids_pre_dedup: c.u64()?,
+        ids_sent: c.u64()?,
+    };
+    c.done()?;
+    Ok((written, peer))
+}
+
+pub fn enc_gramian_local(table: u8) -> Vec<u8> {
+    vec![OP_GRAMIAN_LOCAL, table]
 }
 
 /// Wrap a successful response payload.
@@ -191,6 +434,73 @@ mod tests {
         assert_eq!(c.u32().unwrap(), 8);
         assert_eq!(c.u8().unwrap(), 1);
         c.done().unwrap();
+    }
+
+    #[test]
+    fn set_peers_roundtrips() {
+        let addrs = vec!["127.0.0.1:7001".to_string(), "10.0.0.2:9".to_string()];
+        let req = enc_set_peers(1, &addrs);
+        let mut c = Cursor::new(&req);
+        assert_eq!(c.u8().unwrap(), OP_SET_PEERS);
+        let (me, decoded) = dec_set_peers(&mut c).unwrap();
+        assert_eq!(me, 1);
+        assert_eq!(decoded, addrs);
+        c.done().unwrap();
+    }
+
+    #[test]
+    fn solve_pass_roundtrips_bitwise() {
+        let spec = SolveSpec {
+            engine: EngineKind::IalsPp,
+            solver: SolverKind::Cg,
+            block_dim: 4,
+            cg_iters: 12,
+            bf16_accumulate: true,
+        };
+        let gramian = vec![1.0f32, -0.5, -0.5, f32::MIN_POSITIVE];
+        let req = enc_solve_pass(0, 1, &spec, 0.05, 0.01, &gramian, 2);
+        let mut c = Cursor::new(&req);
+        assert_eq!(c.u8().unwrap(), OP_SOLVE_PASS);
+        let dec = dec_solve_pass(&mut c).unwrap();
+        c.done().unwrap();
+        assert_eq!(dec.target, 0);
+        assert_eq!(dec.fixed, 1);
+        assert_eq!(dec.spec, spec);
+        assert_eq!(dec.lambda.to_bits(), 0.05f32.to_bits());
+        assert_eq!(dec.alpha.to_bits(), 0.01f32.to_bits());
+        assert_eq!(dec.dim, 2);
+        let bits: Vec<u32> = dec.gramian.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = gramian.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn solve_batch_roundtrips() {
+        let batch = DenseBatch {
+            rows: 2,
+            width: 3,
+            items: vec![5, 9, 0, 2, 0, 0],
+            values: vec![1.0, 2.0, 0.0, 3.0, 0.0, 0.0],
+            mask: vec![1.0, 1.0, 0.0, 1.0, 0.0, 0.0],
+            segments: vec![0, 1],
+            segment_rows: vec![17, 3],
+        };
+        let req = enc_solve_batch(1, 0, 7, &batch);
+        let mut c = Cursor::new(&req);
+        assert_eq!(c.u8().unwrap(), OP_SOLVE_BATCH);
+        let dec = dec_solve_batch(&mut c).unwrap();
+        c.done().unwrap();
+        assert_eq!(dec.target, 1);
+        assert_eq!(dec.fixed, 0);
+        assert_eq!(dec.shard, 7);
+        assert_eq!(dec.batch, batch);
+
+        let peer =
+            PeerTraffic { bytes_sent: 10, bytes_recv: 1 << 33, ids_pre_dedup: 9, ids_sent: 4 };
+        let reply = enc_solve_batch_reply(2, &peer);
+        let (written, got) = dec_solve_batch_reply(&reply).unwrap();
+        assert_eq!(written, 2);
+        assert_eq!(got, peer);
     }
 
     #[test]

@@ -1,29 +1,43 @@
-//! The worker process: a passive shard server.
+//! The worker process: a shard server that can also solve.
 //!
 //! A worker owns the authoritative copy of the table shards the
 //! coordinator pushes to it ([`super::protocol::OP_SET_SHARD`] marks a
 //! shard hosted) and answers gather / scatter / gramian requests against
-//! them. All scheduling lives in the coordinator; the worker is pure
-//! request/response, one thread per connection, so the protocol can never
-//! deadlock — there are no barriers to get stuck on.
+//! them. In worker-compute mode (`[dist] compute = "worker"`) it
+//! additionally runs the solves for the batches whose target rows live in
+//! its own shards: SOLVE_PASS installs the per-pass engine + gramian,
+//! SOLVE_BATCH gathers the fixed-side rows (locally, or from peer owners
+//! over PEER_GATHER with per-request dedup), solves with the exact engine
+//! the coordinator would have used, and writes the solutions straight
+//! into the hosted target shard. All scheduling still lives in the
+//! coordinator; the worker is pure request/response, one thread per
+//! connection, so the protocol can never deadlock — there are no barriers
+//! to get stuck on, and peer fetches never call back into the requester.
 //!
 //! Failpoints (`--features failpoints`): `dist.push`, `dist.sync`,
-//! `dist.gather`, `dist.scatter`, `dist.gramian` fire at the matching
-//! request handlers — `alx launch --worker-failpoints 'dist.gather=hit:3:abort'`
+//! `dist.gather`, `dist.scatter`, `dist.gramian`, `dist.solve`,
+//! `dist.peer_gather` fire at the matching request handlers —
+//! `alx launch --worker-failpoints 'dist.gather=hit:3:abort'`
 //! kills worker 0 deterministically mid-epoch, which is how the
 //! worker-failure tests avoid timing-dependent SIGKILLs.
 
 use super::protocol::{
-    err_reply, get_f32s, get_u32s, ok_reply, put_f32s, put_u32, MAX_FRAME, OP_GATHER,
-    OP_GET_SHARD, OP_GRAMIAN, OP_INIT_TABLE, OP_PING, OP_SCATTER, OP_SET_SHARD, OP_SHUTDOWN,
+    dec_set_peers, dec_solve_batch, dec_solve_pass, enc_peer_gather, enc_solve_batch_reply,
+    err_reply, get_f32s, get_u32s, ok_reply, parse_reply, put_f32s, put_u32, PeerTraffic,
+    MAX_FRAME, OP_GATHER, OP_GET_SHARD, OP_GRAMIAN, OP_GRAMIAN_LOCAL, OP_INIT_TABLE, OP_PEER_GATHER,
+    OP_PING, OP_SCATTER, OP_SET_PEERS, OP_SET_SHARD, OP_SHUTDOWN, OP_SOLVE_BATCH, OP_SOLVE_PASS,
 };
 use super::{shard_data_from_f32, WORKER_READY_PREFIX};
+use crate::als::SolveEngine;
+use crate::linalg::Mat;
 use crate::sharding::{ShardedTable, Storage};
 use crate::util::fault;
 use crate::util::net::{read_frame_capped, write_frame_capped, Cursor};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Duration;
 
 /// One hosted table: the allocated sharded storage plus which shards this
@@ -33,16 +47,77 @@ struct HostedTable {
     hosted: Vec<bool>,
 }
 
+/// The per-pass solve context installed by SOLVE_PASS: the engine rebuilt
+/// from the coordinator's [`crate::collectives::SolveSpec`] plus the
+/// reduced gramian and regularization for this half-epoch.
+struct PassCtx {
+    /// Slot indices of the table being solved / held fixed.
+    target: usize,
+    fixed: usize,
+    engine: Box<dyn SolveEngine>,
+    gramian: Mat,
+    lambda: f32,
+    alpha: f32,
+}
+
+/// The worker↔worker mesh installed by SET_PEERS: the fleet's address
+/// list (worker-index order, so `shard % addrs.len()` is the owner map)
+/// plus one lazily opened, cached connection per peer.
+struct Peers {
+    addrs: Vec<String>,
+    self_index: usize,
+    conns: Vec<Mutex<Option<TcpStream>>>,
+}
+
+impl Peers {
+    /// One request/response round trip to peer `w`, counting frame bytes
+    /// into `peer`. A failed connection is dropped so a later pass can
+    /// reconnect; the error still aborts this batch (and the run).
+    fn rpc(&self, w: usize, req: &[u8], peer: &mut PeerTraffic) -> Result<Vec<u8>, String> {
+        let mut guard = self.conns[w].lock().unwrap_or_else(|p| p.into_inner());
+        if guard.is_none() {
+            let stream = TcpStream::connect(&self.addrs[w])
+                .map_err(|e| format!("connect peer {w} ({}): {e}", self.addrs[w]))?;
+            let _ = stream.set_nodelay(true);
+            *guard = Some(stream);
+        }
+        let stream = guard.as_mut().unwrap();
+        let result = write_frame_capped(stream, req, MAX_FRAME)
+            .and_then(|()| read_frame_capped(stream, MAX_FRAME));
+        let frame = match result {
+            Ok(Some(frame)) => frame,
+            Ok(None) => {
+                *guard = None;
+                return Err(format!("peer {w} ({}) closed the connection", self.addrs[w]));
+            }
+            Err(e) => {
+                *guard = None;
+                return Err(format!("peer rpc to {w} ({}): {e}", self.addrs[w]));
+            }
+        };
+        peer.bytes_sent += req.len() as u64 + 4;
+        peer.bytes_recv += frame.len() as u64 + 4;
+        parse_reply(frame).map_err(|e| e.to_string())
+    }
+}
+
 /// Shared worker state: one slot per [`crate::collectives::TableId`]
 /// (W = 0, H = 1), each behind its own lock so a W-pass scatter never
-/// serializes against an H gather.
+/// serializes against an H gather; plus the worker-compute pass context
+/// and peer mesh, each behind their own lock too.
 struct State {
     slots: [RwLock<Option<HostedTable>>; 2],
+    pass: RwLock<Option<PassCtx>>,
+    peers: RwLock<Option<Peers>>,
 }
 
 impl State {
     fn new() -> State {
-        State { slots: [RwLock::new(None), RwLock::new(None)] }
+        State {
+            slots: [RwLock::new(None), RwLock::new(None)],
+            pass: RwLock::new(None),
+            peers: RwLock::new(None),
+        }
     }
 
     fn read_slot(&self, i: usize) -> RwLockReadGuard<'_, Option<HostedTable>> {
@@ -64,6 +139,109 @@ fn slot_index(c: &mut Cursor<'_>) -> Result<usize, String> {
 
 fn fp(name: &str) -> Result<(), String> {
     fault::failpoint(name).map_err(|e| e.to_string())
+}
+
+/// Build a gather reply (`k:u32` + `f32[k·dim]`) for the hosted subset of
+/// `ids`, in request order — shared by GATHER (from the coordinator) and
+/// PEER_GATHER (from the worker mesh). The parameter-server request is
+/// pre-filtered (everything matches); the all-reduce broadcast relies on
+/// this filter to contribute exactly its own shards' rows.
+fn gather_reply(host: &HostedTable, ids: &[u32]) -> Result<Vec<u8>, String> {
+    let dim = host.table.dim;
+    let mut row = vec![0.0f32; dim];
+    let mut rows = Vec::new();
+    let mut k: u32 = 0;
+    for &id in ids {
+        let id = id as usize;
+        if id >= host.table.rows {
+            return Err(format!("row {id} out of range"));
+        }
+        if host.hosted[host.table.shard_of(id)] {
+            host.table.read_row(id, &mut row);
+            put_f32s(&mut rows, &row);
+            k += 1;
+        }
+    }
+    let mut reply = Vec::with_capacity(4 + rows.len());
+    put_u32(&mut reply, k);
+    reply.extend_from_slice(&rows);
+    Ok(reply)
+}
+
+/// Materialize the fixed-side rows of `ids` in request order for a
+/// worker-side solve: rows in hosted shards are read directly (bitwise
+/// what the coordinator's own gather reads), the rest are fetched from
+/// their peer owners over PEER_GATHER — one request per owner, repeated
+/// ids deduplicated (identical row bits fill every occurrence, so dedup
+/// changes wire bytes, never results).
+fn gather_fixed(
+    state: &State,
+    fixed_slot: usize,
+    host: &HostedTable,
+    ids: &[u32],
+    peer: &mut PeerTraffic,
+) -> Result<Mat, String> {
+    let dim = host.table.dim;
+    let mut out = Mat::zeros(ids.len(), dim);
+    let mut row = vec![0.0f32; dim];
+    let peers_guard = state.peers.read().unwrap_or_else(|p| p.into_inner());
+    let peers = peers_guard.as_ref();
+    let nw = peers.map_or(0, |p| p.addrs.len());
+    // Per-owner dedup: unique ids in first-occurrence order, plus every
+    // output position each unique id must fill.
+    let mut remote_ids: Vec<Vec<u32>> = vec![Vec::new(); nw];
+    let mut remote_pos: Vec<Vec<Vec<usize>>> = vec![Vec::new(); nw];
+    let mut seen: Vec<HashMap<u32, usize>> = vec![HashMap::new(); nw];
+    for (k, &id) in ids.iter().enumerate() {
+        let idu = id as usize;
+        if idu >= host.table.rows {
+            return Err(format!("row {idu} out of range"));
+        }
+        let shard = host.table.shard_of(idu);
+        if host.hosted[shard] {
+            host.table.read_row(idu, &mut row);
+            out.row_mut(k).copy_from_slice(&row);
+            continue;
+        }
+        if nw == 0 {
+            return Err(format!("row {idu} not hosted and no peer mesh (SET_PEERS first)"));
+        }
+        peer.ids_pre_dedup += 1;
+        let owner = shard % nw;
+        match seen[owner].entry(id) {
+            Entry::Occupied(e) => remote_pos[owner][*e.get()].push(k),
+            Entry::Vacant(v) => {
+                v.insert(remote_ids[owner].len());
+                remote_ids[owner].push(id);
+                remote_pos[owner].push(vec![k]);
+            }
+        }
+    }
+    for w in 0..nw {
+        if remote_ids[w].is_empty() {
+            continue;
+        }
+        let peers = peers.unwrap();
+        if w == peers.self_index {
+            return Err(format!("ownership map routes a non-hosted row to this worker ({w})"));
+        }
+        peer.ids_sent += remote_ids[w].len() as u64;
+        let reply = peers.rpc(w, &enc_peer_gather(fixed_slot as u8, &remote_ids[w]), peer)?;
+        let mut c = Cursor::new(&reply);
+        let k = c.u32()? as usize;
+        if k != remote_ids[w].len() {
+            return Err(format!("peer {w} returned {k} rows for {} ids", remote_ids[w].len()));
+        }
+        let vals = get_f32s(&mut c, k * dim)?;
+        c.done()?;
+        for (u, positions) in remote_pos[w].iter().enumerate() {
+            let src = &vals[u * dim..(u + 1) * dim];
+            for &p in positions {
+                out.row_mut(p).copy_from_slice(src);
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// Handle one decoded request. Returns the ok-payload and whether the
@@ -138,29 +316,17 @@ fn handle_request(state: &State, payload: &[u8]) -> Result<(Vec<u8>, bool), Stri
             c.done()?;
             let guard = state.read_slot(slot);
             let host = guard.as_ref().ok_or("table not initialized")?;
-            let dim = host.table.dim;
-            let mut row = vec![0.0f32; dim];
-            // Hosted ids only, in request order — the parameter-server
-            // request is pre-filtered (everything matches); the all-reduce
-            // broadcast relies on this filter to contribute exactly its
-            // own shards' rows.
-            let mut rows = Vec::new();
-            let mut k: u32 = 0;
-            for &id in &ids {
-                let id = id as usize;
-                if id >= host.table.rows {
-                    return Err(format!("row {id} out of range"));
-                }
-                if host.hosted[host.table.shard_of(id)] {
-                    host.table.read_row(id, &mut row);
-                    put_f32s(&mut rows, &row);
-                    k += 1;
-                }
-            }
-            let mut reply = Vec::with_capacity(4 + rows.len());
-            put_u32(&mut reply, k);
-            reply.extend_from_slice(&rows);
-            Ok((reply, false))
+            Ok((gather_reply(host, &ids)?, false))
+        }
+        OP_PEER_GATHER => {
+            fp("dist.peer_gather")?;
+            let slot = slot_index(&mut c)?;
+            let n = c.u32()? as usize;
+            let ids = get_u32s(&mut c, n)?;
+            c.done()?;
+            let guard = state.read_slot(slot);
+            let host = guard.as_ref().ok_or("table not initialized")?;
+            Ok((gather_reply(host, &ids)?, false))
         }
         OP_SCATTER => {
             fp("dist.scatter")?;
@@ -201,6 +367,112 @@ fn handle_request(state: &State, payload: &[u8]) -> Result<(Vec<u8>, bool), Stri
             let mut reply = Vec::with_capacity(g.data.len() * 4);
             put_f32s(&mut reply, &g.data);
             Ok((reply, false))
+        }
+        OP_GRAMIAN_LOCAL => {
+            fp("dist.gramian")?;
+            let slot = slot_index(&mut c)?;
+            c.done()?;
+            let guard = state.read_slot(slot);
+            let host = guard.as_ref().ok_or("table not initialized")?;
+            let mut body = Vec::new();
+            let mut k: u32 = 0;
+            // Shard order is ascending — the coordinator re-slots by the
+            // shard index anyway, but determinism costs nothing.
+            for shard in 0..host.table.num_shards() {
+                if host.hosted[shard] {
+                    let g = host.table.local_gramian(shard);
+                    put_u32(&mut body, shard as u32);
+                    put_f32s(&mut body, &g.data);
+                    k += 1;
+                }
+            }
+            let mut reply = Vec::with_capacity(4 + body.len());
+            put_u32(&mut reply, k);
+            reply.extend_from_slice(&body);
+            Ok((reply, false))
+        }
+        OP_SET_PEERS => {
+            let (self_index, addrs) = dec_set_peers(&mut c)?;
+            c.done()?;
+            let self_index = self_index as usize;
+            if self_index >= addrs.len() {
+                return Err(format!("self index {self_index} outside {} peers", addrs.len()));
+            }
+            let conns = addrs.iter().map(|_| Mutex::new(None)).collect();
+            let mut guard = state.peers.write().unwrap_or_else(|p| p.into_inner());
+            *guard = Some(Peers { addrs, self_index, conns });
+            Ok((Vec::new(), false))
+        }
+        OP_SOLVE_PASS => {
+            let req = dec_solve_pass(&mut c)?;
+            c.done()?;
+            let (target, fixed) = (req.target as usize, req.fixed as usize);
+            if target >= 2 || fixed >= 2 || target == fixed {
+                return Err(format!("bad solve pass tables {target}→{fixed}"));
+            }
+            let d = req.dim as usize;
+            let ctx = PassCtx {
+                target,
+                fixed,
+                // Segment fan-out 1: engines are bitwise identical at any
+                // worker count, and each connection thread is already one
+                // solve lane.
+                engine: req.spec.build_engine(1),
+                gramian: Mat::from_rows(d, d, &req.gramian),
+                lambda: req.lambda,
+                alpha: req.alpha,
+            };
+            let mut guard = state.pass.write().unwrap_or_else(|p| p.into_inner());
+            *guard = Some(ctx);
+            Ok((Vec::new(), false))
+        }
+        OP_SOLVE_BATCH => {
+            fp("dist.solve")?;
+            let req = dec_solve_batch(&mut c)?;
+            c.done()?;
+            let pass_guard = state.pass.read().unwrap_or_else(|p| p.into_inner());
+            let pass = pass_guard.as_ref().ok_or("no active solve pass (SOLVE_PASS first)")?;
+            if pass.target != req.target as usize || pass.fixed != req.fixed as usize {
+                return Err(format!(
+                    "active pass solves table {}, batch targets table {}",
+                    pass.target, req.target
+                ));
+            }
+            let batch = &req.batch;
+            // Gather the fixed-side rows (local + peer mesh), then solve
+            // outside any table lock.
+            let mut peer = PeerTraffic::default();
+            let h = {
+                let guard = state.read_slot(pass.fixed);
+                let host = guard.as_ref().ok_or("fixed table not initialized")?;
+                gather_fixed(state, pass.fixed, host, &batch.items, &mut peer)?
+            };
+            let sols = pass
+                .engine
+                .solve_batch(batch, &h, &pass.gramian, pass.lambda, pass.alpha)
+                .map_err(|e| format!("worker solve failed: {e}"))?;
+            // Write the solutions into the hosted target shard — the same
+            // write_row path (and bf16 rounding) a SCATTER takes.
+            let mut guard = state.write_slot(pass.target);
+            let host = guard.as_mut().ok_or("target table not initialized")?;
+            let shard = req.shard as usize;
+            if shard >= host.table.num_shards() || !host.hosted[shard] {
+                return Err(format!("target shard {shard} not hosted here"));
+            }
+            let dim = host.table.dim;
+            let mut written: u32 = 0;
+            for (k, &id) in batch.segment_rows.iter().enumerate() {
+                let id = id as usize;
+                if id >= host.table.rows {
+                    return Err(format!("row {id} out of range"));
+                }
+                if host.table.shard_of(id) != shard {
+                    return Err(format!("row {id} is outside target shard {shard}"));
+                }
+                host.table.write_row(id, &sols.data[k * dim..(k + 1) * dim]);
+                written += 1;
+            }
+            Ok((enc_solve_batch_reply(written, &peer), false))
         }
         other => Err(format!("unknown op {other}")),
     }

@@ -46,6 +46,26 @@ impl SolverKind {
             _ => None,
         }
     }
+
+    /// Stable wire/on-disk code (dist SOLVE_PASS frames).
+    pub fn code(self) -> u8 {
+        match self {
+            SolverKind::Lu => 0,
+            SolverKind::Qr => 1,
+            SolverKind::Cholesky => 2,
+            SolverKind::Cg => 3,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<SolverKind> {
+        match code {
+            0 => Some(SolverKind::Lu),
+            1 => Some(SolverKind::Qr),
+            2 => Some(SolverKind::Cholesky),
+            3 => Some(SolverKind::Cg),
+            _ => None,
+        }
+    }
 }
 
 /// Options shared by the solver entry points.

@@ -139,6 +139,7 @@ fn resolve_config(args: &Args) -> anyhow::Result<AlxConfig> {
         ("topology", "dist.topology"),
         ("workers", "dist.workers"),
         ("heartbeat-ms", "dist.heartbeat_ms"),
+        ("compute", "dist.compute"),
         ("port", "serve.port"),
         ("serve-threads", "serve.threads"),
         ("batch-window-us", "serve.batch_window_us"),
@@ -865,7 +866,8 @@ fn usage() -> ! {
                       --solver cg|cholesky|qr|ialspp --solver-engine qr|ialspp --block-dim <p>\n\
                       (ialspp = block-coordinate subspace solver; p must divide --dim)\n\
                       --dist local|tcp --workers host:p1,host:p2 --topology parameter-server|all-reduce\n\
-                      --heartbeat-ms <ms> (multi-process training against `alx worker` processes)\n\
+                      --heartbeat-ms <ms> --compute coordinator|worker (multi-process training\n\
+                      against `alx worker` processes; `worker` solves on the shard owners)\n\
          worker:      --port <p> | --bind <host:port> (serve table shards; prints ALX_WORKER_LISTENING)\n\
          launch:      --num-workers <n> [train flags...] (spawn a local fleet, train over it in tcp mode)\n\
                       [--worker-failpoints 'spec'] (arm fault injection on worker 0)\n\

@@ -238,6 +238,36 @@ pub fn ideal_epoch_comm(w: &Workload, num_shards: usize) -> IdealComm {
     }
 }
 
+/// Ideal per-epoch *transport* volume when the solves run on the workers
+/// (`dist.compute = "worker"`), assuming zero batch padding:
+///
+/// * batch ship — each dense slot crosses the coordinator→owner wire
+///   once as `(item, value, mask)` = 12 B, plus 4 B of segment ids per
+///   dense row and 4 B of target-row ids per solved row;
+/// * peer gather — upper bound of one fixed-side request (4 B id) and
+///   one f32 row (`d·4` B) per slot over the worker mesh; locally hosted
+///   rows and request dedup only shrink this;
+/// * gramians — per pass, each shard's `d×d` f32 partial comes back and
+///   each worker receives the reduced gramian in the pass announcement;
+/// * epoch-end sync — both tables stream back to the coordinator once
+///   as f32 rows.
+///
+/// Solved rows never cross the coordinator wire at all (the owner writes
+/// them in place) — that is the term worker-compute deletes relative to
+/// coordinator-solve. This prices real frames, so it bounds
+/// [`crate::collectives::WireSnapshot::total_bytes`], not the
+/// [`ideal_epoch_comm`] collective oracle; framing, opcode and ack
+/// overheads make the measured number exceed it by a modest ratio.
+pub fn ideal_worker_compute_wire(w: &Workload, num_shards: usize, num_workers: usize) -> u64 {
+    let d = w.dim as u64;
+    let slots = 2 * w.nnz;
+    let batch_bytes = slots * 12 + (slots / w.batch_width as u64) * 4 + w.rows_plus_cols * 4;
+    let peer_bytes = slots * (4 + d * 4);
+    let gramian_bytes = 2 * (num_shards as u64 + num_workers as u64) * d * d * 4;
+    let sync_bytes = w.rows_plus_cols * d * 4;
+    batch_bytes + peer_bytes + gramian_bytes + sync_bytes
+}
+
 /// Predict one epoch's runtime on `topo` (Fig. 6 generator).
 pub fn epoch_time(topo: &Topology, w: &Workload) -> EpochCost {
     let m = topo.num_cores as f64;
@@ -350,6 +380,24 @@ mod tests {
         let c8 = ideal_epoch_comm(&w, 8);
         assert!(c8.all_gather_bytes > c.all_gather_bytes);
         assert_eq!(c8.all_reduce_bytes, c.all_reduce_bytes);
+    }
+
+    #[test]
+    fn worker_compute_wire_formula() {
+        let w = Workload {
+            nnz: 100,
+            rows_plus_cols: 10,
+            dim: 4,
+            elem_bytes: 2,
+            batch_rows: 8,
+            batch_width: 4,
+        };
+        let b = ideal_worker_compute_wire(&w, 4, 2);
+        // batches: 200·12 + 50·4 + 10·4 = 2640; peer: 200·(4+16) = 4000;
+        // gramians: 2·(4+2)·16·4 = 768; sync: 10·4·4 = 160
+        assert_eq!(b, 2640 + 4000 + 768 + 160);
+        // More shards/workers → more gramian frames, all else equal.
+        assert!(ideal_worker_compute_wire(&w, 8, 4) > b);
     }
 
     #[test]

@@ -1,24 +1,26 @@
-//! The transport conformance contract (PR 8): a multi-process `tcp` run —
-//! worker processes owning the table shards, collectives over the wire —
-//! is **bitwise identical** to the single-process `local` run it emulates:
-//! same objective history, same final W/H bits, same recalls, same
-//! checkpoint bytes, and *exactly* the same `CommStats` byte accounting,
-//! for both topologies (parameter-server and all-reduce) at every thread
-//! count. A killed worker mid-run fails the epoch cleanly, with the
-//! previously written checkpoint intact.
+//! The transport conformance contract (PR 8, extended by the worker-side
+//! solve offload): a multi-process `tcp` run — worker processes owning
+//! the table shards, collectives over the wire — is **bitwise identical**
+//! to the single-process `local` run it emulates: same objective history,
+//! same final W/H bits, same recalls, same checkpoint bytes, and
+//! *exactly* the same `CommStats` byte accounting, for both topologies
+//! (parameter-server and all-reduce) at every thread count — and in both
+//! compute placements (`coordinator` solves locally, `worker` pushes the
+//! solves to the shard owners). A killed worker mid-run fails the epoch
+//! cleanly, with the previously written checkpoint intact.
 //!
 //! Workers run as in-process threads here (same code path as `alx worker`
 //! minus process spawning); the CI dist smoke covers the real
 //! multi-process `alx launch` flow.
 
-use alx::als::{EpochStats, TrainConfig};
-use alx::collectives::CommSnapshot;
+use alx::als::{EngineKind, EpochStats, TrainConfig};
+use alx::collectives::{CommSnapshot, WireSnapshot};
 use alx::config::AlxConfig;
 use alx::coordinator::TrainSession;
 use alx::data::InMemorySource;
-use alx::dist::{DistConfig, DistMode, Worker};
+use alx::dist::{DistCompute, DistConfig, DistMode, Worker};
 use alx::prelude::*;
-use alx::topo::{ideal_epoch_comm, Workload};
+use alx::topo::{ideal_epoch_comm, ideal_worker_compute_wire, Workload};
 use alx::util::Pcg64;
 use std::path::PathBuf;
 
@@ -95,7 +97,13 @@ fn dist_cfg(topology: &str, addrs: &[String]) -> DistConfig {
         topology: topology.to_string(),
         workers: addrs.to_vec(),
         heartbeat_ms: 0,
+        compute: DistCompute::Coordinator,
     }
+}
+
+/// [`dist_cfg`] in owner-computes mode: the workers run the solves.
+fn worker_dist_cfg(topology: &str, addrs: &[String]) -> DistConfig {
+    DistConfig { compute: DistCompute::Worker, ..dist_cfg(topology, addrs) }
 }
 
 fn fingerprint(h: &EpochStats) -> (usize, Option<u64>, u64) {
@@ -108,6 +116,8 @@ struct RunResult {
     h: Vec<f32>,
     recalls: Vec<(usize, u64)>,
     comm: CommSnapshot,
+    /// Transport-measured frame bytes (`None` on the Local backend).
+    wire: Option<WireSnapshot>,
     checkpoint: Vec<u8>,
 }
 
@@ -119,6 +129,7 @@ fn run(mut s: TrainSession, ckpt_tag: &str) -> RunResult {
     s.checkpoint(&ckpt).unwrap();
     let bytes = std::fs::read(&ckpt).unwrap();
     let _ = std::fs::remove_file(&ckpt);
+    let wire = s.trainer.collectives().wire_snapshot();
     // In tcp mode this politely stops the fleet; locally it is a no-op.
     s.trainer.collectives().shutdown().unwrap();
     RunResult {
@@ -127,6 +138,7 @@ fn run(mut s: TrainSession, ckpt_tag: &str) -> RunResult {
         h: s.trainer.h.to_dense().data,
         recalls: report.recalls.iter().map(|r| (r.k, r.recall.to_bits())).collect(),
         comm: report.comm,
+        wire,
         checkpoint: bytes,
     }
 }
@@ -160,8 +172,149 @@ fn tcp_runs_are_bitwise_identical_to_local() {
             // The conformance oracle: byte-for-byte identical accounting.
             assert_eq!(tcp.comm, local.comm, "CommStats differ ({tag})");
             assert_eq!(tcp.checkpoint, local.checkpoint, "checkpoint bytes differ ({tag})");
+            // Gather-request dedup: a full dense batch draws more slot ids
+            // than the item table has rows, so repeats are guaranteed and
+            // the wire must carry strictly fewer ids than the collective
+            // requested — without moving any of the bit-exact results
+            // above or the priced CommStats.
+            let wire = tcp.wire.expect("tcp transport measures wire traffic");
+            assert!(wire.total_bytes() > 0, "no wire traffic measured ({tag})");
+            assert!(
+                wire.gather_ids_sent < wire.gather_ids_pre_dedup,
+                "gather dedup must shrink the id stream ({tag}): {wire:?}"
+            );
+        }
+        assert!(local.wire.is_none(), "the Local backend has no wire to measure");
+    }
+}
+
+#[test]
+fn worker_compute_runs_are_bitwise_identical_to_local() {
+    // The tentpole contract: `compute = "worker"` moves every solve to
+    // the shard owners (peer-mesh gathers, worker-side engine, in-place
+    // write-back) and must still reproduce the local run bit for bit —
+    // same objective history, tables, recalls, CommStats and checkpoint
+    // bytes — across worker counts, thread counts, both engines and both
+    // topologies.
+    let m = community_matrix(80, 48, 13);
+    for engine in [EngineKind::Qr, EngineKind::IalsPp] {
+        for threads in [1usize, 4] {
+            let mk_cfg = || {
+                let mut c = cfg(2, threads, 4);
+                c.train.engine = engine;
+                c.train.block_dim = 4;
+                c
+            };
+            let local = {
+                let source = InMemorySource::new("community", m.clone());
+                TrainSession::new(&source, mk_cfg()).unwrap()
+            };
+            let local = run(local, &format!("wc_local_{engine:?}_t{threads}"));
+            for workers in [2usize, 4] {
+                for topology in ["parameter-server", "all-reduce"] {
+                    let fleet = spawn_fleet(workers);
+                    let tcp = {
+                        let mut c = mk_cfg();
+                        c.dist = worker_dist_cfg(topology, &fleet.addrs);
+                        let source = InMemorySource::new("community", m.clone());
+                        TrainSession::new(&source, c).unwrap()
+                    };
+                    let tag = format!("wc_{engine:?}_{topology}_t{threads}_w{workers}");
+                    let tcp = run(tcp, &tag);
+                    fleet.join();
+                    assert_eq!(tcp.history, local.history, "objective history differs ({tag})");
+                    assert_eq!(tcp.w, local.w, "W differs ({tag})");
+                    assert_eq!(tcp.h, local.h, "H differs ({tag})");
+                    assert_eq!(tcp.recalls, local.recalls, "recalls differ ({tag})");
+                    assert_eq!(tcp.comm, local.comm, "CommStats differ ({tag})");
+                    assert_eq!(
+                        tcp.checkpoint, local.checkpoint,
+                        "checkpoint bytes differ ({tag})"
+                    );
+                    // Peer-mesh gathers dedup repeated fixed-side ids the
+                    // same way the coordinator's gathers do.
+                    let wire = tcp.wire.expect("worker-compute runs measure wire traffic");
+                    assert!(wire.total_bytes() > 0, "no wire traffic measured ({tag})");
+                    assert!(
+                        wire.gather_ids_sent < wire.gather_ids_pre_dedup,
+                        "peer-gather dedup must shrink the id stream ({tag}): {wire:?}"
+                    );
+                }
+            }
         }
     }
+}
+
+#[test]
+fn worker_compute_resume_is_bitwise_identical_to_local_resume() {
+    // Mid-training resume under worker-side solves: restore re-pushes the
+    // checkpointed bits to the fleet, and the remaining epochs solve on
+    // the workers — still bitwise the local continuation.
+    let m = community_matrix(80, 48, 15);
+    let ckpt = tmp("wc_resume.ckpt");
+    {
+        let source = InMemorySource::new("community", m.clone());
+        let mut s = TrainSession::new(&source, cfg(3, 2, 4)).unwrap();
+        s.step().unwrap();
+        s.checkpoint(&ckpt).unwrap();
+    }
+    let finish = |c: AlxConfig| {
+        let source = InMemorySource::new("community", m.clone());
+        let mut s = TrainSession::resume_with(&ckpt, &source, c, None).unwrap();
+        while s.remaining_epochs() > 0 {
+            s.step().unwrap();
+        }
+        s.trainer.collectives().shutdown().unwrap();
+        (s.trainer.w.to_dense().data, s.trainer.h.to_dense().data)
+    };
+    let local = finish(cfg(3, 2, 4));
+
+    let fleet = spawn_fleet(4);
+    let mut c = cfg(3, 2, 4);
+    c.dist = worker_dist_cfg("parameter-server", &fleet.addrs);
+    let wc = finish(c);
+    fleet.join();
+    assert_eq!(wc.0, local.0, "resumed W differs");
+    assert_eq!(wc.1, local.1, "resumed H differs");
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn worker_compute_wire_bytes_bounded_by_ideal() {
+    // The topo model's worker-compute wire volume vs the transport's
+    // measured frame bytes: the ideal assumes zero batch padding and
+    // prices the peer mesh at one fetch per slot (dedup and locally
+    // hosted rows shrink the real number), while framing/opcode/ack
+    // overheads inflate it — so measured lands inside a generous ratio
+    // window rather than on the nose.
+    let m = community_matrix(80, 48, 17);
+    let fleet = spawn_fleet(4);
+    let mut c = cfg(1, 2, 4);
+    c.dist = worker_dist_cfg("parameter-server", &fleet.addrs);
+    let source = InMemorySource::new("community", m.clone());
+    let mut s = TrainSession::new(&source, c).unwrap();
+    s.step().unwrap();
+    let wire = s.trainer.collectives().wire_snapshot().expect("tcp measures wire traffic");
+    s.trainer.collectives().shutdown().unwrap();
+    drop(s);
+    fleet.join();
+
+    let w = Workload {
+        nnz: m.nnz() as u64,
+        rows_plus_cols: (m.rows + m.cols) as u64,
+        dim: 8,
+        elem_bytes: 2,
+        batch_rows: 16,
+        batch_width: 4,
+    };
+    let ideal = ideal_worker_compute_wire(&w, 4, 4);
+    let measured = wire.total_bytes();
+    assert!(
+        measured >= ideal / 4 && measured <= ideal * 4,
+        "measured wire bytes {measured} outside [{}..{}] around ideal {ideal}",
+        ideal / 4,
+        ideal * 4
+    );
 }
 
 #[test]
@@ -234,15 +387,15 @@ fn predicted_comm_bytes_bound_measured_at_4_and_8_shards() {
     }
 }
 
-#[test]
-fn killed_worker_aborts_cleanly_with_checkpoint_intact() {
+fn killed_worker_drill(compute: DistCompute, tag: &str) {
     let m = community_matrix(60, 40, 9);
-    let ckpt = tmp("kill.ckpt");
+    let ckpt = tmp(&format!("kill_{tag}.ckpt"));
 
     let fleet = spawn_fleet(2);
     let mut s = {
         let mut c = cfg(3, 2, 4);
         c.dist = dist_cfg("parameter-server", &fleet.addrs);
+        c.dist.compute = compute;
         c.dist.heartbeat_ms = 25;
         let source = InMemorySource::new("community", m.clone());
         TrainSession::new(&source, c).unwrap()
@@ -273,6 +426,20 @@ fn killed_worker_aborts_cleanly_with_checkpoint_intact() {
     assert_eq!(resumed.trainer.current_epoch(), 1);
     resumed.step().unwrap();
     let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn killed_worker_aborts_cleanly_with_checkpoint_intact() {
+    killed_worker_drill(DistCompute::Coordinator, "coord");
+}
+
+#[test]
+fn killed_worker_aborts_cleanly_under_worker_compute() {
+    // Same drill with the solves on the workers: the death can surface
+    // through a failed SOLVE_BATCH, a failed peer gather inside the
+    // surviving worker, or the heartbeat — all of them abort the epoch
+    // cleanly with the checkpoint intact.
+    killed_worker_drill(DistCompute::Worker, "wc");
 }
 
 #[test]

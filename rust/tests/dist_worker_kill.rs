@@ -1,0 +1,185 @@
+//! Process-level failure drill for worker-side solves: a real `alx worker`
+//! process armed with a `dist.solve` failpoint aborts mid-SOLVE_PASS, and
+//! the coordinator must fail the epoch cleanly — naming the dead process,
+//! leaving the previously published checkpoint byte-identical to a local
+//! run's and `alx verify`-clean, and resumable.
+//!
+//! The in-process twin (thread workers, stop-flag kill) lives in
+//! `dist_equivalence.rs`; this file covers the real subprocess fleet and
+//! the deterministic fault-injection path. Needs the failpoints feature:
+//! `cargo test --features failpoints --test dist_worker_kill`.
+
+#[cfg(not(feature = "failpoints"))]
+mod stub {
+    #[test]
+    fn dist_worker_kill_requires_failpoints_feature() {
+        // Compiled-out build: the hooks are inert no-ops and there is
+        // nothing to kill. The CI torture job builds with the feature.
+        assert!(!alx::util::fault::ENABLED);
+        assert!(alx::util::fault::failpoint("dist.solve").is_ok());
+    }
+}
+
+#[cfg(feature = "failpoints")]
+mod drill {
+    use alx::als::TrainConfig;
+    use alx::config::AlxConfig;
+    use alx::coordinator::TrainSession;
+    use alx::data::InMemorySource;
+    use alx::dist::{DistCompute, DistConfig, DistMode};
+    use alx::sparse::Csr;
+    use std::io::BufRead;
+    use std::path::PathBuf;
+    use std::process::{Child, Command, Stdio};
+
+    /// A regular bipartite matrix whose batch counts are exact by
+    /// construction: 32 users × 16 items, user `u` rates items
+    /// `(u + j) % 16` for `j in 0..4`. Every user has 4 nonzeros (one
+    /// dense row at width 4) and every item has 8 (two dense rows), so
+    /// with 4 shards and `batch_rows = 16` each shard is exactly one
+    /// dense batch in both passes.
+    fn regular_matrix() -> Csr {
+        let mut t = Vec::new();
+        for u in 0..32u32 {
+            for j in 0..4u32 {
+                t.push((u, (u + j) % 16, 1.0 + (u + j) as f32 * 0.05));
+            }
+        }
+        Csr::from_coo(32, 16, &t)
+    }
+
+    fn cfg() -> AlxConfig {
+        AlxConfig {
+            cores: 4,
+            train: TrainConfig {
+                dim: 8,
+                epochs: 3,
+                lambda: 0.05,
+                alpha: 0.01,
+                batch_rows: 16,
+                batch_width: 4,
+                threads: 2,
+                ..TrainConfig::default()
+            },
+            ..AlxConfig::default()
+        }
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("alx_dwk_{}_{}", tag, std::process::id()))
+    }
+
+    /// Spawn a real `alx worker` on an ephemeral port, read its
+    /// `ALX_WORKER_LISTENING host:port` announcement off piped stdout,
+    /// and keep draining the pipe so the child's log writes never block.
+    fn spawn_worker(failpoints: Option<&str>) -> (Child, String) {
+        let mut c = Command::new(env!("CARGO_BIN_EXE_alx"));
+        c.arg("worker").arg("--port").arg("0");
+        if let Some(spec) = failpoints {
+            c.arg("--failpoints").arg(spec);
+        }
+        c.env_remove("ALX_FAILPOINTS");
+        c.stdout(Stdio::piped());
+        c.stderr(Stdio::null());
+        let mut child = c.spawn().unwrap();
+        let stdout = child.stdout.take().expect("stdout was piped");
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut line = String::new();
+        let addr = loop {
+            line.clear();
+            let k = reader.read_line(&mut line).unwrap();
+            assert!(k > 0, "worker exited before announcing its address");
+            if let Some(rest) = line.trim().strip_prefix(alx::dist::WORKER_READY_PREFIX) {
+                break rest.trim().to_string();
+            }
+        };
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while matches!(reader.read_line(&mut sink), Ok(k) if k > 0) {
+                sink.clear();
+            }
+        });
+        (child, addr)
+    }
+
+    fn shutdown_worker(addr: &str) {
+        if let Ok(mut s) = std::net::TcpStream::connect(addr) {
+            let _ = alx::util::net::write_frame_capped(
+                &mut s,
+                &alx::dist::protocol::enc_shutdown(),
+                alx::dist::protocol::MAX_FRAME,
+            );
+            let _ = alx::util::net::read_frame_capped(&mut s, alx::dist::protocol::MAX_FRAME);
+        }
+    }
+
+    #[test]
+    fn worker_abort_mid_solve_pass_is_clean_and_resumable() {
+        let m = regular_matrix();
+
+        // Local reference: one epoch, checkpointed. The worker-compute
+        // checkpoint below must match it byte for byte.
+        let ref_ckpt = tmp("ref.ckpt");
+        let reference = {
+            let source = InMemorySource::new("regular", m.clone());
+            let mut s = TrainSession::new(&source, cfg()).unwrap();
+            s.step().unwrap();
+            s.checkpoint(&ref_ckpt).unwrap();
+            std::fs::read(&ref_ckpt).unwrap()
+        };
+
+        // Worker 0 owns shards 0 and 2 (owner = shard % fleet), so it
+        // serves exactly 4 SOLVE_BATCH requests per epoch (W shards 0,2
+        // + H shards 0,2, one batch each — see `regular_matrix`). Hit 5
+        // is therefore the first solve of epoch 2: the process aborts
+        // mid-pass, after the epoch-1 checkpoint is safely on disk.
+        let (mut victim, addr0) = spawn_worker(Some("dist.solve=hit:5:abort"));
+        let (mut peer, addr1) = spawn_worker(None);
+        let addrs = vec![addr0, addr1.clone()];
+
+        let ckpt = tmp("kill.ckpt");
+        let mut s = {
+            let mut c = cfg();
+            c.dist = DistConfig {
+                mode: DistMode::Tcp,
+                topology: "parameter-server".to_string(),
+                workers: addrs.clone(),
+                heartbeat_ms: 25,
+                compute: DistCompute::Worker,
+            };
+            let source = InMemorySource::new("regular", m.clone());
+            TrainSession::new(&source, c).unwrap()
+        };
+        s.step().unwrap();
+        s.checkpoint(&ckpt).unwrap();
+        let saved = std::fs::read(&ckpt).unwrap();
+        assert_eq!(saved, reference, "worker-solve checkpoint must match the local bytes");
+
+        // Epoch 2 must fail cleanly — an Err naming the dead process
+        // (directly, or via the surviving worker's failed peer gather),
+        // not a hang or a panic.
+        let err = s.step().expect_err("epoch must abort once the worker dies");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("worker") || msg.contains("peer"),
+            "error should name the dead process: {msg}"
+        );
+        drop(s);
+        let status = victim.wait().unwrap();
+        assert!(!status.success(), "the armed worker must die by abort, not exit cleanly");
+
+        // The published checkpoint is untouched by the failed epoch,
+        // structurally valid, and resumable.
+        assert_eq!(std::fs::read(&ckpt).unwrap(), saved);
+        alx::verify::verify_file(&ckpt).expect("pre-kill checkpoint must pass alx verify");
+        let source = InMemorySource::new("regular", m.clone());
+        let mut resumed = TrainSession::resume_with(&ckpt, &source, cfg(), None).unwrap();
+        assert_eq!(resumed.trainer.current_epoch(), 1);
+        resumed.step().unwrap();
+
+        shutdown_worker(&addr1);
+        let _ = peer.wait();
+        let _ = std::fs::remove_file(&ref_ckpt);
+        let _ = std::fs::remove_file(&ckpt);
+    }
+}
